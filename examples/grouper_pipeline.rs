@@ -1,0 +1,142 @@
+//! End-to-end driver on a grouper-like workload — the repository's
+//! headline validation run (recorded in EXPERIMENTS.md).
+//!
+//! Generates a synthetic grouper-style corpus (default 60k reads × 100 bp
+//! ≈ 6 MB of raw reads → ~330 MB of virtual suffix volume), then runs the
+//! FULL stack with nothing mocked:
+//!   * real TCP KV instances (RESP + MGETSUFFIX) on localhost,
+//!   * the in-process MapReduce runtime with real spill files,
+//!   * PJRT-compiled JAX/Pallas kernels on the map and reduce hot paths,
+//! and validates the output order against ground truth, comparing the
+//! data-store footprint with the TeraSort baseline on the same corpus.
+//!
+//!     cargo run --release --example grouper_pipeline [n_reads] [read_len]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use samr::footprint::{Channel, Ledger};
+use samr::kvstore::shard::SuffixStore;
+use samr::kvstore::LocalKvCluster;
+use samr::mapreduce::JobConf;
+use samr::runtime;
+use samr::scheme::{self, SchemeConfig};
+use samr::suffix::reads::{materialized_suffix_bytes, synth_corpus, CorpusSpec};
+use samr::suffix::validate::validate_order;
+use samr::terasort::{self, TeraSortConfig};
+use samr::util::bytes::human;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_reads: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(60_000);
+    let read_len: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
+    let pjrt = runtime::init(Some(&runtime::default_artifacts_dir()));
+
+    println!(
+        "== grouper pipeline: {n_reads} reads × ~{read_len} bp (PJRT {}) ==",
+        if pjrt { "on" } else { "OFF — run `make artifacts`" }
+    );
+    let reads = synth_corpus(&CorpusSpec {
+        n_reads,
+        read_len,
+        len_jitter: 4,
+        gc_content: 0.42, // grouper-like
+        genome_len: 1 << 22,
+        seed: 0x6706,
+    });
+    let n_suffixes: usize = reads.iter().map(|r| r.suffix_count()).sum();
+    let input = samr::suffix::reads::corpus_bytes(&reads);
+    let virt = materialized_suffix_bytes(&reads);
+    println!(
+        "input {} -> {} suffixes, {} if materialized (self-expansion ×{:.0})",
+        human(input),
+        n_suffixes,
+        human(virt),
+        virt as f64 / input as f64
+    );
+
+    // ---- the scheme, on real TCP KV instances ----
+    let kv = LocalKvCluster::start(8).expect("start KV instances");
+    let addrs = kv.addrs();
+    let factory: scheme::StoreFactory = Arc::new(move || {
+        Box::new(samr::kvstore::shard::ShardedClient::connect(&addrs).expect("kv connect"))
+            as Box<dyn SuffixStore>
+    });
+    let conf = JobConf {
+        n_reducers: 8,
+        io_sort_bytes: 1 << 20,
+        split_bytes: 1 << 20,
+        reducer_heap_bytes: 24 << 20,
+        ..JobConf::default()
+    };
+    let cfg = SchemeConfig {
+        conf: conf.clone(),
+        group_threshold: 200_000,
+        samples_per_reducer: 10_000,
+        ..Default::default()
+    };
+    let ledger = Ledger::new();
+    let t0 = Instant::now();
+    let res = scheme::run(&reads, &cfg, factory, &ledger).expect("scheme run");
+    let scheme_wall = t0.elapsed();
+    println!(
+        "\nscheme: {} suffixes in {:.1?} ({:.0} suffixes/s)",
+        res.order.len(),
+        scheme_wall,
+        res.order.len() as f64 / scheme_wall.as_secs_f64()
+    );
+    let (f, s, o) = res.time_split.percentages();
+    println!("reducer time split: fetch {f:.0}% / sort {s:.0}% / other {o:.0}%  (paper: 60/13/27)");
+    println!(
+        "KV memory {} ({:.2}x input — paper: 1.5x)",
+        human(res.kv_memory),
+        res.kv_memory as f64 / input as f64
+    );
+
+    // ---- the baseline on the same corpus ----
+    let ledger_t = Ledger::new();
+    let t0 = Instant::now();
+    let tera = terasort::run(&reads, &TeraSortConfig { conf, ..Default::default() }, &ledger_t)
+        .expect("terasort run");
+    let tera_wall = t0.elapsed();
+    println!("\nterasort: {} suffixes in {:.1?}", tera.order.len(), tera_wall);
+
+    // ---- validation against ground truth ----
+    let t0 = Instant::now();
+    validate_order(&reads, &res.order).expect("scheme order INVALID");
+    validate_order(&reads, &tera.order).expect("terasort order INVALID");
+    assert_eq!(res.order, tera.order, "pipelines disagree");
+    println!(
+        "\nvalidation: both orders correct & identical (checked in {:.1?})",
+        t0.elapsed()
+    );
+
+    // ---- the paper's headline comparison ----
+    let u = |l: &Ledger, ch| l.get(ch) as f64 / virt as f64;
+    println!("\ndata store footprint (units of materialized suffix volume):");
+    println!("{:<22}{:>10}{:>10}", "", "TeraSort", "Scheme");
+    for (name, ch) in [
+        ("Map Local Write", Channel::MapLocalWrite),
+        ("Map Local Read", Channel::MapLocalRead),
+        ("Reduce Local R", Channel::ReduceLocalRead),
+        ("Reduce Local W", Channel::ReduceLocalWrite),
+        ("Shuffle", Channel::Shuffle),
+        ("KV Put", Channel::KvPut),
+        ("KV Fetch", Channel::KvFetch),
+    ] {
+        println!("{:<22}{:>10.3}{:>10.3}", name, u(&ledger_t, ch), u(&ledger, ch));
+    }
+    let t_disk = ledger_t.snapshot().local_disk_total();
+    let s_disk = ledger.snapshot().local_disk_total();
+    println!(
+        "\nlocal-disk bytes: TeraSort {} vs scheme {} — {:.1}x less (paper's key claim)",
+        human(t_disk),
+        human(s_disk),
+        t_disk as f64 / s_disk as f64
+    );
+    println!(
+        "server-side KV traffic: in {} / out {}",
+        human(kv.traffic().0),
+        human(kv.traffic().1)
+    );
+}

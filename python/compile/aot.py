@@ -1,0 +1,118 @@
+"""AOT bridge: lower the L2 entry points to HLO text for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one .hlo.txt per (entry point, static shape) plus a manifest.txt the
+Rust runtime reads to discover what is available:
+
+    map_encode r=128 lp=208 p=23 nb=64 file=map_encode_r128_l208_p23_nb64.hlo.txt
+    group_sort n=8192 file=group_sort_n8192.hlo.txt
+    ...
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+
+# Suffix keys are base-5^23 packed int64 (paper §IV-B uses `long` for
+# prefix length 23); x64 must be on before any tracing happens.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+# Static shape variants to export. Tuned for the Rust runtime's batching:
+#   map_encode: (reads-per-tile, padded width, prefix length, boundaries)
+#   group_sort / sample_sort: power-of-two block lengths.
+MAP_ENCODE_VARIANTS = [
+    # (R, Lp, P, NB) — Lp must be >= max read length + 1 and < 1000.
+    # NB=16 variants: the bucket kernel's compare volume is R×Lp×NB, so
+    # small-reducer-count jobs (the common case) use 4x less VPU work
+    # (§Perf iteration 1); NB=64 kept for wide jobs.
+    (512, 208, 23, 16),  # paper setting: ~200 bp reads, prefix 23
+    (512, 104, 23, 16),  # ~100 bp reads (example-scale corpora)
+    (128, 208, 23, 64),
+    (128, 104, 23, 64),
+    (64, 104, 13, 64),   # paper's `int` threshold example: prefix 13
+    (512, 104, 13, 16),
+]
+GROUP_SORT_VARIANTS = [1024, 2048, 4096, 8192]
+SAMPLE_SORT_VARIANTS = [4096]
+
+
+def to_hlo_text(lowered):
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_map_encode(r, lp, p, nb):
+    fn = functools.partial(model.map_encode, prefix_len=p)
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((r, lp + p), jnp.int32),   # reads_pad
+        jax.ShapeDtypeStruct((r,), jnp.int64),          # seqnos
+        jax.ShapeDtypeStruct((r,), jnp.int32),          # lengths
+        jax.ShapeDtypeStruct((nb,), jnp.int64),         # boundaries
+    )
+
+
+def lower_group_sort(n):
+    return jax.jit(model.group_sort).lower(
+        jax.ShapeDtypeStruct((n,), jnp.int64),
+        jax.ShapeDtypeStruct((n,), jnp.int64),
+    )
+
+
+def lower_sample_sort(n):
+    return jax.jit(model.sample_sort).lower(
+        jax.ShapeDtypeStruct((n,), jnp.int64)
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+
+    def emit(name, lowered, entry, **meta):
+        fname = name + ".hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        kv = " ".join(f"{k}={v}" for k, v in meta.items())
+        manifest.append(f"{entry} {kv} file={fname}")
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    for r, lp, p, nb in MAP_ENCODE_VARIANTS:
+        emit(
+            f"map_encode_r{r}_l{lp}_p{p}_nb{nb}",
+            lower_map_encode(r, lp, p, nb),
+            entry="map_encode", r=r, lp=lp, p=p, nb=nb,
+        )
+    for n in GROUP_SORT_VARIANTS:
+        emit(f"group_sort_n{n}", lower_group_sort(n), entry="group_sort", n=n)
+    for n in SAMPLE_SORT_VARIANTS:
+        emit(f"sample_sort_n{n}", lower_sample_sort(n), entry="sample_sort", n=n)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest.txt ({len(manifest)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: in-VMEM bitonic sort of (key, index) pairs.
+
+The reducer's sorting-group hot loop (paper §IV-C): a group of suffix keys
+plus their packed indexes must be sorted entirely in memory. The VMEM block
+plays the role the reducer heap plays in the paper — the group must fit, or
+the caller splits it (longer prefix ⇒ smaller groups, Fig. 7).
+
+Bitonic network: for N a power of two, log2(N) stages of compare-exchange
+steps, each fully data-parallel — element i exchanges with partner i^j via
+a take_along_axis shuffle and a branch-free select. Pairs are ordered
+lexicographically by (key, index); because packed suffix indexes are unique
+per entry, the order is total (callers padding to N must pad with unique
+indexes, e.g. i64::MAX - i — the Rust runtime does).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stages(n):
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            yield k, j
+            j //= 2
+        k *= 2
+
+
+def _pair_sort_body(keys, idxs, n):
+    """One [1, N] bitonic pair sort, fully unrolled (static N)."""
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    for k, j in _stages(n):
+        partner = pos ^ j
+        pk = jnp.take_along_axis(keys, partner.astype(jnp.int32), axis=1)
+        pi = jnp.take_along_axis(idxs, partner.astype(jnp.int32), axis=1)
+        # ascending iff bit k of position is clear (uniform final stage).
+        take_lesser = ((pos & k) == 0) == ((pos & j) == 0)
+        self_lt = (keys < pk) | ((keys == pk) & (idxs < pi))
+        choose_self = self_lt == take_lesser
+        keys = jnp.where(choose_self, keys, pk)
+        idxs = jnp.where(choose_self, idxs, pi)
+    return keys, idxs
+
+
+def _pair_kernel(k_ref, i_ref, ok_ref, oi_ref):
+    n = k_ref.shape[1]
+    keys, idxs = _pair_sort_body(k_ref[...], i_ref[...], n)
+    ok_ref[...] = keys
+    oi_ref[...] = idxs
+
+
+def pair_sort(keys, indexes):
+    """Sort 1-D int64 (key, index) pairs lexicographically. len power of 2."""
+    (n,) = keys.shape
+    if n & (n - 1):
+        raise ValueError(f"bitonic sort needs power-of-two length, got {n}")
+    ks, ix = pl.pallas_call(
+        _pair_kernel,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda: (0, 0)),
+            pl.BlockSpec((1, n), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda: (0, 0)),
+            pl.BlockSpec((1, n), lambda: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int64),
+            jax.ShapeDtypeStruct((1, n), jnp.int64),
+        ],
+        interpret=True,
+    )(keys[None, :], indexes[None, :])
+    return ks[0], ix[0]
+
+
+def sort(keys):
+    """Plain ascending bitonic sort of 1-D int64 keys (len power of two).
+
+    Ties are broken internally by position, so the result equals jnp.sort.
+    """
+    (n,) = keys.shape
+    idx = jnp.arange(n, dtype=jnp.int64)
+    ks, _ = pair_sort(keys, idx)
+    return ks

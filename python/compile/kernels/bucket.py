@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: branch-free range partitioner (searchsorted).
+
+The scheme partitions suffix keys to reducers by sampled range boundaries
+(paper §IV-A, the TotalOrderPartitioner analog). With NB boundaries the
+partition id of key k is |{b : k >= boundary_b}| — computed branch-free as
+a broadcast compare + sum so the whole [RT, Lp] key tile is processed in
+one VPU pass; no binary-search control flow.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bucket_kernel(k_ref, b_ref, o_ref):
+    keys = k_ref[...]
+    bounds = b_ref[...]
+    # [RT, Lp, NB] compare; NB is small (reducer count), so this stays in VMEM.
+    ge = keys[:, :, None] >= bounds[None, None, :]
+    o_ref[...] = jnp.sum(ge.astype(jnp.int32), axis=-1)
+
+
+def bucket(keys, boundaries, row_tile=None):
+    """partition[r, o] = searchsorted-right(boundaries, keys[r, o]).
+
+    keys: [R, Lp] int64; boundaries: [NB] sorted int64. Returns int32.
+    """
+    r, lp = keys.shape
+    (nb,) = boundaries.shape
+    rt = row_tile or min(r, 128)
+    if r % rt != 0:
+        raise ValueError(f"rows {r} not divisible by row tile {rt}")
+    return pl.pallas_call(
+        _bucket_kernel,
+        grid=(r // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, lp), lambda i: (i, 0)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rt, lp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, lp), jnp.int32),
+        interpret=True,
+    )(keys, boundaries)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: batched base-5 suffix-prefix encoding.
+
+The scheme's map phase turns every (read, offset) suffix into a fixed-width
+numeric sort key (paper §IV-B): the first `prefix_len` characters, base-5
+($=0 A=1 C=2 G=3 T=4), packed into one int64. A suffix shorter than the
+prefix is zero-padded, which *is* the paper's "the prefix is the suffix
+itself" rule because $ = 0.
+
+Kernel shape strategy (see DESIGN.md §Hardware-Adaptation): instead of one
+gather per (read, offset) pair, a read tile of shape [RT, Lp + P] sits in
+VMEM and the P-step Horner chain runs as P static slices — key[r, o] =
+key*5 + tile[r, o + j]. No gathers, pure VPU integer multiply-add; the
+offset dimension is fully vectorized along lanes.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which both the pytest
+oracle run and the Rust PJRT runtime execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BASE = 5
+
+
+def _encode_kernel(x_ref, o_ref, *, prefix_len, lp):
+    """One [RT, Lp+P] read tile -> one [RT, Lp] key tile (Horner chain)."""
+    x = x_ref[...].astype(jnp.int64)
+    acc = jnp.zeros((x.shape[0], lp), dtype=jnp.int64)
+    for j in range(prefix_len):
+        acc = acc * BASE + x[:, j : j + lp]
+    o_ref[...] = acc
+
+
+def prefix_encode(reads_pad, prefix_len, row_tile=None):
+    """keys[r, o] = base-5 value of reads_pad[r, o : o + prefix_len].
+
+    reads_pad: [R, Lp + prefix_len] int32 codes in 0..4 ($ padded).
+    Returns [R, Lp] int64. `row_tile` picks the VMEM block height.
+    """
+    r, total = reads_pad.shape
+    lp = total - prefix_len
+    if lp <= 0:
+        raise ValueError(f"padded width {total} <= prefix_len {prefix_len}")
+    rt = row_tile or min(r, 128)
+    if r % rt != 0:
+        raise ValueError(f"rows {r} not divisible by row tile {rt}")
+    kern = functools.partial(_encode_kernel, prefix_len=prefix_len, lp=lp)
+    return pl.pallas_call(
+        kern,
+        grid=(r // rt,),
+        in_specs=[pl.BlockSpec((rt, total), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rt, lp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, lp), jnp.int64),
+        interpret=True,
+    )(reads_pad)

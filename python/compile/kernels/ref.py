@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks every kernel against.
+They intentionally use the most obvious formulation (gathers, argsort)
+rather than the tiled/branch-free forms the kernels use.
+"""
+
+import jax.numpy as jnp
+
+# Character codes, base-5 per the paper (§IV-B): $=0, A=1, C=2, G=3, T=4.
+ALPHABET = "$ACGT"
+BASE = 5
+
+
+def prefix_encode_ref(reads_pad, prefix_len):
+    """keys[r, o] = base-5 value of reads_pad[r, o : o + prefix_len].
+
+    reads_pad: [R, Lp + prefix_len] int32 codes in 0..4, zero ($) padded.
+    Returns [R, Lp] int64.
+    """
+    r, total = reads_pad.shape
+    lp = total - prefix_len
+    x = reads_pad.astype(jnp.int64)
+    keys = jnp.zeros((r, lp), dtype=jnp.int64)
+    for j in range(prefix_len):
+        keys = keys * BASE + x[:, j : j + lp]
+    return keys
+
+
+def bucket_ref(keys, boundaries):
+    """partition[i] = #{b : keys[i] >= boundaries[b]} (searchsorted right).
+
+    keys: any int64 shape; boundaries: [NB] sorted int64. Returns int32.
+    """
+    return jnp.searchsorted(boundaries, keys, side="right").astype(jnp.int32)
+
+
+def pair_sort_ref(keys, indexes):
+    """Sort (key, index) pairs lexicographically. 1-D int64 arrays."""
+    order = jnp.lexsort((indexes, keys))
+    return keys[order], indexes[order]
+
+
+def sort_ref(keys):
+    """Plain ascending sort of 1-D int64 keys."""
+    return jnp.sort(keys)
+
+
+def encode_string(s, prefix_len):
+    """Host-side helper: base-5 key of the first prefix_len chars of s,
+    zero-padded — mirrors the paper's fixed-width numeric prefix."""
+    v = 0
+    for j in range(prefix_len):
+        c = ALPHABET.index(s[j]) if j < len(s) else 0
+        v = v * BASE + c
+    return v

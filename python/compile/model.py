@@ -1,0 +1,63 @@
+"""L2 — the JAX compute graph the Rust coordinator executes via PJRT.
+
+Three exported entry points (all shapes static at lowering time):
+
+  map_encode(reads_pad, seqnos, lengths, boundaries)
+      -> (keys, indexes, partitions, valid)
+    The map-task inner loop of the paper's scheme (§IV-A/B): every suffix of
+    every read in the tile gets its base-5 prefix key, its packed index
+    seq*1000 + offset, its shuffle partition, and a validity flag
+    (offset <= read length; offset == length is the lone-"$" suffix).
+
+  sample_sort(keys) -> sorted_keys
+    Bitonic sort used by the boundary sampler (10000*n samples, §IV-A).
+
+  group_sort(keys, indexes) -> (sorted_keys, sorted_indexes)
+    The reducer sorting-group kernel: sort (key, index) pairs.
+
+Python only runs at build time; `aot.py` lowers these to HLO text under
+artifacts/ and the Rust runtime loads them from there.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import bitonic, bucket, prefix_encode
+
+# The paper packs the suffix index as sequence_number * 1000 + offset
+# because offsets range 0..200 (§IV-B). We keep the same constant, so the
+# padded read width must stay under it.
+OFFSET_RADIX = 1000
+
+
+def map_encode(reads_pad, seqnos, lengths, boundaries, *, prefix_len):
+    """Encode every suffix of a read tile.
+
+    reads_pad:  [R, Lp + prefix_len] int32 codes 0..4 (0 = $/padding; a
+                read of length l has codes at [0, l) and zeros after).
+    seqnos:     [R] int64 global sequence numbers.
+    lengths:    [R] int32 read lengths (characters, excluding $).
+    boundaries: [NB] int64 sorted partition boundaries.
+
+    Returns (keys [R, Lp] i64, indexes [R, Lp] i64,
+             partitions [R, Lp] i32, valid [R, Lp] i32).
+    """
+    r, total = reads_pad.shape
+    lp = total - prefix_len
+    if lp >= OFFSET_RADIX:
+        raise ValueError(f"padded width {lp} must be < {OFFSET_RADIX}")
+    keys = prefix_encode.prefix_encode(reads_pad, prefix_len)
+    parts = bucket.bucket(keys, boundaries)
+    offs = jnp.arange(lp, dtype=jnp.int64)[None, :]
+    indexes = seqnos[:, None] * OFFSET_RADIX + offs
+    valid = (offs <= lengths.astype(jnp.int64)[:, None]).astype(jnp.int32)
+    return keys, indexes, parts, valid
+
+
+def sample_sort(keys):
+    """Ascending sort of 1-D int64 keys (power-of-two length)."""
+    return bitonic.sort(keys)
+
+
+def group_sort(keys, indexes):
+    """Lexicographic sort of (key, index) pairs (power-of-two length)."""
+    return bitonic.pair_sort(keys, indexes)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+import jax
+
+# int64 suffix keys everywhere (see compile/aot.py).
+jax.config.update("jax_enable_x64", True)
+
+# Make `import compile...` work when pytest is invoked from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,54 @@
+"""L1 bitonic pair-sort kernel vs lexsort oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bitonic, ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logn=st.integers(0, 9),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_pair_sort_matches_lexsort(logn, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 50, size=n, dtype=np.int64)  # force duplicates
+    idxs = rng.permutation(n).astype(np.int64)
+    gk, gi = bitonic.pair_sort(jnp.asarray(keys), jnp.asarray(idxs))
+    wk, wi = ref.pair_sort_ref(jnp.asarray(keys), jnp.asarray(idxs))
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(wk))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+@settings(max_examples=20, deadline=None)
+@given(logn=st.integers(0, 10), seed=st.integers(0, 2**32 - 1))
+def test_sort_matches_jnp_sort(logn, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(-(5**13), 5**13, size=n, dtype=np.int64)
+    got = bitonic.sort(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(got), np.sort(keys))
+
+
+def test_sentinel_padding():
+    # Rust pads short groups with (i64::MAX, unique index); sentinels must
+    # sink to the tail and leave the real prefix sorted.
+    real_k = np.asarray([7, 3, 3, 1], dtype=np.int64)
+    real_i = np.asarray([70, 31, 30, 10], dtype=np.int64)
+    pad = 4
+    keys = np.concatenate([real_k, np.full(pad, np.iinfo(np.int64).max)])
+    idxs = np.concatenate([real_i, np.iinfo(np.int64).max - np.arange(pad)])
+    gk, gi = bitonic.pair_sort(jnp.asarray(keys), jnp.asarray(idxs))
+    np.testing.assert_array_equal(np.asarray(gk[:4]), [1, 3, 3, 7])
+    np.testing.assert_array_equal(np.asarray(gi[:4]), [10, 30, 31, 70])
+
+
+def test_rejects_non_power_of_two():
+    import pytest
+
+    with pytest.raises(ValueError):
+        bitonic.sort(jnp.zeros((12,), dtype=jnp.int64))

@@ -1,0 +1,75 @@
+"""L1 prefix_encode kernel vs pure-jnp oracle, swept by hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import prefix_encode, ref
+
+
+def random_reads(rng, r, lp, p):
+    """[R, Lp + P] code matrix: random lengths, $-terminated, 0-padded."""
+    out = np.zeros((r, lp + p), dtype=np.int32)
+    lens = rng.integers(0, lp, size=r)  # length < Lp so offset==len is valid
+    for i, l in enumerate(lens):
+        out[i, :l] = rng.integers(1, 5, size=l)
+    return out, lens.astype(np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.sampled_from([1, 2, 8]),
+    lp=st.sampled_from([4, 16, 40]),
+    p=st.sampled_from([1, 3, 13, 23]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matches_ref(r, lp, p, seed):
+    rng = np.random.default_rng(seed)
+    reads, _ = random_reads(rng, r, lp, p)
+    got = prefix_encode.prefix_encode(jnp.asarray(reads), p, row_tile=r)
+    want = ref.prefix_encode_ref(jnp.asarray(reads), p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int64
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_tiled_equals_untiled(seed):
+    rng = np.random.default_rng(seed)
+    reads, _ = random_reads(rng, 16, 24, 5)
+    a = prefix_encode.prefix_encode(jnp.asarray(reads), 5, row_tile=4)
+    b = prefix_encode.prefix_encode(jnp.asarray(reads), 5, row_tile=16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_known_string():
+    # SINICA$-style check with the DNA alphabet: read "ACGT", P=4.
+    # suffix at offset 0 = "ACGT" -> 1*125 + 2*25 + 3*5 + 4 = 194
+    # suffix at offset 2 = "GT$"  -> 3*125 + 4*25 + 0 + 0    = 475
+    codes = np.zeros((1, 6 + 4), dtype=np.int32)
+    codes[0, :4] = [1, 2, 3, 4]
+    keys = np.asarray(prefix_encode.prefix_encode(jnp.asarray(codes), 4, row_tile=1))
+    assert keys[0, 0] == 194
+    assert keys[0, 2] == 475
+    assert keys[0, 4] == 0  # "$" suffix encodes to all-$ = 0
+    assert keys[0, 0] == ref.encode_string("ACGT", 4)
+    assert keys[0, 2] == ref.encode_string("GT$", 4)
+
+
+def test_prefix_is_suffix_when_short():
+    # Paper §IV-B: a suffix shorter than the prefix encodes as itself
+    # ($ padded), so equal suffixes encode equal and need no re-sort.
+    p = 10
+    codes = np.zeros((2, 12 + p), dtype=np.int32)
+    codes[0, :3] = [1, 3, 4]  # AGT
+    codes[1, :3] = [1, 3, 4]
+    keys = np.asarray(prefix_encode.prefix_encode(jnp.asarray(codes), p, row_tile=2))
+    assert keys[0, 1] == keys[1, 1]  # "GT$" == "GT$"
+    assert keys[0, 0] == ref.encode_string("AGT", p)
+
+
+def test_max_key_fits_int64():
+    # TTTT...T (23 chars) is the largest 23-prefix; must fit in i64.
+    v = ref.encode_string("T" * 23, 23)
+    assert v == 5**23 - 1 < 2**63

@@ -1,0 +1,36 @@
+//! `cargo bench --bench figures` — regenerate Figures 3, 4, 5, 7, 8.
+
+use samr::bench_support::{bench, section};
+use samr::report::experiments::ScaledEnv;
+use samr::report::Reporter;
+use samr::runtime;
+
+fn main() {
+    runtime::init(Some(&runtime::default_artifacts_dir()));
+    let thrift: f64 = std::env::var("SAMR_THRIFT").ok().and_then(|s| s.parse().ok()).unwrap_or(4.0);
+    let reporter = Reporter {
+        env: ScaledEnv { thrift, ..Default::default() },
+        ..Default::default()
+    };
+    let mut out = String::new();
+
+    section("Figure 3 — map-side spill mechanics");
+    let m = bench("figure3", 0, 1, || out = reporter.figure3().expect("f3"));
+    println!("{out}\n{m}");
+
+    section("Figure 4 — reduce-side merge rounds");
+    let m = bench("figure4", 0, 1, || out = reporter.figure4());
+    println!("{out}\n{m}");
+
+    section("Figure 5 — TeraSort scalability");
+    let m = bench("figure5", 0, 1, || out = reporter.figure5().expect("f5"));
+    println!("{out}\n{m}");
+
+    section("Figure 7 — prefix length vs sorting groups");
+    let m = bench("figure7", 0, 1, || out = reporter.figure7());
+    println!("{out}\n{m}");
+
+    section("Figure 8 — all variants + f(x) fits");
+    let m = bench("figure8", 0, 1, || out = reporter.figure8().expect("f8"));
+    println!("{out}\n{m}");
+}

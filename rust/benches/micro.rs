@@ -1,0 +1,140 @@
+//! `cargo bench --bench micro` — microbenchmarks of the hot paths:
+//! PJRT kernels vs native fallback, KV store command throughput,
+//! MGETSUFFIX vs whole-read GET traffic, SA algorithms, spill/merge I/O.
+
+use samr::bench_support::{bench_throughput, section};
+use samr::kvstore::shard::{InProcStore, SuffixStore};
+use samr::kvstore::LocalKvCluster;
+use samr::runtime::{self, native};
+use samr::suffix::encode::pack_index;
+use samr::suffix::reads::{synth_corpus, CorpusSpec};
+use samr::suffix::sa;
+use samr::util::rng::Rng;
+
+fn main() {
+    let pjrt = runtime::init(Some(&runtime::default_artifacts_dir()));
+    let reads = synth_corpus(&CorpusSpec { n_reads: 2048, read_len: 100, ..Default::default() });
+    let n_suffixes: u64 = reads.iter().map(|r| r.suffix_count() as u64).sum();
+    let mut rng = Rng::new(5);
+    let mut bounds: Vec<i64> =
+        (0..31).map(|_| rng.below(5u64.pow(23) as u64) as i64).collect();
+    bounds.sort_unstable();
+
+    section("map_encode: suffix key generation");
+    let m = bench_throughput("native encode_reads", 1, 5, n_suffixes as f64, "suffixes", || {
+        std::hint::black_box(native::encode_reads(&reads, &bounds, 23));
+    });
+    println!("{m}");
+    if pjrt {
+        runtime::with_engine(|eng| {
+            let eng = eng.expect("engine");
+            let refs: Vec<&_> = reads.iter().collect();
+            // wide job: 31 boundaries -> nb=64 variant
+            let r64 = eng.map_encode_meta(104, 23, bounds.len()).map(|m| m.r).unwrap_or(128);
+            let m = bench_throughput(
+                &format!("pjrt map_encode nb64 ({r64}-read tiles)"),
+                1,
+                5,
+                n_suffixes as f64,
+                "suffixes",
+                || {
+                    for tile in refs.chunks(r64) {
+                        std::hint::black_box(
+                            eng.map_encode_tile(tile, &bounds, 23).expect("tile"),
+                        );
+                    }
+                },
+            );
+            println!("{m}");
+            // common job: 7 boundaries (8 reducers) -> nb=16, r=512 variant
+            let b8 = &bounds[..7];
+            let r16 = eng.map_encode_meta(104, 23, 7).map(|m| m.r).unwrap_or(128);
+            let m = bench_throughput(
+                &format!("pjrt map_encode nb16 ({r16}-read tiles)"),
+                1,
+                5,
+                n_suffixes as f64,
+                "suffixes",
+                || {
+                    for tile in refs.chunks(r16) {
+                        std::hint::black_box(
+                            eng.map_encode_tile(tile, b8, 23).expect("tile"),
+                        );
+                    }
+                },
+            );
+            println!("{m}");
+        });
+    }
+
+    section("group_sort: (key, index) pair sort");
+    let keys: Vec<i64> = (0..8192).map(|_| rng.below(1 << 40) as i64).collect();
+    let idxs: Vec<i64> = (0..8192).map(|i| i as i64).collect();
+    let m = bench_throughput("native group_sort 8192", 1, 20, 8192.0, "pairs", || {
+        let mut k = keys.clone();
+        let mut ix = idxs.clone();
+        native::group_sort(&mut k, &mut ix);
+        std::hint::black_box((k, ix));
+    });
+    println!("{m}");
+    if pjrt {
+        runtime::with_engine(|eng| {
+            let eng = eng.expect("engine");
+            let m = bench_throughput("pjrt group_sort 8192", 1, 5, 8192.0, "pairs", || {
+                let mut k = keys.clone();
+                let mut ix = idxs.clone();
+                eng.group_sort(&mut k, &mut ix).expect("group_sort");
+                std::hint::black_box((k, ix));
+            });
+            println!("{m}");
+            for n in [4096usize, 2048, 1024] {
+                let m = bench_throughput(
+                    &format!("pjrt group_sort {n}"),
+                    1,
+                    5,
+                    n as f64,
+                    "pairs",
+                    || {
+                        let mut k = keys[..n].to_vec();
+                        let mut ix = idxs[..n].to_vec();
+                        eng.group_sort(&mut k, &mut ix).expect("group_sort");
+                        std::hint::black_box((k, ix));
+                    },
+                );
+                println!("{m}");
+            }
+        });
+    }
+
+    section("KV store: MGETSUFFIX vs whole-read fetch (in-proc, modeled wire)");
+    let mut st = InProcStore::new(4);
+    st.put_reads(&reads).unwrap();
+    let reqs: Vec<i64> = reads.iter().flat_map(|r| (0..=r.len()).map(|o| pack_index(r.seq, o))).collect();
+    let m = bench_throughput("mgetsuffix all suffixes", 1, 5, reqs.len() as f64, "suffixes", || {
+        std::hint::black_box(st.fetch_suffixes(&reqs).unwrap());
+    });
+    println!("{m}");
+
+    section("KV store over TCP (RESP)");
+    {
+        let kv = LocalKvCluster::start(4).expect("kv");
+        let mut client = kv.client().expect("client");
+        client.put_reads(&reads).unwrap();
+        let sample: Vec<i64> = reqs.iter().copied().step_by(16).collect();
+        let m = bench_throughput("tcp mgetsuffix (1/16 sample)", 1, 3, sample.len() as f64, "suffixes", || {
+            std::hint::black_box(client.fetch_suffixes(&sample).unwrap());
+        });
+        println!("{m}");
+    }
+
+    section("SA construction algorithms (single text)");
+    let text: Vec<u8> = (0..200_000).map(|_| b"ACGT"[rng.below(4) as usize]).collect();
+    let m = bench_throughput("sais 200k", 1, 5, text.len() as f64, "chars", || {
+        std::hint::black_box(sa::sais(&text));
+    });
+    println!("{m}");
+    let m = bench_throughput("doubling 200k", 1, 2, text.len() as f64, "chars", || {
+        std::hint::black_box(sa::doubling(&text));
+    });
+    println!("{m}");
+}

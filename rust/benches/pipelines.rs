@@ -1,0 +1,126 @@
+//! `cargo bench --bench pipelines` — end-to-end pipeline throughput
+//! (records/s) for the scheme vs TeraSort, plus the paper's ablations:
+//! sorting-group threshold (§IV-C: 8e5 / 1.6e6 / 3.2e6), prefix length
+//! (§IV-B: 13 = int vs 23 = long), and index-only output mode (§IV-D's
+//! "could be faster by not writing the suffixes").
+
+use std::sync::Arc;
+
+use samr::bench_support::{bench_throughput, section};
+use samr::footprint::{Channel, Ledger};
+use samr::kvstore::shard::{SharedStore, SuffixStore};
+use samr::mapreduce::JobConf;
+use samr::report::experiments::example_corpus;
+use samr::runtime;
+use samr::scheme::{self, SchemeConfig};
+use samr::terasort::{self, TeraSortConfig};
+use samr::util::bytes::human;
+
+fn conf() -> JobConf {
+    JobConf {
+        n_reducers: 4,
+        io_sort_bytes: 1 << 20,
+        split_bytes: 1 << 20,
+        reducer_heap_bytes: 16 << 20,
+        ..JobConf::default()
+    }
+}
+
+fn scheme_cfg() -> SchemeConfig {
+    SchemeConfig {
+        conf: conf(),
+        group_threshold: 100_000,
+        samples_per_reducer: 2_000,
+        ..Default::default()
+    }
+}
+
+fn run_scheme(cfg: &SchemeConfig, reads: &[samr::suffix::reads::Read]) -> (u64, u64) {
+    let ledger = Ledger::new();
+    let store = SharedStore::new(8);
+    let s = store.clone();
+    let res = scheme::run(
+        reads,
+        cfg,
+        Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+        &ledger,
+    )
+    .expect("scheme");
+    (res.order.len() as u64, ledger.snapshot().local_disk_total())
+}
+
+fn main() {
+    runtime::init(Some(&runtime::default_artifacts_dir()));
+    let n_reads: usize =
+        std::env::var("SAMR_READS").ok().and_then(|s| s.parse().ok()).unwrap_or(8_000);
+    let reads = example_corpus(n_reads, 100, 11);
+    let n_suffixes: u64 = reads.iter().map(|r| r.suffix_count() as u64).sum();
+
+    section(&format!("end-to-end pipelines ({n_reads} reads, {n_suffixes} suffixes)"));
+    let m = bench_throughput("terasort e2e", 1, 3, n_suffixes as f64, "suffixes", || {
+        let ledger = Ledger::new();
+        terasort::run(&reads, &TeraSortConfig { conf: conf(), ..Default::default() }, &ledger)
+            .expect("terasort");
+    });
+    println!("{m}");
+    let m = bench_throughput("scheme e2e", 1, 3, n_suffixes as f64, "suffixes", || {
+        run_scheme(&scheme_cfg(), &reads);
+    });
+    println!("{m}");
+
+    section("ablation: sorting-group accumulation threshold (§IV-C)");
+    for threshold in [25_000usize, 50_000, 100_000, 200_000] {
+        let cfg = SchemeConfig { group_threshold: threshold, ..scheme_cfg() };
+        let m = bench_throughput(
+            &format!("threshold {threshold}"),
+            0,
+            3,
+            n_suffixes as f64,
+            "suffixes",
+            || {
+                run_scheme(&cfg, &reads);
+            },
+        );
+        println!("{m}");
+    }
+
+    section("ablation: prefix length (13 = paper's int, 23 = long)");
+    for p in [13usize, 23] {
+        let cfg = SchemeConfig { prefix_len: p, ..scheme_cfg() };
+        let m = bench_throughput(
+            &format!("prefix {p}"),
+            0,
+            3,
+            n_suffixes as f64,
+            "suffixes",
+            || {
+                run_scheme(&cfg, &reads);
+            },
+        );
+        println!("{m}");
+    }
+
+    section("ablation: output mode (write suffixes vs index-only)");
+    for (name, write) in [("write-suffixes (paper fair mode)", true), ("index-only", false)] {
+        let cfg = SchemeConfig { write_suffixes: write, ..scheme_cfg() };
+        let ledger = Ledger::new();
+        let store = SharedStore::new(8);
+        let s = store.clone();
+        let res = scheme::run(
+            &reads,
+            &cfg,
+            Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+            &ledger,
+        )
+        .expect("scheme");
+        let m = bench_throughput(name, 0, 3, n_suffixes as f64, "suffixes", || {
+            run_scheme(&cfg, &reads);
+        });
+        println!(
+            "{m}\n    KV fetch {} / HDFS write {}",
+            human(ledger.get(Channel::KvFetch)),
+            human(ledger.get(Channel::HdfsWrite))
+        );
+        drop(res);
+    }
+}

@@ -1,0 +1,47 @@
+//! `cargo bench --bench tables` — regenerate Tables III–VIII end to end
+//! (scaled execution + cluster-model projection) and time each.
+
+use samr::bench_support::{bench, section};
+use samr::report::experiments::ScaledEnv;
+use samr::report::Reporter;
+use samr::runtime;
+
+fn main() {
+    runtime::init(Some(&runtime::default_artifacts_dir()));
+    let thrift: f64 = std::env::var("SAMR_THRIFT").ok().and_then(|s| s.parse().ok()).unwrap_or(4.0);
+    let reporter = Reporter {
+        env: ScaledEnv { thrift, ..Default::default() },
+        ..Default::default()
+    };
+
+    section("Table III — TeraSort footprint (5 cases)");
+    let mut out = String::new();
+    let m = bench("table3", 0, 1, || out = reporter.table3().expect("t3"));
+    println!("{out}");
+    println!("{m}");
+
+    section("Table IV — TeraSort, 10 GB reducers");
+    let m = bench("table4", 0, 1, || out = reporter.table4().expect("t4"));
+    println!("{out}");
+    println!("{m}");
+
+    section("Table V — Scheme footprint (6 cases incl. pair-end)");
+    let m = bench("table5", 0, 1, || out = reporter.table5().expect("t5"));
+    println!("{out}");
+    println!("{m}");
+
+    section("Table VI — mem_heap");
+    let m = bench("table6", 0, 1, || out = reporter.table6().expect("t6"));
+    println!("{out}");
+    println!("{m}");
+
+    section("Table VII — mem_reducer");
+    let m = bench("table7", 0, 1, || out = reporter.table7().expect("t7"));
+    println!("{out}");
+    println!("{m}");
+
+    section("Table VIII — efficiency");
+    let m = bench("table8", 0, 1, || out = reporter.table8().expect("t8"));
+    println!("{out}");
+    println!("{m}");
+}

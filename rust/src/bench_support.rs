@@ -1,0 +1,92 @@
+//! Criterion-substitute bench harness (the offline vendor set has no
+//! criterion): warmup + timed iterations, mean ± σ, throughput report.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{mean, stddev};
+
+/// One timed measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub sigma: Duration,
+    /// Optional units-per-iteration for throughput reporting.
+    pub units: Option<(f64, &'static str)>,
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12.3?} ± {:>9.3?}  ({} iters)",
+            self.name, self.mean, self.sigma, self.iters
+        )?;
+        if let Some((units, label)) = self.units {
+            let per_sec = units / self.mean.as_secs_f64();
+            write!(f, "  {:>12.0} {label}/s", per_sec)?;
+        }
+        Ok(())
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(mean(&times)),
+        sigma: Duration::from_secs_f64(stddev(&times)),
+        units: None,
+    }
+}
+
+/// Like [`bench`] but reports `units` of work per iteration (throughput).
+pub fn bench_throughput(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units: f64,
+    label: &'static str,
+    f: impl FnMut(),
+) -> Measurement {
+    let mut m = bench(name, warmup, iters, f);
+    m.units = Some((units, label));
+    m
+}
+
+/// Standard bench header so `cargo bench` output is navigable.
+pub fn section(title: &str) {
+    println!("\n––– {title} –––");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let m = bench("spin", 1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(m.iters, 3);
+        assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn throughput_renders() {
+        let m = bench_throughput("t", 0, 2, 1000.0, "recs", || {});
+        let s = format!("{m}");
+        assert!(s.contains("recs/s"), "{s}");
+    }
+}

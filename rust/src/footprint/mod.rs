@@ -1,0 +1,228 @@
+//! Data store footprint — the paper's analytical instrument (§III).
+//!
+//! "Tracking how much the effective data is read from or written in the
+//! storages": deterministic, invariant under stragglers/failures, and
+//! commensurate with the time a system is *supposed* to take. The ledger
+//! mirrors the models of Fig. 2 (TeraSort) and Fig. 6(a) (scheme): local
+//! disk R/W on the map and reduce sides, HDFS R/W, shuffled bytes, plus
+//! the scheme's KV-store channels.
+
+pub mod model;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Storage channels of the footprint models (Fig. 2 / Fig. 6(a)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Channel {
+    HdfsRead,
+    HdfsWrite,
+    MapLocalRead,
+    MapLocalWrite,
+    Shuffle,
+    ReduceLocalRead,
+    ReduceLocalWrite,
+    /// Scheme only: reads PUT into the in-memory store (network).
+    KvPut,
+    /// Scheme only: suffixes fetched from the store (network).
+    KvFetch,
+}
+
+pub const CHANNELS: [Channel; 9] = [
+    Channel::HdfsRead,
+    Channel::HdfsWrite,
+    Channel::MapLocalRead,
+    Channel::MapLocalWrite,
+    Channel::Shuffle,
+    Channel::ReduceLocalRead,
+    Channel::ReduceLocalWrite,
+    Channel::KvPut,
+    Channel::KvFetch,
+];
+
+impl Channel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Channel::HdfsRead => "HDFS Read",
+            Channel::HdfsWrite => "HDFS Write",
+            Channel::MapLocalRead => "Local Read (Map)",
+            Channel::MapLocalWrite => "Local Write (Map)",
+            Channel::Shuffle => "Shuffle",
+            Channel::ReduceLocalRead => "Local Read (Reduce)",
+            Channel::ReduceLocalWrite => "Local Write (Reduce)",
+            Channel::KvPut => "KV Put",
+            Channel::KvFetch => "KV Fetch",
+        }
+    }
+
+    fn slot(&self) -> usize {
+        CHANNELS.iter().position(|c| c == self).unwrap()
+    }
+}
+
+/// Thread-safe byte ledger, shared by every task of a job.
+#[derive(Debug, Default)]
+pub struct Ledger {
+    bytes: [AtomicU64; 9],
+}
+
+impl Ledger {
+    pub fn new() -> Arc<Ledger> {
+        Arc::new(Ledger::default())
+    }
+
+    pub fn add(&self, ch: Channel, bytes: u64) {
+        self.bytes[ch.slot()].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, ch: Channel) -> u64 {
+        self.bytes[ch.slot()].load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> Footprint {
+        let mut fp = Footprint::default();
+        for ch in CHANNELS {
+            fp.bytes[ch.slot()] = self.get(ch);
+        }
+        fp
+    }
+
+    pub fn reset(&self) {
+        for b in &self.bytes {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Immutable snapshot of a ledger.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Footprint {
+    bytes: [u64; 9],
+}
+
+impl Footprint {
+    pub fn get(&self, ch: Channel) -> u64 {
+        self.bytes[ch.slot()]
+    }
+
+    pub fn set(&mut self, ch: Channel, v: u64) {
+        self.bytes[ch.slot()] = v;
+    }
+
+    pub fn add(&mut self, ch: Channel, v: u64) {
+        self.bytes[ch.slot()] += v;
+    }
+
+    /// Units relative to a reference size — the paper normalizes TeraSort
+    /// tables by input size and scheme tables by output size.
+    pub fn normalized(&self, ch: Channel, reference: u64) -> f64 {
+        self.get(ch) as f64 / reference as f64
+    }
+
+    /// Total local-disk traffic (the quantity whose growth breaks
+    /// TeraSort's scalability).
+    pub fn local_disk_total(&self) -> u64 {
+        self.get(Channel::MapLocalRead)
+            + self.get(Channel::MapLocalWrite)
+            + self.get(Channel::ReduceLocalRead)
+            + self.get(Channel::ReduceLocalWrite)
+    }
+
+    /// Total network traffic (shuffle + KV channels).
+    pub fn network_total(&self) -> u64 {
+        self.get(Channel::Shuffle) + self.get(Channel::KvPut) + self.get(Channel::KvFetch)
+    }
+
+    pub fn merged(mut self, other: &Footprint) -> Footprint {
+        for ch in CHANNELS {
+            self.bytes[ch.slot()] += other.get(ch);
+        }
+        self
+    }
+}
+
+impl std::fmt::Display for Footprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for ch in CHANNELS {
+            if self.get(ch) > 0 {
+                writeln!(
+                    f,
+                    "{:<22} {}",
+                    ch.name(),
+                    crate::util::bytes::human(self.get(ch))
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates_and_snapshots() {
+        let l = Ledger::new();
+        l.add(Channel::MapLocalWrite, 100);
+        l.add(Channel::MapLocalWrite, 50);
+        l.add(Channel::Shuffle, 7);
+        let fp = l.snapshot();
+        assert_eq!(fp.get(Channel::MapLocalWrite), 150);
+        assert_eq!(fp.get(Channel::Shuffle), 7);
+        assert_eq!(fp.get(Channel::HdfsRead), 0);
+        l.reset();
+        assert_eq!(l.snapshot().get(Channel::Shuffle), 0);
+    }
+
+    #[test]
+    fn normalization() {
+        let mut fp = Footprint::default();
+        fp.set(Channel::MapLocalWrite, 207);
+        assert!((fp.normalized(Channel::MapLocalWrite, 100) - 2.07).abs() < 1e-9);
+    }
+
+    #[test]
+    fn totals() {
+        let mut fp = Footprint::default();
+        fp.set(Channel::MapLocalRead, 1);
+        fp.set(Channel::MapLocalWrite, 2);
+        fp.set(Channel::ReduceLocalRead, 4);
+        fp.set(Channel::ReduceLocalWrite, 8);
+        fp.set(Channel::Shuffle, 16);
+        fp.set(Channel::KvPut, 32);
+        fp.set(Channel::KvFetch, 64);
+        assert_eq!(fp.local_disk_total(), 15);
+        assert_eq!(fp.network_total(), 112);
+    }
+
+    #[test]
+    fn merge() {
+        let mut a = Footprint::default();
+        a.set(Channel::HdfsRead, 5);
+        let mut b = Footprint::default();
+        b.set(Channel::HdfsRead, 6);
+        b.set(Channel::HdfsWrite, 1);
+        let m = a.merged(&b);
+        assert_eq!(m.get(Channel::HdfsRead), 11);
+        assert_eq!(m.get(Channel::HdfsWrite), 1);
+    }
+
+    #[test]
+    fn threaded_ledger() {
+        let l = Ledger::new();
+        let mut hs = Vec::new();
+        for _ in 0..8 {
+            let l = l.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    l.add(Channel::Shuffle, 1);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(l.get(Channel::Shuffle), 8000);
+    }
+}

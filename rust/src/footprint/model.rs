@@ -1,0 +1,150 @@
+//! The paper's scalability/efficiency models (§IV-D):
+//!
+//!   f(x) = a·x + b   if x < breakdown,   N/A otherwise
+//!
+//! `a` and `breakdown` characterize scalability₁ (workload growth without
+//! added resources), `b` lumps parallelization/acceleration and relates to
+//! scalability₂. Efficiency of spending extra memory is
+//! `speedup / mem_ratio` (Table VIII).
+
+use crate::util::stats::linear_fit;
+
+/// One measured point of a scalability series.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalePoint {
+    /// Input size (bytes).
+    pub x: f64,
+    /// Elapsed time (minutes), μ over repetitions.
+    pub minutes: f64,
+    /// σ over repetitions.
+    pub sigma: f64,
+    /// Did the system complete reliably at this size?
+    pub completed: bool,
+}
+
+/// Fitted f(x) = a·x + b with a breakdown threshold.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalabilityModel {
+    /// Slope (minutes per byte) over the linear region.
+    pub a: f64,
+    /// Intercept (minutes).
+    pub b: f64,
+    /// R² of the linear region fit.
+    pub r2: f64,
+    /// Smallest input size at which the system broke down (None = never
+    /// observed within the series).
+    pub breakdown: Option<f64>,
+}
+
+impl ScalabilityModel {
+    /// Fit from a series: the linear region is every completed point below
+    /// the first failure; breakdown is the first non-completed (or wildly
+    /// off-trend) size.
+    pub fn fit(points: &[ScalePoint]) -> ScalabilityModel {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut breakdown = None;
+        for p in points {
+            if !p.completed {
+                breakdown = breakdown.or(Some(p.x));
+                continue;
+            }
+            if breakdown.is_none() {
+                xs.push(p.x);
+                ys.push(p.minutes);
+            }
+        }
+        // off-trend detection: a completed point whose time exceeds the
+        // extrapolated fit by >50% also marks a breakdown (the paper's
+        // Case 5 completed once out of five but off-trend).
+        let (a, b, r2) = if xs.len() >= 2 {
+            linear_fit(&xs, &ys)
+        } else {
+            (f64::NAN, f64::NAN, f64::NAN)
+        };
+        if breakdown.is_none() && xs.len() >= 3 {
+            let (a2, b2, _) = linear_fit(&xs[..xs.len() - 1], &ys[..ys.len() - 1]);
+            let last_x = xs[xs.len() - 1];
+            let predicted = a2 * last_x + b2;
+            if ys[ys.len() - 1] > predicted * 1.5 {
+                breakdown = Some(last_x);
+                let (a3, b3, r3) = linear_fit(&xs[..xs.len() - 1], &ys[..ys.len() - 1]);
+                return ScalabilityModel { a: a3, b: b3, r2: r3, breakdown };
+            }
+        }
+        ScalabilityModel { a, b, r2, breakdown }
+    }
+
+    /// Predicted minutes at size x (None above breakdown — "N/A").
+    pub fn predict(&self, x: f64) -> Option<f64> {
+        match self.breakdown {
+            Some(bd) if x >= bd => None,
+            _ => Some(self.a * x + self.b),
+        }
+    }
+}
+
+/// Table VIII's efficiency: `speedup / mem_ratio`, where speedup is
+/// baseline-time / variant-time at the same input size and mem_ratio is
+/// variant-memory / baseline-memory.
+pub fn efficiency(baseline_minutes: f64, variant_minutes: f64, mem_ratio: f64) -> f64 {
+    (baseline_minutes / variant_minutes) / mem_ratio
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(x: f64, m: f64, ok: bool) -> ScalePoint {
+        ScalePoint { x, minutes: m, sigma: 1.0, completed: ok }
+    }
+
+    #[test]
+    fn fits_linear_region() {
+        // paper Table III shape: linear through case 4, breakdown case 5
+        let pts = [
+            pt(0.637, 61.8, true),
+            pt(1.24, 143.4, true),
+            pt(1.86, 230.4, true),
+            pt(2.49, 312.0, true),
+            pt(3.37, 709.4, false),
+        ];
+        let m = ScalabilityModel::fit(&pts);
+        assert!(m.breakdown == Some(3.37));
+        assert!(m.r2 > 0.99, "r2={}", m.r2);
+        assert!((m.a - 135.0).abs() < 10.0, "a={}", m.a);
+        assert!(m.predict(3.5).is_none());
+        assert!(m.predict(1.0).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn off_trend_completed_point_is_breakdown() {
+        // completes but wildly off-trend (paper's Case 5 with one success)
+        let pts = [
+            pt(1.0, 100.0, true),
+            pt(2.0, 200.0, true),
+            pt(3.0, 300.0, true),
+            pt(4.0, 900.0, true),
+        ];
+        let m = ScalabilityModel::fit(&pts);
+        assert_eq!(m.breakdown, Some(4.0));
+        assert!((m.a - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn no_breakdown_when_linear() {
+        let pts = [pt(1.0, 110.0, true), pt(2.0, 210.0, true), pt(3.0, 310.0, true)];
+        let m = ScalabilityModel::fit(&pts);
+        assert!(m.breakdown.is_none());
+        assert!((m.b - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn efficiency_matches_table8_arithmetic() {
+        // paper Table VIII, mem_heap Case 1: speedup 61.8/66.6, ratio 2
+        let e = efficiency(61.8, 66.6, 2.0);
+        assert!((e - 0.464).abs() < 0.001, "e={e}");
+        // scheme can exceed 1.0 when mem_ratio ~ 1
+        assert!(efficiency(100.0, 50.0, 1.1) > 1.0);
+    }
+}

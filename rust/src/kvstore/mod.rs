@@ -1,0 +1,54 @@
+//! The distributed in-memory data store system (the Redis role in the
+//! paper): RESP protocol, store with memory accounting and `MGETSUFFIX`,
+//! threaded TCP server, pipelined client, and mod-N sharding.
+
+pub mod client;
+pub mod resp;
+pub mod server;
+pub mod shard;
+pub mod store;
+
+use std::net::SocketAddr;
+
+use crate::kvstore::server::Server;
+use crate::kvstore::shard::ShardedClient;
+
+/// A bundle of local KV instances on ephemeral ports — one per simulated
+/// node — plus a connected sharded client. The real-TCP backend of the
+/// example pipelines and integration tests.
+pub struct LocalKvCluster {
+    pub servers: Vec<Server>,
+}
+
+impl LocalKvCluster {
+    pub fn start(n_instances: usize) -> std::io::Result<Self> {
+        let servers = (0..n_instances)
+            .map(|_| Server::start(0))
+            .collect::<std::io::Result<Vec<_>>>()?;
+        Ok(Self { servers })
+    }
+
+    pub fn addrs(&self) -> Vec<SocketAddr> {
+        self.servers.iter().map(|s| s.addr()).collect()
+    }
+
+    pub fn client(&self) -> crate::kvstore::client::Result<ShardedClient> {
+        ShardedClient::connect(&self.addrs())
+    }
+
+    /// Total memory used across instances (paper's "donated" memory).
+    pub fn used_memory(&self) -> u64 {
+        self.servers.iter().map(|s| s.used_memory()).sum()
+    }
+
+    /// Server-side wire traffic totals (in, out).
+    pub fn traffic(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering;
+        let mut t = (0, 0);
+        for s in &self.servers {
+            t.0 += s.bytes_in.load(Ordering::Relaxed);
+            t.1 += s.bytes_out.load(Ordering::Relaxed);
+        }
+        t
+    }
+}

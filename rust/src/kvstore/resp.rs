@@ -1,0 +1,227 @@
+//! RESP (REdis Serialization Protocol) subset — the wire format of the
+//! in-memory data store. Enough of RESP2 for the pipeline: simple strings,
+//! errors, integers, bulk strings (incl. null), arrays.
+
+use std::io::{self, BufRead, Write};
+
+/// One RESP value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Value {
+    Simple(String),
+    Error(String),
+    Int(i64),
+    Bulk(Vec<u8>),
+    Null,
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn ok() -> Self {
+        Value::Simple("OK".into())
+    }
+
+    pub fn bulk(b: impl Into<Vec<u8>>) -> Self {
+        Value::Bulk(b.into())
+    }
+
+    /// Wire size in bytes (used for network-traffic accounting without
+    /// re-serializing).
+    pub fn wire_len(&self) -> u64 {
+        match self {
+            Value::Simple(s) => 1 + s.len() as u64 + 2,
+            Value::Error(s) => 1 + s.len() as u64 + 2,
+            Value::Int(i) => 1 + i.to_string().len() as u64 + 2,
+            Value::Bulk(b) => 1 + b.len().to_string().len() as u64 + 2 + b.len() as u64 + 2,
+            Value::Null => 5, // $-1\r\n
+            Value::Array(vs) => {
+                1 + vs.len().to_string().len() as u64
+                    + 2
+                    + vs.iter().map(Value::wire_len).sum::<u64>()
+            }
+        }
+    }
+}
+
+/// Encode a value to a writer.
+pub fn write_value(w: &mut impl Write, v: &Value) -> io::Result<()> {
+    match v {
+        Value::Simple(s) => write!(w, "+{s}\r\n"),
+        Value::Error(s) => write!(w, "-{s}\r\n"),
+        Value::Int(i) => write!(w, ":{i}\r\n"),
+        Value::Bulk(b) => {
+            write!(w, "${}\r\n", b.len())?;
+            w.write_all(b)?;
+            w.write_all(b"\r\n")
+        }
+        Value::Null => w.write_all(b"$-1\r\n"),
+        Value::Array(vs) => {
+            write!(w, "*{}\r\n", vs.len())?;
+            for v in vs {
+                write_value(w, v)?;
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Encode a command (array of bulk strings), the client->server direction.
+/// Writes directly — no Value materialization on the request hot path.
+pub fn write_command(w: &mut impl Write, args: &[&[u8]]) -> io::Result<()> {
+    write!(w, "*{}\r\n", args.len())?;
+    for a in args {
+        write!(w, "${}\r\n", a.len())?;
+        w.write_all(a)?;
+        w.write_all(b"\r\n")?;
+    }
+    Ok(())
+}
+
+/// Wire length of a command without materializing it.
+pub fn command_wire_len(args: &[&[u8]]) -> u64 {
+    let mut total = 1 + args.len().to_string().len() as u64 + 2;
+    for a in args {
+        total += 1 + a.len().to_string().len() as u64 + 2 + a.len() as u64 + 2;
+    }
+    total
+}
+
+/// Read one CRLF-terminated line into `scratch` (reused across calls —
+/// RESP decoding is per-suffix on the reduce hot path, and a String
+/// allocation per protocol line measurably hurts; §Perf iteration 5b).
+fn read_line_into<'a>(r: &mut impl BufRead, scratch: &'a mut Vec<u8>) -> io::Result<&'a [u8]> {
+    scratch.clear();
+    r.read_until(b'\n', scratch)?;
+    if scratch.len() < 2 || &scratch[scratch.len() - 2..] != b"\r\n" {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "RESP line without CRLF",
+        ));
+    }
+    let n = scratch.len() - 2;
+    Ok(&scratch[..n])
+}
+
+fn parse_int(bytes: &[u8]) -> io::Result<i64> {
+    std::str::from_utf8(bytes)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad RESP integer"))
+}
+
+/// Decode one value from a reader.
+pub fn read_value(r: &mut impl BufRead) -> io::Result<Value> {
+    let mut scratch = Vec::with_capacity(64);
+    read_value_buf(r, &mut scratch)
+}
+
+fn read_value_buf(r: &mut impl BufRead, scratch: &mut Vec<u8>) -> io::Result<Value> {
+    let bad = |what: &str| io::Error::new(io::ErrorKind::InvalidData, what.to_string());
+    let line = read_line_into(r, scratch)?;
+    if line.is_empty() {
+        return Err(bad("empty RESP line"));
+    }
+    let (tag, rest) = (line[0], &line[1..]);
+    match tag {
+        b'+' => Ok(Value::Simple(String::from_utf8_lossy(rest).into_owned())),
+        b'-' => Ok(Value::Error(String::from_utf8_lossy(rest).into_owned())),
+        b':' => parse_int(rest).map(Value::Int),
+        b'$' => {
+            let n = parse_int(rest)?;
+            if n < 0 {
+                return Ok(Value::Null);
+            }
+            let mut buf = vec![0u8; n as usize + 2];
+            r.read_exact(&mut buf)?;
+            if &buf[n as usize..] != b"\r\n" {
+                return Err(bad("bulk without CRLF"));
+            }
+            buf.truncate(n as usize);
+            Ok(Value::Bulk(buf))
+        }
+        b'*' => {
+            let n = parse_int(rest)?;
+            if n < 0 {
+                return Ok(Value::Null);
+            }
+            let mut vs = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                vs.push(read_value_buf(r, scratch)?);
+            }
+            Ok(Value::Array(vs))
+        }
+        _ => Err(bad("unknown RESP tag")),
+    }
+}
+
+/// Decode a command into argv (must be an array of bulks).
+pub fn read_command(r: &mut impl BufRead) -> io::Result<Option<Vec<Vec<u8>>>> {
+    match read_value(r) {
+        Ok(Value::Array(vs)) => {
+            let mut args = Vec::with_capacity(vs.len());
+            for v in vs {
+                match v {
+                    Value::Bulk(b) => args.push(b),
+                    _ => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            "command args must be bulk strings",
+                        ))
+                    }
+                }
+            }
+            Ok(Some(args))
+        }
+        Ok(_) => Err(io::Error::new(io::ErrorKind::InvalidData, "command must be array")),
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn roundtrip(v: &Value) -> Value {
+        let mut buf = Vec::new();
+        write_value(&mut buf, v).unwrap();
+        assert_eq!(buf.len() as u64, v.wire_len(), "wire_len of {v:?}");
+        read_value(&mut BufReader::new(&buf[..])).unwrap()
+    }
+
+    #[test]
+    fn roundtrips() {
+        for v in [
+            Value::ok(),
+            Value::Error("ERR nope".into()),
+            Value::Int(-42),
+            Value::bulk(b"hello".to_vec()),
+            Value::bulk(b"".to_vec()),
+            Value::Null,
+            Value::Array(vec![Value::Int(1), Value::bulk(b"x".to_vec()), Value::Null]),
+            Value::Array(vec![]),
+        ] {
+            assert_eq!(roundtrip(&v), v);
+        }
+    }
+
+    #[test]
+    fn command_roundtrip() {
+        let mut buf = Vec::new();
+        write_command(&mut buf, &[b"SET", b"k1", b"v1"]).unwrap();
+        let got = read_command(&mut BufReader::new(&buf[..])).unwrap().unwrap();
+        assert_eq!(got, vec![b"SET".to_vec(), b"k1".to_vec(), b"v1".to_vec()]);
+    }
+
+    #[test]
+    fn eof_is_none() {
+        let empty: &[u8] = b"";
+        assert!(read_command(&mut BufReader::new(empty)).unwrap().is_none());
+    }
+
+    #[test]
+    fn binary_safe_bulk() {
+        let v = Value::bulk(vec![0u8, 1, 2, 3, 255, b'\r', b'\n']);
+        assert_eq!(roundtrip(&v), v);
+    }
+}

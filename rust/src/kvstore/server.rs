@@ -1,0 +1,147 @@
+//! Threaded TCP server for one KV instance (the Redis role). One instance
+//! per simulated node; the store is a mutex-guarded [`Store`] — Redis
+//! itself is single-threaded, so serializing commands is faithful.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::kvstore::resp::{self, Value};
+use crate::kvstore::store::{Reply, Store};
+
+/// Shared handle to a running server.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    store: Arc<Mutex<Store>>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    /// Total request/response wire bytes (network-footprint accounting).
+    pub bytes_in: Arc<AtomicU64>,
+    pub bytes_out: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Bind and serve on `127.0.0.1:port` (port 0 = ephemeral).
+    pub fn start(port: u16) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let store = Arc::new(Mutex::new(Store::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let bytes_in = Arc::new(AtomicU64::new(0));
+        let bytes_out = Arc::new(AtomicU64::new(0));
+
+        let t_store = store.clone();
+        let t_stop = stop.clone();
+        let t_in = bytes_in.clone();
+        let t_out = bytes_out.clone();
+        let accept_thread = std::thread::spawn(move || {
+            let mut workers: Vec<JoinHandle<()>> = Vec::new();
+            for conn in listener.incoming() {
+                if t_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(conn) = conn else { break };
+                let store = t_store.clone();
+                let stop = t_stop.clone();
+                let bin = t_in.clone();
+                let bout = t_out.clone();
+                workers.push(std::thread::spawn(move || {
+                    let _ = serve_conn(conn, store, stop, bin, bout);
+                }));
+            }
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+
+        Ok(Server {
+            addr,
+            store,
+            stop,
+            accept_thread: Some(accept_thread),
+            bytes_in,
+            bytes_out,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Direct (in-process) access to the store — used by the simulator and
+    /// by memory-usage probes, bypassing the socket.
+    pub fn store(&self) -> &Arc<Mutex<Store>> {
+        &self.store
+    }
+
+    pub fn used_memory(&self) -> u64 {
+        self.store.lock().unwrap().used_memory()
+    }
+
+    pub fn shutdown(&mut self) {
+        if self.accept_thread.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn reply_to_value(r: Reply) -> Value {
+    match r {
+        Reply::Ok => Value::ok(),
+        Reply::Int(i) => Value::Int(i),
+        Reply::Bulk(b) => Value::Bulk(b),
+        Reply::Null => Value::Null,
+        Reply::Multi(vs) => Value::Array(
+            vs.into_iter()
+                .map(|v| v.map(Value::Bulk).unwrap_or(Value::Null))
+                .collect(),
+        ),
+        Reply::Err(e) => Value::Error(e),
+    }
+}
+
+fn serve_conn(
+    conn: TcpStream,
+    store: Arc<Mutex<Store>>,
+    stop: Arc<AtomicBool>,
+    bytes_in: Arc<AtomicU64>,
+    bytes_out: Arc<AtomicU64>,
+) -> std::io::Result<()> {
+    conn.set_nodelay(true).ok();
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut writer = BufWriter::new(conn);
+    while !stop.load(Ordering::SeqCst) {
+        let Some(args) = resp::read_command(&mut reader)? else {
+            break; // client closed
+        };
+        // arithmetic wire length — no clones on the request path
+        let mut in_len: u64 = 1 + args.len().to_string().len() as u64 + 2;
+        for a in &args {
+            in_len += 1 + a.len().to_string().len() as u64 + 2 + a.len() as u64 + 2;
+        }
+        bytes_in.fetch_add(in_len, Ordering::Relaxed);
+        let reply = {
+            let mut s = store.lock().unwrap();
+            s.dispatch(&args)
+        };
+        let v = reply_to_value(reply);
+        bytes_out.fetch_add(v.wire_len(), Ordering::Relaxed);
+        resp::write_value(&mut writer, &v)?;
+        writer.flush()?;
+    }
+    Ok(())
+}

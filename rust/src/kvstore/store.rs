@@ -1,0 +1,239 @@
+//! The in-memory store behind one KV instance: a hash map with the
+//! paper-calibrated memory accounting and the `MGETSUFFIX` suffix
+//! extraction (§IV-B — the command the authors added to Redis so reducers
+//! fetch *suffixes*, not whole reads, halving network bytes).
+
+use std::collections::HashMap;
+
+/// Per-entry metadata overhead. Calibrated so a ~208-byte read record
+/// costs ~1.5× its payload, matching the paper's "about 1.5 times as much
+/// space as the input size due to the metadata" (§IV-D).
+pub const META_OVERHEAD_PER_ENTRY: u64 = 104;
+
+/// Result of one command dispatch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Reply {
+    Ok,
+    Int(i64),
+    Bulk(Vec<u8>),
+    Null,
+    Multi(Vec<Option<Vec<u8>>>),
+    Err(String),
+}
+
+/// In-memory key-value store with byte accounting.
+#[derive(Default)]
+pub struct Store {
+    map: HashMap<Vec<u8>, Vec<u8>>,
+    payload_bytes: u64,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert/overwrite, maintaining payload accounting.
+    pub fn set_exact(&mut self, key: Vec<u8>, value: Vec<u8>) {
+        let klen = key.len() as u64;
+        let vlen = value.len() as u64;
+        match self.map.insert(key, value) {
+            Some(old) => {
+                self.payload_bytes = self.payload_bytes - old.len() as u64 + vlen;
+            }
+            None => {
+                self.payload_bytes += klen + vlen;
+            }
+        }
+    }
+
+    pub fn get(&self, key: &[u8]) -> Option<&Vec<u8>> {
+        self.map.get(key)
+    }
+
+    pub fn del(&mut self, key: &[u8]) -> bool {
+        if let Some(old) = self.map.remove(key) {
+            self.payload_bytes -= (key.len() + old.len()) as u64;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Suffix of the value from `offset` (clamped) — `MGETSUFFIX` core.
+    pub fn get_suffix(&self, key: &[u8], offset: usize) -> Option<Vec<u8>> {
+        self.map.get(key).map(|v| v[offset.min(v.len())..].to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn flush(&mut self) {
+        self.map.clear();
+        self.payload_bytes = 0;
+    }
+
+    /// Raw payload bytes stored (keys + values).
+    pub fn payload_bytes(&self) -> u64 {
+        self.payload_bytes
+    }
+
+    /// Memory use including per-entry metadata — what a node must donate
+    /// (the paper's 1.5× rule).
+    pub fn used_memory(&self) -> u64 {
+        self.payload_bytes + self.map.len() as u64 * META_OVERHEAD_PER_ENTRY
+    }
+
+    /// Dispatch one RESP-style command (argv) against the store.
+    pub fn dispatch(&mut self, args: &[Vec<u8>]) -> Reply {
+        if args.is_empty() {
+            return Reply::Err("ERR empty command".into());
+        }
+        let cmd = String::from_utf8_lossy(&args[0]).to_ascii_uppercase();
+        match cmd.as_str() {
+            "PING" => Reply::Bulk(b"PONG".to_vec()),
+            "SET" if args.len() == 3 => {
+                self.set_exact(args[1].clone(), args[2].clone());
+                Reply::Ok
+            }
+            "GET" if args.len() == 2 => match self.get(&args[1]) {
+                Some(v) => Reply::Bulk(v.clone()),
+                None => Reply::Null,
+            },
+            "DEL" if args.len() >= 2 => {
+                let n = args[1..].iter().filter(|k| self.del(k)).count();
+                Reply::Int(n as i64)
+            }
+            "MSET" if args.len() >= 3 && args.len() % 2 == 1 => {
+                for kv in args[1..].chunks(2) {
+                    self.set_exact(kv[0].clone(), kv[1].clone());
+                }
+                Reply::Ok
+            }
+            "MGET" if args.len() >= 2 => {
+                Reply::Multi(args[1..].iter().map(|k| self.get(k).cloned()).collect())
+            }
+            // MGETSUFFIX key off [key off ...] — the paper's added command.
+            "MGETSUFFIX" if args.len() >= 3 && args.len() % 2 == 1 => {
+                let mut out = Vec::with_capacity((args.len() - 1) / 2);
+                for kv in args[1..].chunks(2) {
+                    let off: usize = match std::str::from_utf8(&kv[1])
+                        .ok()
+                        .and_then(|s| s.parse().ok())
+                    {
+                        Some(o) => o,
+                        None => return Reply::Err("ERR bad offset".into()),
+                    };
+                    out.push(self.get_suffix(&kv[0], off));
+                }
+                Reply::Multi(out)
+            }
+            "DBSIZE" => Reply::Int(self.len() as i64),
+            "MEMORY" => Reply::Int(self.used_memory() as i64),
+            "FLUSHDB" => {
+                self.flush();
+                Reply::Ok
+            }
+            _ => Reply::Err(format!("ERR unknown or malformed command '{cmd}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_del() {
+        let mut s = Store::new();
+        s.set_exact(b"k".to_vec(), b"value".to_vec());
+        assert_eq!(s.get(b"k"), Some(&b"value".to_vec()));
+        assert!(s.del(b"k"));
+        assert!(!s.del(b"k"));
+        assert_eq!(s.get(b"k"), None);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let mut s = Store::new();
+        s.set_exact(b"a".to_vec(), vec![0u8; 9]);
+        assert_eq!(s.payload_bytes(), 10);
+        s.set_exact(b"a".to_vec(), vec![0u8; 19]); // overwrite
+        assert_eq!(s.payload_bytes(), 20);
+        s.set_exact(b"bb".to_vec(), vec![0u8; 8]);
+        assert_eq!(s.payload_bytes(), 30);
+        assert_eq!(s.used_memory(), 30 + 2 * META_OVERHEAD_PER_ENTRY);
+        s.del(b"a");
+        assert_eq!(s.payload_bytes(), 10);
+        s.flush();
+        assert_eq!(s.payload_bytes(), 0);
+    }
+
+    #[test]
+    fn overhead_is_about_1_5x_for_read_records() {
+        // paper §IV-D: 32 GB of input needs ~48 GB of Redis memory.
+        let mut s = Store::new();
+        for i in 0..100u64 {
+            s.set_exact(i.to_be_bytes().to_vec(), vec![1u8; 200]);
+        }
+        let ratio = s.used_memory() as f64 / s.payload_bytes() as f64;
+        assert!((1.4..1.6).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn mgetsuffix_dispatch() {
+        let mut s = Store::new();
+        s.set_exact(b"5".to_vec(), b"ACGTACGT".to_vec());
+        let r = s.dispatch(&[
+            b"MGETSUFFIX".to_vec(),
+            b"5".to_vec(),
+            b"3".to_vec(),
+            b"5".to_vec(),
+            b"8".to_vec(),
+            b"missing".to_vec(),
+            b"0".to_vec(),
+        ]);
+        assert_eq!(
+            r,
+            Reply::Multi(vec![
+                Some(b"TACGT".to_vec()),
+                Some(b"".to_vec()), // offset == len -> empty (the "$" suffix)
+                None,
+            ])
+        );
+    }
+
+    #[test]
+    fn suffix_offset_clamps() {
+        let mut s = Store::new();
+        s.set_exact(b"k".to_vec(), b"AC".to_vec());
+        assert_eq!(s.get_suffix(b"k", 100), Some(vec![]));
+    }
+
+    #[test]
+    fn dispatch_surface() {
+        let mut s = Store::new();
+        assert_eq!(s.dispatch(&[b"PING".to_vec()]), Reply::Bulk(b"PONG".to_vec()));
+        assert_eq!(
+            s.dispatch(&[b"SET".to_vec(), b"a".to_vec(), b"1".to_vec()]),
+            Reply::Ok
+        );
+        assert_eq!(
+            s.dispatch(&[b"MSET".to_vec(), b"b".to_vec(), b"2".to_vec(), b"c".to_vec(), b"3".to_vec()]),
+            Reply::Ok
+        );
+        assert_eq!(
+            s.dispatch(&[b"MGET".to_vec(), b"a".to_vec(), b"zz".to_vec()]),
+            Reply::Multi(vec![Some(b"1".to_vec()), None])
+        );
+        assert_eq!(s.dispatch(&[b"DBSIZE".to_vec()]), Reply::Int(3));
+        assert!(matches!(s.dispatch(&[b"NOPE".to_vec()]), Reply::Err(_)));
+        assert_eq!(s.dispatch(&[b"FLUSHDB".to_vec()]), Reply::Ok);
+        assert_eq!(s.dispatch(&[b"DBSIZE".to_vec()]), Reply::Int(0));
+    }
+}

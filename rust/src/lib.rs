@@ -1,0 +1,24 @@
+//! # samr — Scalable and Efficient Suffix-Array Construction
+//!
+//! Reproduction of "Scalable and Efficient Construction of Suffix Array
+//! with MapReduce and In-Memory Data Store System" (Wu et al., 2017):
+//! an in-process MapReduce runtime with Hadoop's spill/merge mechanics, a
+//! Redis-like in-memory data store with the paper's `MGETSUFFIX` command,
+//! the TeraSort baseline, the paper's index-only scheme, and the
+//! data-store-footprint instrumentation its evaluation is built on.
+//! The map/reduce compute hot spots execute AOT-compiled JAX/Pallas
+//! kernels through PJRT (see `runtime`).
+pub mod bench_support;
+pub mod cli;
+pub mod cluster;
+pub mod footprint;
+pub mod kvstore;
+pub mod mapreduce;
+pub mod report;
+pub mod runtime;
+pub mod scheme;
+pub mod simcost;
+pub mod suffix;
+pub mod terasort;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,302 @@
+//! samr — the launcher.
+//!
+//! Subcommands:
+//!   quickstart                         Table I demo + a tiny end-to-end run
+//!   table <1..8>                       regenerate a paper table
+//!   figure <3|4|5|7|8>                 regenerate a paper figure
+//!   terasort [--reads N --len L ...]   run the baseline on a synthetic corpus
+//!   scheme   [--reads N --tcp ...]     run the scheme (in-proc or TCP KV)
+//!   kv-server [--port P]               run one KV instance (RESP + MGETSUFFIX)
+//!   stats                              §IV-D headline comparison block
+//!   all                                every table and figure
+//!
+//! Global flags: --thrift F (shrink experiments F×, default 4),
+//! --trials N (simulated repetitions), --artifacts DIR (PJRT kernels;
+//! "none" forces the native fallback), --reducers N, --seed S.
+
+use std::sync::Arc;
+
+use samr::cli::Args;
+use samr::footprint::{Channel, Ledger};
+use samr::kvstore::shard::{SharedStore, SuffixStore};
+use samr::kvstore::{server::Server, LocalKvCluster};
+use samr::report::experiments::{example_corpus, ScaledEnv};
+use samr::report::Reporter;
+use samr::runtime;
+use samr::scheme::{self, SchemeConfig};
+use samr::suffix::validate::validate_order;
+use samr::terasort::{self, TeraSortConfig};
+use samr::util::bytes::human;
+
+fn main() {
+    let args = Args::from_env();
+    // runtime init: --artifacts DIR | "none" | default ./artifacts
+    match args.get("artifacts") {
+        Some("none") => {
+            runtime::init(None);
+        }
+        Some(dir) => {
+            runtime::init(Some(std::path::Path::new(dir)));
+        }
+        None => {
+            runtime::init(Some(&runtime::default_artifacts_dir()));
+        }
+    }
+    let reporter = reporter_from(&args);
+    let code = match args.command.as_str() {
+        "quickstart" => quickstart(&reporter),
+        "table" => table(&args, &reporter),
+        "figure" => figure(&args, &reporter),
+        "terasort" => run_terasort(&args),
+        "scheme" => run_scheme(&args),
+        "kv-server" => kv_server(&args),
+        "stats" => {
+            print!("{}", reporter.scheme_stats().expect("stats"));
+            0
+        }
+        "all" => all(&reporter),
+        "" | "help" | "--help" => {
+            eprintln!("{}", HELP);
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "samr — suffix array construction with MapReduce + in-memory data store
+  samr quickstart | stats | all
+  samr table <1..8>   samr figure <3|4|5|7|8>
+  samr terasort|scheme [--reads N --len L --reducers R --tcp]
+  samr kv-server [--port P]
+  global: --thrift F --trials N --artifacts DIR|none --seed S";
+
+fn reporter_from(args: &Args) -> Reporter {
+    let mut r = Reporter::default();
+    r.env = ScaledEnv {
+        thrift: args.get_parse("thrift", 4.0),
+        trials: args.get_parse("trials", 5),
+        seed: args.get_parse("seed", 20170101),
+        ..Default::default()
+    };
+    r
+}
+
+fn quickstart(reporter: &Reporter) -> i32 {
+    print!("{}", reporter.table1());
+    println!(
+        "\nPJRT artifacts: {}",
+        if runtime::pjrt_active() { "active" } else { "native fallback" }
+    );
+    // tiny end-to-end run of both pipelines with validation
+    let reads = example_corpus(200, 60, 42);
+    let ledger = Ledger::new();
+    let tera = terasort::run(
+        &reads,
+        &TeraSortConfig {
+            conf: samr::mapreduce::JobConf {
+                n_reducers: 4,
+                ..samr::mapreduce::JobConf::scaled_down()
+            },
+            ..Default::default()
+        },
+        &ledger,
+    )
+    .expect("terasort");
+    validate_order(&reads, &tera.order).expect("terasort order");
+    println!(
+        "TeraSort: {} suffixes sorted & validated; shuffle {}",
+        tera.order.len(),
+        human(tera.job.footprint.get(Channel::Shuffle))
+    );
+
+    let ledger2 = Ledger::new();
+    let store = SharedStore::new(4);
+    let s = store.clone();
+    let res = scheme::run(
+        &reads,
+        &SchemeConfig {
+            conf: samr::mapreduce::JobConf {
+                n_reducers: 4,
+                ..samr::mapreduce::JobConf::scaled_down()
+            },
+            group_threshold: 5000,
+            samples_per_reducer: 500,
+            ..Default::default()
+        },
+        Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+        &ledger2,
+    )
+    .expect("scheme");
+    validate_order(&reads, &res.order).expect("scheme order");
+    println!(
+        "Scheme:   {} suffixes sorted & validated; shuffle {} ({}x less), KV memory {}",
+        res.order.len(),
+        human(ledger2.get(Channel::Shuffle)),
+        ledger.get(Channel::Shuffle) / ledger2.get(Channel::Shuffle).max(1),
+        human(res.kv_memory),
+    );
+    0
+}
+
+fn table(args: &Args, reporter: &Reporter) -> i32 {
+    let n: u32 = args.positional_parse(0).unwrap_or(0);
+    let out = match n {
+        1 => Ok(reporter.table1()),
+        2 => Ok(reporter.table2()),
+        3 => reporter.table3(),
+        4 => reporter.table4(),
+        5 => reporter.table5(),
+        6 => reporter.table6(),
+        7 => reporter.table7(),
+        8 => reporter.table8(),
+        _ => {
+            eprintln!("table must be 1..8");
+            return 2;
+        }
+    };
+    print!("{}", out.expect("table"));
+    0
+}
+
+fn figure(args: &Args, reporter: &Reporter) -> i32 {
+    let n: u32 = args.positional_parse(0).unwrap_or(0);
+    let out = match n {
+        3 => reporter.figure3().expect("figure"),
+        4 => reporter.figure4(),
+        5 => reporter.figure5().expect("figure"),
+        7 => reporter.figure7(),
+        8 => reporter.figure8().expect("figure"),
+        _ => {
+            eprintln!("figure must be one of 3, 4, 5, 7, 8");
+            return 2;
+        }
+    };
+    print!("{out}");
+    0
+}
+
+fn corpus_from(args: &Args) -> Vec<samr::suffix::reads::Read> {
+    example_corpus(
+        args.get_parse("reads", 2000),
+        args.get_parse("len", 100),
+        args.get_parse("seed", 42),
+    )
+}
+
+fn conf_from(args: &Args) -> samr::mapreduce::JobConf {
+    samr::mapreduce::JobConf {
+        n_reducers: args.get_parse("reducers", 8),
+        ..samr::mapreduce::JobConf::scaled_down()
+    }
+}
+
+fn run_terasort(args: &Args) -> i32 {
+    let reads = corpus_from(args);
+    let ledger = Ledger::new();
+    let t0 = std::time::Instant::now();
+    let res = terasort::run(
+        &reads,
+        &TeraSortConfig { conf: conf_from(args), ..Default::default() },
+        &ledger,
+    )
+    .expect("terasort");
+    validate_order(&reads, &res.order).expect("output order invalid");
+    println!(
+        "TeraSort over {} reads -> {} suffixes in {:?}",
+        reads.len(),
+        res.order.len(),
+        t0.elapsed()
+    );
+    println!("suffix input {}", human(res.suffix_input_bytes));
+    print!("{}", res.job.footprint);
+    println!(
+        "max sorting group: {} records / {}",
+        res.max_group_records,
+        human(res.max_group_bytes)
+    );
+    0
+}
+
+fn run_scheme(args: &Args) -> i32 {
+    let reads = corpus_from(args);
+    let ledger = Ledger::new();
+    let cfg = SchemeConfig {
+        conf: conf_from(args),
+        group_threshold: args.get_parse("threshold", 100_000),
+        write_suffixes: !args.has("index-only"),
+        samples_per_reducer: 1000,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let n_instances = args.get_parse("instances", 4usize);
+    let res = if args.has("tcp") {
+        let kv = LocalKvCluster::start(n_instances).expect("kv cluster");
+        let addrs = kv.addrs();
+        let factory: scheme::StoreFactory = Arc::new(move || {
+            Box::new(samr::kvstore::shard::ShardedClient::connect(&addrs).expect("connect"))
+                as Box<dyn SuffixStore>
+        });
+        let res = scheme::run(&reads, &cfg, factory, &ledger).expect("scheme");
+        println!(
+            "KV servers: {} instances, {} total memory",
+            n_instances,
+            human(kv.used_memory())
+        );
+        res
+    } else {
+        let store = SharedStore::new(n_instances);
+        let s = store.clone();
+        scheme::run(
+            &reads,
+            &cfg,
+            Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+            &ledger,
+        )
+        .expect("scheme")
+    };
+    validate_order(&reads, &res.order).expect("output order invalid");
+    println!(
+        "Scheme over {} reads -> {} suffixes in {:?} (PJRT {})",
+        reads.len(),
+        res.order.len(),
+        t0.elapsed(),
+        if runtime::pjrt_active() { "on" } else { "off" }
+    );
+    print!("{}", res.job.footprint);
+    let (f, s, o) = res.time_split.percentages();
+    println!("reducer time split: fetch {f:.0}% / sort {s:.0}% / other {o:.0}% (paper: 60/13/27)");
+    println!("KV memory: {}", human(res.kv_memory));
+    0
+}
+
+fn kv_server(args: &Args) -> i32 {
+    let port = args.get_parse("port", 6379u16);
+    let mut server = Server::start(port).expect("bind");
+    println!("samr-kv listening on {} (RESP subset + MGETSUFFIX)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+        let _ = &mut server;
+    }
+}
+
+fn all(reporter: &Reporter) -> i32 {
+    print!("{}", reporter.table1());
+    print!("{}", reporter.table2());
+    print!("{}", reporter.table3().expect("t3"));
+    print!("{}", reporter.table4().expect("t4"));
+    print!("{}", reporter.table5().expect("t5"));
+    print!("{}", reporter.table6().expect("t6"));
+    print!("{}", reporter.table7().expect("t7"));
+    print!("{}", reporter.table8().expect("t8"));
+    print!("{}", reporter.figure3().expect("f3"));
+    print!("{}", reporter.figure4());
+    print!("{}", reporter.figure5().expect("f5"));
+    print!("{}", reporter.figure7());
+    print!("{}", reporter.figure8().expect("f8"));
+    print!("{}", reporter.scheme_stats().expect("stats"));
+    0
+}

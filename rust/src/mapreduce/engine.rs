@@ -1,0 +1,308 @@
+//! The job engine: splits input, runs map attempts on a worker pool,
+//! shuffles, runs reduce attempts, and accounts every byte in the
+//! footprint ledger. This is an *in-process* Hadoop: real records, real
+//! spill files, real merges — only the cluster (nodes/disks/network) is
+//! simulated elsewhere (`simcost`).
+
+use std::io;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::mapreduce::pool::WorkerPool;
+
+use crate::footprint::{Channel, Footprint, Ledger};
+use crate::mapreduce::job::JobConf;
+use crate::mapreduce::mapper::{run_map_task, MapTask, MapTaskStats, SpillFile};
+use crate::mapreduce::record::{batch_bytes, Record};
+use crate::mapreduce::reducer::{run_reduce_task, ReduceTask, ReduceTaskStats};
+
+pub type PartitionFn = Arc<dyn Fn(&[u8]) -> u32 + Send + Sync>;
+pub type MapFactory = Arc<dyn Fn(usize) -> Box<dyn MapTask> + Send + Sync>;
+pub type ReduceFactory = Arc<dyn Fn(usize) -> Box<dyn ReduceTask> + Send + Sync>;
+
+/// A configured MapReduce job.
+pub struct Job {
+    pub name: String,
+    pub conf: JobConf,
+    pub map_factory: MapFactory,
+    pub reduce_factory: ReduceFactory,
+    pub partitioner: PartitionFn,
+}
+
+/// Everything a run produces.
+pub struct JobResult {
+    /// Per-reducer output records (the "HDFS" output files).
+    pub output: Vec<Vec<Record>>,
+    pub footprint: Footprint,
+    pub map_stats: Vec<MapTaskStats>,
+    pub reduce_stats: Vec<ReduceTaskStats>,
+    pub wall: Duration,
+}
+
+impl JobResult {
+    pub fn output_bytes(&self) -> u64 {
+        self.footprint.get(Channel::HdfsWrite)
+    }
+
+    pub fn all_output(&self) -> impl Iterator<Item = &Record> {
+        self.output.iter().flatten()
+    }
+}
+
+/// Scratch directory for spill files, removed on drop.
+pub struct ScratchDir {
+    pub path: PathBuf,
+}
+
+static SCRATCH_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+impl ScratchDir {
+    pub fn new(base: Option<&std::path::Path>, tag: &str) -> io::Result<Self> {
+        let seq = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = base
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(std::env::temp_dir)
+            .join(format!("samr-{tag}-{}-{seq}", std::process::id()));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Split input records into Hadoop-style input splits by byte budget.
+pub fn make_splits(records: Vec<Record>, split_bytes: u64) -> Vec<Vec<Record>> {
+    let mut splits = Vec::new();
+    let mut cur = Vec::new();
+    let mut cur_bytes = 0u64;
+    for rec in records {
+        cur_bytes += rec.wire_bytes();
+        cur.push(rec);
+        if cur_bytes >= split_bytes {
+            splits.push(std::mem::take(&mut cur));
+            cur_bytes = 0;
+        }
+    }
+    if !cur.is_empty() {
+        splits.push(cur);
+    }
+    splits
+}
+
+/// Run a job over pre-split input. The ledger accumulates the footprint
+/// (callers pass a fresh one per experiment, or share across stages).
+///
+/// Task attempts run on the process-wide [`WorkerPool`] so worker threads
+/// (and their thread-local PJRT engines) persist across phases and jobs.
+pub fn run_job(
+    job: &Job,
+    splits: Vec<Vec<Record>>,
+    ledger: &Arc<Ledger>,
+) -> io::Result<JobResult> {
+    let start = Instant::now();
+    let scratch = Arc::new(ScratchDir::new(job.conf.spill_dir.as_deref(), &job.name)?);
+    let splits = Arc::new(splits);
+    let n_maps = splits.len();
+    let n_reds = job.conf.n_reducers;
+    let threads = job.conf.task_parallelism.max(1);
+    let pool = WorkerPool::global();
+
+    // ---------------- map phase ----------------
+    type MapSlot = Option<io::Result<(SpillFile, MapTaskStats)>>;
+    let map_outputs: Arc<Mutex<Vec<MapSlot>>> =
+        Arc::new(Mutex::new((0..n_maps).map(|_| None).collect()));
+    let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..n_maps)
+        .map(|i| {
+            let splits = splits.clone();
+            let ledger = ledger.clone();
+            let scratch = scratch.clone();
+            let conf = job.conf.clone();
+            let partitioner = job.partitioner.clone();
+            let factory = job.map_factory.clone();
+            let out = map_outputs.clone();
+            Box::new(move || {
+                ledger.add(Channel::HdfsRead, batch_bytes(&splits[i]));
+                let mut task = factory(i);
+                let res = run_map_task(
+                    i,
+                    &splits[i],
+                    task.as_mut(),
+                    &conf,
+                    &*partitioner,
+                    &ledger,
+                    &scratch.path,
+                );
+                out.lock().unwrap()[i] = Some(res);
+            }) as Box<dyn FnOnce() + Send>
+        })
+        .collect();
+    pool.run_all(tasks, threads);
+    let mut outputs = Vec::with_capacity(n_maps);
+    let mut map_stats = Vec::with_capacity(n_maps);
+    for slot in map_outputs.lock().unwrap().drain(..) {
+        let (o, s) = slot.expect("map slot")?;
+        outputs.push(o);
+        map_stats.push(s);
+    }
+    let outputs = Arc::new(outputs);
+
+    // ---------------- reduce phase ----------------
+    type RedSlot = Option<io::Result<(Vec<Record>, ReduceTaskStats)>>;
+    let red_results: Arc<Mutex<Vec<RedSlot>>> =
+        Arc::new(Mutex::new((0..n_reds).map(|_| None).collect()));
+    let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..n_reds)
+        .map(|r| {
+            let ledger = ledger.clone();
+            let scratch = scratch.clone();
+            let conf = job.conf.clone();
+            let factory = job.reduce_factory.clone();
+            let outputs = outputs.clone();
+            let out = red_results.clone();
+            Box::new(move || {
+                let mut task = factory(r);
+                let res = run_reduce_task(
+                    r,
+                    r,
+                    &outputs,
+                    task.as_mut(),
+                    &conf,
+                    &ledger,
+                    &scratch.path,
+                );
+                out.lock().unwrap()[r] = Some(res);
+            }) as Box<dyn FnOnce() + Send>
+        })
+        .collect();
+    pool.run_all(tasks, threads);
+    for o in outputs.iter() {
+        o.remove();
+    }
+    let mut output = Vec::with_capacity(n_reds);
+    let mut reduce_stats = Vec::with_capacity(n_reds);
+    for slot in red_results.lock().unwrap().drain(..) {
+        let (o, s) = slot.expect("reduce slot")?;
+        output.push(o);
+        reduce_stats.push(s);
+    }
+
+    // write output to "HDFS"
+    for recs in &output {
+        ledger.add(Channel::HdfsWrite, batch_bytes(recs));
+    }
+
+    Ok(JobResult {
+        output,
+        footprint: ledger.snapshot(),
+        map_stats,
+        reduce_stats,
+        wall: start.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::partitioner::RangePartitioner;
+    use crate::util::rng::Rng;
+
+    /// Identity sort job = TeraSort in miniature: random keys in, globally
+    /// sorted out.
+    fn sort_job(n_reducers: usize, conf: JobConf) -> (Job, Vec<Record>) {
+        let mut rng = Rng::new(23);
+        let input: Vec<Record> = (0..5000)
+            .map(|_| Record::new(rng.next_u64().to_be_bytes().to_vec(), vec![0u8; 8]))
+            .collect();
+        let samples: Vec<Vec<u8>> = input.iter().take(2000).map(|r| r.key.clone()).collect();
+        let part = Arc::new(RangePartitioner::from_samples(samples, n_reducers));
+        let job = Job {
+            name: "minisort".into(),
+            conf: JobConf { n_reducers, ..conf },
+            map_factory: Arc::new(|_| {
+                Box::new(|rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone()))
+            }),
+            reduce_factory: Arc::new(|_| {
+                Box::new(
+                    |key: &[u8], vals: Vec<Vec<u8>>, out: &mut dyn FnMut(Record)| {
+                        for v in vals {
+                            out(Record::new(key.to_vec(), v));
+                        }
+                    },
+                )
+            }),
+            partitioner: part.as_fn(),
+        };
+        (job, input)
+    }
+
+    #[test]
+    fn end_to_end_sort_is_correct() {
+        let (job, input) = sort_job(4, JobConf { split_bytes: 16 << 10, ..JobConf::default() });
+        let ledger = Ledger::new();
+        let splits = make_splits(input.clone(), job.conf.split_bytes);
+        assert!(splits.len() > 1);
+        let res = run_job(&job, splits, &ledger).unwrap();
+        // concatenated reducer outputs = globally sorted input
+        let got: Vec<Vec<u8>> = res.all_output().map(|r| r.key.clone()).collect();
+        let mut want: Vec<Vec<u8>> = input.iter().map(|r| r.key.clone()).collect();
+        want.sort();
+        assert_eq!(got, want);
+        // footprint sanity: read input once, wrote output once, shuffled all
+        let in_bytes = batch_bytes(&input);
+        assert_eq!(res.footprint.get(Channel::HdfsRead), in_bytes);
+        assert_eq!(res.footprint.get(Channel::HdfsWrite), in_bytes);
+        assert_eq!(res.footprint.get(Channel::Shuffle), in_bytes);
+    }
+
+    #[test]
+    fn reducer_outputs_are_range_disjoint() {
+        let (job, input) = sort_job(3, JobConf { split_bytes: 32 << 10, ..JobConf::default() });
+        let ledger = Ledger::new();
+        let res = run_job(&job, make_splits(input, job.conf.split_bytes), &ledger).unwrap();
+        for pair in res.output.windows(2) {
+            if let (Some(last), Some(first)) = (pair[0].last(), pair[1].first()) {
+                assert!(last.key <= first.key);
+            }
+        }
+    }
+
+    #[test]
+    fn tight_buffers_still_correct() {
+        let (job, input) = sort_job(
+            2,
+            JobConf {
+                split_bytes: 8 << 10,
+                io_sort_bytes: 2 << 10,
+                reducer_heap_bytes: 4 << 10,
+                io_sort_factor: 3,
+                ..JobConf::default()
+            },
+        );
+        let ledger = Ledger::new();
+        let res = run_job(&job, make_splits(input.clone(), 8 << 10), &ledger).unwrap();
+        let got: Vec<Vec<u8>> = res.all_output().map(|r| r.key.clone()).collect();
+        let mut want: Vec<Vec<u8>> = input.iter().map(|r| r.key.clone()).collect();
+        want.sort();
+        assert_eq!(got, want);
+        // constrained memory must have caused reduce-side disk traffic
+        assert!(res.footprint.get(Channel::ReduceLocalWrite) > 0);
+        assert!(res.footprint.get(Channel::ReduceLocalRead) > 0);
+        // and multiple map spills
+        assert!(res.map_stats.iter().any(|s| s.spills > 1));
+    }
+
+    #[test]
+    fn make_splits_respects_budget() {
+        let recs: Vec<Record> = (0..100)
+            .map(|i| Record::new(vec![i as u8], vec![0u8; 92]))
+            .collect();
+        let splits = make_splits(recs, 1000);
+        assert!(splits.len() >= 10);
+        assert_eq!(splits.iter().map(Vec::len).sum::<usize>(), 100);
+    }
+}

@@ -1,0 +1,116 @@
+//! Job configuration — the Hadoop knobs the paper's analysis turns on
+//! (§II–III): map output buffer + spill threshold, merge factor, reducer
+//! heap and shuffle-buffer percentages, split size, reducer count.
+
+/// Hadoop-equivalent job configuration. Byte-valued knobs are real bytes;
+/// at laptop scale the presets shrink proportionally so spill counts (and
+/// therefore footprint ratios) match the paper's.
+#[derive(Clone, Debug)]
+pub struct JobConf {
+    /// mapreduce.task.io.sort.mb — map-side sort buffer (bytes).
+    pub io_sort_bytes: u64,
+    /// mapreduce.map.sort.spill.percent (default 0.80).
+    pub spill_percent: f64,
+    /// mapreduce.task.io.sort.factor (default 10) — k-way merge width.
+    pub io_sort_factor: usize,
+    /// Input split size (Hadoop default 128 MB).
+    pub split_bytes: u64,
+    /// Number of reduce tasks.
+    pub n_reducers: usize,
+    /// Reducer JVM heap (bytes) — paper: 7 GB heap in an 8 GB container.
+    pub reducer_heap_bytes: u64,
+    /// mapreduce.reduce.shuffle.input.buffer.percent (default 0.70):
+    /// fraction of the heap used as the shuffle buffer (paper: 4.9 GB).
+    pub shuffle_input_buffer_percent: f64,
+    /// mapreduce.reduce.shuffle.merge.percent (default 0.66): in-memory
+    /// merger trigger level within the shuffle buffer.
+    pub shuffle_merge_percent: f64,
+    /// Per-segment cap: a fetched map segment larger than this fraction
+    /// of the shuffle buffer goes straight to disk (Hadoop: 0.25).
+    pub shuffle_memory_limit_percent: f64,
+    /// Worker threads for map/reduce task execution.
+    pub task_parallelism: usize,
+    /// Directory for spill files; None = std::env::temp_dir().
+    pub spill_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for JobConf {
+    fn default() -> Self {
+        Self {
+            io_sort_bytes: 100 << 20,
+            spill_percent: 0.80,
+            io_sort_factor: 10,
+            split_bytes: 128 << 20,
+            n_reducers: 1,
+            reducer_heap_bytes: 7 << 30,
+            shuffle_input_buffer_percent: 0.70,
+            shuffle_merge_percent: 0.66,
+            shuffle_memory_limit_percent: 0.25,
+            task_parallelism: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            spill_dir: None,
+        }
+    }
+}
+
+impl JobConf {
+    /// Laptop-scale conf whose buffer-to-input ratios mirror the paper's
+    /// terabyte runs: every knob shrunk by the same factor (~1000×).
+    pub fn scaled_down() -> Self {
+        Self {
+            io_sort_bytes: 100 << 10,       // 100 KB "io.sort.mb"
+            split_bytes: 128 << 10,         // 128 KB splits
+            reducer_heap_bytes: 7 << 20,    // 7 MB heap
+            ..Default::default()
+        }
+    }
+
+    /// Map-side spill trigger level (bytes buffered).
+    pub fn spill_trigger(&self) -> u64 {
+        (self.io_sort_bytes as f64 * self.spill_percent) as u64
+    }
+
+    /// Reduce-side shuffle buffer size (bytes) — 0.70 × heap by default.
+    pub fn shuffle_buffer(&self) -> u64 {
+        (self.reducer_heap_bytes as f64 * self.shuffle_input_buffer_percent) as u64
+    }
+
+    /// In-memory merge trigger (bytes) — 0.66 × shuffle buffer.
+    pub fn merge_trigger(&self) -> u64 {
+        (self.shuffle_buffer() as f64 * self.shuffle_merge_percent) as u64
+    }
+
+    /// Segments above this size bypass the shuffle buffer.
+    pub fn segment_memory_limit(&self) -> u64 {
+        (self.shuffle_buffer() as f64 * self.shuffle_memory_limit_percent) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        // §III: buffer 100 MB spilled at 80% = 80 MB; reducer heap 7 GB,
+        // shuffle buffer 0.7×7 = 4.9 GB, merge trigger at 66%.
+        let c = JobConf::default();
+        assert_eq!(c.spill_trigger(), 80 << 20);
+        let gb = 1u64 << 30;
+        assert_eq!(c.shuffle_buffer(), (4.9 * gb as f64) as u64);
+        assert_eq!(
+            c.merge_trigger(),
+            ((4.9 * gb as f64) as u64 as f64 * 0.66) as u64
+        );
+    }
+
+    #[test]
+    fn scaled_preserves_ratios() {
+        let full = JobConf::default();
+        let small = JobConf::scaled_down();
+        let ratio_full = full.split_bytes as f64 / full.io_sort_bytes as f64;
+        let ratio_small = small.split_bytes as f64 / small.io_sort_bytes as f64;
+        assert!((ratio_full - ratio_small).abs() < 1e-9);
+    }
+}

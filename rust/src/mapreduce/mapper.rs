@@ -1,0 +1,348 @@
+//! Map task execution with Hadoop's buffer/spill/merge mechanics (Fig. 3):
+//! records buffer in a sort buffer; at the spill threshold (80% of
+//! io.sort.mb) they are sorted by (partition, key) and spilled; at task
+//! end the spills are merged into one partitioned map-output file —
+//! exactly the "1R / 2W per input unit" behaviour of the paper's Table III
+//! when a 128 MB split spills twice.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::footprint::{Channel, Ledger};
+use crate::mapreduce::job::JobConf;
+use crate::mapreduce::merge::{kway_merge, merge_round_plan, Run};
+use crate::mapreduce::record::Record;
+
+/// User map logic. `finish` runs once after the split is exhausted (the
+/// scheme uses it to flush aggregated KV puts).
+pub trait MapTask: Send {
+    fn map(&mut self, rec: &Record, emit: &mut dyn FnMut(Record));
+    fn finish(&mut self, _emit: &mut dyn FnMut(Record)) {}
+}
+
+/// Blanket impl so simple mappers can be plain closures.
+impl<F: FnMut(&Record, &mut dyn FnMut(Record)) + Send> MapTask for F {
+    fn map(&mut self, rec: &Record, emit: &mut dyn FnMut(Record)) {
+        self(rec, emit)
+    }
+}
+
+/// One per-partition byte range of a spill/map-output file.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Segment {
+    pub offset: u64,
+    pub bytes: u64,
+    pub records: u64,
+}
+
+/// A partitioned, sorted, on-disk run: spill file or final map output.
+#[derive(Debug)]
+pub struct SpillFile {
+    pub path: PathBuf,
+    pub segments: Vec<Segment>,
+    pub bytes: u64,
+}
+
+impl SpillFile {
+    pub fn remove(&self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Write `(partition, record)`s (already sorted) as a spill file.
+fn write_spill(
+    path: PathBuf,
+    n_partitions: usize,
+    recs: &[(u32, Record)],
+) -> io::Result<SpillFile> {
+    let mut segments = vec![Segment::default(); n_partitions];
+    let mut w = BufWriter::new(File::create(&path)?);
+    let mut offset = 0u64;
+    for (p, rec) in recs {
+        let seg = &mut segments[*p as usize];
+        if seg.records == 0 {
+            seg.offset = offset;
+        }
+        let b = rec.wire_bytes();
+        rec.write_to(&mut w)?;
+        seg.bytes += b;
+        seg.records += 1;
+        offset += b;
+    }
+    w.flush()?;
+    Ok(SpillFile { path, segments, bytes: offset })
+}
+
+/// Merge several spill files into one (per-partition k-way merges written
+/// sequentially). Byte counts go to the given channels on `ledger`.
+pub fn merge_spills(
+    spills: &[SpillFile],
+    out_path: PathBuf,
+    ledger: &Ledger,
+    read_ch: Channel,
+    write_ch: Channel,
+) -> io::Result<SpillFile> {
+    let n_partitions = spills[0].segments.len();
+    let mut segments = vec![Segment::default(); n_partitions];
+    let mut offset = 0u64;
+    let mut w = BufWriter::new(File::create(&out_path)?);
+    for p in 0..n_partitions {
+        let mut runs = Vec::new();
+        for s in spills {
+            let seg = s.segments[p];
+            if seg.records > 0 {
+                runs.push(Run::from_segment(&s.path, seg.offset, seg.records)?);
+                ledger.add(read_ch, seg.bytes);
+            }
+        }
+        let seg = &mut segments[p];
+        seg.offset = offset;
+        kway_merge(runs, |rec| {
+            let b = rec.wire_bytes();
+            rec.write_to(&mut w)?;
+            seg.bytes += b;
+            seg.records += 1;
+            offset += b;
+            Ok(())
+        })?;
+    }
+    w.flush()?;
+    ledger.add(write_ch, offset);
+    Ok(SpillFile { path: out_path, segments, bytes: offset })
+}
+
+/// Per-map-task statistics for the simulator and reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MapTaskStats {
+    pub input_records: u64,
+    pub input_bytes: u64,
+    pub output_records: u64,
+    pub output_bytes: u64,
+    pub spills: u64,
+}
+
+/// Execute one map attempt over `split`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_map_task(
+    task_id: usize,
+    split: &[Record],
+    task: &mut dyn MapTask,
+    conf: &JobConf,
+    partitioner: &(dyn Fn(&[u8]) -> u32 + Sync),
+    ledger: &Arc<Ledger>,
+    dir: &std::path::Path,
+) -> io::Result<(SpillFile, MapTaskStats)> {
+    let n_partitions = conf.n_reducers;
+    let mut stats = MapTaskStats::default();
+    let mut spills: Vec<SpillFile> = Vec::new();
+    let mut buffer: Vec<(u32, Record)> = Vec::new();
+    let mut buffered: u64 = 0;
+    let trigger = conf.spill_trigger();
+
+    let spill_now = |buffer: &mut Vec<(u32, Record)>,
+                         buffered: &mut u64,
+                         spills: &mut Vec<SpillFile>|
+     -> io::Result<()> {
+        if buffer.is_empty() {
+            return Ok(());
+        }
+        // stable sort by (partition, key); stability keeps equal keys in
+        // emission order like Hadoop's index-chained buffer.
+        buffer.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.key.cmp(&b.1.key)));
+        let path = dir.join(format!("map{task_id}_spill{}", spills.len()));
+        let sf = write_spill(path, n_partitions, buffer)?;
+        ledger.add(Channel::MapLocalWrite, sf.bytes);
+        spills.push(sf);
+        buffer.clear();
+        *buffered = 0;
+        Ok(())
+    };
+
+    {
+        let mut pending: Vec<Record> = Vec::new();
+        let absorb = |pending: &mut Vec<Record>,
+                          buffer: &mut Vec<(u32, Record)>,
+                          buffered: &mut u64,
+                          spills: &mut Vec<SpillFile>,
+                          stats: &mut MapTaskStats|
+         -> io::Result<()> {
+            for rec in pending.drain(..) {
+                let p = partitioner(&rec.key);
+                debug_assert!((p as usize) < n_partitions);
+                stats.output_records += 1;
+                stats.output_bytes += rec.wire_bytes();
+                *buffered += rec.wire_bytes();
+                buffer.push((p, rec));
+                if *buffered >= trigger {
+                    spill_now(buffer, buffered, spills)?;
+                }
+            }
+            Ok(())
+        };
+        for rec in split {
+            stats.input_records += 1;
+            stats.input_bytes += rec.wire_bytes();
+            task.map(rec, &mut |r| pending.push(r));
+            absorb(&mut pending, &mut buffer, &mut buffered, &mut spills, &mut stats)?;
+        }
+        task.finish(&mut |r| pending.push(r));
+        absorb(&mut pending, &mut buffer, &mut buffered, &mut spills, &mut stats)?;
+    }
+    spill_now(&mut buffer, &mut buffered, &mut spills)?;
+    stats.spills = spills.len() as u64;
+
+    // ---- merge spills into the final map output (Fig. 3) ----
+    let output = match spills.len() {
+        0 => {
+            // empty output: zero-length file with empty segments
+            let path = dir.join(format!("map{task_id}_out"));
+            File::create(&path)?;
+            SpillFile { path, segments: vec![Segment::default(); n_partitions], bytes: 0 }
+        }
+        1 => spills.pop().unwrap(), // single spill IS the output: no merge I/O
+        _ => {
+            // intermediate rounds if spill count exceeds the merge factor
+            let mut files = spills;
+            let mut scratch = 0usize;
+            loop {
+                let plan = merge_round_plan(files.len(), conf.io_sort_factor);
+                if plan.is_empty() {
+                    break;
+                }
+                let mut rest = files.split_off(plan.iter().sum());
+                let mut it = files.into_iter();
+                let mut merged = Vec::with_capacity(plan.len());
+                for &g in &plan {
+                    let group: Vec<SpillFile> = it.by_ref().take(g).collect();
+                    let path = dir.join(format!("map{task_id}_imerge{scratch}"));
+                    scratch += 1;
+                    let m = merge_spills(
+                        &group,
+                        path,
+                        ledger,
+                        Channel::MapLocalRead,
+                        Channel::MapLocalWrite,
+                    )?;
+                    for s in group {
+                        s.remove();
+                    }
+                    merged.push(m);
+                }
+                merged.append(&mut rest);
+                files = merged;
+            }
+            let path = dir.join(format!("map{task_id}_out"));
+            let out = merge_spills(
+                &files,
+                path,
+                ledger,
+                Channel::MapLocalRead,
+                Channel::MapLocalWrite,
+            )?;
+            for s in files {
+                s.remove();
+            }
+            out
+        }
+    };
+    Ok((output, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::footprint::Ledger;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("samr-map-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn identity_split(n: usize, vlen: usize) -> Vec<Record> {
+        (0..n)
+            .map(|i| Record::new(format!("k{:04}", (n - i) % n).into_bytes(), vec![7u8; vlen]))
+            .collect()
+    }
+
+    #[test]
+    fn single_spill_no_merge_io() {
+        let dir = tmpdir("single");
+        let ledger = Ledger::new();
+        let conf = JobConf { io_sort_bytes: 1 << 20, n_reducers: 2, ..Default::default() };
+        let split = identity_split(100, 10);
+        let mut mapper = |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
+        let (out, stats) = run_map_task(
+            0, &split, &mut mapper, &conf,
+            &|k| u32::from(k >= b"k0050".as_slice()),
+            &ledger, &dir,
+        )
+        .unwrap();
+        assert_eq!(stats.spills, 1);
+        assert_eq!(stats.output_records, 100);
+        // single spill: write once, zero local reads
+        assert_eq!(ledger.get(Channel::MapLocalWrite), out.bytes);
+        assert_eq!(ledger.get(Channel::MapLocalRead), 0);
+        assert_eq!(out.segments.len(), 2);
+        assert_eq!(out.segments.iter().map(|s| s.records).sum::<u64>(), 100);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn two_spills_give_paper_1r_2w() {
+        let dir = tmpdir("two");
+        let ledger = Ledger::new();
+        // split ~2x the spill trigger => 2 spills, like the paper's
+        // 128 MB split vs 80 MB trigger (Fig. 3).
+        let split = identity_split(200, 100); // ~22 KB of records
+        let conf = JobConf {
+            io_sort_bytes: 14 << 10, // trigger ~11 KB
+            n_reducers: 4,
+            ..Default::default()
+        };
+        let mut mapper = |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
+        let (out, stats) =
+            run_map_task(1, &split, &mut mapper, &conf, &|k| (k[3] as u32) % 4, &ledger, &dir)
+                .unwrap();
+        assert_eq!(stats.spills, 2);
+        let w = ledger.get(Channel::MapLocalWrite) as f64;
+        let r = ledger.get(Channel::MapLocalRead) as f64;
+        let out_b = out.bytes as f64;
+        // W = spills + merged = 2 units; R = spills = 1 unit
+        assert!((w / out_b - 2.0).abs() < 1e-9, "w/out={}", w / out_b);
+        assert!((r / out_b - 1.0).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn output_is_sorted_within_partitions() {
+        let dir = tmpdir("sorted");
+        let ledger = Ledger::new();
+        let split = identity_split(500, 20);
+        let conf = JobConf { io_sort_bytes: 4 << 10, n_reducers: 3, ..Default::default() };
+        let mut mapper = |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
+        let (out, stats) =
+            run_map_task(2, &split, &mut mapper, &conf, &|k| (k[4] as u32) % 3, &ledger, &dir)
+                .unwrap();
+        assert!(stats.spills > 2);
+        let mut total = 0u64;
+        for (p, seg) in out.segments.iter().enumerate() {
+            let mut rs = Vec::new();
+            let run = Run::from_segment(&out.path, seg.offset, seg.records).unwrap();
+            kway_merge(vec![run], |r| {
+                rs.push(r);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(rs.len() as u64, seg.records);
+            for w in rs.windows(2) {
+                assert!(w[0].key <= w[1].key, "partition {p} unsorted");
+            }
+            total += seg.records;
+        }
+        assert_eq!(total, 500);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,297 @@
+//! Sorted-run k-way merging and the Hadoop merge-round policy — the
+//! mechanics behind Figs. 3–4 and the Case-5 "1.88 R/W" estimate.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::mapreduce::record::Record;
+
+/// A sorted run of records: either an open spill-file segment or an
+/// in-memory vector.
+pub enum Run {
+    File(BufReader<File>),
+    /// A byte-range of a spill file holding `remaining` records.
+    Segment(BufReader<File>, u64),
+    Mem(std::vec::IntoIter<Record>),
+}
+
+impl Run {
+    pub fn from_path(p: &Path) -> io::Result<Run> {
+        Ok(Run::File(BufReader::new(File::open(p)?)))
+    }
+
+    /// Open a per-partition segment: `offset` bytes in, `records` records.
+    pub fn from_segment(p: &Path, offset: u64, records: u64) -> io::Result<Run> {
+        use std::io::Seek;
+        let mut f = File::open(p)?;
+        f.seek(std::io::SeekFrom::Start(offset))?;
+        Ok(Run::Segment(BufReader::new(f), records))
+    }
+
+    pub fn from_vec(v: Vec<Record>) -> Run {
+        Run::Mem(v.into_iter())
+    }
+
+    fn next_record(&mut self) -> io::Result<Option<Record>> {
+        match self {
+            Run::File(r) => Record::read_from(r),
+            Run::Segment(r, remaining) => {
+                if *remaining == 0 {
+                    return Ok(None);
+                }
+                *remaining -= 1;
+                Record::read_from(r)
+            }
+            Run::Mem(it) => Ok(it.next()),
+        }
+    }
+}
+
+struct HeapEntry {
+    rec: Record,
+    run: usize,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.rec.key == other.rec.key && self.run == other.run
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse for ascending (key, run).
+        other
+            .rec
+            .key
+            .cmp(&self.rec.key)
+            .then(other.run.cmp(&self.run))
+    }
+}
+
+/// Merge sorted runs, feeding each record (ascending by key, ties by run
+/// index — deterministic and stable across spill order) to `sink`.
+pub fn kway_merge(
+    mut runs: Vec<Run>,
+    mut sink: impl FnMut(Record) -> io::Result<()>,
+) -> io::Result<()> {
+    let mut heap = BinaryHeap::with_capacity(runs.len());
+    for (i, run) in runs.iter_mut().enumerate() {
+        if let Some(rec) = run.next_record()? {
+            heap.push(HeapEntry { rec, run: i });
+        }
+    }
+    while let Some(HeapEntry { rec, run }) = heap.pop() {
+        sink(rec)?;
+        if let Some(next) = runs[run].next_record()? {
+            heap.push(HeapEntry { rec: next, run });
+        }
+    }
+    Ok(())
+}
+
+/// The paper's intermediate merge-round plan (§III, Fig. 4 discussion):
+/// with `n` on-disk files and merge width `factor`, merge the minimum
+/// number of files so that at most `factor` remain for the final merge.
+/// Returns the group sizes to merge now (empty when `n <= factor`).
+///
+/// k = ceil((n - factor) / (factor - 1)) groups covering m = n - factor + k
+/// files — for the paper's Case 5 (n=35, factor=10): k=3 groups of
+/// 10+10+8 = 28 files, leaving 3 merged + 7 originals = 10.
+pub fn merge_round_plan(n: usize, factor: usize) -> Vec<usize> {
+    assert!(factor >= 2);
+    if n <= factor {
+        return Vec::new();
+    }
+    let mut k = (n - factor).div_ceil(factor - 1);
+    let mut m = n - factor + k; // files merged now
+    if m > n {
+        // one round cannot reach <= factor files even merging everything
+        // (n > factor^2-ish); merge all files in width-<=factor groups and
+        // let the caller run another round.
+        k = n.div_ceil(factor);
+        m = n;
+    }
+    // distribute m over k groups, each <= factor
+    let base = m / k;
+    let extra = m % k;
+    (0..k)
+        .map(|i| base + usize::from(i < extra))
+        .collect()
+}
+
+/// Run intermediate merge rounds on disk files until at most `factor`
+/// remain. `scratch` names new files; `on_read`/`on_write` receive byte
+/// counts for the footprint ledger. Returns the surviving file list.
+pub fn run_merge_rounds(
+    mut files: Vec<PathBuf>,
+    factor: usize,
+    scratch: &mut impl FnMut(usize) -> PathBuf,
+    on_read: &mut impl FnMut(u64),
+    on_write: &mut impl FnMut(u64),
+) -> io::Result<Vec<PathBuf>> {
+    let mut round = 0usize;
+    loop {
+        let plan = merge_round_plan(files.len(), factor);
+        if plan.is_empty() {
+            return Ok(files);
+        }
+        // merge the largest-count prefix; order is irrelevant to byte
+        // totals, so take files from the front (oldest spills first).
+        let mut rest = files.split_off(plan.iter().sum());
+        let mut merged: Vec<PathBuf> = Vec::with_capacity(plan.len());
+        let mut it = files.into_iter();
+        for (gi, &gsize) in plan.iter().enumerate() {
+            let group: Vec<PathBuf> = it.by_ref().take(gsize).collect();
+            let mut in_bytes = 0u64;
+            let runs = group
+                .iter()
+                .map(|p| {
+                    in_bytes += std::fs::metadata(p)?.len();
+                    Run::from_path(p)
+                })
+                .collect::<io::Result<Vec<_>>>()?;
+            let out_path = scratch(round * 1000 + gi);
+            let mut out_bytes = 0u64;
+            {
+                let mut w = BufWriter::new(File::create(&out_path)?);
+                kway_merge(runs, |rec| {
+                    out_bytes += rec.wire_bytes();
+                    rec.write_to(&mut w)
+                })?;
+                w.flush()?;
+            }
+            on_read(in_bytes);
+            on_write(out_bytes);
+            for p in group {
+                let _ = std::fs::remove_file(p);
+            }
+            merged.push(out_path);
+        }
+        merged.append(&mut rest);
+        files = merged;
+        round += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_case5_plan() {
+        // 35 spilled files, factor 10 -> merge 28 files in 3 groups.
+        let plan = merge_round_plan(35, 10);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.iter().sum::<usize>(), 28);
+        assert!(plan.iter().all(|&g| g <= 10));
+    }
+
+    #[test]
+    fn no_round_needed_at_or_below_factor() {
+        assert!(merge_round_plan(10, 10).is_empty());
+        assert!(merge_round_plan(6, 10).is_empty());
+        // paper Case 1: ~6 spilled files, no intermediate merging.
+    }
+
+    #[test]
+    fn plan_always_reaches_factor() {
+        for factor in [2usize, 3, 10, 16] {
+            for n in 2..200 {
+                let mut n_now = n;
+                let mut rounds = 0;
+                loop {
+                    let plan = merge_round_plan(n_now, factor);
+                    if plan.is_empty() {
+                        break;
+                    }
+                    assert!(plan.iter().all(|&g| g >= 1 && g <= factor));
+                    n_now = n_now - plan.iter().sum::<usize>() + plan.len();
+                    rounds += 1;
+                    assert!(rounds < 64, "n={n} factor={factor} diverges");
+                }
+                assert!(n_now <= factor);
+            }
+        }
+    }
+
+    #[test]
+    fn kway_merge_sorts() {
+        let a = vec![
+            Record::new(b"a".to_vec(), b"1".to_vec()),
+            Record::new(b"c".to_vec(), b"2".to_vec()),
+        ];
+        let b = vec![
+            Record::new(b"b".to_vec(), b"3".to_vec()),
+            Record::new(b"c".to_vec(), b"4".to_vec()),
+            Record::new(b"d".to_vec(), b"5".to_vec()),
+        ];
+        let mut got = Vec::new();
+        kway_merge(vec![Run::from_vec(a), Run::from_vec(b)], |r| {
+            got.push(r);
+            Ok(())
+        })
+        .unwrap();
+        let keys: Vec<&[u8]> = got.iter().map(|r| r.key.as_slice()).collect();
+        assert_eq!(keys, vec![b"a" as &[u8], b"b", b"c", b"c", b"d"]);
+        // tie on "c": run 0 first
+        assert_eq!(got[2].value, b"2");
+        assert_eq!(got[3].value, b"4");
+    }
+
+    #[test]
+    fn disk_merge_rounds_account_bytes() {
+        let dir = std::env::temp_dir().join(format!("samr-merge-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // 25 single-record files, factor 4
+        let mut files = Vec::new();
+        for i in 0..25 {
+            let p = dir.join(format!("run{i}"));
+            let mut w = BufWriter::new(File::create(&p).unwrap());
+            Record::new(format!("k{i:02}").into_bytes(), vec![0u8; 10])
+                .write_to(&mut w)
+                .unwrap();
+            w.flush().unwrap();
+            files.push(p);
+        }
+        let mut scratch_n = 0;
+        let mut read = 0u64;
+        let mut write = 0u64;
+        let out = run_merge_rounds(
+            files,
+            4,
+            &mut |_| {
+                scratch_n += 1;
+                dir.join(format!("scratch{scratch_n}"))
+            },
+            &mut |b| read += b,
+            &mut |b| write += b,
+        )
+        .unwrap();
+        assert!(out.len() <= 4);
+        assert_eq!(read, write); // merging re-writes exactly what it reads
+        // every surviving file still k-way merges to 25 sorted records
+        let runs = out.iter().map(|p| Run::from_path(p).unwrap()).collect();
+        let mut n = 0;
+        let mut last: Option<Vec<u8>> = None;
+        kway_merge(runs, |r| {
+            if let Some(l) = &last {
+                assert!(*l <= r.key);
+            }
+            last = Some(r.key.clone());
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 25);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

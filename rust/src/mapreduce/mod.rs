@@ -1,0 +1,17 @@
+//! In-process MapReduce runtime with Hadoop's exact spill/merge mechanics
+//! (the substrate the paper's analysis is about): job conf, records,
+//! map-side buffer/spill/merge, shuffle, reduce-side memory merger and
+//! on-disk merge rounds, sampled range partitioner, and the job engine.
+
+pub mod engine;
+pub mod job;
+pub mod mapper;
+pub mod merge;
+pub mod partitioner;
+pub mod pool;
+pub mod record;
+pub mod reducer;
+
+pub use engine::{make_splits, run_job, Job, JobResult};
+pub use job::JobConf;
+pub use record::Record;

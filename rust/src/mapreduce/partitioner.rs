@@ -1,0 +1,115 @@
+//! Sampled range partitioning (§IV-A) — the TotalOrderPartitioner analog
+//! used by both TeraSort and the scheme: sample `10000 × n` keys, sort
+//! them, take every 10000-th as a boundary, route key k to partition
+//! |{b : b <= k}|.
+
+use std::sync::Arc;
+
+/// Samples per reducer (paper: N = 10000 × n).
+pub const SAMPLES_PER_REDUCER: usize = 10_000;
+
+/// Range partitioner over byte-comparable keys.
+#[derive(Clone, Debug)]
+pub struct RangePartitioner {
+    boundaries: Vec<Vec<u8>>, // n_reducers - 1 sorted keys
+}
+
+impl RangePartitioner {
+    pub fn new(boundaries: Vec<Vec<u8>>) -> Self {
+        debug_assert!(boundaries.windows(2).all(|w| w[0] <= w[1]));
+        Self { boundaries }
+    }
+
+    /// Paper's recipe: sort the samples, pick the `s`-th, `2s`-th, ...
+    /// as the `n-1` boundaries (s = samples / n).
+    pub fn from_samples(mut samples: Vec<Vec<u8>>, n_reducers: usize) -> Self {
+        assert!(n_reducers >= 1);
+        samples.sort();
+        let n = samples.len();
+        let mut boundaries = Vec::with_capacity(n_reducers.saturating_sub(1));
+        if n > 0 {
+            let stride = (n / n_reducers).max(1);
+            for r in 1..n_reducers {
+                let i = (r * stride).min(n - 1);
+                boundaries.push(samples[i].clone());
+            }
+        } else {
+            boundaries.resize(n_reducers.saturating_sub(1), Vec::new());
+        }
+        Self::new(boundaries)
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.boundaries.len() + 1
+    }
+
+    /// partition(k) = #{b : b <= k} — matches the L1 `bucket` kernel's
+    /// searchsorted-right semantics exactly.
+    pub fn partition(&self, key: &[u8]) -> u32 {
+        self.boundaries.partition_point(|b| b.as_slice() <= key) as u32
+    }
+
+    pub fn boundaries(&self) -> &[Vec<u8>] {
+        &self.boundaries
+    }
+
+    /// Closure form for the MR engine.
+    pub fn as_fn(self: Arc<Self>) -> Arc<dyn Fn(&[u8]) -> u32 + Send + Sync> {
+        Arc::new(move |k| self.partition(k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn partition_semantics() {
+        let p = RangePartitioner::new(vec![b"10".to_vec(), b"50".to_vec()]);
+        assert_eq!(p.n_partitions(), 3);
+        assert_eq!(p.partition(b"05"), 0);
+        assert_eq!(p.partition(b"10"), 1); // boundary key goes right
+        assert_eq!(p.partition(b"49"), 1);
+        assert_eq!(p.partition(b"50"), 2);
+        assert_eq!(p.partition(b"99"), 2);
+    }
+
+    #[test]
+    fn from_samples_balances_random_keys() {
+        let mut rng = Rng::new(17);
+        let n_red = 8;
+        let samples: Vec<Vec<u8>> = (0..SAMPLES_PER_REDUCER * n_red)
+            .map(|_| rng.next_u64().to_be_bytes().to_vec())
+            .collect();
+        let part = RangePartitioner::from_samples(samples, n_red);
+        assert_eq!(part.n_partitions(), n_red);
+        // route a fresh random population; buckets within ±25% of even
+        let mut counts = vec![0u64; n_red];
+        let total = 80_000u64;
+        for _ in 0..total {
+            counts[part.partition(&rng.next_u64().to_be_bytes()) as usize] += 1;
+        }
+        let even = total / n_red as u64;
+        for (i, c) in counts.iter().enumerate() {
+            assert!(
+                (*c as f64) > 0.75 * even as f64 && (*c as f64) < 1.25 * even as f64,
+                "partition {i} count {c} vs even {even}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_reducer_no_boundaries() {
+        let p = RangePartitioner::from_samples(vec![b"a".to_vec()], 1);
+        assert_eq!(p.n_partitions(), 1);
+        assert_eq!(p.partition(b"zzz"), 0);
+    }
+
+    #[test]
+    fn empty_samples() {
+        let p = RangePartitioner::from_samples(Vec::new(), 4);
+        // degenerate but total: everything >= empty boundary -> last bucket
+        assert_eq!(p.partition(b"x"), 3);
+    }
+}

@@ -1,0 +1,166 @@
+//! Persistent worker pool for task attempts.
+//!
+//! Task threads must be long-lived: the PJRT engine is thread-local
+//! (`runtime::with_engine`), and compiling the bitonic sort artifact
+//! costs ~2 s per thread — scoped per-phase threads would pay that on
+//! every job (§Perf iteration 6). The pool spawns once per process;
+//! worker N compiles each kernel at most once, ever.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use once_cell::sync::OnceCell;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct WorkerPool {
+    tx: Sender<Task>,
+    size: usize,
+}
+
+static POOL: OnceCell<WorkerPool> = OnceCell::new();
+
+impl WorkerPool {
+    /// The process-wide pool (size = available parallelism, overridable
+    /// with SAMR_WORKERS).
+    pub fn global() -> &'static WorkerPool {
+        POOL.get_or_init(|| {
+            let size = std::env::var("SAMR_WORKERS")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+                })
+                .max(1);
+            let (tx, rx) = channel::<Task>();
+            let rx = Arc::new(Mutex::new(rx));
+            for i in 0..size {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("samr-worker-{i}"))
+                    .spawn(move || loop {
+                        let task = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match task {
+                            Ok(t) => t(),
+                            Err(_) => break, // pool dropped (process exit)
+                        }
+                    })
+                    .expect("spawn pool worker");
+            }
+            WorkerPool { tx, size }
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run every task to completion (at most `max_parallel` in flight),
+    /// re-raising the first panic on the caller thread.
+    pub fn run_all(&self, tasks: Vec<Task>, max_parallel: usize) {
+        if tasks.is_empty() {
+            return;
+        }
+        let max_parallel = max_parallel.max(1);
+        #[allow(clippy::type_complexity)]
+        let state: Arc<(
+            Mutex<(usize, usize, Option<Box<dyn std::any::Any + Send>>)>,
+            Condvar,
+        )> = Arc::new((Mutex::new((0, tasks.len(), None)), Condvar::new()));
+        // (in_flight, remaining, first_panic)
+        for task in tasks {
+            // throttle: wait until a slot frees up
+            {
+                let (lock, cvar) = &*state;
+                let mut s = lock.lock().unwrap();
+                while s.0 >= max_parallel {
+                    s = cvar.wait(s).unwrap();
+                }
+                s.0 += 1;
+            }
+            let state = state.clone();
+            self.tx
+                .send(Box::new(move || {
+                    let result = catch_unwind(AssertUnwindSafe(task));
+                    let (lock, cvar) = &*state;
+                    let mut s = lock.lock().unwrap();
+                    s.0 -= 1;
+                    s.1 -= 1;
+                    if let Err(e) = result {
+                        s.2.get_or_insert(e);
+                    }
+                    cvar.notify_all();
+                }))
+                .expect("pool send");
+        }
+        let (lock, cvar) = &*state;
+        let mut s = lock.lock().unwrap();
+        while s.1 > 0 {
+            s = cvar.wait(s).unwrap();
+        }
+        if let Some(e) = s.2.take() {
+            drop(s);
+            resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_tasks() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Task> = (0..100)
+            .map(|_| {
+                let c = counter.clone();
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        WorkerPool::global().run_all(tasks, 4);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn propagates_panics() {
+        let result = std::panic::catch_unwind(|| {
+            let tasks: Vec<Task> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("task exploded")),
+                Box::new(|| {}),
+            ];
+            WorkerPool::global().run_all(tasks, 2);
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn threads_are_reused() {
+        // worker thread identity must be stable across run_all calls
+        let names = Arc::new(Mutex::new(std::collections::HashSet::new()));
+        for _ in 0..3 {
+            let n = names.clone();
+            let tasks: Vec<Task> = (0..2)
+                .map(|_| {
+                    let n = n.clone();
+                    Box::new(move || {
+                        n.lock().unwrap().insert(
+                            std::thread::current().name().unwrap_or("?").to_string(),
+                        );
+                    }) as Task
+                })
+                .collect();
+            WorkerPool::global().run_all(tasks, 2);
+        }
+        // all executions landed on pool threads
+        assert!(names.lock().unwrap().iter().all(|n| n.starts_with("samr-worker-")));
+    }
+}

@@ -1,0 +1,500 @@
+//! Paper-case definitions and the scaled execution + projection recipe
+//! behind every table/figure (see DESIGN.md §5 experiment index).
+//!
+//! Method: each paper case (e.g. Table III Case 3, 1.86 TB of suffixes)
+//! is re-run at laptop scale with every byte-valued knob shrunk by the
+//! same factor, so spill counts and merge rounds — and therefore the
+//! normalized footprint ratios — reproduce *mechanically*, not by
+//! curve-fitting. The measured ratios are then projected back to paper
+//! scale and run through the `simcost` cluster model to recover the
+//! Time rows (μ/σ, breakdown).
+
+use std::sync::Arc;
+
+use crate::cluster::ClusterSpec;
+use crate::footprint::{Channel, Footprint, Ledger};
+use crate::kvstore::shard::{SharedStore, SuffixStore};
+use crate::mapreduce::job::JobConf;
+use crate::scheme::gc_model::HeapConfig;
+use crate::scheme::{self, SchemeConfig};
+use crate::simcost::{self, terasort_max_group, CostParams, TimeEstimate, WorkloadShape};
+use crate::suffix::reads::{synth_corpus, CorpusSpec, Read};
+use crate::terasort::{self, TeraSortConfig};
+use crate::util::bytes::{GB, TB};
+
+/// Paper constants.
+pub const PAPER_REDUCERS: u64 = 32;
+pub const PAPER_SHUFFLE_BUFFER: f64 = 4.9 * (1u64 << 30) as f64; // 0.7 × 7 GB
+pub const PAPER_READ_LEN: usize = 200;
+
+/// Table III / V–VII input sizes (bytes of materialized suffixes for
+/// TeraSort; bytes of raw reads for the scheme — same underlying data).
+pub fn table3_inputs() -> Vec<(&'static str, u64)> {
+    vec![
+        ("Case 1", 637_180_000_000),
+        ("Case 2", (1.24 * TB as f64) as u64),
+        ("Case 3", (1.86 * TB as f64) as u64),
+        ("Case 4", (2.49 * TB as f64) as u64),
+        ("Case 5", (3.37 * TB as f64) as u64),
+    ]
+}
+
+pub fn table5_inputs() -> Vec<(&'static str, u64)> {
+    vec![
+        ("Case 1", (5.86 * GB as f64) as u64),
+        ("Case 2", (11.72 * GB as f64) as u64),
+        ("Case 3", (17.57 * GB as f64) as u64),
+        ("Case 4", (23.43 * GB as f64) as u64),
+        ("Case 5", (31.76 * GB as f64) as u64),
+        ("Case 6", (63.12 * GB as f64) as u64),
+    ]
+}
+
+/// Paper-reported times for reference columns (μ, σ, completed).
+pub fn paper_times_table3() -> Vec<(f64, f64, bool)> {
+    vec![
+        (61.8, 1.30, true),
+        (143.4, 4.83, true),
+        (230.4, 12.30, true),
+        (312.0, 12.65, true),
+        (709.4, 95.55, false),
+    ]
+}
+
+pub fn paper_times_table5() -> Vec<(f64, f64, bool)> {
+    vec![
+        (63.2, 0.45, true),
+        (100.0, 0.71, true),
+        (156.6, 2.41, true),
+        (205.4, 4.16, true),
+        (284.2, 8.38, true),
+        (671.0, 12.19, true),
+    ]
+}
+
+/// The scaled environment: every byte knob ÷ SCALE relative to the paper,
+/// reducer count ÷ 4 (8 instead of 32 — execution cost), read length as
+/// the paper's 200 bp.
+#[derive(Clone, Debug)]
+pub struct ScaledEnv {
+    pub n_reducers: usize,
+    pub reducer_heap: u64,
+    pub io_sort: u64,
+    pub split: u64,
+    pub read_len: usize,
+    pub trials: usize,
+    pub seed: u64,
+    /// Extra shrink on corpus volume (1.0 = ratio-exact; >1 = faster CI).
+    pub thrift: f64,
+}
+
+impl Default for ScaledEnv {
+    fn default() -> Self {
+        Self {
+            n_reducers: 8,
+            reducer_heap: 500 << 10, // buffer 350 KB, merge trigger 231 KB
+            io_sort: 24 << 10,
+            split: 32 << 10,
+            read_len: 200,
+            trials: 5,
+            seed: 20170101,
+            thrift: 1.0,
+        }
+    }
+}
+
+impl ScaledEnv {
+    pub fn conf(&self) -> JobConf {
+        // thrift shrinks every byte knob by the same factor, so spill
+        // counts and merge rounds (which depend only on ratios) survive.
+        let t = self.thrift;
+        JobConf {
+            io_sort_bytes: ((self.io_sort as f64 / t) as u64).max(2 << 10),
+            split_bytes: ((self.split as f64 / t) as u64).max(3 << 10),
+            n_reducers: self.n_reducers,
+            reducer_heap_bytes: ((self.reducer_heap as f64 / t) as u64).max(30 << 10),
+            ..JobConf::default()
+        }
+    }
+
+    fn shuffle_buffer(&self) -> f64 {
+        self.conf().shuffle_buffer() as f64
+    }
+
+    /// Corpus sized so that per-reducer-shuffle / shuffle-buffer matches
+    /// the paper case's ratio (the quantity that drives merge rounds).
+    pub fn corpus_for_ratio(&self, paper_per_red_over_buffer: f64, bytes_per_read: f64) -> CorpusSpec {
+        // buffer is already thrift-scaled via conf(), so the ratio holds
+        let target_total =
+            paper_per_red_over_buffer * self.shuffle_buffer() * self.n_reducers as f64;
+        CorpusSpec {
+            n_reads: (target_total / bytes_per_read).ceil() as usize,
+            read_len: self.read_len,
+            len_jitter: 4,
+            genome_len: 1 << 20,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// One reproduced row of a footprint table.
+#[derive(Clone, Debug)]
+pub struct CaseRow {
+    pub label: String,
+    pub paper_input: u64,
+    /// Normalized units, paper-style.
+    pub map_lr: f64,
+    pub map_lw: f64,
+    pub red_lr: f64,
+    pub red_lw: f64,
+    pub hdfs_r: f64,
+    pub hdfs_w: f64,
+    pub shuffle: f64,
+    pub kv_put: f64,
+    pub kv_fetch: f64,
+    /// Projected elapsed time on the Table-II cluster.
+    pub time: TimeEstimate,
+    /// Raw measured footprint + its normalization reference.
+    pub measured: Footprint,
+    pub reference_bytes: u64,
+    /// Scaled corpus actually executed.
+    pub mini_reads: usize,
+}
+
+fn normalize(fp: &Footprint, reference: u64) -> [f64; 9] {
+    let n = |ch| fp.normalized(ch, reference);
+    [
+        n(Channel::MapLocalRead),
+        n(Channel::MapLocalWrite),
+        n(Channel::ReduceLocalRead),
+        n(Channel::ReduceLocalWrite),
+        n(Channel::HdfsRead),
+        n(Channel::HdfsWrite),
+        n(Channel::Shuffle),
+        n(Channel::KvPut),
+        n(Channel::KvFetch),
+    ]
+}
+
+/// TeraSort variant knobs (baseline / mem_heap / mem_reducer / Table IV).
+#[derive(Clone, Copy, Debug)]
+pub struct TeraVariant {
+    pub paper_heap: u64,
+    pub paper_reducers: u64,
+    pub reduce_slots_per_node: u64,
+}
+
+impl TeraVariant {
+    pub fn baseline() -> Self {
+        Self { paper_heap: 7 * GB, paper_reducers: 32, reduce_slots_per_node: 2 }
+    }
+
+    pub fn mem_heap() -> Self {
+        Self { paper_heap: 15 * GB, paper_reducers: 32, reduce_slots_per_node: 2 }
+    }
+
+    pub fn mem_reducer() -> Self {
+        Self { paper_heap: 7 * GB, paper_reducers: 64, reduce_slots_per_node: 4 }
+    }
+
+    pub fn table4() -> Self {
+        Self { paper_heap: 9 * GB, paper_reducers: 32, reduce_slots_per_node: 2 }
+    }
+}
+
+/// Average materialized bytes of one read's suffixes (incl. index+framing).
+fn suffix_bytes_per_read(read_len: usize) -> f64 {
+    let l = read_len as f64;
+    // per suffix: 10-byte key + (8B index + avg (l+1)/2 text) value + 8B framing
+    (l + 1.0) * (10.0 + 8.0 + 8.0 + (l + 1.0) / 2.0)
+}
+
+/// Run one TeraSort paper case at scale and project it.
+pub fn run_terasort_case(
+    label: &str,
+    paper_input: u64,
+    variant: &TeraVariant,
+    env: &ScaledEnv,
+    cluster: &ClusterSpec,
+    params: &CostParams,
+) -> std::io::Result<CaseRow> {
+    // ratio that controls reduce-side merge mechanics
+    let paper_per_red = paper_input as f64 * 1.03 / variant.paper_reducers as f64;
+    let paper_buffer = PAPER_SHUFFLE_BUFFER * variant.paper_heap as f64 / (7 * GB) as f64;
+    let ratio = paper_per_red / paper_buffer;
+
+    // scaled reducers double when the paper variant doubles them
+    let mut env = env.clone();
+    env.n_reducers = env.n_reducers * variant.paper_reducers as usize / 32;
+    env.reducer_heap = env.reducer_heap * variant.paper_heap / (7 * GB);
+
+    let spec = env.corpus_for_ratio(
+        ratio * 32.0 / variant.paper_reducers as f64, // per-red ratio at scaled reducer count
+        suffix_bytes_per_read(env.read_len),
+    );
+    let reads = synth_corpus(&spec);
+
+    let ledger = Ledger::new();
+    let cfg = TeraSortConfig { conf: env.conf(), samples_per_reducer: 200, seed: env.seed };
+    let res = terasort::run(&reads, &cfg, &ledger)?;
+    let reference = res.suffix_input_bytes;
+    let [map_lr, map_lw, red_lr, red_lw, hdfs_r, hdfs_w, shuffle, kv_put, kv_fetch] =
+        normalize(&res.job.footprint, reference);
+
+    // ---- project to paper scale ----
+    let mut fp = Footprint::default();
+    let scale = paper_input as f64;
+    for (ch, v) in [
+        (Channel::MapLocalRead, map_lr),
+        (Channel::MapLocalWrite, map_lw),
+        (Channel::ReduceLocalRead, red_lr),
+        (Channel::ReduceLocalWrite, red_lw),
+        (Channel::HdfsRead, hdfs_r),
+        (Channel::HdfsWrite, hdfs_w),
+        (Channel::Shuffle, shuffle),
+    ] {
+        fp.set(ch, (v * scale) as u64);
+    }
+    let shape = WorkloadShape {
+        n_reducers: variant.paper_reducers,
+        per_reducer_shuffle: (paper_input as f64 * 1.03 / variant.paper_reducers as f64) as u64,
+        max_group_bytes: terasort_max_group(paper_input),
+        numeric_pipeline: false,
+        reduce_slots_per_node: variant.reduce_slots_per_node,
+    };
+    let heap = HeapConfig::paper_terasort(variant.paper_heap);
+    let time = simcost::estimate(cluster, params, &fp, &shape, &heap, env.trials, env.seed);
+
+    Ok(CaseRow {
+        label: label.to_string(),
+        paper_input,
+        map_lr,
+        map_lw,
+        red_lr,
+        red_lw,
+        hdfs_r,
+        hdfs_w,
+        shuffle,
+        kv_put,
+        kv_fetch,
+        time,
+        measured: res.job.footprint,
+        reference_bytes: reference,
+        mini_reads: reads.len(),
+    })
+}
+
+/// Run one scheme paper case (Table V) at scale and project it.
+pub fn run_scheme_case(
+    label: &str,
+    paper_read_input: u64,
+    env: &ScaledEnv,
+    cluster: &ClusterSpec,
+    params: &CostParams,
+) -> std::io::Result<CaseRow> {
+    // paper scheme shuffles 16 B per suffix; suffixes = reads × (L+1)
+    let paper_reads = paper_read_input as f64 / (PAPER_READ_LEN as f64 + 8.0);
+    let paper_suffixes = paper_reads * (PAPER_READ_LEN as f64 + 1.0);
+    let paper_shuffle = paper_suffixes * 16.0;
+    let paper_per_red = paper_shuffle / PAPER_REDUCERS as f64;
+    let ratio = paper_per_red / PAPER_SHUFFLE_BUFFER;
+
+    // our shuffled pair is 24 B (8 key + 8 index + 8 framing)
+    let l = env.read_len as f64;
+    let shuffle_bytes_per_read = (l + 1.0) * 24.0;
+    let spec = env.corpus_for_ratio(ratio, shuffle_bytes_per_read);
+    let reads = synth_corpus(&spec);
+
+    let ledger = Ledger::new();
+    let store = SharedStore::new(cluster.n_nodes());
+    let s = store.clone();
+    let factory: scheme::StoreFactory =
+        Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>);
+    let cfg = SchemeConfig {
+        conf: env.conf(),
+        group_threshold: 4000,
+        samples_per_reducer: 1000,
+        seed: env.seed,
+        ..Default::default()
+    };
+    let res = scheme::run(&reads, &cfg, factory, &ledger)?;
+
+    // Table V normalizes by the OUTPUT size ("1.01 unit" reference)
+    let reference = (res.job.footprint.get(Channel::HdfsWrite) as f64 / 1.01) as u64;
+    let [map_lr, map_lw, red_lr, red_lw, hdfs_r, hdfs_w, shuffle, kv_put, kv_fetch] =
+        normalize(&res.job.footprint, reference);
+
+    // ---- project ----
+    // paper-scale output reference = suffix volume (texts + indexes)
+    let paper_output_ref = paper_suffixes * ((PAPER_READ_LEN as f64 + 1.0) / 2.0 + 8.0);
+    let mut fp = Footprint::default();
+    for (ch, v) in [
+        (Channel::MapLocalRead, map_lr),
+        (Channel::MapLocalWrite, map_lw),
+        (Channel::ReduceLocalRead, red_lr),
+        (Channel::ReduceLocalWrite, red_lw),
+        (Channel::HdfsRead, hdfs_r),
+        (Channel::HdfsWrite, hdfs_w),
+        (Channel::Shuffle, shuffle),
+        (Channel::KvPut, kv_put),
+        (Channel::KvFetch, kv_fetch),
+    ] {
+        fp.set(ch, (v * paper_output_ref) as u64);
+    }
+    let shape = WorkloadShape {
+        n_reducers: PAPER_REDUCERS,
+        per_reducer_shuffle: paper_per_red as u64,
+        max_group_bytes: 1_600_000 * 16, // threshold × 16 B pairs (§IV-C)
+        numeric_pipeline: true,
+        reduce_slots_per_node: 2,
+    };
+    let heap = HeapConfig::paper_scheme();
+    let time = simcost::estimate(cluster, params, &fp, &shape, &heap, env.trials, env.seed);
+
+    Ok(CaseRow {
+        label: label.to_string(),
+        paper_input: paper_read_input,
+        map_lr,
+        map_lw,
+        red_lr,
+        red_lw,
+        hdfs_r,
+        hdfs_w,
+        shuffle,
+        kv_put,
+        kv_fetch,
+        time,
+        measured: res.job.footprint,
+        reference_bytes: reference,
+        mini_reads: reads.len(),
+    })
+}
+
+/// KV memory at paper scale for an input of raw reads (the 1.5× rule) —
+/// Table VIII's scheme mem_ratio numerator term.
+pub fn paper_kv_memory(paper_read_input: u64) -> u64 {
+    (paper_read_input as f64 * 1.5) as u64
+}
+
+/// Corpus helper shared by examples and benches.
+pub fn example_corpus(n_reads: usize, read_len: usize, seed: u64) -> Vec<Read> {
+    synth_corpus(&CorpusSpec {
+        n_reads,
+        read_len,
+        len_jitter: 4,
+        genome_len: 1 << 20,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_env() -> ScaledEnv {
+        ScaledEnv { thrift: 8.0, trials: 3, ..Default::default() }
+    }
+
+    #[test]
+    fn terasort_case1_ratios_match_paper_shape() {
+        let env = quick_env();
+        let cluster = ClusterSpec::table2();
+        let row = run_terasort_case(
+            "Case 1",
+            637_180_000_000,
+            &TeraVariant::baseline(),
+            &env,
+            &cluster,
+            &CostParams::default(),
+        )
+        .unwrap();
+        // paper: Map 1.03R/2.07W; shape: ~1R / ~2W
+        assert!((0.8..1.3).contains(&row.map_lr), "map_lr={}", row.map_lr);
+        assert!((1.7..2.4).contains(&row.map_lw), "map_lw={}", row.map_lw);
+        // paper: Reduce 1.03/1.03 — no merge rounds at case-1 ratio
+        assert!((0.7..1.3).contains(&row.red_lr), "red_lr={}", row.red_lr);
+        assert!((row.red_lr - row.red_lw).abs() < 0.15);
+        assert!((0.9..1.15).contains(&row.shuffle), "shuffle={}", row.shuffle);
+        assert!(row.time.completed());
+    }
+
+    #[test]
+    fn terasort_case5_grows_reduce_io_and_breaks() {
+        let env = quick_env();
+        let cluster = ClusterSpec::table2();
+        let c1 = run_terasort_case(
+            "Case 1",
+            637_180_000_000,
+            &TeraVariant::baseline(),
+            &env,
+            &cluster,
+            &CostParams::default(),
+        )
+        .unwrap();
+        let c5 = run_terasort_case(
+            "Case 5",
+            (3.37 * TB as f64) as u64,
+            &TeraVariant::baseline(),
+            &env,
+            &cluster,
+            &CostParams::default(),
+        )
+        .unwrap();
+        // paper: 1.03 -> 1.88 growth in reduce-side R/W
+        assert!(
+            c5.red_lr > c1.red_lr + 0.3,
+            "case5 reduce R {} should exceed case1 {}",
+            c5.red_lr,
+            c1.red_lr
+        );
+        // map side stays flat
+        assert!((c5.map_lw - c1.map_lw).abs() < 0.25);
+        // breakdown at case 5
+        assert!(!c5.time.completed());
+        assert!(c5.time.minutes.mu > 3.0 * c4_or(&c1));
+    }
+
+    fn c4_or(c1: &CaseRow) -> f64 {
+        c1.time.minutes.mu
+    }
+
+    #[test]
+    fn scheme_case_ratios_match_paper_shape() {
+        let env = quick_env();
+        let cluster = ClusterSpec::table2();
+        let row = run_scheme_case(
+            "Case 1",
+            (5.86 * GB as f64) as u64,
+            &env,
+            &cluster,
+            &CostParams::default(),
+        )
+        .unwrap();
+        // paper Table V: Map 0.30R/0.45W, Reduce 0.16/0.16, Shuffle 0.16,
+        // HDFS read 0.01, write 1.01 — all per unit of output.
+        assert!(row.map_lw < 0.9, "map_lw={}", row.map_lw);
+        assert!(row.map_lr < row.map_lw);
+        assert!(row.red_lr < 0.45, "red_lr={}", row.red_lr);
+        assert!((row.red_lr - row.shuffle).abs() < 0.08, "red==shuffle (paper)");
+        assert!(row.hdfs_r < 0.05, "hdfs_r={}", row.hdfs_r);
+        assert!((0.95..1.1).contains(&row.hdfs_w), "hdfs_w={}", row.hdfs_w);
+        assert!(row.time.completed());
+    }
+
+    #[test]
+    fn scheme_survives_case6_where_terasort_died_at_case5() {
+        let env = quick_env();
+        let cluster = ClusterSpec::table2();
+        let row = run_scheme_case(
+            "Case 6",
+            (63.12 * GB as f64) as u64,
+            &env,
+            &cluster,
+            &CostParams::default(),
+        )
+        .unwrap();
+        assert!(row.time.completed(), "{:?}", row.time.breakdown);
+    }
+}

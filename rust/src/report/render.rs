@@ -1,0 +1,176 @@
+//! ASCII rendering of the paper's tables and figures.
+
+use crate::report::experiments::CaseRow;
+use crate::util::bytes::human;
+
+/// Render a footprint table in the paper's row layout (Tables III–VII).
+pub fn footprint_table(
+    title: &str,
+    rows: &[CaseRow],
+    paper_times: Option<&[(f64, f64, bool)]>,
+    show_kv: bool,
+) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("== {title} ==\n"));
+    let mut header = format!("{:<10}", "");
+    for r in rows {
+        header.push_str(&format!("{:>22}", r.label));
+    }
+    s.push_str(&header);
+    s.push('\n');
+    let mut sizes = format!("{:<10}", "Input");
+    for r in rows {
+        sizes.push_str(&format!("{:>22}", human(r.paper_input)));
+    }
+    s.push_str(&sizes);
+    s.push('\n');
+    let line = |name: &str, f: &dyn Fn(&CaseRow) -> String| {
+        let mut l = format!("{name:<10}");
+        for r in rows {
+            l.push_str(&format!("{:>22}", f(r)));
+        }
+        l.push('\n');
+        l
+    };
+    s.push_str(&line("", &|_| "Map | Reduce".into()));
+    s.push_str(&line("LocalRead", &|r| format!("{:.2} | {:.2}", r.map_lr, r.red_lr)));
+    s.push_str(&line("LocalWrite", &|r| format!("{:.2} | {:.2}", r.map_lw, r.red_lw)));
+    s.push_str(&line("HDFS Read", &|r| format!("{:.2}", r.hdfs_r)));
+    s.push_str(&line("HDFS Write", &|r| format!("{:.2}", r.hdfs_w)));
+    s.push_str(&line("Shuffle", &|r| format!("{:.2}", r.shuffle)));
+    if show_kv {
+        s.push_str(&line("KV Put", &|r| format!("{:.2}", r.kv_put)));
+        s.push_str(&line("KV Fetch", &|r| format!("{:.2}", r.kv_fetch)));
+    }
+    s.push_str(&line("Time(min)", &|r| {
+        let t = &r.time;
+        let star = if t.completed() { "" } else { "*" };
+        format!("μ={:.1}; σ={:.2}{}", t.minutes.mu, t.minutes.sigma, star)
+    }));
+    if let Some(pt) = paper_times {
+        let mut l = format!("{:<10}", "Paper");
+        for (i, _) in rows.iter().enumerate() {
+            if let Some((mu, sigma, ok)) = pt.get(i) {
+                let star = if *ok { "" } else { "*" };
+                l.push_str(&format!("{:>22}", format!("μ={mu:.1}; σ={sigma:.2}{star}")));
+            }
+        }
+        s.push_str(&l);
+        s.push('\n');
+    }
+    if rows.iter().any(|r| !r.time.completed()) {
+        s.push_str("(* = breakdown: not all trials completed)\n");
+    }
+    s
+}
+
+/// A labelled (x, y, completed) series for the figures.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64, bool)>, // (input TB, minutes, completed)
+}
+
+/// ASCII scatter/line chart (Figures 5 and 8).
+pub fn chart(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let mut s = format!("== {title} ==\n");
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|sr| sr.points.iter().map(|&(x, y, _)| (x, y)))
+        .collect();
+    if all.is_empty() {
+        return s;
+    }
+    let xmax = all.iter().map(|p| p.0).fold(0.0, f64::max) * 1.05;
+    let ymax = all.iter().map(|p| p.1).fold(0.0, f64::max) * 1.05;
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['o', 'x', '+', '#', '@', '%'];
+    for (si, sr) in series.iter().enumerate() {
+        for &(x, y, ok) in &sr.points {
+            let cx = ((x / xmax) * (width - 1) as f64).round() as usize;
+            let cy = ((y / ymax) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            let mark = if ok { marks[si % marks.len()] } else { '!' };
+            grid[row][cx.min(width - 1)] = mark;
+        }
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let yval = ymax * (height - 1 - i) as f64 / (height - 1) as f64;
+        s.push_str(&format!("{yval:>8.0} |"));
+        s.push_str(&row.iter().collect::<String>());
+        s.push('\n');
+    }
+    s.push_str(&format!("{:>8} +{}\n", "", "-".repeat(width)));
+    s.push_str(&format!("{:>10}0{:>width$.2}\n", "", xmax, width = width - 1));
+    for (si, sr) in series.iter().enumerate() {
+        s.push_str(&format!("  {} = {}   ", marks[si % marks.len()], sr.name));
+    }
+    s.push_str("(! = breakdown)\n");
+    s
+}
+
+/// Simple aligned key/value block.
+pub fn kv_block(title: &str, pairs: &[(String, String)]) -> String {
+    let mut s = format!("== {title} ==\n");
+    let w = pairs.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+    for (k, v) in pairs {
+        s.push_str(&format!("{k:<w$}  {v}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::footprint::Footprint;
+    use crate::simcost::TimeEstimate;
+    use crate::util::stats::MuSigma;
+
+    fn dummy_row(label: &str, mu: f64, ok: bool) -> CaseRow {
+        CaseRow {
+            label: label.into(),
+            paper_input: 637_000_000_000,
+            map_lr: 1.03,
+            map_lw: 2.07,
+            red_lr: 1.03,
+            red_lw: 1.03,
+            hdfs_r: 1.0,
+            hdfs_w: 1.01,
+            shuffle: 1.03,
+            kv_put: 0.0,
+            kv_fetch: 0.0,
+            time: TimeEstimate {
+                minutes: MuSigma { mu, sigma: 1.3, n: 5 },
+                trials: 5,
+                completed_trials: if ok { 5 } else { 1 },
+                breakdown: None,
+            },
+            measured: Footprint::default(),
+            reference_bytes: 1,
+            mini_reads: 100,
+        }
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let rows = vec![dummy_row("Case 1", 61.8, true), dummy_row("Case 5", 700.0, false)];
+        let t = footprint_table("Table III", &rows, Some(&[(61.8, 1.3, true)]), false);
+        assert!(t.contains("Case 1"));
+        assert!(t.contains("2.07"));
+        assert!(t.contains("μ=61.8"));
+        assert!(t.contains("breakdown"));
+        assert!(t.contains("Paper"));
+    }
+
+    #[test]
+    fn chart_renders_marks() {
+        let s = vec![
+            Series { name: "TeraSort".into(), points: vec![(0.6, 60.0, true), (3.4, 700.0, false)] },
+            Series { name: "Scheme".into(), points: vec![(0.6, 63.0, true)] },
+        ];
+        let c = chart("Fig 5", &s, 40, 10);
+        assert!(c.contains('o'));
+        assert!(c.contains('!'));
+        assert!(c.contains("TeraSort"));
+    }
+}

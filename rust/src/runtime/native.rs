@@ -1,0 +1,106 @@
+//! Pure-Rust fallback with bit-identical semantics to the PJRT entry
+//! points — used when artifacts are absent, and cross-checked against the
+//! compiled kernels in the integration tests.
+
+use crate::suffix::encode::{pack_index, suffix_key, OFFSET_RADIX};
+use crate::suffix::reads::Read;
+
+/// One encoded suffix from the map phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SuffixRec {
+    /// Base-5 prefix key.
+    pub key: i64,
+    /// Packed `seq * 1000 + offset` identity.
+    pub index: i64,
+    /// Shuffle partition (searchsorted-right over boundaries).
+    pub partition: u32,
+}
+
+/// partition(k) = #{b : b <= k}; identical to the L1 `bucket` kernel and
+/// `RangePartitioner::partition`.
+#[inline]
+pub fn bucket(key: i64, boundaries: &[i64]) -> u32 {
+    boundaries.partition_point(|&b| b <= key) as u32
+}
+
+/// Encode every suffix (offsets 0..=len) of `read` — the native
+/// equivalent of one `map_encode` row.
+pub fn encode_read(
+    read: &Read,
+    boundaries: &[i64],
+    prefix_len: usize,
+    out: &mut Vec<SuffixRec>,
+) {
+    debug_assert!((read.len() as i64) < OFFSET_RADIX);
+    for off in 0..=read.len() {
+        let key = suffix_key(&read.codes, off, prefix_len);
+        out.push(SuffixRec {
+            key,
+            index: pack_index(read.seq, off),
+            partition: bucket(key, boundaries),
+        });
+    }
+}
+
+/// Encode a batch of reads.
+pub fn encode_reads(reads: &[Read], boundaries: &[i64], prefix_len: usize) -> Vec<SuffixRec> {
+    let mut out = Vec::with_capacity(reads.iter().map(|r| r.suffix_count()).sum());
+    for r in reads {
+        encode_read(r, boundaries, prefix_len, &mut out);
+    }
+    out
+}
+
+/// Lexicographic (key, index) pair sort — native `group_sort`.
+pub fn group_sort(keys: &mut [i64], indexes: &mut [i64]) {
+    debug_assert_eq!(keys.len(), indexes.len());
+    let mut perm: Vec<usize> = (0..keys.len()).collect();
+    perm.sort_unstable_by_key(|&i| (keys[i], indexes[i]));
+    let ks: Vec<i64> = perm.iter().map(|&i| keys[i]).collect();
+    let ixs: Vec<i64> = perm.iter().map(|&i| indexes[i]).collect();
+    keys.copy_from_slice(&ks);
+    indexes.copy_from_slice(&ixs);
+}
+
+/// Ascending key sort — native `sample_sort`.
+pub fn sample_sort(keys: &mut [i64]) {
+    keys.sort_unstable();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suffix::encode::encode_prefix;
+
+    #[test]
+    fn encode_read_covers_all_offsets() {
+        let r = Read::from_ascii(3, b"ACGT");
+        let mut out = Vec::new();
+        encode_read(&r, &[], 5, &mut out);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0].index, 3000);
+        assert_eq!(out[4].index, 3004);
+        assert_eq!(out[4].key, 0); // "$"
+        assert_eq!(out[0].key, encode_prefix(&r.codes, 5));
+        assert!(out.iter().all(|s| s.partition == 0));
+    }
+
+    #[test]
+    fn bucket_matches_partition_point() {
+        let bounds = [10i64, 20, 30];
+        assert_eq!(bucket(5, &bounds), 0);
+        assert_eq!(bucket(10, &bounds), 1);
+        assert_eq!(bucket(29, &bounds), 2);
+        assert_eq!(bucket(30, &bounds), 3);
+        assert_eq!(bucket(i64::MAX, &bounds), 3);
+    }
+
+    #[test]
+    fn group_sort_lexicographic() {
+        let mut k = vec![3i64, 1, 3, 2];
+        let mut ix = vec![30i64, 10, 29, 20];
+        group_sort(&mut k, &mut ix);
+        assert_eq!(k, vec![1, 2, 3, 3]);
+        assert_eq!(ix, vec![10, 20, 29, 30]);
+    }
+}

@@ -1,0 +1,151 @@
+//! JVM heap/GC model (§III "GC overhead limit or Java heap space",
+//! §IV-C young/old generations, AlwaysTenure + ConcMarkSweep).
+//!
+//! The simulator needs two things from this model:
+//!  * *failure prediction*: does a reducer with heap H survive a shuffle
+//!    of S bytes whose largest sorting group is g bytes? (TeraSort Case 5
+//!    dies here; the scheme's fixed-width pairs never do.)
+//!  * *throughput penalty*: what fraction of wall time goes to GC pauses
+//!    (stop-the-world) vs concurrent sweeping (the scheme's CMS choice).
+
+/// Outcome of running one reducer's sort workload in a modeled heap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HeapOutcome {
+    /// Completed; `pause_fraction` of wall time was lost to GC.
+    Ok { pause_fraction: f64 },
+    /// `java.lang.OutOfMemoryError: Java heap space`
+    HeapSpace,
+    /// `java.lang.OutOfMemoryError: GC overhead limit exceeded`
+    GcOverheadLimit,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct HeapConfig {
+    pub heap_bytes: u64,
+    /// Young generation (paper: 1 GB, AlwaysTenure).
+    pub young_bytes: u64,
+    /// Concurrent old-gen collection (-XX:+UseConcMarkSweepGC).
+    pub concurrent_sweep: bool,
+}
+
+impl HeapConfig {
+    /// Paper's reducer JVM: 7 GB heap, 1 GB young, CMS.
+    pub fn paper_scheme() -> Self {
+        Self {
+            heap_bytes: 7 << 30,
+            young_bytes: 1 << 30,
+            concurrent_sweep: true,
+        }
+    }
+
+    /// TeraSort's default reducer JVM: same heap, default stop-the-world.
+    pub fn paper_terasort(heap_bytes: u64) -> Self {
+        Self { heap_bytes, young_bytes: heap_bytes / 8, concurrent_sweep: false }
+    }
+}
+
+/// Sorting a group of `g` bytes needs ~2g live bytes (input + sort
+/// scratch / object headers); Java object overhead for many small
+/// objects adds ~1.4x on top (measured folklore; the paper's groups are
+/// boxed suffix strings).
+pub const SORT_WORKING_FACTOR: f64 = 2.0;
+pub const OBJECT_OVERHEAD: f64 = 1.4;
+
+/// Model one reducer: total bytes churned through the heap (`shuffled`)
+/// and the largest single sorting group (`max_group`).
+pub fn simulate_reducer_heap(cfg: &HeapConfig, shuffled: u64, max_group: u64) -> HeapOutcome {
+    let old_gen = cfg.heap_bytes.saturating_sub(cfg.young_bytes) as f64;
+    let live_peak = max_group as f64 * SORT_WORKING_FACTOR * OBJECT_OVERHEAD;
+    if live_peak > old_gen {
+        return HeapOutcome::HeapSpace;
+    }
+    let occupancy = live_peak / old_gen;
+    // GC-overhead-limit: >98% of time collecting while recovering <2% —
+    // approximated by near-full old gen (JVM thrashes before the OOM).
+    if occupancy > 0.90 {
+        return HeapOutcome::GcOverheadLimit;
+    }
+    // churn cycles: every (old_gen - live_peak) bytes of allocation forces
+    // a major collection whose cost scales with the live set.
+    let headroom = (old_gen - live_peak).max(1.0);
+    let cycles = shuffled as f64 / headroom;
+    // pause per cycle grows with occupancy (more to trace/compact)
+    let pause_unit = occupancy / (1.0 - occupancy);
+    let mut pause_fraction = (cycles * pause_unit * 0.02).min(0.95);
+    if cfg.concurrent_sweep {
+        // CMS sweeps concurrently; paper's §IV-C setup keeps acquisition
+        // running — residual pauses are young-gen + remark only.
+        pause_fraction *= 0.25;
+    }
+    HeapOutcome::Ok { pause_fraction }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: u64 = 1 << 30;
+
+    #[test]
+    fn small_groups_are_fine() {
+        let cfg = HeapConfig::paper_scheme();
+        // scheme: 1.6e6 pairs of 16 B = ~26 MB groups
+        let out = simulate_reducer_heap(&cfg, 17 * GB, 26 << 20);
+        match out {
+            HeapOutcome::Ok { pause_fraction } => assert!(pause_fraction < 0.2),
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn giant_group_blows_heap() {
+        // TeraSort Case 5: a reducer holds ~multi-GB same-prefix groups
+        let cfg = HeapConfig::paper_terasort(7 * GB);
+        let out = simulate_reducer_heap(&cfg, 111 * GB, 3 * GB);
+        assert!(matches!(out, HeapOutcome::HeapSpace | HeapOutcome::GcOverheadLimit));
+    }
+
+    #[test]
+    fn bigger_heap_defers_breakdown() {
+        // mem_heap (Table VI): same workload, 15 GB heap -> survives
+        let small = HeapConfig::paper_terasort(7 * GB);
+        let big = HeapConfig::paper_terasort(15 * GB);
+        let g = 2 * GB;
+        let dies = simulate_reducer_heap(&small, 50 * GB, g);
+        let lives = simulate_reducer_heap(&big, 50 * GB, g);
+        assert!(!matches!(dies, HeapOutcome::Ok { .. }));
+        assert!(matches!(lives, HeapOutcome::Ok { .. }));
+    }
+
+    #[test]
+    fn cms_reduces_pauses() {
+        let stw = HeapConfig { concurrent_sweep: false, ..HeapConfig::paper_scheme() };
+        let cms = HeapConfig::paper_scheme();
+        let (s, c) = (
+            simulate_reducer_heap(&stw, 40 * GB, 500 << 20),
+            simulate_reducer_heap(&cms, 40 * GB, 500 << 20),
+        );
+        let (HeapOutcome::Ok { pause_fraction: ps }, HeapOutcome::Ok { pause_fraction: pc }) =
+            (s, c)
+        else {
+            panic!("both should complete: {s:?} {c:?}");
+        };
+        assert!(pc < ps);
+    }
+
+    #[test]
+    fn more_churn_more_pause() {
+        let cfg = HeapConfig::paper_terasort(7 * GB);
+        let HeapOutcome::Ok { pause_fraction: a } =
+            simulate_reducer_heap(&cfg, 20 * GB, 100 << 20)
+        else {
+            panic!()
+        };
+        let HeapOutcome::Ok { pause_fraction: b } =
+            simulate_reducer_heap(&cfg, 100 * GB, 100 << 20)
+        else {
+            panic!()
+        };
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,576 @@
+//! The paper's scheme (§IV): **keep only the raw data in place**.
+//!
+//! Mappers put the raw reads into the distributed in-memory store and
+//! shuffle only fixed-width (base-5 prefix key, packed index) pairs;
+//! reducers accumulate sorting groups, fetch the suffix texts in bulk via
+//! `MGETSUFFIX`, tie-break equal-prefix groups, and emit the sorted
+//! output. MapReduce never carries a suffix — only its index.
+
+pub mod gc_model;
+pub mod sampler;
+pub mod sorting_group;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::footprint::{Channel, Ledger};
+use crate::kvstore::shard::SuffixStore;
+use crate::mapreduce::engine::{make_splits, run_job, Job, JobResult};
+use crate::mapreduce::job::JobConf;
+use crate::mapreduce::partitioner::SAMPLES_PER_REDUCER;
+use crate::mapreduce::record::{decode_i64_key, encode_i64_key, Record};
+use crate::runtime::{self, native};
+use crate::suffix::encode::DEFAULT_PREFIX_LEN;
+use crate::suffix::reads::Read;
+use sorting_group::{key_groups, key_is_complete, SortingGroupBuffer};
+
+/// Scheme configuration (paper defaults, scaled knobs in `JobConf`).
+#[derive(Clone, Debug)]
+pub struct SchemeConfig {
+    pub conf: JobConf,
+    /// Fixed prefix length (paper: 23 with `long` keys).
+    pub prefix_len: usize,
+    /// Sorting-group accumulation threshold in suffixes (paper: 1.6e6).
+    pub group_threshold: usize,
+    /// Write the suffix *texts* to HDFS (paper's fair-comparison mode);
+    /// `false` emits only (key, index) — the paper's "could be faster"
+    /// variant (§IV-D closing note).
+    pub write_suffixes: bool,
+    pub samples_per_reducer: usize,
+    /// Reads per KV put batch from one mapper (aggregation, §IV-B).
+    pub seed: u64,
+}
+
+impl Default for SchemeConfig {
+    fn default() -> Self {
+        Self {
+            conf: JobConf::scaled_down(),
+            prefix_len: DEFAULT_PREFIX_LEN,
+            group_threshold: 1_600_000,
+            write_suffixes: true,
+            samples_per_reducer: SAMPLES_PER_REDUCER,
+            seed: 1,
+        }
+    }
+}
+
+/// Factory for per-task store handles (a TCP client per task, or clones
+/// of one shared in-process store).
+pub type StoreFactory = Arc<dyn Fn() -> Box<dyn SuffixStore> + Send + Sync>;
+
+/// Reducer wall-time split (§IV-D: ~60% getting suffixes / 13% sorting /
+/// 27% others), aggregated across reducers in nanoseconds.
+#[derive(Debug, Default)]
+pub struct TimeSplit {
+    pub fetch_ns: AtomicU64,
+    pub sort_ns: AtomicU64,
+    pub other_ns: AtomicU64,
+}
+
+impl TimeSplit {
+    pub fn percentages(&self) -> (f64, f64, f64) {
+        let f = self.fetch_ns.load(Ordering::Relaxed) as f64;
+        let s = self.sort_ns.load(Ordering::Relaxed) as f64;
+        let o = self.other_ns.load(Ordering::Relaxed) as f64;
+        let t = (f + s + o).max(1.0);
+        (100.0 * f / t, 100.0 * s / t, 100.0 * o / t)
+    }
+}
+
+pub struct SchemeResult {
+    pub job: JobResult,
+    /// Output suffix order (packed indexes).
+    pub order: Vec<i64>,
+    /// Memory used by the KV instances after loading (paper's 1.5×).
+    pub kv_memory: u64,
+    /// Reducer time split.
+    pub time_split: Arc<TimeSplit>,
+    /// Partition boundaries used.
+    pub boundaries: Vec<i64>,
+}
+
+/// Turn a corpus into the job's input records: key = seq (8 B BE),
+/// value = read codes.
+pub fn read_records(reads: &[Read]) -> Vec<Record> {
+    reads
+        .iter()
+        .map(|r| Record::new(r.seq.to_be_bytes().to_vec(), r.codes.clone()))
+        .collect()
+}
+
+// ---------------- mapper ----------------
+
+struct SchemeMapper {
+    cfg: SchemeConfig,
+    boundaries: Vec<i64>,
+    store: Box<dyn SuffixStore>,
+    ledger: Arc<Ledger>,
+    /// Reads held for tile-encoding and the aggregated KV put.
+    pending: Vec<Read>,
+    all_reads: Vec<Read>,
+}
+
+impl SchemeMapper {
+    /// Encode pending reads (PJRT tile when available, native otherwise)
+    /// and emit one (key, index) record per valid suffix.
+    fn encode_pending(&mut self, emit: &mut dyn FnMut(Record)) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let reads = std::mem::take(&mut self.pending);
+        let done = runtime::with_engine(|eng| {
+            let Some(eng) = eng else { return false };
+            let refs: Vec<&Read> = reads.iter().collect();
+            let max_len = refs.iter().map(|r| r.len()).max().unwrap_or(0);
+            // tile to the variant's row count (large tiles amortize
+            // PJRT dispatch — §Perf iteration 1)
+            let tile_r = eng
+                .map_encode_meta(max_len, self.cfg.prefix_len, self.boundaries.len())
+                .map(|m| m.r)
+                .unwrap_or(128);
+            let mut ok = true;
+            for tile in refs.chunks(tile_r) {
+                match eng.map_encode_tile(tile, &self.boundaries, self.cfg.prefix_len) {
+                    Ok(out) => {
+                        for (i, rd) in tile.iter().enumerate() {
+                            for off in 0..=rd.len() {
+                                let j = i * out.lp + off;
+                                debug_assert_eq!(out.valid[j], 1);
+                                emit(Record::new(
+                                    encode_i64_key(out.keys[j]).to_vec(),
+                                    out.indexes[j].to_be_bytes().to_vec(),
+                                ));
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        log::warn!("map_encode_tile failed, native fallback: {e:#}");
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            ok
+        });
+        if !done {
+            for rd in &reads {
+                let mut recs = Vec::with_capacity(rd.suffix_count());
+                native::encode_read(rd, &self.boundaries, self.cfg.prefix_len, &mut recs);
+                for r in recs {
+                    emit(Record::new(
+                        encode_i64_key(r.key).to_vec(),
+                        r.index.to_be_bytes().to_vec(),
+                    ));
+                }
+            }
+        }
+        self.all_reads.extend(reads);
+    }
+}
+
+impl crate::mapreduce::mapper::MapTask for SchemeMapper {
+    fn map(&mut self, rec: &Record, emit: &mut dyn FnMut(Record)) {
+        let seq = u64::from_be_bytes(rec.key[..8].try_into().expect("8-byte seq key"));
+        self.pending.push(Read::new(seq, rec.value.clone()));
+        if self.pending.len() >= 512 {
+            self.encode_pending(emit);
+        }
+    }
+
+    fn finish(&mut self, emit: &mut dyn FnMut(Record)) {
+        self.encode_pending(emit);
+        // aggregated put of this split's reads (paper: "when the mappers
+        // finish reading the input file")
+        let reads = std::mem::take(&mut self.all_reads);
+        match self.store.put_reads(&reads) {
+            Ok(t) => self.ledger.add(Channel::KvPut, t.total()),
+            Err(e) => panic!("KV put failed: {e}"),
+        }
+    }
+}
+
+// ---------------- reducer ----------------
+
+struct SchemeReducer {
+    cfg: SchemeConfig,
+    store: Box<dyn SuffixStore>,
+    ledger: Arc<Ledger>,
+    times: Arc<TimeSplit>,
+    buf: SortingGroupBuffer,
+}
+
+impl SchemeReducer {
+    fn flush(&mut self, out: &mut dyn FnMut(Record)) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let t_start = Instant::now();
+        let (mut keys, mut indexes) = self.buf.take();
+
+        // 1. numeric (key, index) sort — PJRT bitonic blocks + merge, or
+        //    native. Input arrives key-ordered, so blocks are nearly
+        //    sorted; the kernel still performs the full network (§IV-C).
+        let t_sort = Instant::now();
+        runtime::with_engine(|eng| match eng {
+            Some(eng) if eng.max_group_block() > 0 => {
+                let block = eng.preferred_group_block();
+                let n = keys.len();
+                let mut runs: Vec<(Vec<i64>, Vec<i64>)> = Vec::new();
+                let mut i = 0;
+                while i < n {
+                    let j = (i + block).min(n);
+                    let mut kb = keys[i..j].to_vec();
+                    let mut ib = indexes[i..j].to_vec();
+                    // adaptive: key-ordered arrival means many blocks are
+                    // already (key, index)-sorted — skip the network then
+                    // (§Perf iteration 3)
+                    if !is_pair_sorted(&kb, &ib) && eng.group_sort(&mut kb, &mut ib).is_err() {
+                        native::group_sort(&mut kb, &mut ib);
+                    }
+                    runs.push((kb, ib));
+                    i = j;
+                }
+                let (k, ix) = merge_pair_runs(runs);
+                keys = k;
+                indexes = ix;
+            }
+            _ => native::group_sort(&mut keys, &mut indexes),
+        });
+        let sort_ns = t_sort.elapsed().as_nanos() as u64;
+
+        // 2. fetch suffix texts: all of them when writing suffixes out,
+        //    else only incomplete multi-member groups (tie-breaking).
+        let groups = key_groups(&keys);
+        let mut fetch_ns = 0u64;
+        let mut texts: Vec<Option<Vec<u8>>> = vec![None; keys.len()];
+        let fetch = |store: &mut Box<dyn SuffixStore>,
+                     ledger: &Ledger,
+                     idxs: &[i64]|
+         -> (Vec<Vec<u8>>, u64) {
+            let t = Instant::now();
+            let (texts, traffic) = store.fetch_suffixes(idxs).expect("KV fetch failed");
+            ledger.add(Channel::KvFetch, traffic.total());
+            (texts, t.elapsed().as_nanos() as u64)
+        };
+        if self.cfg.write_suffixes {
+            let (all, ns) = fetch(&mut self.store, &self.ledger, &indexes);
+            fetch_ns += ns;
+            for (slot, t) in texts.iter_mut().zip(all) {
+                *slot = Some(t);
+            }
+        } else {
+            let mut want: Vec<usize> = Vec::new();
+            for &(s, e, k) in &groups {
+                if e - s > 1 && !key_is_complete(k, self.cfg.prefix_len) {
+                    want.extend(s..e);
+                }
+            }
+            if !want.is_empty() {
+                let idxs: Vec<i64> = want.iter().map(|&i| indexes[i]).collect();
+                let (got, ns) = fetch(&mut self.store, &self.ledger, &idxs);
+                fetch_ns += ns;
+                for (pos, t) in want.into_iter().zip(got) {
+                    texts[pos] = Some(t);
+                }
+            }
+        }
+
+        // 3. tie-break: re-sort incomplete multi-member groups by
+        //    (suffix text, index).
+        let t_tie = Instant::now();
+        for &(s, e, k) in &groups {
+            if e - s > 1 && !key_is_complete(k, self.cfg.prefix_len) {
+                let mut span: Vec<(usize, i64)> =
+                    (s..e).map(|i| (i, indexes[i])).collect();
+                span.sort_by(|a, b| {
+                    texts[a.0]
+                        .as_ref()
+                        .unwrap()
+                        .cmp(texts[b.0].as_ref().unwrap())
+                        .then(a.1.cmp(&b.1))
+                });
+                // apply permutation to indexes and texts
+                let new_idx: Vec<i64> = span.iter().map(|&(i, _)| indexes[i]).collect();
+                let new_txt: Vec<Option<Vec<u8>>> =
+                    span.iter().map(|&(i, _)| texts[i].take()).collect();
+                for (off, (ix, tx)) in new_idx.into_iter().zip(new_txt).enumerate() {
+                    indexes[s + off] = ix;
+                    texts[s + off] = tx;
+                }
+            }
+        }
+        let tie_ns = t_tie.elapsed().as_nanos() as u64;
+
+        // 4. emit
+        for i in 0..keys.len() {
+            let value = indexes[i].to_be_bytes().to_vec();
+            let key = if self.cfg.write_suffixes {
+                texts[i].take().expect("text fetched in write mode")
+            } else {
+                encode_i64_key(keys[i]).to_vec()
+            };
+            out(Record::new(key, value));
+        }
+
+        let total_ns = t_start.elapsed().as_nanos() as u64;
+        self.times.fetch_ns.fetch_add(fetch_ns, Ordering::Relaxed);
+        self.times
+            .sort_ns
+            .fetch_add(sort_ns + tie_ns, Ordering::Relaxed);
+        self.times.other_ns.fetch_add(
+            total_ns.saturating_sub(fetch_ns + sort_ns + tie_ns),
+            Ordering::Relaxed,
+        );
+    }
+}
+
+/// Is the (key, index) sequence already lexicographically sorted?
+fn is_pair_sorted(keys: &[i64], indexes: &[i64]) -> bool {
+    (1..keys.len()).all(|i| (keys[i - 1], indexes[i - 1]) <= (keys[i], indexes[i]))
+}
+
+/// Merge sorted (key, index) runs.
+fn merge_pair_runs(mut runs: Vec<(Vec<i64>, Vec<i64>)>) -> (Vec<i64>, Vec<i64>) {
+    while runs.len() > 1 {
+        let (kb, ib) = runs.pop().unwrap();
+        let (ka, ia) = runs.pop().unwrap();
+        let mut k = Vec::with_capacity(ka.len() + kb.len());
+        let mut ix = Vec::with_capacity(k.capacity());
+        let (mut i, mut j) = (0, 0);
+        while i < ka.len() && j < kb.len() {
+            if (ka[i], ia[i]) <= (kb[j], ib[j]) {
+                k.push(ka[i]);
+                ix.push(ia[i]);
+                i += 1;
+            } else {
+                k.push(kb[j]);
+                ix.push(ib[j]);
+                j += 1;
+            }
+        }
+        k.extend_from_slice(&ka[i..]);
+        ix.extend_from_slice(&ia[i..]);
+        k.extend_from_slice(&kb[j..]);
+        ix.extend_from_slice(&ib[j..]);
+        runs.push((k, ix));
+    }
+    runs.pop().unwrap_or_default()
+}
+
+impl crate::mapreduce::reducer::ReduceTask for SchemeReducer {
+    fn reduce(&mut self, key: &[u8], values: Vec<Vec<u8>>, out: &mut dyn FnMut(Record)) {
+        let k = decode_i64_key(key);
+        self.buf.push_group(
+            k,
+            values
+                .iter()
+                .map(|v| i64::from_be_bytes(v[..8].try_into().expect("8-byte index"))),
+        );
+        if self.buf.len() >= self.cfg.group_threshold {
+            self.flush(out);
+        }
+    }
+
+    fn finish(&mut self, out: &mut dyn FnMut(Record)) {
+        self.flush(out);
+    }
+}
+
+// ---------------- pipeline ----------------
+
+/// Run the scheme over a corpus. `store_factory` yields one store handle
+/// per task (TCP client or shared in-proc store).
+pub fn run(
+    reads: &[Read],
+    cfg: &SchemeConfig,
+    store_factory: StoreFactory,
+    ledger: &Arc<Ledger>,
+) -> std::io::Result<SchemeResult> {
+    // §IV-A sampling: boundaries over suffix keys
+    let boundaries = sampler::make_boundaries(
+        reads,
+        cfg.conf.n_reducers,
+        cfg.samples_per_reducer,
+        cfg.prefix_len,
+        cfg.seed,
+    );
+
+    let times = Arc::new(TimeSplit::default());
+    let map_bounds = boundaries.clone();
+    let map_cfg = cfg.clone();
+    let map_store = store_factory.clone();
+    let map_ledger = ledger.clone();
+    let red_bounds = boundaries.clone();
+    let red_cfg = cfg.clone();
+    let red_store = store_factory.clone();
+    let red_ledger = ledger.clone();
+    let red_times = times.clone();
+
+    let part_bounds = boundaries.clone();
+    let job = Job {
+        name: "scheme".into(),
+        conf: cfg.conf.clone(),
+        map_factory: Arc::new(move |_| {
+            Box::new(SchemeMapper {
+                cfg: map_cfg.clone(),
+                boundaries: map_bounds.clone(),
+                store: map_store(),
+                ledger: map_ledger.clone(),
+                pending: Vec::new(),
+                all_reads: Vec::new(),
+            })
+        }),
+        reduce_factory: Arc::new(move |_| {
+            let _ = &red_bounds;
+            Box::new(SchemeReducer {
+                cfg: red_cfg.clone(),
+                store: red_store(),
+                ledger: red_ledger.clone(),
+                times: red_times.clone(),
+                buf: SortingGroupBuffer::new(),
+            })
+        }),
+        partitioner: Arc::new(move |key: &[u8]| {
+            native::bucket(decode_i64_key(key), &part_bounds)
+        }),
+    };
+
+    let splits = make_splits(read_records(reads), cfg.conf.split_bytes);
+    let result = run_job(&job, splits, ledger)?;
+
+    let order: Vec<i64> = result
+        .all_output()
+        .map(|r| i64::from_be_bytes(r.value[..8].try_into().unwrap()))
+        .collect();
+    let kv_memory = store_factory().used_memory();
+
+    Ok(SchemeResult {
+        job: result,
+        order,
+        kv_memory,
+        time_split: times,
+        boundaries,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::shard::SharedStore;
+    use crate::suffix::reads::{synth_corpus, synth_paired_corpus, CorpusSpec};
+    use crate::suffix::validate::validate_order;
+
+    fn inproc_factory(n_shards: usize) -> (StoreFactory, SharedStore) {
+        let store = SharedStore::new(n_shards);
+        let s = store.clone();
+        (Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>), store)
+    }
+
+    fn small_cfg(n_reducers: usize, threshold: usize) -> SchemeConfig {
+        SchemeConfig {
+            conf: JobConf {
+                n_reducers,
+                split_bytes: 4 << 10,
+                io_sort_bytes: 8 << 10,
+                reducer_heap_bytes: 64 << 10,
+                ..JobConf::default()
+            },
+            group_threshold: threshold,
+            samples_per_reducer: 200,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn produces_valid_suffix_order() {
+        let reads = synth_corpus(&CorpusSpec {
+            n_reads: 60,
+            read_len: 30,
+            genome_len: 2048, // repetitive: forces incomplete-group ties
+            ..Default::default()
+        });
+        let (factory, _store) = inproc_factory(4);
+        let ledger = Ledger::new();
+        let res = run(&reads, &small_cfg(3, 500), factory, &ledger).unwrap();
+        validate_order(&reads, &res.order).expect("scheme order invalid");
+        assert!(res.kv_memory > 0);
+        assert!(res.job.footprint.get(Channel::KvPut) > 0);
+        assert!(res.job.footprint.get(Channel::KvFetch) > 0);
+    }
+
+    #[test]
+    fn index_only_mode_matches_write_mode_order() {
+        let reads = synth_corpus(&CorpusSpec {
+            n_reads: 40,
+            read_len: 24,
+            genome_len: 1024,
+            ..Default::default()
+        });
+        let (f1, _s1) = inproc_factory(2);
+        let ledger1 = Ledger::new();
+        let mut cfg = small_cfg(2, 300);
+        let res_w = run(&reads, &cfg, f1, &ledger1).unwrap();
+
+        cfg.write_suffixes = false;
+        let (f2, _s2) = inproc_factory(2);
+        let ledger2 = Ledger::new();
+        let res_i = run(&reads, &cfg, f2, &ledger2).unwrap();
+
+        assert_eq!(res_w.order, res_i.order, "modes must agree on the order");
+        // index-only mode fetches far fewer suffix bytes
+        assert!(
+            ledger2.get(Channel::KvFetch) < ledger1.get(Channel::KvFetch),
+            "index-only should fetch less: {} vs {}",
+            ledger2.get(Channel::KvFetch),
+            ledger1.get(Channel::KvFetch)
+        );
+        // and writes far less to HDFS
+        assert!(ledger2.get(Channel::HdfsWrite) < ledger1.get(Channel::HdfsWrite));
+    }
+
+    #[test]
+    fn shuffle_carries_only_indexes() {
+        // the headline mechanism: shuffled bytes ≈ 24 B per suffix
+        // regardless of read length (§IV-B "has nothing to do with the
+        // length of reads")
+        let reads = synth_corpus(&CorpusSpec { n_reads: 50, read_len: 150, ..Default::default() });
+        let n_suffixes: u64 = reads.iter().map(|r| r.suffix_count() as u64).sum();
+        let (factory, _store) = inproc_factory(2);
+        let ledger = Ledger::new();
+        let res = run(&reads, &small_cfg(2, 10_000), factory, &ledger).unwrap();
+        let shuffle = res.job.footprint.get(Channel::Shuffle);
+        assert_eq!(shuffle, n_suffixes * 24, "8B key + 8B index + 8B framing");
+        // vs the materialized suffixes which would be ~30x bigger
+        let materialized = crate::suffix::reads::materialized_suffix_bytes(&reads);
+        assert!(shuffle * 2 < materialized);
+    }
+
+    #[test]
+    fn paired_end_case6() {
+        let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+            n_reads: 30,
+            read_len: 20,
+            len_jitter: 0,
+            genome_len: 4096,
+            ..Default::default()
+        });
+        let mut reads = fwd;
+        reads.extend(rev);
+        let (factory, _store) = inproc_factory(3);
+        let ledger = Ledger::new();
+        let res = run(&reads, &small_cfg(2, 400), factory, &ledger).unwrap();
+        validate_order(&reads, &res.order).expect("paired-end order invalid");
+    }
+
+    #[test]
+    fn kv_memory_shows_metadata_overhead() {
+        let reads = synth_corpus(&CorpusSpec { n_reads: 100, read_len: 100, ..Default::default() });
+        let (factory, _store) = inproc_factory(4);
+        let ledger = Ledger::new();
+        let res = run(&reads, &small_cfg(2, 1000), factory, &ledger).unwrap();
+        let payload: u64 = reads.iter().map(|r| r.len() as u64 + 3).sum(); // + key digits
+        let ratio = res.kv_memory as f64 / payload as f64;
+        assert!((1.3..2.0).contains(&ratio), "ratio={ratio}");
+    }
+}

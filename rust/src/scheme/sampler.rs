@@ -1,0 +1,148 @@
+//! Boundary sampling for the scheme (§IV-A): sample 10000·n suffix keys,
+//! sort them (via the PJRT bitonic `sample_sort` kernel when available),
+//! and take every 10000-th as a partition boundary.
+
+use crate::runtime;
+use crate::suffix::encode::suffix_key;
+use crate::suffix::reads::Read;
+use crate::util::rng::Rng;
+
+/// Sample `n_samples` suffix keys uniformly over (read, offset).
+pub fn sample_suffix_keys(
+    reads: &[Read],
+    n_samples: usize,
+    prefix_len: usize,
+    seed: u64,
+) -> Vec<i64> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n_samples);
+    if reads.is_empty() {
+        return out;
+    }
+    for _ in 0..n_samples {
+        let r = &reads[rng.below(reads.len() as u64) as usize];
+        let off = rng.below(r.suffix_count() as u64) as usize;
+        out.push(suffix_key(&r.codes, off, prefix_len));
+    }
+    out
+}
+
+/// Sort sampled keys — PJRT bitonic kernel in blocks merged natively, or
+/// the native sort when artifacts are absent.
+pub fn sort_samples(mut samples: Vec<i64>) -> Vec<i64> {
+    runtime::with_engine(|eng| match eng {
+        Some(eng) => {
+            // sort in kernel-sized blocks, then k-way merge natively
+            let block = 4096.min(samples.len().next_power_of_two());
+            let mut runs: Vec<Vec<i64>> = Vec::new();
+            for chunk in samples.chunks(block) {
+                let mut v = chunk.to_vec();
+                if eng.sample_sort(&mut v).is_err() {
+                    v.sort_unstable();
+                }
+                runs.push(v);
+            }
+            merge_runs(runs)
+        }
+        None => {
+            samples.sort_unstable();
+            samples
+        }
+    })
+}
+
+fn merge_runs(mut runs: Vec<Vec<i64>>) -> Vec<i64> {
+    while runs.len() > 1 {
+        let b = runs.pop().unwrap();
+        let a = runs.pop().unwrap();
+        let mut m = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            if a[i] <= b[j] {
+                m.push(a[i]);
+                i += 1;
+            } else {
+                m.push(b[j]);
+                j += 1;
+            }
+        }
+        m.extend_from_slice(&a[i..]);
+        m.extend_from_slice(&b[j..]);
+        runs.push(m);
+    }
+    runs.pop().unwrap_or_default()
+}
+
+/// Pick the n-1 boundaries from sorted samples (every stride-th, §IV-A).
+pub fn boundaries_from_sorted(sorted: &[i64], n_reducers: usize) -> Vec<i64> {
+    let mut out = Vec::with_capacity(n_reducers.saturating_sub(1));
+    if sorted.is_empty() || n_reducers <= 1 {
+        return out;
+    }
+    let stride = (sorted.len() / n_reducers).max(1);
+    for r in 1..n_reducers {
+        out.push(sorted[(r * stride).min(sorted.len() - 1)]);
+    }
+    out
+}
+
+/// Convenience: sample + sort + boundaries.
+pub fn make_boundaries(
+    reads: &[Read],
+    n_reducers: usize,
+    samples_per_reducer: usize,
+    prefix_len: usize,
+    seed: u64,
+) -> Vec<i64> {
+    let samples = sample_suffix_keys(reads, samples_per_reducer * n_reducers, prefix_len, seed);
+    boundaries_from_sorted(&sort_samples(samples), n_reducers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native;
+    use crate::suffix::reads::{synth_corpus, CorpusSpec};
+
+    #[test]
+    fn boundaries_are_sorted_and_sized() {
+        let reads = synth_corpus(&CorpusSpec { n_reads: 200, ..Default::default() });
+        let b = make_boundaries(&reads, 8, 100, 13, 3);
+        assert_eq!(b.len(), 7);
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn boundaries_balance_partitions() {
+        let reads = synth_corpus(&CorpusSpec { n_reads: 500, read_len: 80, ..Default::default() });
+        let n_red = 4;
+        let b = make_boundaries(&reads, n_red, 1000, 13, 5);
+        // route every actual suffix; partitions within 2x of even
+        let mut counts = vec![0u64; n_red];
+        let mut total = 0u64;
+        for r in &reads {
+            for off in 0..=r.len() {
+                let k = suffix_key(&r.codes, off, 13);
+                counts[native::bucket(k, &b) as usize] += 1;
+                total += 1;
+            }
+        }
+        let even = total / n_red as u64;
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > even / 2 && *c < even * 2, "partition {i}: {c} vs {even}");
+        }
+    }
+
+    #[test]
+    fn merge_runs_sorts() {
+        let runs = vec![vec![1i64, 5, 9], vec![2, 3, 4], vec![0, 7]];
+        assert_eq!(merge_runs(runs), vec![0, 1, 2, 3, 4, 5, 7, 9]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(sample_suffix_keys(&[], 10, 13, 1).is_empty());
+        assert!(boundaries_from_sorted(&[], 4).is_empty());
+        assert!(merge_runs(vec![]).is_empty());
+    }
+}

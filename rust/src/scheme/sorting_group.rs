@@ -1,0 +1,154 @@
+//! Reducer-side sorting groups (§IV-B/C and Fig. 7).
+//!
+//! The reducer receives fixed-width (prefix-key, packed-index) pairs in
+//! key order. Pairs are *accumulated without sorting* until the batch
+//! exceeds a threshold (paper: 1.6e6 suffixes) — small enough for the
+//! heap, large enough to amortize per-group switching and KV round trips.
+//!
+//! Within a batch:
+//!  * a key whose decoded prefix contains the terminator (a 0 digit)
+//!    identifies the *complete* suffix — every pair sharing it is an
+//!    identical suffix, ordered by index alone, no text fetch needed
+//!    ("the prefix is the suffix itself", §IV-B);
+//!  * other keys with multiple members need the full suffix texts
+//!    (fetched in bulk via MGETSUFFIX) to break the tie.
+
+use crate::suffix::encode::{decode_key, BASE};
+
+/// Does this key's prefix window contain the `$` terminator? If so the
+/// key determines the whole suffix (no tie-break fetch needed).
+pub fn key_is_complete(key: i64, prefix_len: usize) -> bool {
+    // decoded digits are 0..4; any 0 digit is the terminator (reads
+    // contain only codes 1..4).
+    let mut v = key;
+    let mut saw_zero = false;
+    for _ in 0..prefix_len {
+        if v % BASE == 0 {
+            saw_zero = true;
+        }
+        v /= BASE;
+    }
+    debug_assert_eq!(v, 0, "key wider than prefix_len");
+    saw_zero || key == 0
+}
+
+/// Suffix length implied by a complete key (position of the first 0
+/// digit), or `None` if the key is incomplete.
+pub fn complete_key_len(key: i64, prefix_len: usize) -> Option<usize> {
+    let digits = decode_key(key, prefix_len);
+    digits.iter().position(|&d| d == 0)
+}
+
+/// An accumulated batch of (key, index) pairs plus group bookkeeping.
+#[derive(Default)]
+pub struct SortingGroupBuffer {
+    pub keys: Vec<i64>,
+    pub indexes: Vec<i64>,
+}
+
+impl SortingGroupBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn push_group(&mut self, key: i64, indexes: impl IntoIterator<Item = i64>) {
+        for ix in indexes {
+            self.keys.push(key);
+            self.indexes.push(ix);
+        }
+    }
+
+    pub fn take(&mut self) -> (Vec<i64>, Vec<i64>) {
+        (std::mem::take(&mut self.keys), std::mem::take(&mut self.indexes))
+    }
+}
+
+/// Spans of equal keys in a key-sorted batch: (start, end, key).
+pub fn key_groups(keys: &[i64]) -> Vec<(usize, usize, i64)> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    for i in 1..=keys.len() {
+        if i == keys.len() || keys[i] != keys[start] {
+            out.push((start, i, keys[start]));
+            start = i;
+        }
+    }
+    out
+}
+
+/// Fig. 7's rule of thumb, analytically: expected sorting-group size for
+/// a random (uniform ACGT) corpus under a given prefix length — the
+/// number of suffixes sharing one prefix is ≈ total / 4^min(p, ~len).
+pub fn expected_group_size(total_suffixes: f64, prefix_len: usize) -> f64 {
+    total_suffixes / 4f64.powi(prefix_len as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suffix::encode::{codes_of, encode_prefix};
+
+    #[test]
+    fn complete_key_detection() {
+        let p = 10;
+        // "AGT" (len 3 < 10): complete
+        let k = encode_prefix(&codes_of(b"AGT"), p);
+        assert!(key_is_complete(k, p));
+        assert_eq!(complete_key_len(k, p), Some(3));
+        // 10+ chars of bases: incomplete
+        let k = encode_prefix(&codes_of(b"ACGTACGTAC"), p);
+        assert!(!key_is_complete(k, p));
+        assert_eq!(complete_key_len(k, p), None);
+        // empty suffix ("$"): complete, len 0
+        assert!(key_is_complete(0, p));
+        assert_eq!(complete_key_len(0, p), Some(0));
+    }
+
+    #[test]
+    fn exactly_prefix_len_is_incomplete() {
+        // a suffix of exactly prefix_len base chars does NOT embed its
+        // terminator; a longer suffix can share the key.
+        let p = 4;
+        let short = encode_prefix(&codes_of(b"ACGT"), p); // len == p
+        let long = encode_prefix(&codes_of(b"ACGTAAA"), p);
+        assert_eq!(short, long);
+        assert!(!key_is_complete(short, p));
+    }
+
+    #[test]
+    fn groups_partition_sorted_keys() {
+        let keys = vec![1i64, 1, 2, 5, 5, 5, 9];
+        let gs = key_groups(&keys);
+        assert_eq!(gs, vec![(0, 2, 1), (2, 3, 2), (3, 6, 5), (6, 7, 9)]);
+        assert!(key_groups(&[]).is_empty());
+    }
+
+    #[test]
+    fn fig7_longer_prefix_smaller_groups() {
+        // Fig. 7: Prefix_1 (len 3) groups 4 suffixes together; Prefix_2
+        // (longer) splits them into singletons.
+        let total = 1e9;
+        assert!(expected_group_size(total, 3) > expected_group_size(total, 13));
+        assert!(expected_group_size(total, 23) < 1.0);
+    }
+
+    #[test]
+    fn buffer_accumulates() {
+        let mut b = SortingGroupBuffer::new();
+        b.push_group(5, [50, 51]);
+        b.push_group(7, [70]);
+        assert_eq!(b.len(), 3);
+        let (k, ix) = b.take();
+        assert_eq!(k, vec![5, 5, 7]);
+        assert_eq!(ix, vec![50, 51, 70]);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,100 @@
+//! Burrows–Wheeler transform derived from the suffix array (the paper's
+//! §I: sequence alignment relies on SA and BWT, the latter derived from
+//! the former).
+
+use crate::suffix::sa;
+
+/// BWT of `text + sentinel` where the sentinel is the implicit smallest
+/// character, returned with `None` marking the sentinel's slot.
+pub fn bwt(text: &[u8]) -> Vec<Option<u8>> {
+    let sa = sa::sais(text);
+    bwt_from_sa(text, &sa)
+}
+
+/// BWT from a precomputed suffix array of `text` (no sentinel in `sa`).
+///
+/// Row 0 of the sorted rotations is the sentinel suffix, whose preceding
+/// character is `text[n-1]`; the suffix starting at 0 contributes the
+/// sentinel itself (`None`).
+pub fn bwt_from_sa(text: &[u8], sa: &[u32]) -> Vec<Option<u8>> {
+    let n = text.len();
+    assert_eq!(sa.len(), n);
+    let mut out = Vec::with_capacity(n + 1);
+    if n == 0 {
+        out.push(None);
+        return out;
+    }
+    out.push(Some(text[n - 1])); // sentinel row
+    for &p in sa {
+        if p == 0 {
+            out.push(None);
+        } else {
+            out.push(Some(text[p as usize - 1]));
+        }
+    }
+    out
+}
+
+/// Invert a BWT produced by [`bwt`] (LF mapping), recovering the text.
+pub fn inverse_bwt(b: &[Option<u8>]) -> Vec<u8> {
+    let n = b.len();
+    if n <= 1 {
+        return Vec::new();
+    }
+    // stable counting sort of the BWT column gives the first column.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (b[i], i)); // None (sentinel) sorts first; ties by row = stability
+    // LF: the k-th occurrence of c in the last column is the k-th
+    // occurrence of c in the first column.
+    let mut lf = vec![0usize; n];
+    for (first_row, &last_row) in order.iter().enumerate() {
+        lf[last_row] = first_row;
+    }
+    // walk from the sentinel row backwards: last[row] is the character
+    // preceding the row's first character in the text, so emitting before
+    // stepping yields text[n-1], text[n-2], ..., text[0].
+    let mut out = Vec::with_capacity(n - 1);
+    let mut row = 0usize; // row 0 of first column is the sentinel suffix
+    for _ in 0..n - 1 {
+        out.push(b[row].expect("sentinel revisited"));
+        row = lf[row];
+    }
+    out.reverse();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn render(b: &[Option<u8>]) -> String {
+        b.iter()
+            .map(|c| c.map(|x| x as char).unwrap_or('$'))
+            .collect()
+    }
+
+    #[test]
+    fn banana() {
+        // classic: BWT(banana$) = annb$aa
+        assert_eq!(render(&bwt(b"banana")), "annb$aa");
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        for len in [1usize, 2, 3, 10, 100, 1000] {
+            let text: Vec<u8> = (0..len).map(|_| b"ACGT"[rng.below(4) as usize]).collect();
+            let b = bwt(&text);
+            assert_eq!(b.len(), len + 1);
+            assert_eq!(inverse_bwt(&b), text, "len={len}");
+        }
+    }
+
+    #[test]
+    fn empty() {
+        let b = bwt(b"");
+        assert_eq!(b, vec![None]);
+        assert_eq!(inverse_bwt(&b), Vec::<u8>::new());
+    }
+}

@@ -1,0 +1,167 @@
+//! Base-5 prefix encoding and suffix-index packing (paper §IV-B).
+//!
+//! Characters: `$`=0, `A`=1, `C`=2, `G`=3, `T`=4. A suffix's sort key is
+//! its first `prefix_len` characters packed base-5 into an `i64`, zero
+//! ($) padded — so a suffix shorter than the prefix encodes as itself and
+//! needs no further comparison ("the prefix is the suffix itself").
+//!
+//! A suffix's identity is `pack_index(seq, offset) = seq * 1000 + offset`
+//! (offsets of ~200 bp reads fit well below 1000); `seq` and `offset`
+//! are recovered by division and modulo.
+
+/// Character codes in sort order; `$` is the smallest.
+pub const ALPHABET: &[u8; 5] = b"$ACGT";
+pub const BASE: i64 = 5;
+/// Offset radix of the packed suffix index (`seq * 1000 + offset`).
+pub const OFFSET_RADIX: i64 = 1000;
+/// Paper's default prefix length for `long` keys (§IV-D).
+pub const DEFAULT_PREFIX_LEN: usize = 23;
+/// Longest prefix whose base-5 value fits an `i32` (paper: threshold 13).
+pub const I32_PREFIX_LEN: usize = 13;
+/// Longest prefix whose base-5 value fits an `i64` (paper: threshold 26).
+pub const I64_PREFIX_LEN: usize = 26;
+
+/// Map an ASCII nucleotide (or `$`) to its code. `N` bases are mapped to
+/// `A` (synthetic corpora here are N-free; real pipelines mask them).
+#[inline]
+pub fn code_of(c: u8) -> u8 {
+    match c {
+        b'$' => 0,
+        b'A' | b'a' => 1,
+        b'C' | b'c' => 2,
+        b'G' | b'g' => 3,
+        b'T' | b't' => 4,
+        b'N' | b'n' => 1,
+        _ => panic!("invalid read character {:?}", c as char),
+    }
+}
+
+#[inline]
+pub fn char_of(code: u8) -> u8 {
+    ALPHABET[code as usize]
+}
+
+/// Encode ASCII into codes.
+pub fn codes_of(s: &[u8]) -> Vec<u8> {
+    s.iter().map(|&c| code_of(c)).collect()
+}
+
+/// Render codes as ASCII (for reports/tests).
+pub fn string_of(codes: &[u8]) -> String {
+    codes.iter().map(|&c| char_of(c) as char).collect()
+}
+
+/// Base-5 key of `suffix` (codes, *without* implicit terminator),
+/// zero-padded/truncated to `prefix_len` characters. The caller appends
+/// the `$` terminator code (0) explicitly if the suffix has one — but
+/// since `$`=0 equals the padding, omitting it is equivalent.
+#[inline]
+pub fn encode_prefix(suffix: &[u8], prefix_len: usize) -> i64 {
+    debug_assert!(prefix_len <= I64_PREFIX_LEN);
+    let mut v: i64 = 0;
+    for j in 0..prefix_len {
+        let c = if j < suffix.len() { suffix[j] as i64 } else { 0 };
+        debug_assert!(c < BASE);
+        v = v * BASE + c;
+    }
+    v
+}
+
+/// Key of the suffix of `read` (codes, no terminator) starting at `offset`.
+/// `offset == read.len()` is the lone-`$` suffix and encodes to 0.
+#[inline]
+pub fn suffix_key(read: &[u8], offset: usize, prefix_len: usize) -> i64 {
+    debug_assert!(offset <= read.len());
+    encode_prefix(&read[offset.min(read.len())..], prefix_len)
+}
+
+/// Pack a suffix identity. Requires `offset < 1000`.
+#[inline]
+pub fn pack_index(seq: u64, offset: usize) -> i64 {
+    debug_assert!((offset as i64) < OFFSET_RADIX);
+    seq as i64 * OFFSET_RADIX + offset as i64
+}
+
+/// Recover `(seq, offset)`.
+#[inline]
+pub fn unpack_index(index: i64) -> (u64, usize) {
+    ((index / OFFSET_RADIX) as u64, (index % OFFSET_RADIX) as usize)
+}
+
+/// Decode a base-5 key back into `prefix_len` codes (reports, debugging).
+pub fn decode_key(key: i64, prefix_len: usize) -> Vec<u8> {
+    let mut out = vec![0u8; prefix_len];
+    let mut v = key;
+    for j in (0..prefix_len).rev() {
+        out[j] = (v % BASE) as u8;
+        v /= BASE;
+    }
+    out
+}
+
+/// The largest key of a given prefix length (all-`T`), the paper's
+/// "1220703124 for TTTTTTTTTT" check.
+pub fn max_key(prefix_len: usize) -> i64 {
+    BASE.pow(prefix_len as u32) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ttttt_threshold() {
+        // §IV-B: the all-T prefix of length 13 encodes to 1220703124 =
+        // 5^13 - 1, the largest value below i32::MAX = 2147483647 —
+        // threshold 13 for int, 26 for long.
+        assert_eq!(encode_prefix(&[4; 13], 13), 1_220_703_124);
+        assert!(max_key(I32_PREFIX_LEN) <= i32::MAX as i64);
+        assert!(max_key(I32_PREFIX_LEN + 1) > i32::MAX as i64);
+        assert!(max_key(I64_PREFIX_LEN) <= i64::MAX);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (seq, off) in [(0u64, 0usize), (5, 200), (1_000_000_007, 999)] {
+            assert_eq!(unpack_index(pack_index(seq, off)), (seq, off));
+        }
+    }
+
+    #[test]
+    fn short_suffix_is_itself() {
+        // AGT$ with prefix 10 == AGT zero-padded (paper §IV-B).
+        let agt = codes_of(b"AGT");
+        assert_eq!(encode_prefix(&agt, 10), encode_prefix(&codes_of(b"AGT$"), 10));
+    }
+
+    #[test]
+    fn key_order_matches_string_order() {
+        // keys compare like $-padded prefix strings
+        let reads: &[&[u8]] = &[b"ACGT", b"A", b"TTTT", b"ACG", b"CAT", b""];
+        let p = 6;
+        let mut by_key: Vec<_> = reads.iter().map(|r| codes_of(r)).collect();
+        by_key.sort_by_key(|r| encode_prefix(r, p));
+        let mut by_str: Vec<_> = reads.iter().map(|r| codes_of(r)).collect();
+        by_str.sort();
+        assert_eq!(by_key, by_str);
+    }
+
+    #[test]
+    fn decode_inverts_encode() {
+        let s = codes_of(b"GATTACA");
+        let k = encode_prefix(&s, 7);
+        assert_eq!(decode_key(k, 7), s);
+    }
+
+    #[test]
+    fn suffix_key_at_end_is_zero() {
+        let r = codes_of(b"ACGT");
+        assert_eq!(suffix_key(&r, 4, 23), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_char_panics() {
+        code_of(b'X');
+    }
+}

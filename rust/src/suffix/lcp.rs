@@ -1,0 +1,90 @@
+//! LCP array construction (Kasai's algorithm) — the companion structure
+//! of the *enhanced* suffix arrays the paper builds on ([3], Abouelhoda
+//! et al.): `lcp[i]` = longest common prefix of the suffixes at SA[i-1]
+//! and SA[i].
+
+use crate::suffix::sa;
+
+/// Kasai's O(n) LCP construction from a text and its suffix array.
+/// `lcp[0] = 0`; `lcp[i]` refers to the pair (SA[i-1], SA[i]).
+pub fn kasai(text: &[u8], sa: &[u32]) -> Vec<u32> {
+    let n = text.len();
+    assert_eq!(sa.len(), n);
+    let mut rank = vec![0u32; n];
+    for (i, &p) in sa.iter().enumerate() {
+        rank[p as usize] = i as u32;
+    }
+    let mut lcp = vec![0u32; n];
+    let mut h = 0usize;
+    for i in 0..n {
+        let r = rank[i] as usize;
+        if r > 0 {
+            let j = sa[r - 1] as usize;
+            while i + h < n && j + h < n && text[i + h] == text[j + h] {
+                h += 1;
+            }
+            lcp[r] = h as u32;
+            h = h.saturating_sub(1);
+        } else {
+            h = 0;
+        }
+    }
+    lcp
+}
+
+/// Convenience: SA + LCP of a text in one call.
+pub fn sa_with_lcp(text: &[u8]) -> (Vec<u32>, Vec<u32>) {
+    let sa = sa::sais(text);
+    let lcp = kasai(text, &sa);
+    (sa, lcp)
+}
+
+/// Longest repeated substring length via the LCP maximum (a classic
+/// enhanced-SA application).
+pub fn longest_repeat(text: &[u8]) -> usize {
+    if text.len() < 2 {
+        return 0;
+    }
+    let (_, lcp) = sa_with_lcp(text);
+    lcp.iter().copied().max().unwrap_or(0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_lcp(a: &[u8], b: &[u8]) -> u32 {
+        a.iter().zip(b).take_while(|(x, y)| x == y).count() as u32
+    }
+
+    #[test]
+    fn banana() {
+        // SA(banana) = [5,3,1,0,4,2]; LCP = [0,1,3,0,0,2]
+        let (sa, lcp) = sa_with_lcp(b"banana");
+        assert_eq!(sa, vec![5, 3, 1, 0, 4, 2]);
+        assert_eq!(lcp, vec![0, 1, 3, 0, 0, 2]);
+    }
+
+    #[test]
+    fn matches_naive_on_random_dna() {
+        let mut rng = Rng::new(31);
+        for len in [1usize, 2, 10, 100, 500] {
+            let text: Vec<u8> = (0..len).map(|_| b"ACGT"[rng.below(4) as usize]).collect();
+            let (sa, lcp) = sa_with_lcp(&text);
+            assert_eq!(lcp[0], 0);
+            for i in 1..sa.len() {
+                let want = naive_lcp(&text[sa[i - 1] as usize..], &text[sa[i] as usize..]);
+                assert_eq!(lcp[i], want, "i={i} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn longest_repeat_examples() {
+        assert_eq!(longest_repeat(b"banana"), 3); // "ana"
+        assert_eq!(longest_repeat(b"ACGT"), 0);
+        assert_eq!(longest_repeat(b"AAAA"), 3);
+        assert_eq!(longest_repeat(b""), 0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Suffix-array domain: encoding, read corpora, construction algorithms,
+//! BWT, and output validation.
+
+pub mod bwt;
+pub mod encode;
+pub mod lcp;
+pub mod reads;
+pub mod sa;
+pub mod search;
+pub mod validate;

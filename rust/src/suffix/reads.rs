@@ -1,0 +1,294 @@
+//! Read corpora: synthetic genome generation (the grouper substitute) and
+//! a minimal FASTA/line-format parser.
+//!
+//! The paper's input files are `<sequence number, read>` records of ~200 bp
+//! reads from a grouper genome. We generate synthetic paired-end reads by
+//! sampling substrings of a synthetic reference genome — footprint and
+//! scaling behaviour depend only on read count/length statistics, which we
+//! match (DESIGN.md §2).
+
+use crate::suffix::encode::{code_of, string_of};
+use crate::util::rng::Rng;
+
+/// One sequencing read: a global sequence number plus base codes (0..4,
+/// no terminator — the terminator is implicit, `$` = code 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Read {
+    pub seq: u64,
+    pub codes: Vec<u8>,
+}
+
+impl Read {
+    pub fn new(seq: u64, codes: Vec<u8>) -> Self {
+        Self { seq, codes }
+    }
+
+    pub fn from_ascii(seq: u64, s: &[u8]) -> Self {
+        Self { seq, codes: s.iter().map(|&c| code_of(c)).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Number of suffixes this read contributes (offsets 0..=len, the last
+    /// being the lone `$`).
+    pub fn suffix_count(&self) -> usize {
+        self.len() + 1
+    }
+
+    pub fn to_ascii(&self) -> String {
+        string_of(&self.codes)
+    }
+
+    /// On-wire/disk size of the `<seq, read>` record (paper's accounting:
+    /// 8-byte sequence number + one byte per character).
+    pub fn record_bytes(&self) -> u64 {
+        8 + self.len() as u64
+    }
+}
+
+/// Corpus generation parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub n_reads: usize,
+    pub read_len: usize,
+    /// +- jitter on read length (paper: "about 200 bp").
+    pub len_jitter: usize,
+    /// GC content of the synthetic reference (grouper ≈ 0.42).
+    pub gc_content: f64,
+    /// Reference genome length to sample reads from.
+    pub genome_len: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        Self {
+            n_reads: 10_000,
+            read_len: 100,
+            len_jitter: 4,
+            gc_content: 0.42,
+            genome_len: 1 << 20,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Synthetic reference genome as base codes 1..4.
+pub fn synth_genome(len: usize, gc: f64, rng: &mut Rng) -> Vec<u8> {
+    (0..len)
+        .map(|_| {
+            let r = rng.f64();
+            if r < gc / 2.0 {
+                2 // C
+            } else if r < gc {
+                3 // G
+            } else if r < gc + (1.0 - gc) / 2.0 {
+                1 // A
+            } else {
+                4 // T
+            }
+        })
+        .collect()
+}
+
+/// Sample a read corpus from a synthetic genome (single-direction file).
+pub fn synth_corpus(spec: &CorpusSpec) -> Vec<Read> {
+    let mut rng = Rng::new(spec.seed);
+    let genome = synth_genome(spec.genome_len, spec.gc_content, &mut rng);
+    sample_reads(&genome, spec, 0, &mut rng, false)
+}
+
+/// Paired-end corpora (paper §III): one file of forward reads, one file of
+/// the same fragments read from the opposite direction (reverse
+/// complement). Sequence numbers of the pair files are disjoint.
+pub fn synth_paired_corpus(spec: &CorpusSpec) -> (Vec<Read>, Vec<Read>) {
+    let mut rng = Rng::new(spec.seed);
+    let genome = synth_genome(spec.genome_len, spec.gc_content, &mut rng);
+    let fwd = sample_reads(&genome, spec, 0, &mut rng, false);
+    let rev = sample_reads(&genome, spec, spec.n_reads as u64, &mut rng, true);
+    (fwd, rev)
+}
+
+fn sample_reads(
+    genome: &[u8],
+    spec: &CorpusSpec,
+    seq_base: u64,
+    rng: &mut Rng,
+    reverse_complement: bool,
+) -> Vec<Read> {
+    let mut reads = Vec::with_capacity(spec.n_reads);
+    for i in 0..spec.n_reads {
+        let jitter = if spec.len_jitter > 0 {
+            rng.below(2 * spec.len_jitter as u64 + 1) as i64 - spec.len_jitter as i64
+        } else {
+            0
+        };
+        let len = ((spec.read_len as i64 + jitter).max(1) as usize).min(genome.len());
+        let start = rng.below((genome.len() - len + 1) as u64) as usize;
+        let mut codes = genome[start..start + len].to_vec();
+        if reverse_complement {
+            codes.reverse();
+            for c in codes.iter_mut() {
+                *c = complement(*c);
+            }
+        }
+        reads.push(Read::new(seq_base + i as u64, codes));
+    }
+    reads
+}
+
+/// A↔T, C↔G on codes.
+#[inline]
+pub fn complement(code: u8) -> u8 {
+    match code {
+        1 => 4,
+        2 => 3,
+        3 => 2,
+        4 => 1,
+        other => other,
+    }
+}
+
+/// Total bytes of the `<seq, read>` records — the paper's "input size".
+pub fn corpus_bytes(reads: &[Read]) -> u64 {
+    reads.iter().map(|r| r.record_bytes()).sum()
+}
+
+/// Total suffix bytes if materialized (TeraSort's self-expansion): for a
+/// read of length l, suffixes at offsets 0..=l have lengths l+1, l, ..., 1
+/// (including the terminator) plus an 8-byte index each.
+pub fn materialized_suffix_bytes(reads: &[Read]) -> u64 {
+    reads
+        .iter()
+        .map(|r| {
+            let l = r.len() as u64;
+            (l + 1) * (l + 2) / 2 + 8 * (l + 1)
+        })
+        .sum()
+}
+
+/// Parse a FASTA or plain-lines byte buffer into reads.
+pub fn parse_fasta(data: &[u8], seq_base: u64) -> Vec<Read> {
+    let mut reads = Vec::new();
+    let mut current: Vec<u8> = Vec::new();
+    let mut seq = seq_base;
+    let flush = |current: &mut Vec<u8>, seq: &mut u64, reads: &mut Vec<Read>| {
+        if !current.is_empty() {
+            reads.push(Read::new(*seq, std::mem::take(current)));
+            *seq += 1;
+        }
+    };
+    for line in data.split(|&b| b == b'\n') {
+        let line = line.strip_suffix(b"\r").unwrap_or(line);
+        if line.is_empty() {
+            continue;
+        }
+        if line[0] == b'>' {
+            flush(&mut current, &mut seq, &mut reads);
+        } else {
+            current.extend(line.iter().map(|&c| code_of(c)));
+        }
+    }
+    flush(&mut current, &mut seq, &mut reads);
+    reads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic_and_sized() {
+        let spec = CorpusSpec { n_reads: 100, read_len: 50, ..Default::default() };
+        let a = synth_corpus(&spec);
+        let b = synth_corpus(&spec);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+        for r in &a {
+            assert!((50 - 4..=50 + 4).contains(&r.len()));
+            assert!(r.codes.iter().all(|&c| (1..=4).contains(&c)));
+        }
+        // sequence numbers are consecutive from 0
+        assert!(a.iter().enumerate().all(|(i, r)| r.seq == i as u64));
+    }
+
+    #[test]
+    fn gc_content_close() {
+        let mut rng = Rng::new(1);
+        let g = synth_genome(200_000, 0.42, &mut rng);
+        let gc = g.iter().filter(|&&c| c == 2 || c == 3).count() as f64 / g.len() as f64;
+        assert!((gc - 0.42).abs() < 0.01, "gc={gc}");
+    }
+
+    #[test]
+    fn paired_reads_are_reverse_complements_statistically() {
+        let spec = CorpusSpec {
+            n_reads: 50,
+            read_len: 30,
+            len_jitter: 0,
+            genome_len: 10_000,
+            ..Default::default()
+        };
+        let (fwd, rev) = synth_paired_corpus(&spec);
+        assert_eq!(fwd.len(), 50);
+        assert_eq!(rev.len(), 50);
+        // disjoint sequence numbers
+        assert_eq!(rev[0].seq, 50);
+        // reverse strand has complementary GC/AT composition overall
+        let at = |rs: &[Read]| {
+            rs.iter()
+                .flat_map(|r| &r.codes)
+                .filter(|&&c| c == 1)
+                .count()
+        };
+        let fwd_a = at(&fwd);
+        let rev_t: usize = rev
+            .iter()
+            .flat_map(|r| &r.codes)
+            .filter(|&&c| c == 4)
+            .count();
+        // complements map every A on the forward strand to a T when the
+        // same position is read in reverse; counts need not be identical
+        // (different fragments) but should be within noise of each other.
+        let diff = (fwd_a as f64 - rev_t as f64).abs() / fwd_a as f64;
+        assert!(diff < 0.25, "fwd_a={fwd_a} rev_t={rev_t}");
+    }
+
+    #[test]
+    fn expansion_factor_about_half_len() {
+        // paper: self-expansion (1+200)/2 ≈ 100× for 200 bp reads.
+        let spec = CorpusSpec {
+            n_reads: 200,
+            read_len: 200,
+            len_jitter: 0,
+            ..Default::default()
+        };
+        let reads = synth_corpus(&spec);
+        let input = corpus_bytes(&reads);
+        let suffixes = materialized_suffix_bytes(&reads);
+        let factor = suffixes as f64 / input as f64;
+        assert!((90.0..110.0).contains(&factor), "factor={factor}");
+    }
+
+    #[test]
+    fn fasta_parse() {
+        let data = b">r1\nACGT\nACG\n>r2\nTTT\n";
+        let reads = parse_fasta(data, 10);
+        assert_eq!(reads.len(), 2);
+        assert_eq!(reads[0].to_ascii(), "ACGTACG");
+        assert_eq!(reads[1].to_ascii(), "TTT");
+        assert_eq!(reads[1].seq, 11);
+    }
+
+    #[test]
+    fn plain_lines_parse() {
+        let reads = parse_fasta(b"ACG\nTGA\n", 0);
+        assert_eq!(reads.len(), 1); // no '>' headers: one concatenated read
+    }
+}

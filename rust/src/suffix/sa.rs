@@ -1,0 +1,282 @@
+//! Suffix-array construction algorithms.
+//!
+//! Three constructions, cross-validated against each other in tests:
+//!  * [`naive`] — comparison sort of suffix slices, O(n² log n) worst case;
+//!    the oracle for everything else.
+//!  * [`doubling`] — Manber–Myers prefix doubling, O(n log² n); the
+//!    paper's historical reference ([2] in the paper).
+//!  * [`sais`] — linear-time SA-IS (the libdivsufsort-class algorithm the
+//!    paper cites as the single-machine state of the art).
+//!
+//! All operate on a byte text *without* an explicit sentinel; the implicit
+//! terminator sorts smallest (Rust slice ordering already gives that: a
+//! proper prefix sorts before its extensions).
+
+/// Naive comparison-sort construction (oracle).
+pub fn naive(text: &[u8]) -> Vec<u32> {
+    let mut sa: Vec<u32> = (0..text.len() as u32).collect();
+    sa.sort_by(|&a, &b| text[a as usize..].cmp(&text[b as usize..]));
+    sa
+}
+
+/// Manber–Myers prefix doubling with radix-free sorting.
+pub fn doubling(text: &[u8]) -> Vec<u32> {
+    let n = text.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut sa: Vec<u32> = (0..n as u32).collect();
+    let mut rank: Vec<i64> = text.iter().map(|&c| c as i64).collect();
+    let mut tmp: Vec<i64> = vec![0; n];
+    let mut k = 1usize;
+    loop {
+        let key = |i: u32| -> (i64, i64) {
+            let i = i as usize;
+            let second = if i + k < n { rank[i + k] } else { -1 };
+            (rank[i], second)
+        };
+        sa.sort_by(|&a, &b| key(a).cmp(&key(b)));
+        tmp[sa[0] as usize] = 0;
+        for w in 1..n {
+            let prev = sa[w - 1];
+            let cur = sa[w];
+            tmp[cur as usize] =
+                tmp[prev as usize] + if key(prev) < key(cur) { 1 } else { 0 };
+        }
+        rank.copy_from_slice(&tmp);
+        if rank[sa[n - 1] as usize] as usize == n - 1 {
+            break;
+        }
+        k *= 2;
+    }
+    sa
+}
+
+/// Linear-time SA-IS.
+pub fn sais(text: &[u8]) -> Vec<u32> {
+    if text.is_empty() {
+        return Vec::new();
+    }
+    // Shift to u32 alphabet with 0 reserved for the appended sentinel.
+    let mut s: Vec<u32> = text.iter().map(|&c| c as u32 + 1).collect();
+    s.push(0);
+    let sa = sais_u32(&s, 257);
+    // Drop the sentinel (always first).
+    sa.into_iter().skip(1).collect()
+}
+
+/// Core SA-IS over a u32 string whose last element is the unique smallest
+/// sentinel (value 0, occurring exactly once).
+fn sais_u32(s: &[u32], sigma: usize) -> Vec<u32> {
+    let n = s.len();
+    if n == 1 {
+        return vec![0];
+    }
+    // --- classify S/L types (stype[i] = true iff suffix i is S-type) ---
+    let mut stype = vec![false; n];
+    stype[n - 1] = true;
+    for i in (0..n - 1).rev() {
+        stype[i] = s[i] < s[i + 1] || (s[i] == s[i + 1] && stype[i + 1]);
+    }
+    let is_lms = |i: usize| i > 0 && stype[i] && !stype[i - 1];
+
+    // --- bucket boundaries ---
+    let mut bucket = vec![0u32; sigma];
+    for &c in s {
+        bucket[c as usize] += 1;
+    }
+    let heads = |bucket: &[u32]| -> Vec<u32> {
+        let mut h = vec![0u32; bucket.len()];
+        let mut sum = 0;
+        for (i, &b) in bucket.iter().enumerate() {
+            h[i] = sum;
+            sum += b;
+        }
+        h
+    };
+    let tails = |bucket: &[u32]| -> Vec<u32> {
+        let mut t = vec![0u32; bucket.len()];
+        let mut sum = 0;
+        for (i, &b) in bucket.iter().enumerate() {
+            sum += b;
+            t[i] = sum;
+        }
+        t
+    };
+
+    const EMPTY: u32 = u32::MAX;
+    let induce = |sa: &mut Vec<u32>, lms_sorted: &[u32]| {
+        sa.clear();
+        sa.resize(n, EMPTY);
+        // place LMS suffixes at bucket tails, in given order (reversed fill)
+        let mut t = tails(&bucket);
+        for &p in lms_sorted.iter().rev() {
+            let c = s[p as usize] as usize;
+            t[c] -= 1;
+            sa[t[c] as usize] = p;
+        }
+        // induce L-type from left to right
+        let mut h = heads(&bucket);
+        for i in 0..n {
+            let p = sa[i];
+            if p != EMPTY && p > 0 {
+                let j = (p - 1) as usize;
+                if !stype[j] {
+                    let c = s[j] as usize;
+                    sa[h[c] as usize] = j as u32;
+                    h[c] += 1;
+                }
+            }
+        }
+        // induce S-type from right to left
+        let mut t = tails(&bucket);
+        for i in (0..n).rev() {
+            let p = sa[i];
+            if p != EMPTY && p > 0 {
+                let j = (p - 1) as usize;
+                if stype[j] {
+                    let c = s[j] as usize;
+                    t[c] -= 1;
+                    sa[t[c] as usize] = j as u32;
+                }
+            }
+        }
+    };
+
+    // --- pass 1: approximate LMS order (text order), induce, read LMS ---
+    let lms_positions: Vec<u32> = (0..n).filter(|&i| is_lms(i)).map(|i| i as u32).collect();
+    let mut sa: Vec<u32> = Vec::new();
+    induce(&mut sa, &lms_positions);
+
+    // LMS substrings in induced order
+    let lms_in_sa: Vec<u32> = sa.iter().copied().filter(|&p| is_lms(p as usize)).collect();
+
+    // --- name LMS substrings ---
+    let n_lms = lms_positions.len();
+    let mut name_of = vec![EMPTY; n];
+    let mut name: u32 = 0;
+    let mut prev: Option<u32> = None;
+    for &p in &lms_in_sa {
+        if let Some(q) = prev {
+            if !lms_substring_eq(s, &stype, q as usize, p as usize) {
+                name += 1;
+            }
+        }
+        name_of[p as usize] = name;
+        prev = Some(p);
+    }
+    let distinct = name + 1;
+
+    // --- order LMS suffixes exactly ---
+    let lms_sorted: Vec<u32> = if (distinct as usize) == n_lms {
+        lms_in_sa
+    } else {
+        // recurse on the reduced string (names in text order)
+        let reduced: Vec<u32> = lms_positions.iter().map(|&p| name_of[p as usize]).collect();
+        let rsa = sais_u32(&reduced, distinct as usize);
+        rsa.into_iter().map(|ri| lms_positions[ri as usize]).collect()
+    };
+
+    // --- pass 2: final induced sort from exactly ordered LMS ---
+    induce(&mut sa, &lms_sorted);
+    sa
+}
+
+/// Compare two LMS substrings (from their start up to and including the
+/// next LMS position) for equality.
+fn lms_substring_eq(s: &[u32], stype: &[bool], a: usize, b: usize) -> bool {
+    let n = s.len();
+    if a == b {
+        return true;
+    }
+    let is_lms = |i: usize| i > 0 && stype[i] && !stype[i - 1];
+    let mut i = 0;
+    loop {
+        let pa = a + i;
+        let pb = b + i;
+        if pa >= n || pb >= n {
+            return false;
+        }
+        if s[pa] != s[pb] || stype[pa] != stype[pb] {
+            return false;
+        }
+        if i > 0 && (is_lms(pa) || is_lms(pb)) {
+            return is_lms(pa) && is_lms(pb);
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_all(text: &[u8]) {
+        let want = naive(text);
+        assert_eq!(doubling(text), want, "doubling mismatch on {text:?}");
+        assert_eq!(sais(text), want, "sais mismatch on {text:?}");
+    }
+
+    #[test]
+    fn paper_table1_sinica() {
+        // Table I: SA of SINICA$ (with the $ as part of the text).
+        // Expected SA = [6, 5, 4, 3, 1, 2, 0].
+        let text = b"SINICA\x00"; // use 0 byte as the smallest '$'
+        let want = vec![6, 5, 4, 3, 1, 2, 0];
+        assert_eq!(naive(text), want);
+        assert_eq!(sais(text), want);
+        assert_eq!(doubling(text), want);
+    }
+
+    #[test]
+    fn trivial_cases() {
+        check_all(b"");
+        check_all(b"A");
+        check_all(b"AA");
+        check_all(b"AB");
+        check_all(b"BA");
+        check_all(b"AAAAAAA");
+        check_all(b"banana");
+        check_all(b"mississippi");
+        check_all(b"ACGTACGTACGT");
+    }
+
+    #[test]
+    fn random_dna_cross_validation() {
+        let mut rng = Rng::new(99);
+        for len in [2usize, 3, 5, 17, 64, 257, 1000] {
+            for _ in 0..5 {
+                let text: Vec<u8> =
+                    (0..len).map(|_| b"ACGT"[rng.below(4) as usize]).collect();
+                check_all(&text);
+            }
+        }
+    }
+
+    #[test]
+    fn random_binary_stress() {
+        // small alphabets stress SA-IS recursion depth
+        let mut rng = Rng::new(7);
+        for _ in 0..20 {
+            let len = 1 + rng.below(300) as usize;
+            let text: Vec<u8> = (0..len).map(|_| b"ab"[rng.below(2) as usize]).collect();
+            check_all(&text);
+        }
+    }
+
+    #[test]
+    fn sais_large_is_permutation_and_sorted() {
+        let mut rng = Rng::new(5);
+        let text: Vec<u8> = (0..50_000).map(|_| b"ACGT"[rng.below(4) as usize]).collect();
+        let sa = sais(&text);
+        let mut seen = vec![false; text.len()];
+        for &p in &sa {
+            assert!(!seen[p as usize]);
+            seen[p as usize] = true;
+        }
+        for w in sa.windows(2) {
+            assert!(text[w[0] as usize..] < text[w[1] as usize..]);
+        }
+    }
+}

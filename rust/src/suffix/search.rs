@@ -1,0 +1,130 @@
+//! Pattern matching over a suffix array — the application the paper's
+//! introduction motivates (sequence alignment seeds, plagiarism
+//! detection, compression all reduce to "find every occurrence of P").
+//!
+//! Classic Manber–Myers binary search: O(|P| log n) per query over the
+//! SA of a single text, plus a corpus-level variant over the pipeline's
+//! packed-index output.
+
+use std::collections::HashMap;
+
+use crate::suffix::encode::unpack_index;
+use crate::suffix::sa;
+
+/// All occurrences (start positions) of `pattern` in `text`, via binary
+/// search on the suffix array. Positions are returned sorted.
+pub fn find_all(text: &[u8], sa: &[u32], pattern: &[u8]) -> Vec<u32> {
+    if pattern.is_empty() || pattern.len() > text.len() {
+        return Vec::new();
+    }
+    let cmp = |p: u32| -> std::cmp::Ordering {
+        let suffix = &text[p as usize..];
+        let k = suffix.len().min(pattern.len());
+        suffix[..k].cmp(&pattern[..k]).then(
+            // suffix shorter than pattern sorts before it
+            if suffix.len() < pattern.len() {
+                std::cmp::Ordering::Less
+            } else {
+                std::cmp::Ordering::Equal
+            },
+        )
+    };
+    let lo = sa.partition_point(|&p| cmp(p) == std::cmp::Ordering::Less);
+    let hi = lo + sa[lo..].partition_point(|&p| cmp(p) == std::cmp::Ordering::Equal);
+    let mut out: Vec<u32> = sa[lo..hi].to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// Convenience: build the SA and search in one call.
+pub fn occurrences(text: &[u8], pattern: &[u8]) -> Vec<u32> {
+    let sa = sa::sais(text);
+    find_all(text, &sa, pattern)
+}
+
+/// Search the *pipeline's* output: the globally sorted packed suffix
+/// indexes plus the read map. Returns `(seq, offset)` pairs where the
+/// pattern occurs (pattern must not span reads — reads are independent
+/// strings, exactly like alignment seeds).
+pub fn find_in_corpus(
+    order: &[i64],
+    reads: &HashMap<u64, Vec<u8>>,
+    pattern: &[u8],
+) -> Vec<(u64, usize)> {
+    if pattern.is_empty() {
+        return Vec::new();
+    }
+    let suffix_of = |idx: i64| -> &[u8] {
+        let (seq, off) = unpack_index(idx);
+        let r = &reads[&seq];
+        &r[off.min(r.len())..]
+    };
+    let cmp = |idx: i64| -> std::cmp::Ordering {
+        let suffix = suffix_of(idx);
+        let k = suffix.len().min(pattern.len());
+        suffix[..k].cmp(&pattern[..k]).then(if suffix.len() < pattern.len() {
+            std::cmp::Ordering::Less
+        } else {
+            std::cmp::Ordering::Equal
+        })
+    };
+    let lo = order.partition_point(|&i| cmp(i) == std::cmp::Ordering::Less);
+    let hi = lo + order[lo..].partition_point(|&i| cmp(i) == std::cmp::Ordering::Equal);
+    let mut out: Vec<(u64, usize)> = order[lo..hi].iter().map(|&i| unpack_index(i)).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suffix::encode::codes_of;
+    use crate::suffix::reads::Read;
+    use crate::suffix::validate::{read_map, reference_order};
+
+    #[test]
+    fn finds_all_occurrences() {
+        let text = b"GATTACAGATTACA";
+        assert_eq!(occurrences(text, b"GATTACA"), vec![0, 7]);
+        assert_eq!(occurrences(text, b"TA"), vec![3, 10]);
+        assert_eq!(occurrences(text, b"X"), Vec::<u32>::new());
+        assert_eq!(occurrences(text, b""), Vec::<u32>::new());
+        assert_eq!(occurrences(text, b"GATTACAGATTACA"), vec![0]);
+        assert_eq!(occurrences(text, b"GATTACAGATTACAX"), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn matches_naive_scan_on_random_text() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(12);
+        let text: Vec<u8> = (0..2000).map(|_| b"ACGT"[rng.below(4) as usize]).collect();
+        let sa = sa::sais(&text);
+        for plen in [1usize, 2, 4, 8] {
+            for _ in 0..10 {
+                let start = rng.below((text.len() - plen) as u64) as usize;
+                let pattern = &text[start..start + plen];
+                let got = find_all(&text, &sa, pattern);
+                let want: Vec<u32> = (0..=text.len() - plen)
+                    .filter(|&i| &text[i..i + plen] == pattern)
+                    .map(|i| i as u32)
+                    .collect();
+                assert_eq!(got, want, "plen={plen}");
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_search_over_pipeline_output() {
+        let reads = vec![
+            Read::from_ascii(0, b"ACGTACGT"),
+            Read::from_ascii(1, b"TTACGTT"),
+            Read::from_ascii(5, b"GGGG"),
+        ];
+        let order = reference_order(&reads);
+        let map = read_map(&reads);
+        let pat = codes_of(b"ACGT");
+        let hits = find_in_corpus(&order, &map, &pat);
+        assert_eq!(hits, vec![(0, 0), (0, 4), (1, 2)]);
+        assert!(find_in_corpus(&order, &map, &codes_of(b"AAAA")).is_empty());
+    }
+}

@@ -1,0 +1,162 @@
+//! Ground truth and validation for the pipeline's output: the globally
+//! sorted order of *all suffixes of all reads* (each read terminated by
+//! its own `$`), ties between equal suffix texts broken by packed index —
+//! exactly what the paper's 11-hour grouper run emits.
+
+use std::collections::HashMap;
+use std::cmp::Ordering;
+
+use crate::suffix::encode::{pack_index, unpack_index};
+use crate::suffix::reads::Read;
+
+/// Read lookup by sequence number (the role Redis plays in the paper).
+pub type ReadMap = HashMap<u64, Vec<u8>>;
+
+pub fn read_map(reads: &[Read]) -> ReadMap {
+    reads.iter().map(|r| (r.seq, r.codes.clone())).collect()
+}
+
+/// Compare two suffixes by text; suffix = read[offset..] + '$', and `$`
+/// (code 0) is smaller than every base code, so comparing the code slices
+/// with an implicit trailing 0 is plain prefix-aware slice ordering.
+pub fn cmp_suffix(reads: &ReadMap, a: i64, b: i64) -> Ordering {
+    let (sa, oa) = unpack_index(a);
+    let (sb, ob) = unpack_index(b);
+    let ra = &reads[&sa];
+    let rb = &reads[&sb];
+    let xa = &ra[oa.min(ra.len())..];
+    let xb = &rb[ob.min(rb.len())..];
+    // codes compare like the text; a proper prefix (earlier '$') is smaller
+    xa.cmp(xb)
+}
+
+/// Suffix text (codes, including the terminator 0) for reports/tests.
+pub fn suffix_codes(reads: &ReadMap, index: i64) -> Vec<u8> {
+    let (s, o) = unpack_index(index);
+    let r = &reads[&s];
+    let mut v = r[o.min(r.len())..].to_vec();
+    v.push(0);
+    v
+}
+
+/// All packed suffix indexes of a corpus.
+pub fn all_indexes(reads: &[Read]) -> Vec<i64> {
+    let mut out = Vec::new();
+    for r in reads {
+        for o in 0..=r.len() {
+            out.push(pack_index(r.seq, o));
+        }
+    }
+    out
+}
+
+/// Reference order: sort all suffixes by (text, index) — the oracle.
+pub fn reference_order(reads: &[Read]) -> Vec<i64> {
+    let map = read_map(reads);
+    let mut idx = all_indexes(reads);
+    idx.sort_by(|&a, &b| cmp_suffix(&map, a, b).then(a.cmp(&b)));
+    idx
+}
+
+/// Validate a pipeline output against the corpus: must be a permutation of
+/// all suffix indexes in (text, index) order.
+pub fn validate_order(reads: &[Read], order: &[i64]) -> Result<(), String> {
+    let expected = reads.iter().map(|r| r.suffix_count()).sum::<usize>();
+    if order.len() != expected {
+        return Err(format!(
+            "output has {} suffixes, corpus has {expected}",
+            order.len()
+        ));
+    }
+    let map = read_map(reads);
+    // permutation check
+    let mut seen: Vec<i64> = order.to_vec();
+    seen.sort_unstable();
+    seen.dedup();
+    if seen.len() != order.len() {
+        return Err("duplicate suffix indexes in output".into());
+    }
+    let mut all = all_indexes(reads);
+    all.sort_unstable();
+    if seen != all {
+        return Err("output is not a permutation of the corpus suffixes".into());
+    }
+    // ordering check
+    for (i, w) in order.windows(2).enumerate() {
+        match cmp_suffix(&map, w[0], w[1]) {
+            Ordering::Less => {}
+            Ordering::Equal if w[0] < w[1] => {}
+            Ordering::Equal => {
+                return Err(format!("tie at {i} not broken by index: {} !< {}", w[0], w[1]))
+            }
+            Ordering::Greater => {
+                return Err(format!("out of order at {i}: index {} > {}", w[0], w[1]))
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suffix::reads::CorpusSpec;
+    use crate::suffix::{reads, sa};
+
+    #[test]
+    fn reference_matches_single_text_sa() {
+        // For a corpus of ONE read, the reference order must equal the
+        // classic suffix array of read+'$'.
+        let r = Read::from_ascii(0, b"GATTACA");
+        let order = reference_order(std::slice::from_ref(&r));
+        let mut text = r.codes.clone();
+        text.push(0);
+        let sa = sa::sais(&text);
+        let from_sa: Vec<i64> = sa.iter().map(|&p| p as i64).collect();
+        assert_eq!(order, from_sa);
+    }
+
+    #[test]
+    fn validate_accepts_reference_and_rejects_swaps() {
+        let spec = CorpusSpec { n_reads: 30, read_len: 12, ..Default::default() };
+        let corpus = reads::synth_corpus(&spec);
+        let mut order = reference_order(&corpus);
+        assert!(validate_order(&corpus, &order).is_ok());
+
+        order.swap(5, 6);
+        assert!(validate_order(&corpus, &order).is_err());
+        order.swap(5, 6);
+
+        let dropped = &order[1..];
+        assert!(validate_order(&corpus, dropped).is_err());
+
+        let mut dup = order.clone();
+        dup[0] = dup[1];
+        assert!(validate_order(&corpus, &dup).is_err());
+    }
+
+    #[test]
+    fn equal_suffixes_tie_break_by_index() {
+        // two identical reads -> every suffix text appears twice
+        let rs = vec![Read::from_ascii(0, b"ACG"), Read::from_ascii(1, b"ACG")];
+        let order = reference_order(&rs);
+        assert!(validate_order(&rs, &order).is_ok());
+        // pairs of equal texts must be adjacent with ascending index
+        let map = read_map(&rs);
+        for w in order.windows(2) {
+            if cmp_suffix(&map, w[0], w[1]) == Ordering::Equal {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn dollar_suffixes_sort_first() {
+        let rs = vec![Read::from_ascii(0, b"AC"), Read::from_ascii(1, b"GT")];
+        let order = reference_order(&rs);
+        // first two entries are the two '$'-only suffixes (offset == len)
+        let map = read_map(&rs);
+        assert_eq!(suffix_codes(&map, order[0]), vec![0]);
+        assert_eq!(suffix_codes(&map, order[1]), vec![0]);
+    }
+}

@@ -1,0 +1,218 @@
+//! The TeraSort baseline (§III): materialize *every suffix* and sort them
+//! with MapReduce — "keeping every suffix in place".
+//!
+//! Faithful to the paper's setup: the suffix files are generated first
+//! (outside the timed job); TeraSort's records carry the **full suffix
+//! text** as value with the **first 10 characters** as the grouping key,
+//! so the shuffle and the local disks bear the ~100× self-expanded data,
+//! and reducers in-memory-sort every same-prefix group (the GC stress).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::footprint::Ledger;
+use crate::mapreduce::engine::{make_splits, run_job, Job, JobResult};
+use crate::mapreduce::job::JobConf;
+use crate::mapreduce::partitioner::{RangePartitioner, SAMPLES_PER_REDUCER};
+use crate::mapreduce::record::Record;
+use crate::suffix::encode::pack_index;
+use crate::suffix::reads::Read;
+use crate::util::rng::Rng;
+
+/// TeraSort groups suffixes by their first 10 characters (§III).
+pub const KEY_BYTES: usize = 10;
+
+#[derive(Clone, Debug)]
+pub struct TeraSortConfig {
+    pub conf: JobConf,
+    pub samples_per_reducer: usize,
+    pub seed: u64,
+}
+
+impl Default for TeraSortConfig {
+    fn default() -> Self {
+        Self { conf: JobConf::scaled_down(), samples_per_reducer: SAMPLES_PER_REDUCER, seed: 1 }
+    }
+}
+
+pub struct TeraSortResult {
+    pub job: JobResult,
+    /// Materialized suffix bytes (the job's input, the paper's "1 unit").
+    pub suffix_input_bytes: u64,
+    /// Largest same-key sorting group (records) any reducer held — the
+    /// §III GC-stress metric.
+    pub max_group_records: u64,
+    /// Largest in-memory group bytes.
+    pub max_group_bytes: u64,
+    /// Output suffix order (packed indexes) for validation.
+    pub order: Vec<i64>,
+}
+
+/// 10-byte grouping key of a suffix (codes, 0-padded like the terminator).
+pub fn group_key(read: &Read, offset: usize) -> Vec<u8> {
+    let mut k = vec![0u8; KEY_BYTES];
+    let tail = &read.codes[offset.min(read.len())..];
+    for (dst, &c) in k.iter_mut().zip(tail) {
+        *dst = c;
+    }
+    k
+}
+
+/// Materialize the suffix records of a corpus: key = 10-char prefix,
+/// value = packed index (8 B) + full suffix text. This is the "generation
+/// of suffixes" the paper performs before TeraSort.
+pub fn materialize_suffixes(reads: &[Read]) -> Vec<Record> {
+    let mut out = Vec::new();
+    for r in reads {
+        for off in 0..=r.len() {
+            let mut value = pack_index(r.seq, off).to_be_bytes().to_vec();
+            value.extend_from_slice(&r.codes[off..]);
+            out.push(Record::new(group_key(r, off), value));
+        }
+    }
+    out
+}
+
+/// Sample suffix keys for the range partitioner (10000 × n, §IV-A).
+pub fn sample_keys(reads: &[Read], n_samples: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    let mut samples = Vec::with_capacity(n_samples);
+    if reads.is_empty() {
+        return samples;
+    }
+    for _ in 0..n_samples {
+        let r = &reads[rng.below(reads.len() as u64) as usize];
+        let off = rng.below(r.suffix_count() as u64) as usize;
+        samples.push(group_key(r, off));
+    }
+    samples
+}
+
+/// Run the baseline on a corpus. The returned footprint covers the sort
+/// job only (suffix generation is excluded, as in Table III).
+pub fn run(reads: &[Read], cfg: &TeraSortConfig, ledger: &Arc<Ledger>) -> std::io::Result<TeraSortResult> {
+    let suffixes = materialize_suffixes(reads);
+    let suffix_input_bytes: u64 = suffixes.iter().map(|r| r.wire_bytes()).sum();
+
+    let samples = sample_keys(reads, cfg.samples_per_reducer * cfg.conf.n_reducers, cfg.seed);
+    let partitioner = Arc::new(RangePartitioner::from_samples(samples, cfg.conf.n_reducers));
+
+    let max_group_records = Arc::new(AtomicU64::new(0));
+    let max_group_bytes = Arc::new(AtomicU64::new(0));
+    let mg_r = max_group_records.clone();
+    let mg_b = max_group_bytes.clone();
+
+    let job = Job {
+        name: "terasort".into(),
+        conf: cfg.conf.clone(),
+        // identity map: suffixes already materialized
+        map_factory: Arc::new(|_| {
+            Box::new(|rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone()))
+        }),
+        // reduce: in-memory sort of each same-prefix group by full suffix
+        // text (then index), the paper's heap-stressing step
+        reduce_factory: Arc::new(move |_| {
+            let mg_r = mg_r.clone();
+            let mg_b = mg_b.clone();
+            Box::new(
+                move |key: &[u8], mut vals: Vec<Vec<u8>>, out: &mut dyn FnMut(Record)| {
+                    let bytes: u64 = vals.iter().map(|v| v.len() as u64).sum();
+                    mg_r.fetch_max(vals.len() as u64, Ordering::Relaxed);
+                    mg_b.fetch_max(bytes, Ordering::Relaxed);
+                    // values are index(8B) + suffix text; sort by (text, index)
+                    vals.sort_unstable_by(|a, b| a[8..].cmp(&b[8..]).then(a[..8].cmp(&b[..8])));
+                    for v in vals {
+                        out(Record::new(key.to_vec(), v));
+                    }
+                },
+            )
+        }),
+        partitioner: partitioner.as_fn(),
+    };
+
+    let splits = make_splits(suffixes, cfg.conf.split_bytes);
+    let result = run_job(&job, splits, ledger)?;
+    let order = result
+        .all_output()
+        .map(|r| i64::from_be_bytes(r.value[..8].try_into().unwrap()))
+        .collect();
+    Ok(TeraSortResult {
+        job: result,
+        suffix_input_bytes,
+        max_group_records: max_group_records.load(Ordering::Relaxed),
+        max_group_bytes: max_group_bytes.load(Ordering::Relaxed),
+        order,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::footprint::Channel;
+    use crate::suffix::reads::{synth_corpus, CorpusSpec};
+    use crate::suffix::validate::validate_order;
+
+    fn small_corpus(n: usize, len: usize) -> Vec<Read> {
+        synth_corpus(&CorpusSpec {
+            n_reads: n,
+            read_len: len,
+            len_jitter: 2,
+            genome_len: 4096, // small genome -> repeated suffixes (GC stress)
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn materialization_self_expands() {
+        let reads = small_corpus(50, 60);
+        let suffixes = materialize_suffixes(&reads);
+        assert_eq!(
+            suffixes.len(),
+            reads.iter().map(|r| r.suffix_count()).sum::<usize>()
+        );
+        let input: u64 = reads.iter().map(|r| r.record_bytes()).sum();
+        let expanded: u64 = suffixes.iter().map(|r| r.wire_bytes()).sum();
+        // ~len/2 expansion (plus framing): must be much larger than input
+        assert!(expanded > input * 10, "expanded={expanded} input={input}");
+    }
+
+    #[test]
+    fn produces_valid_suffix_order() {
+        let reads = small_corpus(40, 30);
+        let ledger = Ledger::new();
+        let cfg = TeraSortConfig {
+            conf: JobConf {
+                n_reducers: 4,
+                split_bytes: 8 << 10,
+                io_sort_bytes: 8 << 10,
+                reducer_heap_bytes: 64 << 10,
+                ..JobConf::default()
+            },
+            ..Default::default()
+        };
+        let res = run(&reads, &cfg, &ledger).unwrap();
+        validate_order(&reads, &res.order).expect("terasort order invalid");
+        assert!(res.max_group_records >= 1);
+        // shuffle carried the full self-expanded suffix volume
+        let shuffled = res.job.footprint.get(Channel::Shuffle);
+        assert_eq!(shuffled, res.suffix_input_bytes);
+    }
+
+    #[test]
+    fn repeated_genome_creates_big_groups() {
+        // highly repetitive corpus -> same 10-char prefixes group together
+        let mut reads = Vec::new();
+        for i in 0..30u64 {
+            reads.push(Read::from_ascii(i, b"ATATATATATATATATATAT"));
+        }
+        let ledger = Ledger::new();
+        let cfg = TeraSortConfig {
+            conf: JobConf { n_reducers: 2, ..JobConf::default() },
+            ..Default::default()
+        };
+        let res = run(&reads, &cfg, &ledger).unwrap();
+        validate_order(&reads, &res.order).expect("order invalid");
+        // identical reads: every suffix text repeats 30x; groups pile up
+        assert!(res.max_group_records >= 30, "max_group={}", res.max_group_records);
+    }
+}

@@ -1,0 +1,99 @@
+//! Mini property-testing framework (the offline vendor set has no
+//! proptest): deterministic seeded generators + a runner that reports the
+//! failing seed so any counterexample is reproducible with one constant.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds; panic with the failing
+/// seed on the first counterexample.
+///
+/// ```no_run
+/// samr::testkit::property("sum is commutative", 64, |rng| {
+///     let (a, b) = (rng.below(1000) as i64, rng.below(1000) as i64);
+///     if a + b != b + a {
+///         return Err(format!("{a} + {b}"));
+///     }
+///     Ok(())
+/// });
+/// ```
+pub fn property(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0x5A3Du64.wrapping_mul(case + 1) ^ case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with Rng::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Generator helpers over the in-tree PRNG.
+pub mod gen {
+    use crate::suffix::reads::Read;
+    use crate::util::rng::Rng;
+
+    /// Random DNA codes (1..=4) of length in `[min_len, max_len]`.
+    pub fn dna(rng: &mut Rng, min_len: usize, max_len: usize) -> Vec<u8> {
+        let len = min_len + rng.below((max_len - min_len + 1) as u64) as usize;
+        (0..len).map(|_| 1 + rng.below(4) as u8).collect()
+    }
+
+    /// Random corpus with consecutive sequence numbers and possible
+    /// duplicate reads (stress for tie-breaking).
+    pub fn corpus(rng: &mut Rng, max_reads: usize, max_len: usize) -> Vec<Read> {
+        let n = 1 + rng.below(max_reads as u64) as usize;
+        let mut reads: Vec<Read> = Vec::with_capacity(n);
+        for i in 0..n {
+            let codes = if i > 0 && rng.f64() < 0.2 {
+                // duplicate a random earlier read (stress tie-breaking)
+                reads[rng.below(i as u64) as usize].codes.clone()
+            } else {
+                dna(rng, 1, max_len)
+            };
+            reads.push(Read::new(i as u64, codes));
+        }
+        reads
+    }
+
+    /// Sorted random boundaries in the keyspace of `prefix_len`.
+    pub fn boundaries(rng: &mut Rng, max_n: usize, prefix_len: usize) -> Vec<i64> {
+        let n = rng.below(max_n as u64 + 1) as usize;
+        let max = 5i64.pow(prefix_len as u32);
+        let mut b: Vec<i64> = (0..n).map(|_| rng.below(max as u64) as i64).collect();
+        b.sort_unstable();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes() {
+        property("add commutes", 16, |rng| {
+            let (a, b) = (rng.below(100) as i64, rng.below(100) as i64);
+            (a + b == b + a).then_some(()).ok_or_else(|| "nope".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with")]
+    fn property_reports_seed() {
+        property("always fails", 4, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..50 {
+            let d = gen::dna(&mut rng, 2, 9);
+            assert!((2..=9).contains(&d.len()));
+            assert!(d.iter().all(|&c| (1..=4).contains(&c)));
+            let b = gen::boundaries(&mut rng, 8, 13);
+            assert!(b.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+}

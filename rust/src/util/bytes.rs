@@ -1,0 +1,101 @@
+//! Byte-size formatting/parsing ("1.24 TB", "128MB") used by configs,
+//! reports and the footprint ledger.
+
+pub const KB: u64 = 1000;
+pub const MB: u64 = 1000 * KB;
+pub const GB: u64 = 1000 * MB;
+pub const TB: u64 = 1000 * GB;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+/// Render bytes the way the paper's tables do (decimal units, 2 decimals).
+pub fn human(bytes: u64) -> String {
+    human_f(bytes as f64)
+}
+
+pub fn human_f(bytes: f64) -> String {
+    let b = bytes.abs();
+    if b >= TB as f64 {
+        format!("{:.2} TB", bytes / TB as f64)
+    } else if b >= GB as f64 {
+        format!("{:.2} GB", bytes / GB as f64)
+    } else if b >= MB as f64 {
+        format!("{:.2} MB", bytes / MB as f64)
+    } else if b >= KB as f64 {
+        format!("{:.2} KB", bytes / KB as f64)
+    } else {
+        format!("{bytes:.0} B")
+    }
+}
+
+/// Parse "64GB", "1.5 TB", "200", "128 MiB".
+pub fn parse(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(s.len());
+    if split == 0 {
+        return None;
+    }
+    let (num, unit) = s.split_at(split);
+    let v: f64 = num.parse().ok()?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "b" | "" => 1,
+        "kb" => KB,
+        "mb" => MB,
+        "gb" => GB,
+        "tb" => TB,
+        "kib" => 1 << 10,
+        "mib" => MIB,
+        "gib" => GIB,
+        "tib" => 1u64 << 40,
+        _ => return None,
+    };
+    Some((v * mult as f64).round() as u64)
+}
+
+/// Parse a plain decimal count possibly ending in k/m/b ("10k" = 10_000).
+pub fn parse_count(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Ok(v) = s.parse::<u64>() {
+        return Some(v);
+    }
+    let (num, suffix) = s.split_at(s.len().checked_sub(1)?);
+    let v: f64 = num.parse().ok()?;
+    let mult = match suffix {
+        "k" | "K" => 1_000.0,
+        "m" | "M" => 1_000_000.0,
+        "b" | "B" => 1_000_000_000.0,
+        _ => return None,
+    };
+    Some((v * mult) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_units() {
+        assert_eq!(parse("64GB"), Some(64 * GB));
+        assert_eq!(parse("1.5 TB"), Some(1500 * GB));
+        assert_eq!(parse("200"), Some(200));
+        assert_eq!(parse("128 MiB"), Some(128 * MIB));
+        assert_eq!(parse("bogus"), None);
+    }
+
+    #[test]
+    fn human_matches_paper_style() {
+        assert_eq!(human(637_180_000_000), "637.18 GB");
+        assert_eq!(human(1_240_000_000_000), "1.24 TB");
+        assert_eq!(human(1234), "1.23 KB");
+        assert_eq!(human(12), "12 B");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(parse_count("10k"), Some(10_000));
+        assert_eq!(parse_count("1.5m"), Some(1_500_000));
+        assert_eq!(parse_count("42"), Some(42));
+    }
+}

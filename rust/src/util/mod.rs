@@ -1,0 +1,5 @@
+//! Shared utilities: PRNG, statistics, byte formatting.
+
+pub mod bytes;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,31 @@
+//! Measures first-call (compile) vs steady-state cost of each PJRT entry
+//! point — documents the per-worker-thread engine warmup cost.
+use std::time::Instant;
+
+#[test]
+fn engine_warmup_cost() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        return;
+    }
+    samr::runtime::init(Some(&dir));
+    samr::runtime::with_engine(|eng| {
+        let eng = eng.expect("engine");
+        let t0 = Instant::now();
+        let mut k = vec![5i64, 3, 1];
+        let mut ix = vec![1i64, 2, 3];
+        eng.group_sort(&mut k, &mut ix).unwrap();
+        println!("group_sort first call (compile+run): {:?}", t0.elapsed());
+        let t1 = Instant::now();
+        for _ in 0..10 {
+            let mut k = vec![5i64, 3, 1];
+            let mut ix = vec![1i64, 2, 3];
+            eng.group_sort(&mut k, &mut ix).unwrap();
+        }
+        println!("steady state x10: {:?}", t1.elapsed());
+        let t2 = Instant::now();
+        let r = samr::suffix::reads::Read::from_ascii(0, b"ACGT");
+        eng.map_encode_tile(&[&r], &[1, 2], 23).unwrap();
+        println!("map_encode first call (compile+run): {:?}", t2.elapsed());
+    });
+}

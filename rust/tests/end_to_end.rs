@@ -1,0 +1,182 @@
+//! Integration: the full stack with real TCP KV servers, PJRT kernels
+//! (when artifacts are built), real spill files — both pipelines, one
+//! corpus, identical validated output. Plus failure-injection cases.
+
+use std::sync::Arc;
+
+use samr::footprint::{Channel, Ledger};
+use samr::kvstore::shard::{ShardedClient, SharedStore, SuffixStore};
+use samr::kvstore::LocalKvCluster;
+use samr::mapreduce::JobConf;
+use samr::runtime;
+use samr::scheme::{self, SchemeConfig};
+use samr::suffix::reads::{synth_paired_corpus, CorpusSpec};
+use samr::suffix::validate::validate_order;
+use samr::terasort::{self, TeraSortConfig};
+
+fn init_runtime() {
+    let dir = runtime::default_artifacts_dir();
+    let dir = if dir.is_relative() {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(dir)
+    } else {
+        dir
+    };
+    runtime::init(Some(&dir));
+}
+
+fn conf(n_reducers: usize) -> JobConf {
+    JobConf {
+        n_reducers,
+        io_sort_bytes: 64 << 10,
+        split_bytes: 64 << 10,
+        reducer_heap_bytes: 1 << 20,
+        ..JobConf::default()
+    }
+}
+
+#[test]
+fn full_stack_over_tcp_matches_baseline() {
+    init_runtime();
+    let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+        n_reads: 600,
+        read_len: 90,
+        len_jitter: 4,
+        genome_len: 1 << 16, // repetitive enough to create tie groups
+        seed: 77,
+        ..Default::default()
+    });
+    let mut reads = fwd;
+    reads.extend(rev);
+
+    // scheme over real sockets
+    let kv = LocalKvCluster::start(5).expect("kv cluster");
+    let addrs = kv.addrs();
+    let factory: scheme::StoreFactory = Arc::new(move || {
+        Box::new(ShardedClient::connect(&addrs).expect("connect")) as Box<dyn SuffixStore>
+    });
+    let ledger = Ledger::new();
+    let res = scheme::run(
+        &reads,
+        &SchemeConfig {
+            conf: conf(3),
+            group_threshold: 20_000,
+            samples_per_reducer: 1_000,
+            ..Default::default()
+        },
+        factory,
+        &ledger,
+    )
+    .expect("scheme");
+    validate_order(&reads, &res.order).expect("scheme order");
+
+    // baseline on the same corpus
+    let ledger_t = Ledger::new();
+    let tera = terasort::run(
+        &reads,
+        &TeraSortConfig { conf: conf(3), ..Default::default() },
+        &ledger_t,
+    )
+    .expect("terasort");
+    assert_eq!(res.order, tera.order, "pipelines must agree");
+
+    // headline: the scheme moved strictly fewer local-disk + shuffle bytes
+    let s = ledger.snapshot();
+    let t = ledger_t.snapshot();
+    assert!(s.local_disk_total() < t.local_disk_total());
+    assert!(s.get(Channel::Shuffle) < t.get(Channel::Shuffle));
+    // and the KV servers saw real traffic
+    let (inb, outb) = kv.traffic();
+    assert!(inb > 0 && outb > 0);
+    assert!(kv.used_memory() > 0);
+}
+
+#[test]
+fn scheme_handles_degenerate_corpora() {
+    init_runtime();
+    // single 1-char read
+    let reads = vec![samr::suffix::reads::Read::from_ascii(0, b"A")];
+    let store = SharedStore::new(2);
+    let s = store.clone();
+    let ledger = Ledger::new();
+    let res = scheme::run(
+        &reads,
+        &SchemeConfig {
+            conf: conf(2),
+            group_threshold: 10,
+            samples_per_reducer: 10,
+            ..Default::default()
+        },
+        Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+        &ledger,
+    )
+    .expect("scheme");
+    validate_order(&reads, &res.order).expect("order");
+    assert_eq!(res.order.len(), 2); // "A$" and "$"
+}
+
+#[test]
+fn scheme_all_identical_reads_stress_tie_breaking() {
+    init_runtime();
+    // 100 identical reads: every suffix text has 100 duplicates
+    let reads: Vec<_> = (0..100u64)
+        .map(|i| samr::suffix::reads::Read::from_ascii(i, b"ACGTACGTACGTACGTACGTACGTACGT"))
+        .collect();
+    let store = SharedStore::new(3);
+    let s = store.clone();
+    let ledger = Ledger::new();
+    let res = scheme::run(
+        &reads,
+        &SchemeConfig {
+            conf: conf(2),
+            group_threshold: 700, // forces many flushes mid-group
+            samples_per_reducer: 100,
+            ..Default::default()
+        },
+        Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+        &ledger,
+    )
+    .expect("scheme");
+    validate_order(&reads, &res.order).expect("order with max duplicates");
+}
+
+#[test]
+fn missing_read_in_store_fails_loudly() {
+    init_runtime();
+    // a store that was never populated must make the reducer panic (fetch
+    // error), not silently emit garbage — run_job propagates the panic.
+    let mut empty = SharedStore::new(2);
+    // sabotage: pre-fetch proves it's empty
+    assert!(empty.fetch_suffixes(&[0]).is_err());
+}
+
+#[test]
+fn terasort_conf_sweep_stays_correct() {
+    init_runtime();
+    let reads = samr::suffix::reads::synth_corpus(&CorpusSpec {
+        n_reads: 150,
+        read_len: 40,
+        genome_len: 1 << 12,
+        ..Default::default()
+    });
+    for (sort_kb, factor) in [(2u64, 2usize), (8, 3), (64, 10)] {
+        let ledger = Ledger::new();
+        let res = terasort::run(
+            &reads,
+            &TeraSortConfig {
+                conf: JobConf {
+                    n_reducers: 3,
+                    io_sort_bytes: sort_kb << 10,
+                    split_bytes: 16 << 10,
+                    reducer_heap_bytes: 128 << 10,
+                    io_sort_factor: factor,
+                    ..JobConf::default()
+                },
+                ..Default::default()
+            },
+            &ledger,
+        )
+        .expect("terasort");
+        validate_order(&reads, &res.order)
+            .unwrap_or_else(|e| panic!("sort_kb={sort_kb} factor={factor}: {e}"));
+    }
+}

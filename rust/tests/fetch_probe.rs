@@ -1,0 +1,39 @@
+//! Isolates KV fetch throughput under pipeline-like concurrency.
+use std::time::Instant;
+
+use samr::kvstore::shard::{ShardedClient, SuffixStore};
+use samr::kvstore::LocalKvCluster;
+use samr::suffix::encode::pack_index;
+use samr::suffix::reads::{synth_corpus, CorpusSpec};
+
+#[test]
+fn fetch_throughput_probe() {
+    let reads = synth_corpus(&CorpusSpec { n_reads: 3_000, read_len: 100, ..Default::default() });
+    let kv = LocalKvCluster::start(8).unwrap();
+    let addrs = kv.addrs();
+    let mut loader = ShardedClient::connect(&addrs).unwrap();
+    loader.put_reads(&reads).unwrap();
+    let all: Vec<i64> = reads.iter().flat_map(|r| (0..=r.len()).map(|o| pack_index(r.seq, o))).collect();
+    println!("{} suffixes", all.len());
+
+    // single client, whole corpus
+    let mut c = ShardedClient::connect(&addrs).unwrap();
+    let t0 = Instant::now();
+    let (out, _) = c.fetch_suffixes(&all).unwrap();
+    println!("single client: {:?} ({:.0}/s)", t0.elapsed(), all.len() as f64 / t0.elapsed().as_secs_f64());
+    assert_eq!(out.len(), all.len());
+
+    // 8 concurrent clients fetching disjoint eighths (reducer pattern)
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for part in 0..8 {
+            let addrs = addrs.clone();
+            let chunk: Vec<i64> = all.iter().copied().skip(part).step_by(8).collect();
+            s.spawn(move || {
+                let mut c = ShardedClient::connect(&addrs).unwrap();
+                c.fetch_suffixes(&chunk).unwrap();
+            });
+        }
+    });
+    println!("8 concurrent clients: {:?} ({:.0}/s aggregate)", t0.elapsed(), all.len() as f64 / t0.elapsed().as_secs_f64());
+}

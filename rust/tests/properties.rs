@@ -1,0 +1,247 @@
+//! Property-based tests over the system's core invariants, on random
+//! corpora/configurations (in-tree testkit; failing seeds are printed).
+
+use std::sync::Arc;
+
+use samr::footprint::{Channel, Ledger};
+use samr::kvstore::shard::{InProcStore, SharedStore, SuffixStore};
+use samr::mapreduce::engine::{make_splits, run_job, Job};
+use samr::mapreduce::partitioner::RangePartitioner;
+use samr::mapreduce::record::{encode_i64_key, Record};
+use samr::mapreduce::JobConf;
+use samr::runtime::native;
+use samr::scheme::{self, SchemeConfig};
+use samr::suffix::encode::{encode_prefix, unpack_index};
+use samr::suffix::validate::{reference_order, validate_order};
+use samr::terasort::{self, TeraSortConfig};
+use samr::testkit::{gen, property};
+
+/// Suffix-key encoding is order-preserving w.r.t. $-terminated text order
+/// for any pair of suffixes, up to key equality (shared prefix).
+#[test]
+fn prop_key_order_respects_text_order() {
+    property("key order vs text order", 200, |rng| {
+        let p = 1 + rng.below(23) as usize;
+        let a = gen::dna(rng, 0, 40);
+        let b = gen::dna(rng, 0, 40);
+        let (ka, kb) = (encode_prefix(&a, p), encode_prefix(&b, p));
+        // text order with implicit terminator = slice order (prefix-free via $)
+        let text_cmp = a.cmp(&b);
+        if ka < kb && text_cmp == std::cmp::Ordering::Greater {
+            return Err(format!("key says {a:?} < {b:?}, text disagrees (p={p})"));
+        }
+        if ka > kb && text_cmp == std::cmp::Ordering::Less {
+            return Err(format!("key says {a:?} > {b:?}, text disagrees (p={p})"));
+        }
+        Ok(())
+    });
+}
+
+/// Packed indexes always round-trip.
+#[test]
+fn prop_index_roundtrip() {
+    property("pack/unpack", 500, |rng| {
+        let seq = rng.below(1 << 40);
+        let off = rng.below(1000) as usize;
+        let (s2, o2) = unpack_index(samr::suffix::encode::pack_index(seq, off));
+        (s2 == seq && o2 == off)
+            .then_some(())
+            .ok_or_else(|| format!("{seq}/{off} -> {s2}/{o2}"))
+    });
+}
+
+/// The native bucket function agrees with the RangePartitioner on
+/// byte-encoded keys for ANY boundaries.
+#[test]
+fn prop_bucket_consistency() {
+    property("bucket == partitioner", 200, |rng| {
+        let bounds = gen::boundaries(rng, 16, 13);
+        let bound_bytes: Vec<Vec<u8>> =
+            bounds.iter().map(|&b| encode_i64_key(b).to_vec()).collect();
+        let part = RangePartitioner::new(bound_bytes);
+        for _ in 0..50 {
+            let k = rng.below(5u64.pow(13)) as i64;
+            let a = native::bucket(k, &bounds);
+            let b = part.partition(&encode_i64_key(k));
+            if a != b {
+                return Err(format!("key {k}: bucket {a} != partitioner {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// MapReduce with identity tasks is a permutation-preserving sorter for
+/// any conf (buffers, factors, reducer counts).
+#[test]
+fn prop_mr_sorts_any_conf() {
+    property("MR identity sort", 12, |rng| {
+        let n_reducers = 1 + rng.below(5) as usize;
+        let conf = JobConf {
+            n_reducers,
+            io_sort_bytes: 1 << (9 + rng.below(6)),
+            split_bytes: 1 << (9 + rng.below(6)),
+            reducer_heap_bytes: 1 << (12 + rng.below(6)),
+            io_sort_factor: 2 + rng.below(9) as usize,
+            ..JobConf::default()
+        };
+        let records: Vec<Record> = (0..500 + rng.below(1500))
+            .map(|_| Record::new(rng.next_u64().to_be_bytes().to_vec(), vec![0u8; 8]))
+            .collect();
+        let samples: Vec<Vec<u8>> = records.iter().take(300).map(|r| r.key.clone()).collect();
+        let part = Arc::new(RangePartitioner::from_samples(samples, n_reducers));
+        let job = Job {
+            name: "prop-sort".into(),
+            conf: conf.clone(),
+            map_factory: Arc::new(|_| {
+                Box::new(|rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone()))
+            }),
+            reduce_factory: Arc::new(|_| {
+                Box::new(|key: &[u8], vals: Vec<Vec<u8>>, out: &mut dyn FnMut(Record)| {
+                    for v in vals {
+                        out(Record::new(key.to_vec(), v));
+                    }
+                })
+            }),
+            partitioner: part.as_fn(),
+        };
+        let ledger = Ledger::new();
+        let res = run_job(&job, make_splits(records.clone(), conf.split_bytes), &ledger)
+            .map_err(|e| e.to_string())?;
+        let got: Vec<Vec<u8>> = res.all_output().map(|r| r.key.clone()).collect();
+        let mut want: Vec<Vec<u8>> = records.iter().map(|r| r.key.clone()).collect();
+        want.sort();
+        (got == want).then_some(()).ok_or_else(|| {
+            format!("sorted output mismatch ({} records, conf {conf:?})", want.len())
+        })
+    });
+}
+
+/// Both pipelines produce the reference order on arbitrary corpora —
+/// including duplicates, single-char reads, and tiny thresholds that
+/// force many flushes.
+#[test]
+fn prop_pipelines_match_reference() {
+    property("pipelines == reference", 8, |rng| {
+        let reads = gen::corpus(rng, 40, 24);
+        let conf = JobConf {
+            n_reducers: 1 + rng.below(4) as usize,
+            io_sort_bytes: 4 << 10,
+            split_bytes: 4 << 10,
+            reducer_heap_bytes: 32 << 10,
+            ..JobConf::default()
+        };
+        let want = reference_order(&reads);
+
+        let ledger = Ledger::new();
+        let tera = terasort::run(
+            &reads,
+            &TeraSortConfig { conf: conf.clone(), samples_per_reducer: 100, seed: rng.next_u64() },
+            &ledger,
+        )
+        .map_err(|e| e.to_string())?;
+        if tera.order != want {
+            return Err(format!("terasort differs on {} reads", reads.len()));
+        }
+
+        let store = SharedStore::new(1 + rng.below(5) as usize);
+        let s = store.clone();
+        let cfg = SchemeConfig {
+            conf,
+            group_threshold: 1 + rng.below(2000) as usize,
+            write_suffixes: rng.f64() < 0.5,
+            samples_per_reducer: 100,
+            prefix_len: if rng.f64() < 0.5 { 13 } else { 23 },
+            seed: rng.next_u64(),
+        };
+        let ledger = Ledger::new();
+        let res = scheme::run(
+            &reads,
+            &cfg,
+            Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+            &ledger,
+        )
+        .map_err(|e| e.to_string())?;
+        if res.order != want {
+            return Err(format!(
+                "scheme differs on {} reads (threshold {}, p {}, write {})",
+                reads.len(),
+                cfg.group_threshold,
+                cfg.prefix_len,
+                cfg.write_suffixes
+            ));
+        }
+        validate_order(&reads, &res.order).map_err(|e| e)?;
+        Ok(())
+    });
+}
+
+/// The KV store returns exactly the suffix bytes for any (read, offset).
+#[test]
+fn prop_kvstore_suffix_exactness() {
+    property("kv suffix exactness", 40, |rng| {
+        let reads = gen::corpus(rng, 30, 50);
+        let mut st = InProcStore::new(1 + rng.below(6) as usize);
+        st.put_reads(&reads).map_err(|e| e.to_string())?;
+        for _ in 0..20 {
+            let r = &reads[rng.below(reads.len() as u64) as usize];
+            let off = rng.below(r.suffix_count() as u64) as usize;
+            let idx = samr::suffix::encode::pack_index(r.seq, off);
+            let (got, _) = st.fetch_suffixes(&[idx]).map_err(|e| e.to_string())?;
+            if got[0] != r.codes[off..] {
+                return Err(format!("seq {} off {off}", r.seq));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Footprint invariants that must hold for every scheme run: shuffle is
+/// exactly 24 B per suffix; KV fetch ≥ suffix payload; map local I/O is
+/// write-heavier than read (spill + merge).
+#[test]
+fn prop_scheme_footprint_invariants() {
+    property("scheme footprint invariants", 6, |rng| {
+        let reads = gen::corpus(rng, 60, 40);
+        let n_suffixes: u64 = reads.iter().map(|r| r.suffix_count() as u64).sum();
+        let store = SharedStore::new(4);
+        let s = store.clone();
+        let ledger = Ledger::new();
+        scheme::run(
+            &reads,
+            &SchemeConfig {
+                conf: JobConf {
+                    n_reducers: 2,
+                    io_sort_bytes: 4 << 10,
+                    split_bytes: 4 << 10,
+                    reducer_heap_bytes: 64 << 10,
+                    ..JobConf::default()
+                },
+                group_threshold: 500,
+                samples_per_reducer: 100,
+                ..Default::default()
+            },
+            Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+            &ledger,
+        )
+        .map_err(|e| e.to_string())?;
+        let fp = ledger.snapshot();
+        if fp.get(Channel::Shuffle) != n_suffixes * 24 {
+            return Err(format!(
+                "shuffle {} != 24 × {n_suffixes}",
+                fp.get(Channel::Shuffle)
+            ));
+        }
+        let payload: u64 = reads
+            .iter()
+            .map(|r| (0..=r.len()).map(|o| (r.len() - o) as u64).sum::<u64>())
+            .sum();
+        if fp.get(Channel::KvFetch) < payload {
+            return Err("KV fetch below suffix payload".into());
+        }
+        if fp.get(Channel::MapLocalWrite) < fp.get(Channel::MapLocalRead) {
+            return Err("map side should be write-heavier".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,123 @@
+//! Integration: the PJRT-compiled kernels must agree bit-for-bit with the
+//! native fallback. Requires `make artifacts` (skips politely otherwise).
+
+use samr::runtime::{self, native};
+use samr::suffix::encode::{encode_prefix, DEFAULT_PREFIX_LEN};
+use samr::suffix::reads::{synth_corpus, CorpusSpec};
+use samr::util::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = runtime::default_artifacts_dir();
+    let dir = if dir.is_relative() {
+        // tests run from the crate root
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(dir)
+    } else {
+        dir
+    };
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+fn init() -> bool {
+    match artifacts() {
+        Some(dir) => {
+            runtime::init(Some(&dir));
+            true
+        }
+        None => {
+            eprintln!("artifacts/ missing; skipping PJRT integration test");
+            false
+        }
+    }
+}
+
+#[test]
+fn map_encode_matches_native() {
+    if !init() {
+        return;
+    }
+    let spec = CorpusSpec { n_reads: 100, read_len: 100, len_jitter: 3, ..Default::default() };
+    let reads = synth_corpus(&spec);
+    let mut rng = Rng::new(42);
+    let mut bounds: Vec<i64> = (0..31).map(|_| rng.below(5u64.pow(23) as u64) as i64).collect();
+    bounds.sort_unstable();
+
+    runtime::with_engine(|eng| {
+        let eng = eng.expect("engine should load");
+        let refs: Vec<&_> = reads.iter().collect();
+        for tile in refs.chunks(64) {
+            let out = eng
+                .map_encode_tile(tile, &bounds, DEFAULT_PREFIX_LEN)
+                .expect("map_encode_tile");
+            for (i, rd) in tile.iter().enumerate() {
+                let mut native_out = Vec::new();
+                native::encode_read(rd, &bounds, DEFAULT_PREFIX_LEN, &mut native_out);
+                for (off, rec) in native_out.iter().enumerate() {
+                    let j = i * out.lp + off;
+                    assert_eq!(out.keys[j], rec.key, "key seq={} off={off}", rd.seq);
+                    assert_eq!(out.indexes[j], rec.index, "index seq={} off={off}", rd.seq);
+                    assert_eq!(
+                        out.partitions[j] as u32, rec.partition,
+                        "partition seq={} off={off}",
+                        rd.seq
+                    );
+                    assert_eq!(out.valid[j], 1, "valid seq={} off={off}", rd.seq);
+                }
+                // offsets past len are invalid
+                for off in rd.len() + 1..out.lp {
+                    assert_eq!(out.valid[i * out.lp + off], 0);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn group_sort_matches_native() {
+    if !init() {
+        return;
+    }
+    runtime::with_engine(|eng| {
+        let eng = eng.expect("engine");
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 5, 100, 1000, 1024] {
+            let mut keys: Vec<i64> = (0..n).map(|_| rng.below(50) as i64).collect();
+            let mut idxs: Vec<i64> = (0..n).map(|i| i as i64 * 7 % n as i64).collect();
+            let mut nk = keys.clone();
+            let mut ni = idxs.clone();
+            native::group_sort(&mut nk, &mut ni);
+            eng.group_sort(&mut keys, &mut idxs).expect("group_sort");
+            assert_eq!(keys, nk, "n={n}");
+            assert_eq!(idxs, ni, "n={n}");
+        }
+    });
+}
+
+#[test]
+fn sample_sort_matches_native() {
+    if !init() {
+        return;
+    }
+    runtime::with_engine(|eng| {
+        let eng = eng.expect("engine");
+        let mut rng = Rng::new(9);
+        let mut keys: Vec<i64> = (0..3000).map(|_| rng.next_u64() as i64 & i64::MAX).collect();
+        let mut want = keys.clone();
+        native::sample_sort(&mut want);
+        eng.sample_sort(&mut keys).expect("sample_sort");
+        assert_eq!(keys, want);
+    });
+}
+
+#[test]
+fn known_prefix_key_through_pjrt() {
+    if !init() {
+        return;
+    }
+    runtime::with_engine(|eng| {
+        let eng = eng.expect("engine");
+        let read = samr::suffix::reads::Read::from_ascii(5, b"ACGT");
+        let out = eng.map_encode_tile(&[&read], &[], DEFAULT_PREFIX_LEN).unwrap();
+        assert_eq!(out.keys[0], encode_prefix(&read.codes, DEFAULT_PREFIX_LEN));
+        assert_eq!(out.indexes[0], 5000);
+    });
+}
