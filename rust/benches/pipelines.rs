@@ -1,18 +1,22 @@
 //! `cargo bench --bench pipelines` — end-to-end pipeline throughput
 //! (records/s) for the scheme vs TeraSort, plus the paper's ablations:
 //! sorting-group threshold (§IV-C: 8e5 / 1.6e6 / 3.2e6), prefix length
-//! (§IV-B: 13 = int vs 23 = long), and index-only output mode (§IV-D's
-//! "could be faster by not writing the suffixes").
+//! (§IV-B: 13 = int vs 23 = long), index-only output mode (§IV-D's
+//! "could be faster by not writing the suffixes"), the sequential vs
+//! pipelined sharded `MGETSUFFIX` fetch path, and the reducer's
+//! double-buffered prefetch.
 
 use std::sync::Arc;
 
 use samr::bench_support::{bench_throughput, section};
 use samr::footprint::{Channel, Ledger};
 use samr::kvstore::shard::{SharedStore, SuffixStore};
+use samr::kvstore::LocalKvCluster;
 use samr::mapreduce::JobConf;
 use samr::report::experiments::example_corpus;
 use samr::runtime;
 use samr::scheme::{self, SchemeConfig};
+use samr::suffix::encode::pack_index;
 use samr::terasort::{self, TeraSortConfig};
 use samr::util::bytes::human;
 
@@ -67,6 +71,55 @@ fn main() {
         run_scheme(&scheme_cfg(), &reads);
     });
     println!("{m}");
+
+    section("sequential vs pipelined sharded MGETSUFFIX (TCP)");
+    // acceptance target: pipelined >= 1.5x sequential at 4+ shards
+    for shards in [1usize, 4, 8] {
+        let kv = LocalKvCluster::start(shards).expect("kv cluster");
+        let mut loader = kv.client().expect("loader");
+        loader.put_reads(&reads).expect("put");
+        let all: Vec<i64> = reads
+            .iter()
+            .flat_map(|r| (0..=r.len()).map(|o| pack_index(r.seq, o)))
+            .collect();
+        let mut client = kv.client().expect("client");
+        let m_seq = bench_throughput(
+            &format!("sequential fetch, {shards} shard(s)"),
+            1,
+            3,
+            all.len() as f64,
+            "suffixes",
+            || {
+                std::hint::black_box(client.fetch_suffixes_sequential(&all).unwrap());
+            },
+        );
+        println!("{m_seq}");
+        let m_pipe = bench_throughput(
+            &format!("pipelined fetch,  {shards} shard(s)"),
+            1,
+            3,
+            all.len() as f64,
+            "suffixes",
+            || {
+                std::hint::black_box(client.fetch_suffixes(&all).unwrap());
+            },
+        );
+        println!("{m_pipe}");
+        let speedup = m_seq.mean.as_secs_f64() / m_pipe.mean.as_secs_f64();
+        println!(
+            "    pipelined speedup at {shards} shard(s): {speedup:.2}x{}",
+            if shards >= 4 && speedup < 1.5 { "  (below 1.5x target!)" } else { "" }
+        );
+    }
+
+    section("reducer double-buffering (prefetch fetch behind sort)");
+    for (name, prefetch) in [("blocking fetch", false), ("prefetched fetch", true)] {
+        let cfg = SchemeConfig { prefetch, ..scheme_cfg() };
+        let m = bench_throughput(name, 1, 3, n_suffixes as f64, "suffixes", || {
+            run_scheme(&cfg, &reads);
+        });
+        println!("{m}");
+    }
 
     section("ablation: sorting-group accumulation threshold (§IV-C)");
     for threshold in [25_000usize, 50_000, 100_000, 200_000] {

@@ -1,31 +1,75 @@
 //! Blocking client for one KV instance, with pipelining — the Jedis role.
 //! Tracks wire bytes in both directions for the network-footprint ledger.
+//!
+//! All bulk traffic (mapper `MSET` puts and reducer `MGETSUFFIX` fetches)
+//! goes through one windowed pipeline: up to [`PIPELINE_WINDOW`] batched
+//! commands stay in flight per connection, so request serialization,
+//! server-side dispatch, and reply deserialization overlap instead of
+//! alternating in lockstep round trips.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream};
 
 use crate::kvstore::resp::{self, Value};
 
+/// Connection to one KV instance (reader/writer halves of one socket).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Request wire bytes written so far (footprint ledger input).
     pub bytes_sent: u64,
+    /// Reply wire bytes read so far (footprint ledger input).
     pub bytes_received: u64,
 }
 
-#[derive(Debug, thiserror::Error)]
+/// Client-side KV error: transport, server-reported, or protocol.
+#[derive(Debug)]
 pub enum KvError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("server error: {0}")]
+    /// Socket/transport failure.
+    Io(std::io::Error),
+    /// The server replied with a RESP error.
     Server(String),
-    #[error("unexpected reply: {0:?}")]
+    /// The server replied with a value of the wrong shape.
     Unexpected(Value),
 }
 
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::Io(e) => write!(f, "io: {e}"),
+            KvError::Server(e) => write!(f, "server error: {e}"),
+            KvError::Unexpected(v) => write!(f, "unexpected reply: {v:?}"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            KvError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for KvError {
+    fn from(e: std::io::Error) -> Self {
+        KvError::Io(e)
+    }
+}
+
+/// Client-side KV result.
 pub type Result<T> = std::result::Result<T, KvError>;
 
+/// Batched commands kept in flight per connection. Keep a few chunks
+/// moving so request serialization overlaps server work, but bounded —
+/// sending everything before reading anything fills both directions'
+/// socket buffers and the connection degenerates into lockstep stalls
+/// under concurrency (measured 18× collapse; §Perf iteration 5).
+pub const PIPELINE_WINDOW: usize = 3;
+
 impl Client {
+    /// Connect to a KV instance (TCP_NODELAY, split buffered halves).
     pub fn connect(addr: SocketAddr) -> Result<Client> {
         let conn = TcpStream::connect(addr)?;
         conn.set_nodelay(true).ok();
@@ -58,6 +102,29 @@ impl Client {
         self.recv()
     }
 
+    /// Issue `n_cmds` commands through the bounded pipeline window and
+    /// collect their replies in order. `send_cmd(client, i)` serializes
+    /// the i-th command; steady state tops the window up by one command
+    /// per reply received, so the link stays busy in both directions.
+    fn pipelined(
+        &mut self,
+        n_cmds: usize,
+        mut send_cmd: impl FnMut(&mut Client, usize) -> Result<()>,
+    ) -> Result<Vec<Value>> {
+        let mut out = Vec::with_capacity(n_cmds);
+        let mut sent = 0;
+        while out.len() < n_cmds {
+            while sent < n_cmds && sent - out.len() < PIPELINE_WINDOW {
+                send_cmd(self, sent)?;
+                sent += 1;
+            }
+            self.writer.flush()?;
+            out.push(self.recv()?);
+        }
+        Ok(out)
+    }
+
+    /// Health check.
     pub fn ping(&mut self) -> Result<()> {
         match self.call(&[b"PING"])? {
             Value::Bulk(b) if b == b"PONG" => Ok(()),
@@ -65,6 +132,7 @@ impl Client {
         }
     }
 
+    /// Store one key/value pair.
     pub fn set(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
         match self.call(&[b"SET", key, value])? {
             Value::Simple(s) if s == "OK" => Ok(()),
@@ -72,6 +140,7 @@ impl Client {
         }
     }
 
+    /// Fetch one value.
     pub fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>> {
         match self.call(&[b"GET", key])? {
             Value::Bulk(b) => Ok(Some(b)),
@@ -99,11 +168,41 @@ impl Client {
         }
     }
 
-    /// Windowed pipelined `mgetsuffix`: keep a few chunks in flight so
-    /// request serialization overlaps server work, but bounded — sending
-    /// everything before reading anything fills both directions' socket
-    /// buffers and the connection degenerates into lockstep stalls under
-    /// concurrency (measured 18× collapse; §Perf iteration 5).
+    /// Pipelined batched SET: `pairs` split into `chunk_pairs`-sized
+    /// `MSET` commands pushed through the window, so the mapper-side put
+    /// of a whole split costs ~one round trip per window drain instead of
+    /// one per batch (§IV-B aggregation, overlapped).
+    pub fn mset_pipelined(
+        &mut self,
+        pairs: &[(Vec<u8>, Vec<u8>)],
+        chunk_pairs: usize,
+    ) -> Result<()> {
+        if pairs.is_empty() {
+            return Ok(());
+        }
+        let chunks: Vec<&[(Vec<u8>, Vec<u8>)]> = pairs.chunks(chunk_pairs.max(1)).collect();
+        let replies = self.pipelined(chunks.len(), |c, i| {
+            let chunk = chunks[i];
+            let mut args: Vec<&[u8]> = Vec::with_capacity(1 + chunk.len() * 2);
+            args.push(b"MSET");
+            for (k, v) in chunk {
+                args.push(k);
+                args.push(v);
+            }
+            c.send(&args)
+        })?;
+        for v in replies {
+            match v {
+                Value::Simple(s) if s == "OK" => {}
+                v => return Err(KvError::Unexpected(v)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Windowed pipelined `MGETSUFFIX`: `reqs` split into
+    /// `chunk_pairs`-sized commands pushed through the window. Replies
+    /// are collected in request order.
     pub fn mgetsuffix_pipelined(
         &mut self,
         reqs: &[(Vec<u8>, usize)],
@@ -112,27 +211,22 @@ impl Client {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        const WINDOW: usize = 3;
-        let chunks: Vec<&[(Vec<u8>, usize)]> = reqs.chunks(chunk_pairs).collect();
-        let mut out = Vec::with_capacity(reqs.len());
-        let mut sent = 0;
-        let mut received = 0;
-        while received < chunks.len() {
-            while sent < chunks.len() && sent - received < WINDOW {
-                let chunk = chunks[sent];
-                let offs: Vec<Vec<u8>> =
-                    chunk.iter().map(|(_, o)| o.to_string().into_bytes()).collect();
-                let mut args: Vec<&[u8]> = Vec::with_capacity(1 + chunk.len() * 2);
-                args.push(b"MGETSUFFIX");
-                for ((k, _), o) in chunk.iter().zip(&offs) {
-                    args.push(k);
-                    args.push(o);
-                }
-                self.send(&args)?;
-                sent += 1;
+        let chunks: Vec<&[(Vec<u8>, usize)]> = reqs.chunks(chunk_pairs.max(1)).collect();
+        let replies = self.pipelined(chunks.len(), |c, i| {
+            let chunk = chunks[i];
+            let offs: Vec<Vec<u8>> =
+                chunk.iter().map(|(_, o)| o.to_string().into_bytes()).collect();
+            let mut args: Vec<&[u8]> = Vec::with_capacity(1 + chunk.len() * 2);
+            args.push(b"MGETSUFFIX");
+            for ((k, _), o) in chunk.iter().zip(&offs) {
+                args.push(k);
+                args.push(o);
             }
-            self.writer.flush()?;
-            match self.recv()? {
+            c.send(&args)
+        })?;
+        let mut out = Vec::with_capacity(reqs.len());
+        for reply in replies {
+            match reply {
                 Value::Array(vs) => {
                     for v in vs {
                         match v {
@@ -144,7 +238,6 @@ impl Client {
                 }
                 v => return Err(KvError::Unexpected(v)),
             }
-            received += 1;
         }
         Ok(out)
     }
@@ -175,6 +268,7 @@ impl Client {
         }
     }
 
+    /// Number of keys stored.
     pub fn dbsize(&mut self) -> Result<i64> {
         match self.call(&[b"DBSIZE"])? {
             Value::Int(i) => Ok(i),
@@ -182,6 +276,7 @@ impl Client {
         }
     }
 
+    /// Memory used by the instance (payload + metadata model).
     pub fn used_memory(&mut self) -> Result<i64> {
         match self.call(&[b"MEMORY"])? {
             Value::Int(i) => Ok(i),
@@ -189,6 +284,7 @@ impl Client {
         }
     }
 
+    /// Drop every key.
     pub fn flushdb(&mut self) -> Result<()> {
         match self.call(&[b"FLUSHDB"])? {
             Value::Simple(s) if s == "OK" => Ok(()),

@@ -1,8 +1,10 @@
 //! The distributed in-memory data store system (the Redis role in the
 //! paper): RESP protocol, store with memory accounting and `MGETSUFFIX`,
-//! threaded TCP server, pipelined client, and mod-N sharding.
+//! threaded TCP server, pipelined client, mod-N sharding, and the
+//! reducer-side suffix prefetcher.
 
 pub mod client;
+pub mod prefetch;
 pub mod resp;
 pub mod server;
 pub mod shard;
@@ -17,10 +19,12 @@ use crate::kvstore::shard::ShardedClient;
 /// node — plus a connected sharded client. The real-TCP backend of the
 /// example pipelines and integration tests.
 pub struct LocalKvCluster {
+    /// The running instances (one per simulated node).
     pub servers: Vec<Server>,
 }
 
 impl LocalKvCluster {
+    /// Start `n_instances` servers on ephemeral loopback ports.
     pub fn start(n_instances: usize) -> std::io::Result<Self> {
         let servers = (0..n_instances)
             .map(|_| Server::start(0))
@@ -28,10 +32,12 @@ impl LocalKvCluster {
         Ok(Self { servers })
     }
 
+    /// Listen addresses, one per instance, in shard order.
     pub fn addrs(&self) -> Vec<SocketAddr> {
         self.servers.iter().map(|s| s.addr()).collect()
     }
 
+    /// A fresh sharded client connected to every instance.
     pub fn client(&self) -> crate::kvstore::client::Result<ShardedClient> {
         ShardedClient::connect(&self.addrs())
     }

@@ -7,19 +7,27 @@ use std::io::{self, BufRead, Write};
 /// One RESP value.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Value {
+    /// `+...` simple string.
     Simple(String),
+    /// `-...` error string.
     Error(String),
+    /// `:...` integer.
     Int(i64),
+    /// `$n` bulk string (binary safe).
     Bulk(Vec<u8>),
+    /// `$-1` null bulk.
     Null,
+    /// `*n` array of values.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The `+OK` simple string.
     pub fn ok() -> Self {
         Value::Simple("OK".into())
     }
 
+    /// A bulk string from any byte source.
     pub fn bulk(b: impl Into<Vec<u8>>) -> Self {
         Value::Bulk(b.into())
     }

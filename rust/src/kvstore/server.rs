@@ -1,6 +1,13 @@
 //! Threaded TCP server for one KV instance (the Redis role). One instance
 //! per simulated node; the store is a mutex-guarded [`Store`] — Redis
 //! itself is single-threaded, so serializing commands is faithful.
+//!
+//! Pipelined clients send several commands before reading any reply, so
+//! the connection loop interleaves: it keeps dispatching as long as more
+//! request bytes are already buffered and only flushes the reply stream
+//! when the input runs dry. A burst of N pipelined commands then costs
+//! one reply flush instead of N, and command processing overlaps the
+//! client's request serialization.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -17,8 +24,9 @@ pub struct Server {
     store: Arc<Mutex<Store>>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
-    /// Total request/response wire bytes (network-footprint accounting).
+    /// Total request wire bytes received (network-footprint accounting).
     pub bytes_in: Arc<AtomicU64>,
+    /// Total reply wire bytes sent (network-footprint accounting).
     pub bytes_out: Arc<AtomicU64>,
 }
 
@@ -66,6 +74,7 @@ impl Server {
         })
     }
 
+    /// The bound listen address.
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
@@ -76,10 +85,12 @@ impl Server {
         &self.store
     }
 
+    /// Memory used by the instance (payload + metadata model).
     pub fn used_memory(&self) -> u64 {
         self.store.lock().unwrap().used_memory()
     }
 
+    /// Stop accepting connections and join the accept thread.
     pub fn shutdown(&mut self) {
         if self.accept_thread.is_none() {
             return;
@@ -141,7 +152,13 @@ fn serve_conn(
         let v = reply_to_value(reply);
         bytes_out.fetch_add(v.wire_len(), Ordering::Relaxed);
         resp::write_value(&mut writer, &v)?;
-        writer.flush()?;
+        // Flush only when no further pipelined request bytes are already
+        // buffered: anything still in `reader`'s buffer was fully sent by
+        // the client before it started waiting, so delaying the flush
+        // cannot deadlock and batches replies for the whole burst.
+        if reader.buffer().is_empty() {
+            writer.flush()?;
+        }
     }
     Ok(())
 }

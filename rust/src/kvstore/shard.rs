@@ -5,6 +5,14 @@
 //! one instance per node. Reads are stored under their decimal sequence
 //! number; suffixes are fetched in bulk with `MGETSUFFIX`, grouped per
 //! instance to aggregate round trips (§IV-B).
+//!
+//! Shards are independent instances, so both directions of bulk traffic
+//! run one windowed pipeline per shard *concurrently*: every shard keeps
+//! its own batched commands in flight while the others do the same,
+//! instead of draining one instance at a time. The sequential variants
+//! ([`ShardedClient::fetch_suffixes_sequential`]) issue byte-identical
+//! commands without any overlap — they exist as the baseline for the
+//! pipelining benchmarks and equivalence tests.
 
 use std::net::SocketAddr;
 
@@ -17,19 +25,22 @@ use crate::suffix::reads::Read;
 /// Wire traffic (client side) for the footprint ledger.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Traffic {
+    /// Request bytes written.
     pub sent: u64,
+    /// Reply bytes read.
     pub received: u64,
 }
 
 impl Traffic {
+    /// Both directions combined.
     pub fn total(&self) -> u64 {
         self.sent + self.received
     }
 }
 
 /// What the scheme needs from the in-memory data store system. Both
-/// methods return the wire traffic they caused, so callers can charge the
-/// footprint ledger per phase (KvPut vs KvFetch).
+/// bulk methods return the wire traffic they caused, so callers can
+/// charge the footprint ledger per phase (KvPut vs KvFetch).
 pub trait SuffixStore: Send {
     /// Store reads (aggregated per instance, batched).
     fn put_reads(&mut self, reads: &[Read]) -> Result<Traffic>;
@@ -42,6 +53,12 @@ pub trait SuffixStore: Send {
     fn used_memory(&mut self) -> u64;
     /// Number of instances (shards).
     fn n_shards(&self) -> usize;
+    /// Key/value pairs per batched put command (§IV-B aggregation knob,
+    /// `SchemeConfig::put_batch`). Implementations without a wire format
+    /// may ignore it.
+    fn set_put_batch(&mut self, pairs: usize) {
+        let _ = pairs;
+    }
 }
 
 /// How many key/value (or key/offset) pairs go into one batched command.
@@ -54,25 +71,150 @@ fn key_of(seq: u64) -> Vec<u8> {
     seq.to_string().into_bytes()
 }
 
+/// Run one closure per (client, per-shard request) pair, concurrently
+/// when real cores exist; on a single-CPU host the extra threads are
+/// pure context-switch overhead, so go sequential (§Perf iteration 5).
+/// Shards whose `skip(req)` is true (empty request lists — common in
+/// index-only mode where a tie-break plan touches few shards) yield
+/// `Ok(T::default())` without spawning a thread.
+fn for_each_shard<R, T>(
+    clients: &mut [Client],
+    reqs: &[R],
+    skip: impl Fn(&R) -> bool + Sync,
+    f: impl Fn(&mut Client, &R) -> Result<T> + Sync,
+) -> Vec<Result<T>>
+where
+    R: Sync,
+    T: Default + Send,
+{
+    static PARALLEL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    let parallel = *PARALLEL.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1
+    });
+    if parallel {
+        let f = &f;
+        let mut results = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = clients
+                .iter_mut()
+                .zip(reqs.iter())
+                .map(|(client, req)| {
+                    if skip(req) {
+                        None
+                    } else {
+                        Some(scope.spawn(move || f(client, req)))
+                    }
+                })
+                .collect();
+            results = handles
+                .into_iter()
+                .map(|h| match h {
+                    Some(h) => h.join().expect("shard thread"),
+                    None => Ok(T::default()),
+                })
+                .collect();
+        });
+        results
+    } else {
+        clients
+            .iter_mut()
+            .zip(reqs.iter())
+            .map(|(c, r)| if skip(r) { Ok(T::default()) } else { f(c, r) })
+            .collect()
+    }
+}
+
 // ---------------------------------------------------------------------
 // TCP-backed sharded store (real servers, real sockets)
 // ---------------------------------------------------------------------
 
+/// One [`Client`] per KV instance, with mod-N routing and concurrent
+/// per-shard pipelines for bulk puts and fetches.
 pub struct ShardedClient {
     clients: Vec<Client>,
+    put_batch: usize,
 }
 
 impl ShardedClient {
+    /// Connect one client per instance address.
     pub fn connect(addrs: &[SocketAddr]) -> Result<Self> {
         let clients = addrs
             .iter()
             .map(|&a| Client::connect(a))
             .collect::<Result<Vec<_>>>()?;
-        Ok(Self { clients })
+        Ok(Self { clients, put_batch: BATCH_PAIRS })
     }
 
     fn shard_of(&self, seq: u64) -> usize {
         (seq % self.clients.len() as u64) as usize
+    }
+
+    /// Group packed indexes per shard, remembering original positions.
+    fn plan_fetch(&self, indexes: &[i64]) -> Vec<(Vec<usize>, Vec<(Vec<u8>, usize)>)> {
+        let n = self.clients.len();
+        let mut per_shard: Vec<(Vec<usize>, Vec<(Vec<u8>, usize)>)> =
+            vec![(Vec::new(), Vec::new()); n];
+        for (pos, &idx) in indexes.iter().enumerate() {
+            let (seq, off) = unpack_index(idx);
+            let shard = self.shard_of(seq);
+            per_shard[shard].0.push(pos);
+            per_shard[shard].1.push((key_of(seq), off));
+        }
+        per_shard
+    }
+
+    fn scatter(
+        indexes: &[i64],
+        per_shard: &[(Vec<usize>, Vec<(Vec<u8>, usize)>)],
+        results: Vec<Result<Vec<Option<Vec<u8>>>>>,
+    ) -> Result<Vec<Vec<u8>>> {
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); indexes.len()];
+        for ((positions, _), replies) in per_shard.iter().zip(results) {
+            for (pos, r) in positions.iter().zip(replies?) {
+                out[*pos] = r.ok_or_else(|| {
+                    KvError::Server(format!("missing read for index {}", indexes[*pos]))
+                })?;
+            }
+        }
+        Ok(out)
+    }
+
+    fn traffic_delta(&self, before: Traffic) -> Traffic {
+        let after = self.traffic();
+        Traffic {
+            sent: after.sent - before.sent,
+            received: after.received - before.received,
+        }
+    }
+
+    /// Baseline fetch: byte-identical commands to [`SuffixStore::fetch_suffixes`]
+    /// (same per-shard grouping, same `BATCH_PAIRS` chunking) but issued
+    /// one blocking round trip at a time, one shard after another — no
+    /// pipelining, no cross-shard concurrency. Exists so benchmarks and
+    /// equivalence tests can isolate what the overlapped path buys.
+    pub fn fetch_suffixes_sequential(
+        &mut self,
+        indexes: &[i64],
+    ) -> Result<(Vec<Vec<u8>>, Traffic)> {
+        let before = self.traffic();
+        let per_shard = self.plan_fetch(indexes);
+        let mut results: Vec<Result<Vec<Option<Vec<u8>>>>> = Vec::new();
+        for (client, (_, reqs)) in self.clients.iter_mut().zip(per_shard.iter()) {
+            let mut replies = Vec::with_capacity(reqs.len());
+            let mut res = Ok(());
+            for chunk in reqs.chunks(BATCH_PAIRS) {
+                match client.mgetsuffix(chunk) {
+                    Ok(mut vs) => replies.append(&mut vs),
+                    Err(e) => {
+                        res = Err(e);
+                        break;
+                    }
+                }
+            }
+            results.push(res.map(|()| replies));
+        }
+        let out = Self::scatter(indexes, &per_shard, results)?;
+        Ok((out, self.traffic_delta(before)))
     }
 }
 
@@ -84,69 +226,34 @@ impl SuffixStore for ShardedClient {
         for r in reads {
             per_shard[(r.seq % n as u64) as usize].push((key_of(r.seq), r.codes.clone()));
         }
-        for (shard, pairs) in per_shard.into_iter().enumerate() {
-            for chunk in pairs.chunks(BATCH_PAIRS) {
-                self.clients[shard].mset(chunk)?;
-            }
+        // one windowed MSET pipeline per shard, all shards concurrently
+        let batch = self.put_batch;
+        let results = for_each_shard(
+            &mut self.clients,
+            &per_shard,
+            |pairs: &Vec<(Vec<u8>, Vec<u8>)>| pairs.is_empty(),
+            |client, pairs| client.mset_pipelined(pairs, batch),
+        );
+        for r in results {
+            r?;
         }
-        let after = self.traffic();
-        Ok(Traffic {
-            sent: after.sent - before.sent,
-            received: after.received - before.received,
-        })
+        Ok(self.traffic_delta(before))
     }
 
     fn fetch_suffixes(&mut self, indexes: &[i64]) -> Result<(Vec<Vec<u8>>, Traffic)> {
         let before = self.traffic();
-        let n = self.clients.len();
-        // group per shard, remembering original positions
-        let mut per_shard: Vec<(Vec<usize>, Vec<(Vec<u8>, usize)>)> =
-            vec![(Vec::new(), Vec::new()); n];
-        for (pos, &idx) in indexes.iter().enumerate() {
-            let (seq, off) = unpack_index(idx);
-            let shard = self.shard_of(seq);
-            per_shard[shard].0.push(pos);
-            per_shard[shard].1.push((key_of(seq), off));
-        }
-        // shards are independent instances: query them in parallel with
-        // pipelined requests when real cores exist; on a single-CPU host
-        // the extra threads are pure context-switch overhead, so go
-        // sequential (§Perf iteration 5)
-        let parallel =
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1;
-        let mut results: Vec<Result<Vec<Option<Vec<u8>>>>> = Vec::new();
-        if parallel {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .clients
-                    .iter_mut()
-                    .zip(per_shard.iter())
-                    .map(|(client, (_, reqs))| {
-                        scope.spawn(move || client.mgetsuffix_pipelined(reqs, BATCH_PAIRS))
-                    })
-                    .collect();
-                results =
-                    handles.into_iter().map(|h| h.join().expect("fetch thread")).collect();
-            });
-        } else {
-            for (client, (_, reqs)) in self.clients.iter_mut().zip(per_shard.iter()) {
-                results.push(client.mgetsuffix_pipelined(reqs, BATCH_PAIRS));
-            }
-        }
-        let mut out: Vec<Vec<u8>> = vec![Vec::new(); indexes.len()];
-        for ((positions, _), replies) in per_shard.iter().zip(results) {
-            for (pos, r) in positions.iter().zip(replies?) {
-                out[*pos] = r.ok_or_else(|| {
-                    KvError::Server(format!("missing read for index {}", indexes[*pos]))
-                })?;
-            }
-        }
-        let after = self.traffic();
-        let delta = Traffic {
-            sent: after.sent - before.sent,
-            received: after.received - before.received,
-        };
-        Ok((out, delta))
+        let per_shard = self.plan_fetch(indexes);
+        // one windowed MGETSUFFIX pipeline per shard, all shards
+        // concurrently: fetch latency hides behind the slowest shard
+        // instead of the sum of all shards
+        let results = for_each_shard(
+            &mut self.clients,
+            &per_shard,
+            |(_, reqs): &(Vec<usize>, Vec<(Vec<u8>, usize)>)| reqs.is_empty(),
+            |client, (_, reqs)| client.mgetsuffix_pipelined(reqs, BATCH_PAIRS),
+        );
+        let out = Self::scatter(indexes, &per_shard, results)?;
+        Ok((out, self.traffic_delta(before)))
     }
 
     fn traffic(&self) -> Traffic {
@@ -168,6 +275,10 @@ impl SuffixStore for ShardedClient {
     fn n_shards(&self) -> usize {
         self.clients.len()
     }
+
+    fn set_put_batch(&mut self, pairs: usize) {
+        self.put_batch = pairs.max(1);
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -182,17 +293,21 @@ impl SuffixStore for ShardedClient {
 pub struct InProcStore {
     shards: Vec<Store>,
     traffic: Traffic,
+    put_batch: usize,
 }
 
 impl InProcStore {
+    /// A fresh store with `n_shards` independent instances.
     pub fn new(n_shards: usize) -> Self {
         assert!(n_shards > 0);
         Self {
             shards: (0..n_shards).map(|_| Store::new()).collect(),
             traffic: Traffic::default(),
+            put_batch: BATCH_PAIRS,
         }
     }
 
+    /// Direct access to one shard's store.
     pub fn shard(&self, i: usize) -> &Store {
         &self.shards[i]
     }
@@ -216,7 +331,7 @@ impl SuffixStore for InProcStore {
             per_shard[(r.seq % n as u64) as usize].push(r);
         }
         for (shard, rs) in per_shard.into_iter().enumerate() {
-            for chunk in rs.chunks(BATCH_PAIRS) {
+            for chunk in rs.chunks(self.put_batch) {
                 let mut arg_lens = vec![4usize]; // "MSET"
                 for r in chunk {
                     let k = key_of(r.seq);
@@ -285,6 +400,10 @@ impl SuffixStore for InProcStore {
     fn n_shards(&self) -> usize {
         self.shards.len()
     }
+
+    fn set_put_batch(&mut self, pairs: usize) {
+        self.put_batch = pairs.max(1);
+    }
 }
 
 /// Cloneable handle sharing one [`InProcStore`] across tasks/threads —
@@ -293,6 +412,7 @@ impl SuffixStore for InProcStore {
 pub struct SharedStore(pub std::sync::Arc<std::sync::Mutex<InProcStore>>);
 
 impl SharedStore {
+    /// A fresh shared store with `n_shards` instances.
     pub fn new(n_shards: usize) -> Self {
         Self(std::sync::Arc::new(std::sync::Mutex::new(InProcStore::new(n_shards))))
     }
@@ -317,6 +437,10 @@ impl SuffixStore for SharedStore {
 
     fn n_shards(&self) -> usize {
         self.0.lock().unwrap().n_shards()
+    }
+
+    fn set_put_batch(&mut self, pairs: usize) {
+        self.0.lock().unwrap().set_put_batch(pairs)
     }
 }
 
@@ -367,6 +491,24 @@ mod tests {
         // seqs 0,2 -> shard 0; seqs 1,7 -> shard 1
         assert_eq!(st.shard(0).len(), 2);
         assert_eq!(st.shard(1).len(), 2);
+    }
+
+    #[test]
+    fn smaller_put_batch_costs_more_wire_overhead() {
+        // §IV-B aggregation: fewer pairs per MSET -> more command framing
+        let reads: Vec<Read> = (0..64u64).map(|i| Read::new(i, vec![1u8; 50])).collect();
+        let mut big = InProcStore::new(2);
+        big.set_put_batch(64);
+        let t_big = big.put_reads(&reads).unwrap();
+        let mut small = InProcStore::new(2);
+        small.set_put_batch(4);
+        let t_small = small.put_reads(&reads).unwrap();
+        assert!(
+            t_small.total() > t_big.total(),
+            "small batches must cost more: {} vs {}",
+            t_small.total(),
+            t_big.total()
+        );
     }
 
     #[test]

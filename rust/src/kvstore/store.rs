@@ -13,11 +13,17 @@ pub const META_OVERHEAD_PER_ENTRY: u64 = 104;
 /// Result of one command dispatch.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Reply {
+    /// Simple-string `+OK`.
     Ok,
+    /// Integer reply.
     Int(i64),
+    /// Bulk-string reply.
     Bulk(Vec<u8>),
+    /// Null bulk (missing key).
     Null,
+    /// Array of optional bulks (`MGET` / `MGETSUFFIX`).
     Multi(Vec<Option<Vec<u8>>>),
+    /// Error reply.
     Err(String),
 }
 
@@ -29,6 +35,7 @@ pub struct Store {
 }
 
 impl Store {
+    /// An empty store.
     pub fn new() -> Self {
         Self::default()
     }
@@ -47,10 +54,12 @@ impl Store {
         }
     }
 
+    /// Borrow the value for `key`, if present.
     pub fn get(&self, key: &[u8]) -> Option<&Vec<u8>> {
         self.map.get(key)
     }
 
+    /// Remove `key`; true if it existed.
     pub fn del(&mut self, key: &[u8]) -> bool {
         if let Some(old) = self.map.remove(key) {
             self.payload_bytes -= (key.len() + old.len()) as u64;
@@ -65,14 +74,17 @@ impl Store {
         self.map.get(key).map(|v| v[offset.min(v.len())..].to_vec())
     }
 
+    /// Number of keys stored.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when no keys are stored.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Drop every key (`FLUSHDB`).
     pub fn flush(&mut self) {
         self.map.clear();
         self.payload_bytes = 0;

@@ -12,10 +12,12 @@ pub mod bench_support;
 pub mod cli;
 pub mod cluster;
 pub mod footprint;
+#[warn(missing_docs)]
 pub mod kvstore;
 pub mod mapreduce;
 pub mod report;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod scheme;
 pub mod simcost;
 pub mod suffix;

@@ -8,9 +8,7 @@
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
-
-use once_cell::sync::OnceCell;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
@@ -19,7 +17,7 @@ pub struct WorkerPool {
     size: usize,
 }
 
-static POOL: OnceCell<WorkerPool> = OnceCell::new();
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
 
 impl WorkerPool {
     /// The process-wide pool (size = available parallelism, overridable

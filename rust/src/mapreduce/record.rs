@@ -7,8 +7,6 @@
 
 use std::io::{self, Read as IoRead, Write};
 
-use byteorder::{BigEndian, ByteOrder, ReadBytesExt, WriteBytesExt};
-
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Record {
     pub key: Vec<u8>,
@@ -27,19 +25,21 @@ impl Record {
     }
 
     pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
-        w.write_u32::<BigEndian>(self.key.len() as u32)?;
-        w.write_u32::<BigEndian>(self.value.len() as u32)?;
+        w.write_all(&(self.key.len() as u32).to_be_bytes())?;
+        w.write_all(&(self.value.len() as u32).to_be_bytes())?;
         w.write_all(&self.key)?;
         w.write_all(&self.value)
     }
 
     pub fn read_from(r: &mut impl IoRead) -> io::Result<Option<Record>> {
-        let klen = match r.read_u32::<BigEndian>() {
-            Ok(v) => v,
+        let mut len4 = [0u8; 4];
+        let klen = match r.read_exact(&mut len4) {
+            Ok(()) => u32::from_be_bytes(len4),
             Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
             Err(e) => return Err(e),
         };
-        let vlen = r.read_u32::<BigEndian>()?;
+        r.read_exact(&mut len4)?;
+        let vlen = u32::from_be_bytes(len4);
         let mut key = vec![0u8; klen as usize];
         r.read_exact(&mut key)?;
         let mut value = vec![0u8; vlen as usize];
@@ -51,13 +51,11 @@ impl Record {
 /// Order-preserving key encoding for non-negative i64 (scheme keys).
 pub fn encode_i64_key(v: i64) -> [u8; 8] {
     debug_assert!(v >= 0);
-    let mut b = [0u8; 8];
-    BigEndian::write_i64(&mut b, v);
-    b
+    v.to_be_bytes()
 }
 
 pub fn decode_i64_key(b: &[u8]) -> i64 {
-    BigEndian::read_i64(b)
+    i64::from_be_bytes(b[..8].try_into().expect("8-byte i64 key"))
 }
 
 /// Total serialized size of a record batch.

@@ -1,26 +1,60 @@
 //! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt` produced
 //! by `python/compile/aot.py`) and executes them on the XLA CPU client.
-//! Python never runs here; HLO *text* is the interchange format (see
-//! DESIGN.md and /opt/xla-example/README.md for why not serialized protos).
+//! Python never runs here; HLO *text* is the interchange format.
+//!
+//! The XLA/PJRT bindings live behind the `pjrt` cargo feature so the
+//! default build needs nothing beyond the standard library (the offline
+//! vendor set may not carry the `xla` crate). Without the feature every
+//! entry point transparently selects the bit-identical pure-Rust
+//! fallback (`native`), which is cross-checked against the kernels in
+//! `tests/runtime_pjrt.rs` whenever both are available.
 //!
 //! `PjRtClient` is `Rc`-based (not `Send`), so each worker thread lazily
 //! builds its own engine from the globally configured artifacts directory.
-//! Every entry point has a bit-identical pure-Rust fallback (`native`),
-//! used when artifacts are absent and cross-checked in tests.
 
 pub mod native;
 
-use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
 
-use anyhow::{anyhow, bail, Context, Result};
-use once_cell::sync::OnceCell;
-
+#[cfg(not(feature = "pjrt"))]
 use crate::suffix::reads::Read;
 
 /// Key sentinel used to pad sort blocks; sinks to the tail.
 pub const PAD_KEY: i64 = i64::MAX;
+
+/// Runtime error (manifest parsing, kernel compilation, execution).
+#[derive(Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    /// Wrap a message.
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Runtime result.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+pub(crate) fn rt_err(msg: String) -> RuntimeError {
+    RuntimeError::new(msg)
+}
 
 /// One `map_encode` variant from the manifest.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,15 +72,19 @@ pub struct MapEncodeMeta {
 /// Parsed manifest: entry name -> variants (meta + file).
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// `map_encode` kernel variants.
     pub map_encode: Vec<(MapEncodeMeta, PathBuf)>,
+    /// `group_sort` kernel variants (block size -> file).
     pub group_sort: Vec<(usize, PathBuf)>,
+    /// `sample_sort` kernel variants (block size -> file).
     pub sample_sort: Vec<(usize, PathBuf)>,
 }
 
 impl Manifest {
+    /// Parse `manifest.txt` in `dir`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading {}/manifest.txt", dir.display()))?;
+            .map_err(|e| rt_err(format!("reading {}/manifest.txt: {e}", dir.display())))?;
         let mut m = Manifest::default();
         for line in text.lines() {
             let line = line.trim();
@@ -62,12 +100,14 @@ impl Manifest {
                     kv.insert(k, v);
                 }
             }
-            let file = dir.join(kv.get("file").ok_or_else(|| anyhow!("no file= in {line}"))?);
+            let file = dir.join(
+                kv.get("file").ok_or_else(|| rt_err(format!("no file= in {line}")))?,
+            );
             let geti = |k: &str| -> Result<usize> {
                 kv.get(k)
-                    .ok_or_else(|| anyhow!("missing {k}= in {line}"))?
+                    .ok_or_else(|| rt_err(format!("missing {k}= in {line}")))?
                     .parse()
-                    .map_err(|e| anyhow!("bad {k}= in {line}: {e}"))
+                    .map_err(|e| rt_err(format!("bad {k}= in {line}: {e}")))
             };
             match entry {
                 "map_encode" => m.map_encode.push((
@@ -76,7 +116,7 @@ impl Manifest {
                 )),
                 "group_sort" => m.group_sort.push((geti("n")?, file)),
                 "sample_sort" => m.sample_sort.push((geti("n")?, file)),
-                other => bail!("unknown manifest entry {other}"),
+                other => return Err(rt_err(format!("unknown manifest entry {other}"))),
             }
         }
         Ok(m)
@@ -84,10 +124,11 @@ impl Manifest {
 }
 
 /// Global artifacts directory; set once by [`init`].
-static ARTIFACTS_DIR: OnceCell<Option<PathBuf>> = OnceCell::new();
+static ARTIFACTS_DIR: OnceLock<Option<PathBuf>> = OnceLock::new();
 
 /// Configure the runtime. `None` (or a missing manifest) selects the
-/// native fallback everywhere. Returns whether PJRT artifacts are active.
+/// native fallback everywhere. Returns whether PJRT artifacts are active
+/// (always `false` without the `pjrt` cargo feature).
 pub fn init(dir: Option<&Path>) -> bool {
     let resolved = dir.and_then(|d| {
         if d.join("manifest.txt").exists() {
@@ -96,6 +137,15 @@ pub fn init(dir: Option<&Path>) -> bool {
             None
         }
     });
+    if !cfg!(feature = "pjrt") {
+        if resolved.is_some() && ARTIFACTS_DIR.get().is_none() {
+            eprintln!(
+                "samr: artifacts present but the `pjrt` feature is off; using native fallback"
+            );
+        }
+        let _ = ARTIFACTS_DIR.set(None);
+        return false;
+    }
     let active = resolved.is_some();
     let _ = ARTIFACTS_DIR.set(resolved);
     active
@@ -113,283 +163,106 @@ pub fn pjrt_active() -> bool {
     matches!(ARTIFACTS_DIR.get(), Some(Some(_)))
 }
 
-thread_local! {
-    static ENGINE: RefCell<Option<Engine>> = const { RefCell::new(None) };
-}
-
-/// A lazily compiled executable: artifacts parse+compile happens on first
-/// use, so worker threads only pay for the entry points they run.
-struct LazyExe {
-    path: PathBuf,
-    cell: once_cell::unsync::OnceCell<xla::PjRtLoadedExecutable>,
-}
-
-impl LazyExe {
-    fn new(path: PathBuf) -> Self {
-        Self { path, cell: once_cell::unsync::OnceCell::new() }
-    }
-
-    fn get(&self, client: &xla::PjRtClient) -> Result<&xla::PjRtLoadedExecutable> {
-        self.cell.get_or_try_init(|| {
-            let proto = xla::HloModuleProto::from_text_file(&self.path)
-                .map_err(|e| anyhow!("parse {}: {e:?}", self.path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", self.path.display()))
-        })
-    }
-}
-
-/// Per-thread PJRT engine: client + lazily compiled executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    map_encode: Vec<(MapEncodeMeta, LazyExe)>,
-    group_sort: Vec<(usize, LazyExe)>,
-    sample_sort: Vec<(usize, LazyExe)>,
-}
-
-impl Engine {
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let map_encode = manifest
-            .map_encode
-            .iter()
-            .map(|(m, p)| (*m, LazyExe::new(p.clone())))
-            .collect();
-        let group_sort = manifest
-            .group_sort
-            .iter()
-            .map(|(n, p)| (*n, LazyExe::new(p.clone())))
-            .collect();
-        let sample_sort = manifest
-            .sample_sort
-            .iter()
-            .map(|(n, p)| (*n, LazyExe::new(p.clone())))
-            .collect();
-        Ok(Engine { client, manifest, map_encode, group_sort, sample_sort })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Pick the cheapest map_encode variant that fits reads of length
-    /// `< lp`, the requested prefix length and the boundary count: the
-    /// bucket kernel's work is r·lp·nb, so minimize (nb, lp) and prefer
-    /// the LARGEST r to amortize PJRT dispatch (§Perf iteration 1).
-    fn pick_map_encode(
-        &self,
-        max_read_len: usize,
-        prefix_len: usize,
-        n_boundaries: usize,
-    ) -> Option<&(MapEncodeMeta, LazyExe)> {
-        self.map_encode
-            .iter()
-            .filter(|(m, _)| {
-                m.p == prefix_len && m.lp > max_read_len && m.nb >= n_boundaries
-            })
-            .min_by_key(|(m, _)| (m.nb, m.lp, std::cmp::Reverse(m.r)))
-    }
-
-    /// The tile geometry [`map_encode_tile`] will use for these inputs —
-    /// callers chunk reads into `meta.r`-sized tiles.
-    pub fn map_encode_meta(
-        &self,
-        max_read_len: usize,
-        prefix_len: usize,
-        n_boundaries: usize,
-    ) -> Option<MapEncodeMeta> {
-        self.pick_map_encode(max_read_len, prefix_len, n_boundaries)
-            .map(|(m, _)| *m)
-    }
-
-    fn pick_block(blocks: &[(usize, LazyExe)], n: usize) -> Option<&(usize, LazyExe)> {
-        blocks.iter().filter(|(b, _)| *b >= n).min_by_key(|(b, _)| *b)
-    }
-
-    /// Run the `map_encode` entry point over one tile of reads.
-    /// Returns per-(read, offset) keys/indexes/partitions/validity in
-    /// row-major [r][lp] order; rows beyond `reads.len()` are padding.
-    pub fn map_encode_tile(
-        &self,
-        reads: &[&Read],
-        boundaries: &[i64],
-        prefix_len: usize,
-    ) -> Result<EncodeTile> {
-        let max_len = reads.iter().map(|r| r.len()).max().unwrap_or(0);
-        let (meta, exe) = self
-            .pick_map_encode(max_len, prefix_len, boundaries.len())
-            .ok_or_else(|| anyhow!("no map_encode variant for len {max_len} p {prefix_len}"))?;
-        if reads.len() > meta.r {
-            bail!("tile of {} reads exceeds variant r={}", reads.len(), meta.r);
-        }
-        if boundaries.len() > meta.nb {
-            bail!("{} boundaries exceed variant nb={}", boundaries.len(), meta.nb);
-        }
-        let total = meta.lp + meta.p;
-        // pack reads into [r, lp+p] i32, zero ($) padded
-        let mut flat = vec![0i32; meta.r * total];
-        let mut seqs = vec![0i64; meta.r];
-        let mut lens = vec![0i32; meta.r];
-        for (i, rd) in reads.iter().enumerate() {
-            let row = &mut flat[i * total..i * total + rd.len()];
-            for (dst, &c) in row.iter_mut().zip(&rd.codes) {
-                *dst = c as i32;
-            }
-            seqs[i] = rd.seq as i64;
-            lens[i] = rd.len() as i32;
-        }
-        let mut bounds = vec![PAD_KEY; meta.nb];
-        bounds[..boundaries.len()].copy_from_slice(boundaries);
-
-        let lit_reads = xla::Literal::vec1(&flat)
-            .reshape(&[meta.r as i64, total as i64])
-            .map_err(|e| anyhow!("reshape reads: {e:?}"))?;
-        let lit_seqs = xla::Literal::vec1(&seqs);
-        let lit_lens = xla::Literal::vec1(&lens);
-        let lit_bounds = xla::Literal::vec1(&bounds);
-        let result = exe
-            .get(&self.client)?
-            .execute::<xla::Literal>(&[lit_reads, lit_seqs, lit_lens, lit_bounds])
-            .map_err(|e| anyhow!("execute map_encode: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let parts = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        let [keys, indexes, partitions, valid]: [xla::Literal; 4] = parts
-            .try_into()
-            .map_err(|v: Vec<_>| anyhow!("expected 4 outputs, got {}", v.len()))?;
-        Ok(EncodeTile {
-            r: meta.r,
-            lp: meta.lp,
-            keys: keys.to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?,
-            indexes: indexes.to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?,
-            partitions: partitions.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
-            valid: valid.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
-        })
-    }
-
-    /// Sort (key, index) pairs lexicographically via the bitonic kernel.
-    pub fn group_sort(&self, keys: &mut Vec<i64>, indexes: &mut Vec<i64>) -> Result<()> {
-        let n = keys.len();
-        assert_eq!(n, indexes.len());
-        if n <= 1 {
-            return Ok(());
-        }
-        let Some((block, exe)) = Self::pick_block(&self.group_sort, n) else {
-            bail!("no group_sort variant >= {n}");
-        };
-        // pad with unique (MAX, MAX - i) sentinels, which sink to the tail
-        let mut k = keys.clone();
-        let mut ix = indexes.clone();
-        for i in 0..(block - n) {
-            k.push(PAD_KEY);
-            ix.push(i64::MAX - i as i64);
-        }
-        let result = exe
-            .get(&self.client)?
-            .execute::<xla::Literal>(&[xla::Literal::vec1(&k), xla::Literal::vec1(&ix)])
-            .map_err(|e| anyhow!("execute group_sort: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let (ks, ixs) = result.to_tuple2().map_err(|e| anyhow!("{e:?}"))?;
-        let mut ks = ks.to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?;
-        let mut ixs = ixs.to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?;
-        ks.truncate(n);
-        ixs.truncate(n);
-        *keys = ks;
-        *indexes = ixs;
-        Ok(())
-    }
-
-    /// Ascending key sort via the bitonic kernel.
-    pub fn sample_sort(&self, keys: &mut Vec<i64>) -> Result<()> {
-        let n = keys.len();
-        if n <= 1 {
-            return Ok(());
-        }
-        let Some((block, exe)) = Self::pick_block(&self.sample_sort, n) else {
-            bail!("no sample_sort variant >= {n}");
-        };
-        let mut k = keys.clone();
-        k.resize(*block, PAD_KEY);
-        let result = exe
-            .get(&self.client)?
-            .execute::<xla::Literal>(&[xla::Literal::vec1(&k)])
-            .map_err(|e| anyhow!("execute sample_sort: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let ks = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
-        let mut ks = ks.to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?;
-        ks.truncate(n);
-        *keys = ks;
-        Ok(())
-    }
-
-    /// Largest group_sort block available (callers chunk to this).
-    pub fn max_group_block(&self) -> usize {
-        self.group_sort.iter().map(|(n, _)| *n).max().unwrap_or(0)
-    }
-
-    /// Block size the reduce path should chunk to: the bitonic network is
-    /// O(n log^2 n), so smaller blocks win per-pair until dispatch
-    /// overhead dominates — 1024 measured best on this host (7.6 M vs
-    /// 5.2 M pairs/s at 8192; §Perf iteration 2). Override with
-    /// SAMR_SORT_BLOCK.
-    pub fn preferred_group_block(&self) -> usize {
-        if let Some(n) = std::env::var("SAMR_SORT_BLOCK")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-        {
-            if self.group_sort.iter().any(|(b, _)| *b == n) {
-                return n;
-            }
-        }
-        let preferred = 1024;
-        self.group_sort
-            .iter()
-            .map(|(n, _)| *n)
-            .filter(|&n| n >= preferred)
-            .min()
-            .or_else(|| self.group_sort.iter().map(|(n, _)| *n).max())
-            .unwrap_or(0)
+#[cfg(feature = "pjrt")]
+pub(crate) fn artifacts_dir() -> Option<PathBuf> {
+    match ARTIFACTS_DIR.get() {
+        Some(Some(d)) => Some(d.clone()),
+        _ => None,
     }
 }
 
 /// Output of one map_encode tile (row-major [r][lp]).
 pub struct EncodeTile {
+    /// Reads per tile (rows).
     pub r: usize,
+    /// Padded row width.
     pub lp: usize,
+    /// Per-(read, offset) prefix keys.
     pub keys: Vec<i64>,
+    /// Per-(read, offset) packed indexes.
     pub indexes: Vec<i64>,
+    /// Per-(read, offset) partition numbers.
     pub partitions: Vec<i32>,
+    /// 1 where the (read, offset) cell is a real suffix, 0 for padding.
     pub valid: Vec<i32>,
+}
+
+/// Stub engine used when the `pjrt` feature is disabled. Never
+/// constructed — [`with_engine`] always passes `None` — but keeps every
+/// call site compiling against the same API as the real engine.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    never: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always fails: the `pjrt` feature is disabled.
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        Err(rt_err("built without the `pjrt` feature".into()))
+    }
+
+    /// See [`Manifest`].
+    pub fn manifest(&self) -> &Manifest {
+        match self.never {}
+    }
+
+    /// PJRT platform name.
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    /// Tile geometry for these inputs.
+    pub fn map_encode_meta(
+        &self,
+        _max_read_len: usize,
+        _prefix_len: usize,
+        _n_boundaries: usize,
+    ) -> Option<MapEncodeMeta> {
+        match self.never {}
+    }
+
+    /// Run the `map_encode` entry point over one tile of reads.
+    pub fn map_encode_tile(
+        &self,
+        _reads: &[&Read],
+        _boundaries: &[i64],
+        _prefix_len: usize,
+    ) -> Result<EncodeTile> {
+        match self.never {}
+    }
+
+    /// Sort (key, index) pairs lexicographically.
+    pub fn group_sort(&self, _keys: &mut Vec<i64>, _indexes: &mut Vec<i64>) -> Result<()> {
+        match self.never {}
+    }
+
+    /// Ascending key sort.
+    pub fn sample_sort(&self, _keys: &mut Vec<i64>) -> Result<()> {
+        match self.never {}
+    }
+
+    /// Largest group_sort block available.
+    pub fn max_group_block(&self) -> usize {
+        match self.never {}
+    }
+
+    /// Block size the reduce path should chunk to.
+    pub fn preferred_group_block(&self) -> usize {
+        match self.never {}
+    }
 }
 
 /// Run `f` with this thread's engine (compiling artifacts on first use),
 /// or `None` if PJRT is not configured.
+#[cfg(feature = "pjrt")]
 pub fn with_engine<T>(f: impl FnOnce(Option<&Engine>) -> T) -> T {
-    let dir = match ARTIFACTS_DIR.get() {
-        Some(Some(d)) => d.clone(),
-        _ => return f(None),
-    };
-    ENGINE.with(|cell| {
-        let mut slot = cell.borrow_mut();
-        if slot.is_none() {
-            match Engine::load(&dir) {
-                Ok(e) => *slot = Some(e),
-                Err(err) => {
-                    log::warn!("PJRT engine load failed, using native fallback: {err:#}");
-                    return f(None);
-                }
-            }
-        }
-        f(slot.as_ref())
-    })
+    pjrt::with_thread_engine(f)
+}
+
+/// Run `f` with this thread's engine — always the native fallback
+/// (`None`) in builds without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+pub fn with_engine<T>(f: impl FnOnce(Option<&Engine>) -> T) -> T {
+    f(None)
 }

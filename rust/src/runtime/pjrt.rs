@@ -1,0 +1,297 @@
+//! The real PJRT engine (behind the `pjrt` cargo feature): parses HLO
+//! text artifacts and executes them on the XLA CPU client via the `xla`
+//! bindings. Everything here mirrors the stub in `runtime::mod` exactly.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+
+use crate::runtime::{
+    rt_err, EncodeTile, Manifest, MapEncodeMeta, Result, PAD_KEY,
+};
+use crate::suffix::reads::Read;
+
+thread_local! {
+    static ENGINE: RefCell<Option<Engine>> = const { RefCell::new(None) };
+}
+
+/// A lazily compiled executable: artifacts parse+compile happens on first
+/// use, so worker threads only pay for the entry points they run.
+struct LazyExe {
+    path: PathBuf,
+    cell: std::cell::OnceCell<xla::PjRtLoadedExecutable>,
+}
+
+impl LazyExe {
+    fn new(path: PathBuf) -> Self {
+        Self { path, cell: std::cell::OnceCell::new() }
+    }
+
+    fn get(&self, client: &xla::PjRtClient) -> Result<&xla::PjRtLoadedExecutable> {
+        if self.cell.get().is_none() {
+            let proto = xla::HloModuleProto::from_text_file(&self.path)
+                .map_err(|e| rt_err(format!("parse {}: {e:?}", self.path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| rt_err(format!("compile {}: {e:?}", self.path.display())))?;
+            let _ = self.cell.set(exe);
+        }
+        Ok(self.cell.get().expect("just initialized"))
+    }
+}
+
+/// Per-thread PJRT engine: client + lazily compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    map_encode: Vec<(MapEncodeMeta, LazyExe)>,
+    group_sort: Vec<(usize, LazyExe)>,
+    sample_sort: Vec<(usize, LazyExe)>,
+}
+
+impl Engine {
+    /// Load the manifest in `dir` and build the CPU client.
+    pub fn load(dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| rt_err(format!("pjrt cpu client: {e:?}")))?;
+        let map_encode = manifest
+            .map_encode
+            .iter()
+            .map(|(m, p)| (*m, LazyExe::new(p.clone())))
+            .collect();
+        let group_sort = manifest
+            .group_sort
+            .iter()
+            .map(|(n, p)| (*n, LazyExe::new(p.clone())))
+            .collect();
+        let sample_sort = manifest
+            .sample_sort
+            .iter()
+            .map(|(n, p)| (*n, LazyExe::new(p.clone())))
+            .collect();
+        Ok(Engine { client, manifest, map_encode, group_sort, sample_sort })
+    }
+
+    /// The parsed artifacts manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pick the cheapest map_encode variant that fits reads of length
+    /// `< lp`, the requested prefix length and the boundary count: the
+    /// bucket kernel's work is r·lp·nb, so minimize (nb, lp) and prefer
+    /// the LARGEST r to amortize PJRT dispatch (§Perf iteration 1).
+    fn pick_map_encode(
+        &self,
+        max_read_len: usize,
+        prefix_len: usize,
+        n_boundaries: usize,
+    ) -> Option<&(MapEncodeMeta, LazyExe)> {
+        self.map_encode
+            .iter()
+            .filter(|(m, _)| {
+                m.p == prefix_len && m.lp > max_read_len && m.nb >= n_boundaries
+            })
+            .min_by_key(|(m, _)| (m.nb, m.lp, std::cmp::Reverse(m.r)))
+    }
+
+    /// The tile geometry [`Engine::map_encode_tile`] will use for these
+    /// inputs — callers chunk reads into `meta.r`-sized tiles.
+    pub fn map_encode_meta(
+        &self,
+        max_read_len: usize,
+        prefix_len: usize,
+        n_boundaries: usize,
+    ) -> Option<MapEncodeMeta> {
+        self.pick_map_encode(max_read_len, prefix_len, n_boundaries)
+            .map(|(m, _)| *m)
+    }
+
+    fn pick_block(blocks: &[(usize, LazyExe)], n: usize) -> Option<&(usize, LazyExe)> {
+        blocks.iter().filter(|(b, _)| *b >= n).min_by_key(|(b, _)| *b)
+    }
+
+    /// Run the `map_encode` entry point over one tile of reads.
+    /// Returns per-(read, offset) keys/indexes/partitions/validity in
+    /// row-major [r][lp] order; rows beyond `reads.len()` are padding.
+    pub fn map_encode_tile(
+        &self,
+        reads: &[&Read],
+        boundaries: &[i64],
+        prefix_len: usize,
+    ) -> Result<EncodeTile> {
+        let max_len = reads.iter().map(|r| r.len()).max().unwrap_or(0);
+        let (meta, exe) = self
+            .pick_map_encode(max_len, prefix_len, boundaries.len())
+            .ok_or_else(|| {
+                rt_err(format!("no map_encode variant for len {max_len} p {prefix_len}"))
+            })?;
+        if reads.len() > meta.r {
+            return Err(rt_err(format!(
+                "tile of {} reads exceeds variant r={}",
+                reads.len(),
+                meta.r
+            )));
+        }
+        if boundaries.len() > meta.nb {
+            return Err(rt_err(format!(
+                "{} boundaries exceed variant nb={}",
+                boundaries.len(),
+                meta.nb
+            )));
+        }
+        let total = meta.lp + meta.p;
+        // pack reads into [r, lp+p] i32, zero ($) padded
+        let mut flat = vec![0i32; meta.r * total];
+        let mut seqs = vec![0i64; meta.r];
+        let mut lens = vec![0i32; meta.r];
+        for (i, rd) in reads.iter().enumerate() {
+            let row = &mut flat[i * total..i * total + rd.len()];
+            for (dst, &c) in row.iter_mut().zip(&rd.codes) {
+                *dst = c as i32;
+            }
+            seqs[i] = rd.seq as i64;
+            lens[i] = rd.len() as i32;
+        }
+        let mut bounds = vec![PAD_KEY; meta.nb];
+        bounds[..boundaries.len()].copy_from_slice(boundaries);
+
+        let lit_reads = xla::Literal::vec1(&flat)
+            .reshape(&[meta.r as i64, total as i64])
+            .map_err(|e| rt_err(format!("reshape reads: {e:?}")))?;
+        let lit_seqs = xla::Literal::vec1(&seqs);
+        let lit_lens = xla::Literal::vec1(&lens);
+        let lit_bounds = xla::Literal::vec1(&bounds);
+        let result = exe
+            .get(&self.client)?
+            .execute::<xla::Literal>(&[lit_reads, lit_seqs, lit_lens, lit_bounds])
+            .map_err(|e| rt_err(format!("execute map_encode: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| rt_err(format!("to_literal: {e:?}")))?;
+        let parts = result.to_tuple().map_err(|e| rt_err(format!("to_tuple: {e:?}")))?;
+        let [keys, indexes, partitions, valid]: [xla::Literal; 4] = parts
+            .try_into()
+            .map_err(|v: Vec<_>| rt_err(format!("expected 4 outputs, got {}", v.len())))?;
+        Ok(EncodeTile {
+            r: meta.r,
+            lp: meta.lp,
+            keys: keys.to_vec::<i64>().map_err(|e| rt_err(format!("{e:?}")))?,
+            indexes: indexes.to_vec::<i64>().map_err(|e| rt_err(format!("{e:?}")))?,
+            partitions: partitions.to_vec::<i32>().map_err(|e| rt_err(format!("{e:?}")))?,
+            valid: valid.to_vec::<i32>().map_err(|e| rt_err(format!("{e:?}")))?,
+        })
+    }
+
+    /// Sort (key, index) pairs lexicographically via the bitonic kernel.
+    pub fn group_sort(&self, keys: &mut Vec<i64>, indexes: &mut Vec<i64>) -> Result<()> {
+        let n = keys.len();
+        assert_eq!(n, indexes.len());
+        if n <= 1 {
+            return Ok(());
+        }
+        let Some((block, exe)) = Self::pick_block(&self.group_sort, n) else {
+            return Err(rt_err(format!("no group_sort variant >= {n}")));
+        };
+        // pad with unique (MAX, MAX - i) sentinels, which sink to the tail
+        let mut k = keys.clone();
+        let mut ix = indexes.clone();
+        for i in 0..(block - n) {
+            k.push(PAD_KEY);
+            ix.push(i64::MAX - i as i64);
+        }
+        let result = exe
+            .get(&self.client)?
+            .execute::<xla::Literal>(&[xla::Literal::vec1(&k), xla::Literal::vec1(&ix)])
+            .map_err(|e| rt_err(format!("execute group_sort: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| rt_err(format!("{e:?}")))?;
+        let (ks, ixs) = result.to_tuple2().map_err(|e| rt_err(format!("{e:?}")))?;
+        let mut ks = ks.to_vec::<i64>().map_err(|e| rt_err(format!("{e:?}")))?;
+        let mut ixs = ixs.to_vec::<i64>().map_err(|e| rt_err(format!("{e:?}")))?;
+        ks.truncate(n);
+        ixs.truncate(n);
+        *keys = ks;
+        *indexes = ixs;
+        Ok(())
+    }
+
+    /// Ascending key sort via the bitonic kernel.
+    pub fn sample_sort(&self, keys: &mut Vec<i64>) -> Result<()> {
+        let n = keys.len();
+        if n <= 1 {
+            return Ok(());
+        }
+        let Some((block, exe)) = Self::pick_block(&self.sample_sort, n) else {
+            return Err(rt_err(format!("no sample_sort variant >= {n}")));
+        };
+        let mut k = keys.clone();
+        k.resize(*block, PAD_KEY);
+        let result = exe
+            .get(&self.client)?
+            .execute::<xla::Literal>(&[xla::Literal::vec1(&k)])
+            .map_err(|e| rt_err(format!("execute sample_sort: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| rt_err(format!("{e:?}")))?;
+        let ks = result.to_tuple1().map_err(|e| rt_err(format!("{e:?}")))?;
+        let mut ks = ks.to_vec::<i64>().map_err(|e| rt_err(format!("{e:?}")))?;
+        ks.truncate(n);
+        *keys = ks;
+        Ok(())
+    }
+
+    /// Largest group_sort block available (callers chunk to this).
+    pub fn max_group_block(&self) -> usize {
+        self.group_sort.iter().map(|(n, _)| *n).max().unwrap_or(0)
+    }
+
+    /// Block size the reduce path should chunk to: the bitonic network is
+    /// O(n log^2 n), so smaller blocks win per-pair until dispatch
+    /// overhead dominates — 1024 measured best on this host (7.6 M vs
+    /// 5.2 M pairs/s at 8192; §Perf iteration 2). Override with
+    /// SAMR_SORT_BLOCK.
+    pub fn preferred_group_block(&self) -> usize {
+        if let Some(n) = std::env::var("SAMR_SORT_BLOCK")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            if self.group_sort.iter().any(|(b, _)| *b == n) {
+                return n;
+            }
+        }
+        let preferred = 1024;
+        self.group_sort
+            .iter()
+            .map(|(n, _)| *n)
+            .filter(|&n| n >= preferred)
+            .min()
+            .or_else(|| self.group_sort.iter().map(|(n, _)| *n).max())
+            .unwrap_or(0)
+    }
+}
+
+/// Run `f` with this thread's engine (compiling artifacts on first use),
+/// or `None` if PJRT is not configured or the engine failed to load.
+pub(crate) fn with_thread_engine<T>(f: impl FnOnce(Option<&Engine>) -> T) -> T {
+    let Some(dir) = crate::runtime::artifacts_dir() else {
+        return f(None);
+    };
+    ENGINE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            match Engine::load(&dir) {
+                Ok(e) => *slot = Some(e),
+                Err(err) => {
+                    eprintln!("samr: PJRT engine load failed, using native fallback: {err}");
+                    return f(None);
+                }
+            }
+        }
+        f(slot.as_ref())
+    })
+}

@@ -19,8 +19,10 @@ pub enum HeapOutcome {
     GcOverheadLimit,
 }
 
+/// One reducer JVM's heap shape and collector choice.
 #[derive(Clone, Copy, Debug)]
 pub struct HeapConfig {
+    /// Total heap (-Xmx).
     pub heap_bytes: u64,
     /// Young generation (paper: 1 GB, AlwaysTenure).
     pub young_bytes: u64,
@@ -45,10 +47,10 @@ impl HeapConfig {
 }
 
 /// Sorting a group of `g` bytes needs ~2g live bytes (input + sort
-/// scratch / object headers); Java object overhead for many small
-/// objects adds ~1.4x on top (measured folklore; the paper's groups are
-/// boxed suffix strings).
+/// scratch / object headers).
 pub const SORT_WORKING_FACTOR: f64 = 2.0;
+/// Java object overhead for many small objects adds ~1.4x on top
+/// (measured folklore; the paper's groups are boxed suffix strings).
 pub const OBJECT_OVERHEAD: f64 = 1.4;
 
 /// Model one reducer: total bytes churned through the heap (`shuffled`)

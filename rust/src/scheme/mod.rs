@@ -15,7 +15,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::footprint::{Channel, Ledger};
-use crate::kvstore::shard::SuffixStore;
+use crate::kvstore::prefetch::SuffixPrefetcher;
+use crate::kvstore::shard::{SuffixStore, Traffic};
 use crate::mapreduce::engine::{make_splits, run_job, Job, JobResult};
 use crate::mapreduce::job::JobConf;
 use crate::mapreduce::partitioner::SAMPLES_PER_REDUCER;
@@ -23,11 +24,12 @@ use crate::mapreduce::record::{decode_i64_key, encode_i64_key, Record};
 use crate::runtime::{self, native};
 use crate::suffix::encode::DEFAULT_PREFIX_LEN;
 use crate::suffix::reads::Read;
-use sorting_group::{key_groups, key_is_complete, SortingGroupBuffer};
+use sorting_group::{key_groups, key_is_complete, tie_break_positions, SortingGroupBuffer};
 
 /// Scheme configuration (paper defaults, scaled knobs in `JobConf`).
 #[derive(Clone, Debug)]
 pub struct SchemeConfig {
+    /// MapReduce job knobs (reducers, split/spill sizes, parallelism).
     pub conf: JobConf,
     /// Fixed prefix length (paper: 23 with `long` keys).
     pub prefix_len: usize,
@@ -37,8 +39,17 @@ pub struct SchemeConfig {
     /// `false` emits only (key, index) — the paper's "could be faster"
     /// variant (§IV-D closing note).
     pub write_suffixes: bool,
+    /// Boundary samples taken per reducer (§IV-A, paper: 10000).
     pub samples_per_reducer: usize,
-    /// Reads per KV put batch from one mapper (aggregation, §IV-B).
+    /// Reads per KV put batch from one mapper (aggregation, §IV-B):
+    /// key/value pairs per batched `MSET`.
+    pub put_batch: usize,
+    /// Double-buffer the reducer: fetch sorting group *i+1*'s suffix
+    /// texts on a background thread while group *i* is tie-break sorted
+    /// and emitted, hiding fetch time behind sort time. `false` falls
+    /// back to blocking fetches with byte-identical requests.
+    pub prefetch: bool,
+    /// RNG seed for boundary sampling (§IV-A).
     pub seed: u64,
 }
 
@@ -50,6 +61,8 @@ impl Default for SchemeConfig {
             group_threshold: 1_600_000,
             write_suffixes: true,
             samples_per_reducer: SAMPLES_PER_REDUCER,
+            put_batch: crate::kvstore::shard::BATCH_PAIRS,
+            prefetch: true,
             seed: 1,
         }
     }
@@ -63,12 +76,17 @@ pub type StoreFactory = Arc<dyn Fn() -> Box<dyn SuffixStore> + Send + Sync>;
 /// 27% others), aggregated across reducers in nanoseconds.
 #[derive(Debug, Default)]
 pub struct TimeSplit {
+    /// Time stalled on `MGETSUFFIX` (with prefetching: only the part the
+    /// overlap failed to hide behind sorting).
     pub fetch_ns: AtomicU64,
+    /// Numeric group sort + tie-break sort time.
     pub sort_ns: AtomicU64,
+    /// Everything else (planning, scatter, emit).
     pub other_ns: AtomicU64,
 }
 
 impl TimeSplit {
+    /// (fetch, sort, other) as percentages of the accounted total.
     pub fn percentages(&self) -> (f64, f64, f64) {
         let f = self.fetch_ns.load(Ordering::Relaxed) as f64;
         let s = self.sort_ns.load(Ordering::Relaxed) as f64;
@@ -78,7 +96,9 @@ impl TimeSplit {
     }
 }
 
+/// Everything one scheme run produces.
 pub struct SchemeResult {
+    /// The underlying MapReduce job result (output, footprint, stats).
     pub job: JobResult,
     /// Output suffix order (packed indexes).
     pub order: Vec<i64>,
@@ -145,7 +165,7 @@ impl SchemeMapper {
                         }
                     }
                     Err(e) => {
-                        log::warn!("map_encode_tile failed, native fallback: {e:#}");
+                        eprintln!("samr: map_encode_tile failed, native fallback: {e}");
                         ok = false;
                         break;
                     }
@@ -192,12 +212,31 @@ impl crate::mapreduce::mapper::MapTask for SchemeMapper {
 
 // ---------------- reducer ----------------
 
+/// A key-sorted batch whose suffix texts are (possibly) still in flight
+/// on the prefetch thread — the reducer's double buffer.
+struct PendingBatch {
+    keys: Vec<i64>,
+    indexes: Vec<i64>,
+    groups: Vec<(usize, usize, i64)>,
+    /// Positions in `indexes` whose texts were requested: `None` = every
+    /// position (write mode), `Some` = tie-break positions only.
+    want: Option<Vec<usize>>,
+    /// Whether a fetch was actually issued (false for empty plans).
+    requested: bool,
+}
+
 struct SchemeReducer {
     cfg: SchemeConfig,
-    store: Box<dyn SuffixStore>,
+    /// Fetch handle for the blocking path (`cfg.prefetch == false`).
+    store: Option<Box<dyn SuffixStore>>,
+    /// Background fetch worker for the double-buffered path; owns the
+    /// store handle the blocking path would have used.
+    prefetcher: Option<SuffixPrefetcher>,
     ledger: Arc<Ledger>,
     times: Arc<TimeSplit>,
     buf: SortingGroupBuffer,
+    /// The previous sorting group, emitted once its texts arrive.
+    pending: Option<PendingBatch>,
 }
 
 impl SchemeReducer {
@@ -239,38 +278,82 @@ impl SchemeReducer {
         });
         let sort_ns = t_sort.elapsed().as_nanos() as u64;
 
-        // 2. fetch suffix texts: all of them when writing suffixes out,
-        //    else only incomplete multi-member groups (tie-breaking).
+        // 2. fetch plan: every text when writing suffixes out, else only
+        //    incomplete multi-member groups (tie-breaking).
         let groups = key_groups(&keys);
-        let mut fetch_ns = 0u64;
-        let mut texts: Vec<Option<Vec<u8>>> = vec![None; keys.len()];
-        let fetch = |store: &mut Box<dyn SuffixStore>,
-                     ledger: &Ledger,
-                     idxs: &[i64]|
-         -> (Vec<Vec<u8>>, u64) {
-            let t = Instant::now();
-            let (texts, traffic) = store.fetch_suffixes(idxs).expect("KV fetch failed");
-            ledger.add(Channel::KvFetch, traffic.total());
-            (texts, t.elapsed().as_nanos() as u64)
-        };
-        if self.cfg.write_suffixes {
-            let (all, ns) = fetch(&mut self.store, &self.ledger, &indexes);
-            fetch_ns += ns;
-            for (slot, t) in texts.iter_mut().zip(all) {
-                *slot = Some(t);
-            }
+        let want: Option<Vec<usize>> = if self.cfg.write_suffixes {
+            None
         } else {
-            let mut want: Vec<usize> = Vec::new();
-            for &(s, e, k) in &groups {
-                if e - s > 1 && !key_is_complete(k, self.cfg.prefix_len) {
-                    want.extend(s..e);
+            Some(tie_break_positions(&groups, self.cfg.prefix_len))
+        };
+        let idxs: Vec<i64> = match &want {
+            None => indexes.clone(),
+            Some(w) => w.iter().map(|&i| indexes[i]).collect(),
+        };
+        let requested = !idxs.is_empty();
+        let batch = PendingBatch { keys, indexes, groups, want, requested };
+
+        // accumulation + sort + planning accounted here; fetch stalls,
+        // tie-break, and emit are accounted where they happen
+        self.times.sort_ns.fetch_add(sort_ns, Ordering::Relaxed);
+        let planned_ns = t_start.elapsed().as_nanos() as u64;
+        self.times
+            .other_ns
+            .fetch_add(planned_ns.saturating_sub(sort_ns), Ordering::Relaxed);
+
+        if self.prefetcher.is_some() {
+            // double-buffered: queue this batch's fetch, then finish the
+            // *previous* batch while the fetch streams in — its tie-break
+            // sort and emit hide this batch's fetch latency (and the
+            // fetch queued last flush hid behind this batch's sort).
+            if requested {
+                self.prefetcher.as_mut().expect("checked above").request(idxs);
+            }
+            let prev = self.pending.replace(batch);
+            self.complete(prev, out);
+        } else {
+            // blocking path: byte-identical requests, no overlap.
+            let fetched = if requested {
+                let store = self.store.as_mut().expect("blocking reducer holds the store");
+                account_fetch(&self.ledger, &self.times, || store.fetch_suffixes(&idxs))
+            } else {
+                Vec::new()
+            };
+            self.finish_batch(batch, fetched, out);
+        }
+    }
+
+    /// Wait for `prev`'s in-flight texts and finish it (double-buffered
+    /// path). Only the time spent *stalled* in the wait counts as fetch
+    /// time — that is exactly the fetch cost the overlap failed to hide.
+    fn complete(&mut self, prev: Option<PendingBatch>, out: &mut dyn FnMut(Record)) {
+        let Some(prev) = prev else { return };
+        let fetched = if prev.requested {
+            let pf = self.prefetcher.as_mut().expect("prefetching reducer holds the worker");
+            account_fetch(&self.ledger, &self.times, || pf.wait())
+        } else {
+            Vec::new()
+        };
+        self.finish_batch(prev, fetched, out);
+    }
+
+    /// Tie-break, emit, and account one batch whose texts have arrived.
+    fn finish_batch(
+        &mut self,
+        batch: PendingBatch,
+        fetched: Vec<Vec<u8>>,
+        out: &mut dyn FnMut(Record),
+    ) {
+        let PendingBatch { keys, mut indexes, groups, want, .. } = batch;
+        let mut texts: Vec<Option<Vec<u8>>> = vec![None; keys.len()];
+        match &want {
+            None => {
+                for (slot, t) in texts.iter_mut().zip(fetched) {
+                    *slot = Some(t);
                 }
             }
-            if !want.is_empty() {
-                let idxs: Vec<i64> = want.iter().map(|&i| indexes[i]).collect();
-                let (got, ns) = fetch(&mut self.store, &self.ledger, &idxs);
-                fetch_ns += ns;
-                for (pos, t) in want.into_iter().zip(got) {
+            Some(w) => {
+                for (&pos, t) in w.iter().zip(fetched) {
                     texts[pos] = Some(t);
                 }
             }
@@ -303,6 +386,7 @@ impl SchemeReducer {
         let tie_ns = t_tie.elapsed().as_nanos() as u64;
 
         // 4. emit
+        let t_emit = Instant::now();
         for i in 0..keys.len() {
             let value = indexes[i].to_be_bytes().to_vec();
             let key = if self.cfg.write_suffixes {
@@ -313,16 +397,26 @@ impl SchemeReducer {
             out(Record::new(key, value));
         }
 
-        let total_ns = t_start.elapsed().as_nanos() as u64;
-        self.times.fetch_ns.fetch_add(fetch_ns, Ordering::Relaxed);
+        self.times.sort_ns.fetch_add(tie_ns, Ordering::Relaxed);
         self.times
-            .sort_ns
-            .fetch_add(sort_ns + tie_ns, Ordering::Relaxed);
-        self.times.other_ns.fetch_add(
-            total_ns.saturating_sub(fetch_ns + sort_ns + tie_ns),
-            Ordering::Relaxed,
-        );
+            .other_ns
+            .fetch_add(t_emit.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
+}
+
+/// Run one fetch (blocking call or prefetch wait), charge the ledger,
+/// and book the elapsed stall as fetch time. Both reducer paths go
+/// through here so their accounting can never diverge.
+fn account_fetch(
+    ledger: &Ledger,
+    times: &TimeSplit,
+    fetch: impl FnOnce() -> crate::kvstore::client::Result<(Vec<Vec<u8>>, Traffic)>,
+) -> Vec<Vec<u8>> {
+    let t = Instant::now();
+    let (texts, traffic) = fetch().expect("KV fetch failed");
+    ledger.add(Channel::KvFetch, traffic.total());
+    times.fetch_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    texts
 }
 
 /// Is the (key, index) sequence already lexicographically sorted?
@@ -374,6 +468,10 @@ impl crate::mapreduce::reducer::ReduceTask for SchemeReducer {
 
     fn finish(&mut self, out: &mut dyn FnMut(Record)) {
         self.flush(out);
+        // drain the double buffer: the last batch's fetch is still in
+        // flight when the input runs out
+        let prev = self.pending.take();
+        self.complete(prev, out);
     }
 }
 
@@ -412,10 +510,12 @@ pub fn run(
         name: "scheme".into(),
         conf: cfg.conf.clone(),
         map_factory: Arc::new(move |_| {
+            let mut store = map_store();
+            store.set_put_batch(map_cfg.put_batch);
             Box::new(SchemeMapper {
                 cfg: map_cfg.clone(),
                 boundaries: map_bounds.clone(),
-                store: map_store(),
+                store,
                 ledger: map_ledger.clone(),
                 pending: Vec::new(),
                 all_reads: Vec::new(),
@@ -423,12 +523,22 @@ pub fn run(
         }),
         reduce_factory: Arc::new(move |_| {
             let _ = &red_bounds;
+            // in prefetch mode the store handle moves onto the fetch
+            // worker; the blocking path keeps it inline
+            let handle = red_store();
+            let (store, prefetcher) = if red_cfg.prefetch {
+                (None, Some(SuffixPrefetcher::spawn(handle)))
+            } else {
+                (Some(handle), None)
+            };
             Box::new(SchemeReducer {
                 cfg: red_cfg.clone(),
-                store: red_store(),
+                store,
+                prefetcher,
                 ledger: red_ledger.clone(),
                 times: red_times.clone(),
                 buf: SortingGroupBuffer::new(),
+                pending: None,
             })
         }),
         partitioner: Arc::new(move |key: &[u8]| {

@@ -42,23 +42,29 @@ pub fn complete_key_len(key: i64, prefix_len: usize) -> Option<usize> {
 /// An accumulated batch of (key, index) pairs plus group bookkeeping.
 #[derive(Default)]
 pub struct SortingGroupBuffer {
+    /// Prefix keys, parallel to `indexes`.
     pub keys: Vec<i64>,
+    /// Packed suffix indexes, parallel to `keys`.
     pub indexes: Vec<i64>,
 }
 
 impl SortingGroupBuffer {
+    /// An empty buffer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Accumulated pair count.
     pub fn len(&self) -> usize {
         self.keys.len()
     }
 
+    /// True when nothing is accumulated.
     pub fn is_empty(&self) -> bool {
         self.keys.is_empty()
     }
 
+    /// Append every index of one shuffle group under `key`.
     pub fn push_group(&mut self, key: i64, indexes: impl IntoIterator<Item = i64>) {
         for ix in indexes {
             self.keys.push(key);
@@ -66,6 +72,7 @@ impl SortingGroupBuffer {
         }
     }
 
+    /// Drain the buffer, returning the parallel (keys, indexes) vectors.
     pub fn take(&mut self) -> (Vec<i64>, Vec<i64>) {
         (std::mem::take(&mut self.keys), std::mem::take(&mut self.indexes))
     }
@@ -82,6 +89,20 @@ pub fn key_groups(keys: &[i64]) -> Vec<(usize, usize, i64)> {
         }
     }
     out
+}
+
+/// Positions (into a key-sorted batch) whose suffix texts are needed for
+/// tie-breaking: members of multi-member groups whose key does not embed
+/// the terminator. This is the reducer's fetch plan in index-only mode —
+/// everything else is ordered by (key, index) alone.
+pub fn tie_break_positions(groups: &[(usize, usize, i64)], prefix_len: usize) -> Vec<usize> {
+    let mut want = Vec::new();
+    for &(s, e, k) in groups {
+        if e - s > 1 && !key_is_complete(k, prefix_len) {
+            want.extend(s..e);
+        }
+    }
+    want
 }
 
 /// Fig. 7's rule of thumb, analytically: expected sorting-group size for
@@ -138,6 +159,19 @@ mod tests {
         let total = 1e9;
         assert!(expected_group_size(total, 3) > expected_group_size(total, 13));
         assert!(expected_group_size(total, 23) < 1.0);
+    }
+
+    #[test]
+    fn tie_break_positions_pick_incomplete_multi_member_groups() {
+        let p = 4;
+        let complete = encode_prefix(&codes_of(b"AC"), p); // embeds terminator
+        let incomplete = encode_prefix(&codes_of(b"ACGT"), p);
+        let other = encode_prefix(&codes_of(b"GGGG"), p);
+        let keys = vec![complete, complete, incomplete, incomplete, incomplete, other];
+        let groups = key_groups(&keys);
+        // singleton `other` and complete-key group need no texts
+        assert_eq!(tie_break_positions(&groups, p), vec![2, 3, 4]);
+        assert!(tie_break_positions(&[], p).is_empty());
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Property tests for the overlapped fetch path: pipelining and
+//! prefetching may only change *when* bytes move, never *which* bytes —
+//! suffix order and ledger totals must be bit-identical to the blocking
+//! sequential path, across shard counts {1, 2, 5}.
+
+use std::sync::Arc;
+
+use samr::footprint::{Channel, Ledger};
+use samr::kvstore::shard::{SharedStore, ShardedClient, SuffixStore};
+use samr::kvstore::LocalKvCluster;
+use samr::mapreduce::JobConf;
+use samr::scheme::{self, SchemeConfig, StoreFactory};
+use samr::suffix::encode::pack_index;
+use samr::suffix::reads::{synth_corpus, CorpusSpec, Read};
+use samr::suffix::validate::validate_order;
+use samr::util::rng::Rng;
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 5];
+
+/// Mixed-length corpus plus a request list with shuffled positions,
+/// repeats, and every-offset coverage for a few reads.
+fn corpus_and_requests(seed: u64) -> (Vec<Read>, Vec<i64>) {
+    let reads = synth_corpus(&CorpusSpec {
+        n_reads: 120,
+        read_len: 60,
+        len_jitter: 9,
+        genome_len: 1 << 12,
+        seed,
+        ..Default::default()
+    });
+    let mut reqs: Vec<i64> = Vec::new();
+    for r in &reads {
+        for off in 0..=r.len() {
+            reqs.push(pack_index(r.seq, off));
+        }
+    }
+    // shuffle (Fisher–Yates) and append some repeats
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    for i in (1..reqs.len()).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        reqs.swap(i, j);
+    }
+    let n = reqs.len();
+    for _ in 0..n / 10 {
+        let dup = reqs[rng.below(n as u64) as usize];
+        reqs.push(dup);
+    }
+    (reads, reqs)
+}
+
+#[test]
+fn pipelined_fetch_matches_sequential_over_tcp() {
+    for &shards in &SHARD_COUNTS {
+        let (reads, reqs) = corpus_and_requests(7 + shards as u64);
+        let kv = LocalKvCluster::start(shards).expect("kv cluster");
+        let mut loader = kv.client().expect("loader");
+        loader.put_reads(&reads).expect("put");
+
+        let mut seq_client = kv.client().expect("sequential client");
+        let (seq_out, seq_traffic) =
+            seq_client.fetch_suffixes_sequential(&reqs).expect("sequential fetch");
+
+        let mut pipe_client = kv.client().expect("pipelined client");
+        let (pipe_out, pipe_traffic) = pipe_client.fetch_suffixes(&reqs).expect("pipelined fetch");
+
+        assert_eq!(pipe_out, seq_out, "texts must match at {shards} shards");
+        // same per-shard grouping + same chunking = byte-identical wire
+        // traffic; pipelining only moves flush timing
+        assert_eq!(
+            pipe_traffic, seq_traffic,
+            "wire totals must match at {shards} shards"
+        );
+        assert!(pipe_traffic.sent > 0 && pipe_traffic.received > 0);
+    }
+}
+
+#[test]
+fn pipelined_put_matches_single_batch_puts() {
+    for &shards in &SHARD_COUNTS {
+        let (reads, reqs) = corpus_and_requests(40 + shards as u64);
+        // pipelined path (put_reads uses windowed per-shard MSETs)
+        let kv_a = LocalKvCluster::start(shards).expect("kv");
+        let mut a = kv_a.client().expect("client");
+        a.put_reads(&reads).expect("put");
+        // tiny batches: different framing, same stored state
+        let kv_b = LocalKvCluster::start(shards).expect("kv");
+        let mut b = kv_b.client().expect("client");
+        b.set_put_batch(17);
+        b.put_reads(&reads).expect("put");
+
+        let (out_a, _) = kv_a.client().unwrap().fetch_suffixes(&reqs).expect("fetch");
+        let (out_b, _) = kv_b.client().unwrap().fetch_suffixes(&reqs).expect("fetch");
+        assert_eq!(out_a, out_b, "stored state must not depend on put batching");
+        assert_eq!(kv_a.used_memory(), kv_b.used_memory());
+    }
+}
+
+fn run_scheme_once(
+    reads: &[Read],
+    shards: usize,
+    prefetch: bool,
+    write_suffixes: bool,
+) -> (Vec<i64>, u64, u64, Vec<Vec<u8>>) {
+    let store = SharedStore::new(shards);
+    let s = store.clone();
+    let factory: StoreFactory = Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>);
+    let cfg = SchemeConfig {
+        conf: JobConf {
+            n_reducers: 3,
+            split_bytes: 4 << 10,
+            io_sort_bytes: 8 << 10,
+            reducer_heap_bytes: 64 << 10,
+            ..JobConf::default()
+        },
+        group_threshold: 700, // several flushes per reducer -> real overlap
+        samples_per_reducer: 200,
+        write_suffixes,
+        prefetch,
+        ..Default::default()
+    };
+    let ledger = Ledger::new();
+    let res = scheme::run(reads, &cfg, factory, &ledger).expect("scheme");
+    let output: Vec<Vec<u8>> = res.job.all_output().map(|r| r.key.clone()).collect();
+    (
+        res.order,
+        ledger.get(Channel::KvFetch),
+        ledger.get(Channel::KvPut),
+        output,
+    )
+}
+
+#[test]
+fn prefetching_reducer_is_equivalent_to_blocking() {
+    for &shards in &SHARD_COUNTS {
+        let reads = synth_corpus(&CorpusSpec {
+            n_reads: 80,
+            read_len: 40,
+            genome_len: 2048, // repetitive: forces tie-break fetches
+            seed: 90 + shards as u64,
+            ..Default::default()
+        });
+        for write_suffixes in [true, false] {
+            let (order_b, fetch_b, put_b, out_b) =
+                run_scheme_once(&reads, shards, false, write_suffixes);
+            let (order_p, fetch_p, put_p, out_p) =
+                run_scheme_once(&reads, shards, true, write_suffixes);
+            assert_eq!(
+                order_p, order_b,
+                "suffix order must be byte-identical ({shards} shards, write={write_suffixes})"
+            );
+            assert_eq!(
+                out_p, out_b,
+                "emitted records must match ({shards} shards, write={write_suffixes})"
+            );
+            assert_eq!(
+                fetch_p, fetch_b,
+                "KvFetch ledger bytes must match ({shards} shards, write={write_suffixes})"
+            );
+            assert_eq!(
+                put_p, put_b,
+                "KvPut ledger bytes must match ({shards} shards, write={write_suffixes})"
+            );
+            validate_order(&reads, &order_p).expect("order invalid");
+        }
+    }
+}
+
+#[test]
+fn prefetching_reducer_equivalence_over_tcp() {
+    // the same property through real sockets at 5 shards
+    let reads = synth_corpus(&CorpusSpec {
+        n_reads: 100,
+        read_len: 50,
+        genome_len: 2048,
+        seed: 1234,
+        ..Default::default()
+    });
+    let mut results: Vec<(Vec<i64>, u64)> = Vec::new();
+    for prefetch in [false, true] {
+        let kv = LocalKvCluster::start(5).expect("kv");
+        let addrs = kv.addrs();
+        let factory: StoreFactory = Arc::new(move || {
+            Box::new(ShardedClient::connect(&addrs).expect("connect")) as Box<dyn SuffixStore>
+        });
+        let cfg = SchemeConfig {
+            conf: JobConf {
+                n_reducers: 2,
+                split_bytes: 8 << 10,
+                ..JobConf::scaled_down()
+            },
+            group_threshold: 900,
+            samples_per_reducer: 200,
+            prefetch,
+            ..Default::default()
+        };
+        let ledger = Ledger::new();
+        let res = scheme::run(&reads, &cfg, factory, &ledger).expect("scheme");
+        validate_order(&reads, &res.order).expect("order invalid");
+        results.push((res.order, ledger.get(Channel::KvFetch)));
+    }
+    assert_eq!(results[0].0, results[1].0, "TCP order must match");
+    assert_eq!(results[0].1, results[1].1, "TCP KvFetch bytes must match");
+}

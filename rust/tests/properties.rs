@@ -153,6 +153,8 @@ fn prop_pipelines_match_reference() {
             samples_per_reducer: 100,
             prefix_len: if rng.f64() < 0.5 { 13 } else { 23 },
             seed: rng.next_u64(),
+            prefetch: rng.f64() < 0.5,
+            ..Default::default()
         };
         let ledger = Ledger::new();
         let res = scheme::run(

@@ -20,8 +20,12 @@ fn artifacts() -> Option<std::path::PathBuf> {
 fn init() -> bool {
     match artifacts() {
         Some(dir) => {
-            runtime::init(Some(&dir));
-            true
+            if runtime::init(Some(&dir)) {
+                true
+            } else {
+                eprintln!("built without the `pjrt` feature; skipping PJRT integration test");
+                false
+            }
         }
         None => {
             eprintln!("artifacts/ missing; skipping PJRT integration test");
