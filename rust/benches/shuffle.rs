@@ -1,0 +1,149 @@
+//! `cargo bench --bench shuffle` — the fixed-width shuffle fast path vs
+//! the generic `Record` path on ≥1M synthetic suffix-index records
+//! (24 B each, like the scheme's shuffle): spill-buffer fill+sort
+//! (two-allocations-per-record comparison sort vs packed LSD radix),
+//! k-way merge (binary-heap `Record` merge vs loser tree over packed
+//! pairs), and the reducer's numeric (key, index) group sort
+//! (permutation comparison sort vs radix). Reports records/s and the
+//! fixed/generic speedup — the acceptance target is >1x on every leg.
+
+use samr::bench_support::{bench_throughput, section, Measurement};
+use samr::mapreduce::merge::{kway_merge, kway_merge_fixed, FixedRun, Run};
+use samr::mapreduce::record::{FixedRec, Record};
+use samr::runtime::native;
+use samr::util::radix;
+use samr::util::rng::Rng;
+
+/// Synthetic suffix-index records: base-5 prefix keys below 5^13 (the
+/// paper's int-key regime), packed `seq*1000+off` values, and a range
+/// partition derived from the key — the distribution the mapper's
+/// spill buffer actually sees.
+fn synth(n: usize, n_partitions: u64, seed: u64) -> Vec<FixedRec> {
+    let key_space = 5u64.pow(13);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let key = rng.below(key_space);
+            FixedRec {
+                partition: (key * n_partitions / key_space) as u32,
+                key,
+                value: (i as u64 / 100) * 1000 + (i as u64 % 100),
+            }
+        })
+        .collect()
+}
+
+fn speedup(generic: &Measurement, fixed: &Measurement) -> String {
+    let s = generic.mean.as_secs_f64() / fixed.mean.as_secs_f64();
+    format!(
+        "    fixed-width speedup: {s:.2}x{}",
+        if s < 1.0 { "  (below 1x target!)" } else { "" }
+    )
+}
+
+fn main() {
+    let n: usize = std::env::var("SAMR_SHUFFLE_RECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 20);
+    let recs = synth(n, 4, 11);
+
+    section(&format!("spill-buffer fill + sort ({n} records, 4 partitions)"));
+    // each iteration rebuilds the buffer exactly as the mapper absorb
+    // loop would: the generic path allocates two Vecs per record, the
+    // fixed path pushes packed structs; then both sort by (partition, key).
+    let m_gen = bench_throughput("generic: Vec<(u32, Record)> + sort_by", 1, 3, n as f64, "recs", || {
+        let mut buf: Vec<(u32, Record)> = recs
+            .iter()
+            .map(|r| {
+                (
+                    r.partition,
+                    Record::new(r.key.to_be_bytes().to_vec(), r.value.to_be_bytes().to_vec()),
+                )
+            })
+            .collect();
+        buf.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.key.cmp(&b.1.key)));
+        std::hint::black_box(buf.len());
+    });
+    println!("{m_gen}");
+    let mut scratch: Vec<FixedRec> = Vec::new();
+    let m_fix = bench_throughput("fixed:   Vec<FixedRec> + LSD radix", 1, 3, n as f64, "recs", || {
+        let mut buf: Vec<FixedRec> = recs.clone();
+        radix::sort_spill(&mut buf, &mut scratch);
+        std::hint::black_box(buf.len());
+    });
+    println!("{m_fix}");
+    println!("{}", speedup(&m_gen, &m_fix));
+
+    section(&format!("k-way merge of 8 sorted runs ({n} records total)"));
+    let runs: Vec<Vec<(u64, u64)>> = (0..8)
+        .map(|r| {
+            let mut v: Vec<(u64, u64)> = synth(n / 8, 1, 100 + r)
+                .into_iter()
+                .map(|rec| (rec.key, rec.value))
+                .collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    let m_gen = bench_throughput("generic: BinaryHeap over Records", 1, 3, n as f64, "recs", || {
+        let gruns: Vec<Run> = runs
+            .iter()
+            .map(|v| {
+                Run::from_vec(
+                    v.iter()
+                        .map(|&(k, val)| {
+                            Record::new(k.to_be_bytes().to_vec(), val.to_be_bytes().to_vec())
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut count = 0u64;
+        kway_merge(gruns, |r| {
+            count += r.wire_bytes();
+            Ok(())
+        })
+        .unwrap();
+        std::hint::black_box(count);
+    });
+    println!("{m_gen}");
+    let m_fix = bench_throughput("fixed:   loser tree over (u64, u64)", 1, 3, n as f64, "recs", || {
+        let fruns: Vec<FixedRun> =
+            runs.iter().map(|v| FixedRun::from_vec(v.clone())).collect();
+        let mut count = 0u64;
+        kway_merge_fixed(fruns, |_, v| {
+            count += v & 1;
+            Ok(())
+        })
+        .unwrap();
+        std::hint::black_box(count);
+    });
+    println!("{m_fix}");
+    println!("{}", speedup(&m_gen, &m_fix));
+
+    section(&format!("reducer (key, index) group sort ({n} pairs)"));
+    let keys: Vec<i64> = recs.iter().map(|r| r.key as i64).collect();
+    let idxs: Vec<i64> = recs.iter().map(|r| r.value as i64).collect();
+    let m_gen = bench_throughput("generic: permutation comparison sort", 1, 3, n as f64, "pairs", || {
+        let mut k = keys.clone();
+        let mut ix = idxs.clone();
+        // the pre-radix implementation, kept here as the baseline
+        let mut perm: Vec<usize> = (0..k.len()).collect();
+        perm.sort_unstable_by_key(|&i| (k[i], ix[i]));
+        let ks: Vec<i64> = perm.iter().map(|&i| k[i]).collect();
+        let ixs: Vec<i64> = perm.iter().map(|&i| ix[i]).collect();
+        k.copy_from_slice(&ks);
+        ix.copy_from_slice(&ixs);
+        std::hint::black_box((k, ix));
+    });
+    println!("{m_gen}");
+    let m_fix = bench_throughput("fixed:   LSD radix pair sort", 1, 3, n as f64, "pairs", || {
+        let mut k = keys.clone();
+        let mut ix = idxs.clone();
+        native::group_sort(&mut k, &mut ix);
+        std::hint::black_box((k, ix));
+    });
+    println!("{m_fix}");
+    println!("{}", speedup(&m_gen, &m_fix));
+}

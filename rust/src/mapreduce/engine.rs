@@ -14,9 +14,11 @@ use crate::mapreduce::pool::WorkerPool;
 
 use crate::footprint::{Channel, Footprint, Ledger};
 use crate::mapreduce::job::JobConf;
-use crate::mapreduce::mapper::{run_map_task, MapTask, MapTaskStats, SpillFile};
+use crate::mapreduce::mapper::{run_map_task, run_map_task_fixed, MapTask, MapTaskStats, SpillFile};
 use crate::mapreduce::record::{batch_bytes, Record};
-use crate::mapreduce::reducer::{run_reduce_task, ReduceTask, ReduceTaskStats};
+use crate::mapreduce::reducer::{
+    run_reduce_task, run_reduce_task_fixed, ReduceTask, ReduceTaskStats,
+};
 
 pub type PartitionFn = Arc<dyn Fn(&[u8]) -> u32 + Send + Sync>;
 pub type MapFactory = Arc<dyn Fn(usize) -> Box<dyn MapTask> + Send + Sync>;
@@ -129,7 +131,10 @@ pub fn run_job(
             Box::new(move || {
                 ledger.add(Channel::HdfsRead, batch_bytes(&splits[i]));
                 let mut task = factory(i);
-                let res = run_map_task(
+                // both paths produce byte-identical spill files and
+                // ledger charges; fixed_width only changes CPU cost
+                let run = if conf.fixed_width { run_map_task_fixed } else { run_map_task };
+                let res = run(
                     i,
                     &splits[i],
                     task.as_mut(),
@@ -166,7 +171,8 @@ pub fn run_job(
             let out = red_results.clone();
             Box::new(move || {
                 let mut task = factory(r);
-                let res = run_reduce_task(
+                let run = if conf.fixed_width { run_reduce_task_fixed } else { run_reduce_task };
+                let res = run(
                     r,
                     r,
                     &outputs,
@@ -257,6 +263,30 @@ mod tests {
         assert_eq!(res.footprint.get(Channel::HdfsRead), in_bytes);
         assert_eq!(res.footprint.get(Channel::HdfsWrite), in_bytes);
         assert_eq!(res.footprint.get(Channel::Shuffle), in_bytes);
+    }
+
+    #[test]
+    fn fixed_width_job_matches_generic_end_to_end() {
+        // the whole engine, both shuffle paths, tight buffers: output
+        // records and every footprint channel must be identical
+        let conf = JobConf {
+            split_bytes: 8 << 10,
+            io_sort_bytes: 2 << 10,
+            reducer_heap_bytes: 4 << 10,
+            io_sort_factor: 3,
+            ..JobConf::default()
+        };
+        let mut results = Vec::new();
+        for fixed in [false, true] {
+            let (job, input) =
+                sort_job(3, JobConf { fixed_width: fixed, ..conf.clone() });
+            let ledger = Ledger::new();
+            let res =
+                run_job(&job, make_splits(input, job.conf.split_bytes), &ledger).unwrap();
+            assert!(res.map_stats.iter().any(|s| s.spills > 1));
+            results.push((res.output, res.footprint));
+        }
+        assert_eq!(results[0], results[1]);
     }
 
     #[test]

@@ -32,6 +32,13 @@ pub struct JobConf {
     pub task_parallelism: usize,
     /// Directory for spill files; None = std::env::temp_dir().
     pub spill_dir: Option<std::path::PathBuf>,
+    /// Route the shuffle through the fixed-width fast path: packed
+    /// 24 B records, LSD-radix-sorted spills, loser-tree merges, and
+    /// strided spill readers. Requires every mapper-emitted record to
+    /// carry an 8-byte key and 8-byte value (the scheme's index pairs);
+    /// wire bytes and every ledger total are identical to the generic
+    /// path — only CPU time and allocations change.
+    pub fixed_width: bool,
 }
 
 impl Default for JobConf {
@@ -50,6 +57,7 @@ impl Default for JobConf {
                 .map(|n| n.get())
                 .unwrap_or(4),
             spill_dir: None,
+            fixed_width: false,
         }
     }
 }

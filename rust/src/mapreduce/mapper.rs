@@ -12,14 +12,37 @@ use std::sync::Arc;
 
 use crate::footprint::{Channel, Ledger};
 use crate::mapreduce::job::JobConf;
-use crate::mapreduce::merge::{kway_merge, merge_round_plan, Run};
-use crate::mapreduce::record::Record;
+use crate::mapreduce::merge::{kway_merge, kway_merge_fixed, merge_round_plan, FixedRun, Run};
+use crate::mapreduce::record::{
+    fixed_frame, to_fixed_parts, FixedRec, Record, FIXED_WIRE_BYTES,
+};
+use crate::util::radix;
 
 /// User map logic. `finish` runs once after the split is exhausted (the
 /// scheme uses it to flush aggregated KV puts).
 pub trait MapTask: Send {
     fn map(&mut self, rec: &Record, emit: &mut dyn FnMut(Record));
     fn finish(&mut self, _emit: &mut dyn FnMut(Record)) {}
+
+    /// Fixed-width emission: like [`map`](MapTask::map) but feeding
+    /// packed `(key, value)` u64 pairs straight into the fixed-width
+    /// shuffle, with no `Record` allocation. The default adapts through
+    /// `map`, so any task whose records are 8 B + 8 B runs on the fast
+    /// path unchanged; hot mappers override it.
+    fn map_fixed(&mut self, rec: &Record, emit: &mut dyn FnMut(u64, u64)) {
+        self.map(rec, &mut |r| {
+            let (k, v) = to_fixed_parts(&r);
+            emit(k, v)
+        });
+    }
+
+    /// Fixed-width counterpart of [`finish`](MapTask::finish).
+    fn finish_fixed(&mut self, emit: &mut dyn FnMut(u64, u64)) {
+        self.finish(&mut |r| {
+            let (k, v) = to_fixed_parts(&r);
+            emit(k, v)
+        });
+    }
 }
 
 /// Blanket impl so simple mappers can be plain closures.
@@ -75,6 +98,31 @@ fn write_spill(
     Ok(SpillFile { path, segments, bytes: offset })
 }
 
+/// Write already-sorted fixed-width records as a spill file. Emits the
+/// same 24 B frames (and therefore the same segment offsets and ledger
+/// bytes) as [`write_spill`] over the equivalent generic records.
+fn write_spill_fixed(
+    path: PathBuf,
+    n_partitions: usize,
+    recs: &[FixedRec],
+) -> io::Result<SpillFile> {
+    let mut segments = vec![Segment::default(); n_partitions];
+    let mut w = BufWriter::new(File::create(&path)?);
+    let mut offset = 0u64;
+    for rec in recs {
+        let seg = &mut segments[rec.partition as usize];
+        if seg.records == 0 {
+            seg.offset = offset;
+        }
+        w.write_all(&fixed_frame(rec.key, rec.value))?;
+        seg.bytes += FIXED_WIRE_BYTES;
+        seg.records += 1;
+        offset += FIXED_WIRE_BYTES;
+    }
+    w.flush()?;
+    Ok(SpillFile { path, segments, bytes: offset })
+}
+
 /// Merge several spill files into one (per-partition k-way merges written
 /// sequentially). Byte counts go to the given channels on `ledger`.
 pub fn merge_spills(
@@ -105,6 +153,43 @@ pub fn merge_spills(
             seg.bytes += b;
             seg.records += 1;
             offset += b;
+            Ok(())
+        })?;
+    }
+    w.flush()?;
+    ledger.add(write_ch, offset);
+    Ok(SpillFile { path: out_path, segments, bytes: offset })
+}
+
+/// [`merge_spills`] over fixed-width runs: identical bytes and ledger
+/// charges, with loser-tree merges and strided segment readers.
+pub fn merge_spills_fixed(
+    spills: &[SpillFile],
+    out_path: PathBuf,
+    ledger: &Ledger,
+    read_ch: Channel,
+    write_ch: Channel,
+) -> io::Result<SpillFile> {
+    let n_partitions = spills[0].segments.len();
+    let mut segments = vec![Segment::default(); n_partitions];
+    let mut offset = 0u64;
+    let mut w = BufWriter::new(File::create(&out_path)?);
+    for p in 0..n_partitions {
+        let mut runs = Vec::new();
+        for s in spills {
+            let seg = s.segments[p];
+            if seg.records > 0 {
+                runs.push(FixedRun::from_segment(&s.path, seg.offset, seg.records)?);
+                ledger.add(read_ch, seg.bytes);
+            }
+        }
+        let seg = &mut segments[p];
+        seg.offset = offset;
+        kway_merge_fixed(runs, |key, val| {
+            w.write_all(&fixed_frame(key, val))?;
+            seg.bytes += FIXED_WIRE_BYTES;
+            seg.records += 1;
+            offset += FIXED_WIRE_BYTES;
             Ok(())
         })?;
     }
@@ -194,14 +279,38 @@ pub fn run_map_task(
     stats.spills = spills.len() as u64;
 
     // ---- merge spills into the final map output (Fig. 3) ----
-    let output = match spills.len() {
+    let output =
+        finalize_map_output(task_id, spills, n_partitions, conf, ledger, dir, &merge_spills)?;
+    Ok((output, stats))
+}
+
+/// Signature shared by [`merge_spills`] and [`merge_spills_fixed`].
+type SpillMergeFn =
+    dyn Fn(&[SpillFile], PathBuf, &Ledger, Channel, Channel) -> io::Result<SpillFile>;
+
+/// Merge a task's spill files into the final map output (Fig. 3):
+/// 0 spills = empty output, 1 spill IS the output (no merge I/O),
+/// otherwise intermediate rounds past the merge factor then one final
+/// merge. `merge` is [`merge_spills`] or [`merge_spills_fixed`]; both
+/// charge the ledger identically, so the paper's R/W units hold on
+/// either path.
+fn finalize_map_output(
+    task_id: usize,
+    mut spills: Vec<SpillFile>,
+    n_partitions: usize,
+    conf: &JobConf,
+    ledger: &Arc<Ledger>,
+    dir: &std::path::Path,
+    merge: &SpillMergeFn,
+) -> io::Result<SpillFile> {
+    match spills.len() {
         0 => {
             // empty output: zero-length file with empty segments
             let path = dir.join(format!("map{task_id}_out"));
             File::create(&path)?;
-            SpillFile { path, segments: vec![Segment::default(); n_partitions], bytes: 0 }
+            Ok(SpillFile { path, segments: vec![Segment::default(); n_partitions], bytes: 0 })
         }
-        1 => spills.pop().unwrap(), // single spill IS the output: no merge I/O
+        1 => Ok(spills.pop().unwrap()),
         _ => {
             // intermediate rounds if spill count exceeds the merge factor
             let mut files = spills;
@@ -218,7 +327,7 @@ pub fn run_map_task(
                     let group: Vec<SpillFile> = it.by_ref().take(g).collect();
                     let path = dir.join(format!("map{task_id}_imerge{scratch}"));
                     scratch += 1;
-                    let m = merge_spills(
+                    let m = merge(
                         &group,
                         path,
                         ledger,
@@ -234,7 +343,7 @@ pub fn run_map_task(
                 files = merged;
             }
             let path = dir.join(format!("map{task_id}_out"));
-            let out = merge_spills(
+            let out = merge(
                 &files,
                 path,
                 ledger,
@@ -244,9 +353,100 @@ pub fn run_map_task(
             for s in files {
                 s.remove();
             }
-            out
+            Ok(out)
         }
+    }
+}
+
+/// Execute one map attempt over `split` on the fixed-width fast path:
+/// the spill buffer holds packed [`FixedRec`]s (no per-record heap
+/// allocation), spills are LSD-radix sorted on (partition, key), and
+/// spill merging runs on the loser tree. Wire bytes, segment layout,
+/// ledger charges, and stats are identical to [`run_map_task`] over the
+/// equivalent 8 B + 8 B records — proven in `tests/shuffle_equivalence`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_map_task_fixed(
+    task_id: usize,
+    split: &[Record],
+    task: &mut dyn MapTask,
+    conf: &JobConf,
+    partitioner: &(dyn Fn(&[u8]) -> u32 + Sync),
+    ledger: &Arc<Ledger>,
+    dir: &std::path::Path,
+) -> io::Result<(SpillFile, MapTaskStats)> {
+    let n_partitions = conf.n_reducers;
+    let mut stats = MapTaskStats::default();
+    let mut spills: Vec<SpillFile> = Vec::new();
+    let mut buffer: Vec<FixedRec> = Vec::new();
+    let mut buffered: u64 = 0;
+    let trigger = conf.spill_trigger();
+    // radix scratch survives across spills: steady state allocates
+    // nothing per record or per spill
+    let mut scratch: Vec<FixedRec> = Vec::new();
+
+    let spill_now = |buffer: &mut Vec<FixedRec>,
+                         scratch: &mut Vec<FixedRec>,
+                         buffered: &mut u64,
+                         spills: &mut Vec<SpillFile>|
+     -> io::Result<()> {
+        if buffer.is_empty() {
+            return Ok(());
+        }
+        // stable LSD radix on (partition, key): same order (and same
+        // equal-key emission-order ties) as the generic stable sort.
+        radix::sort_spill(buffer, scratch);
+        let path = dir.join(format!("map{task_id}_spill{}", spills.len()));
+        let sf = write_spill_fixed(path, n_partitions, buffer)?;
+        ledger.add(Channel::MapLocalWrite, sf.bytes);
+        spills.push(sf);
+        buffer.clear();
+        *buffered = 0;
+        Ok(())
     };
+
+    {
+        let mut pending: Vec<(u64, u64)> = Vec::new();
+        let absorb = |pending: &mut Vec<(u64, u64)>,
+                          buffer: &mut Vec<FixedRec>,
+                          scratch: &mut Vec<FixedRec>,
+                          buffered: &mut u64,
+                          spills: &mut Vec<SpillFile>,
+                          stats: &mut MapTaskStats|
+         -> io::Result<()> {
+            for (key, value) in pending.drain(..) {
+                let p = partitioner(&key.to_be_bytes());
+                debug_assert!((p as usize) < n_partitions);
+                stats.output_records += 1;
+                stats.output_bytes += FIXED_WIRE_BYTES;
+                *buffered += FIXED_WIRE_BYTES;
+                buffer.push(FixedRec { partition: p, key, value });
+                if *buffered >= trigger {
+                    spill_now(buffer, scratch, buffered, spills)?;
+                }
+            }
+            Ok(())
+        };
+        for rec in split {
+            stats.input_records += 1;
+            stats.input_bytes += rec.wire_bytes();
+            task.map_fixed(rec, &mut |k, v| pending.push((k, v)));
+            absorb(&mut pending, &mut buffer, &mut scratch, &mut buffered, &mut spills, &mut stats)?;
+        }
+        task.finish_fixed(&mut |k, v| pending.push((k, v)));
+        absorb(&mut pending, &mut buffer, &mut scratch, &mut buffered, &mut spills, &mut stats)?;
+    }
+    spill_now(&mut buffer, &mut scratch, &mut buffered, &mut spills)?;
+    stats.spills = spills.len() as u64;
+
+    let output = finalize_map_output(
+        task_id,
+        spills,
+        n_partitions,
+        conf,
+        ledger,
+        dir,
+        &merge_spills_fixed,
+    )?;
     Ok((output, stats))
 }
 
@@ -314,6 +514,52 @@ mod tests {
         assert!((w / out_b - 2.0).abs() < 1e-9, "w/out={}", w / out_b);
         assert!((r / out_b - 1.0).abs() < 1e-9);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fixed_map_task_is_byte_identical_to_generic() {
+        // same multi-spill workload down both paths: identical output
+        // file bytes, segments, stats, and ledger totals
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let split: Vec<Record> = (0..600)
+            .map(|_| {
+                Record::new(
+                    rng.below(1 << 40).to_be_bytes().to_vec(),
+                    rng.next_u64().to_be_bytes().to_vec(),
+                )
+            })
+            .collect();
+        let conf = JobConf {
+            io_sort_bytes: 3 << 10, // several spills -> real merge rounds
+            io_sort_factor: 3,
+            n_reducers: 3,
+            ..Default::default()
+        };
+        let part = |k: &[u8]| (k[7] as u32) % 3;
+        let mut results = Vec::new();
+        for fixed in [false, true] {
+            let dir = tmpdir(if fixed { "eqf" } else { "eqg" });
+            let ledger = Ledger::new();
+            let mut mapper = |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
+            let task: &mut dyn MapTask = &mut mapper;
+            let (out, stats) = if fixed {
+                run_map_task_fixed(9, &split, task, &conf, &part, &ledger, &dir).unwrap()
+            } else {
+                run_map_task(9, &split, task, &conf, &part, &ledger, &dir).unwrap()
+            };
+            assert!(stats.spills > 3, "want merge rounds, got {} spills", stats.spills);
+            let bytes = std::fs::read(&out.path).unwrap();
+            results.push((
+                bytes,
+                out.segments.clone(),
+                stats.output_bytes,
+                ledger.get(Channel::MapLocalRead),
+                ledger.get(Channel::MapLocalWrite),
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        assert_eq!(results[0], results[1]);
     }
 
     #[test]

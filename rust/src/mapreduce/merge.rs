@@ -4,10 +4,10 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::fs::File;
-use std::io::{self, BufReader, BufWriter, Write};
+use std::io::{self, BufReader, BufWriter, Read as IoRead, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
-use crate::mapreduce::record::Record;
+use crate::mapreduce::record::{decode_fixed_frame, fixed_frame, Record, FIXED_WIRE_BYTES};
 
 /// A sorted run of records: either an open spill-file segment or an
 /// in-memory vector.
@@ -25,9 +25,8 @@ impl Run {
 
     /// Open a per-partition segment: `offset` bytes in, `records` records.
     pub fn from_segment(p: &Path, offset: u64, records: u64) -> io::Result<Run> {
-        use std::io::Seek;
         let mut f = File::open(p)?;
-        f.seek(std::io::SeekFrom::Start(offset))?;
+        f.seek(SeekFrom::Start(offset))?;
         Ok(Run::Segment(BufReader::new(f), records))
     }
 
@@ -98,6 +97,161 @@ pub fn kway_merge(
     Ok(())
 }
 
+// ---------------- fixed-width fast path ----------------
+
+/// Frames per block read of a fixed-width run (24 KiB blocks).
+const FIXED_READ_FRAMES: usize = 1024;
+
+/// Block reader over a stream of 24 B fixed-width frames. The known
+/// stride lets it refill one reusable buffer with whole frames — no
+/// per-record allocation, no framing scan, no BufReader indirection.
+pub struct FixedReader {
+    file: File,
+    /// Frames not yet read from the file.
+    remaining: u64,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FixedReader {
+    fn open(path: &Path, offset: u64, records: u64) -> io::Result<Self> {
+        let mut file = File::open(path)?;
+        if offset > 0 {
+            file.seek(SeekFrom::Start(offset))?;
+        }
+        Ok(Self { file, remaining: records, buf: Vec::new(), pos: 0 })
+    }
+
+    fn next(&mut self) -> io::Result<Option<(u64, u64)>> {
+        const FRAME: usize = FIXED_WIRE_BYTES as usize;
+        if self.pos == self.buf.len() {
+            if self.remaining == 0 {
+                return Ok(None);
+            }
+            let frames = (self.remaining as usize).min(FIXED_READ_FRAMES);
+            self.buf.resize(frames * FRAME, 0);
+            self.file.read_exact(&mut self.buf)?;
+            self.remaining -= frames as u64;
+            self.pos = 0;
+        }
+        let kv = decode_fixed_frame(&self.buf[self.pos..self.pos + FRAME])?;
+        self.pos += FRAME;
+        Ok(Some(kv))
+    }
+}
+
+/// A sorted run of fixed-width (key, value) records — the fast-path
+/// counterpart of [`Run`], reading the same on-disk bytes.
+pub enum FixedRun {
+    /// On-disk frames: a spill segment or a whole file.
+    File(FixedReader),
+    /// An in-memory vector with a cursor.
+    Mem(Vec<(u64, u64)>, usize),
+}
+
+impl FixedRun {
+    /// Open a whole spill file of fixed frames.
+    pub fn from_path(p: &Path) -> io::Result<FixedRun> {
+        let len = std::fs::metadata(p)?.len();
+        if len % FIXED_WIRE_BYTES != 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("file length {len} is not a multiple of the 24 B record stride"),
+            ));
+        }
+        Self::from_segment(p, 0, len / FIXED_WIRE_BYTES)
+    }
+
+    /// Open a per-partition segment: `offset` bytes in, `records` frames.
+    pub fn from_segment(p: &Path, offset: u64, records: u64) -> io::Result<FixedRun> {
+        Ok(FixedRun::File(FixedReader::open(p, offset, records)?))
+    }
+
+    /// Wrap an in-memory sorted vector.
+    pub fn from_vec(v: Vec<(u64, u64)>) -> FixedRun {
+        FixedRun::Mem(v, 0)
+    }
+
+    /// Next (key, value) pair, or `None` at end of run.
+    pub fn next_pair(&mut self) -> io::Result<Option<(u64, u64)>> {
+        match self {
+            FixedRun::File(r) => r.next(),
+            FixedRun::Mem(v, cur) => {
+                if *cur < v.len() {
+                    *cur += 1;
+                    Ok(Some(v[*cur - 1]))
+                } else {
+                    Ok(None)
+                }
+            }
+        }
+    }
+}
+
+/// K-way merge of fixed-width runs on a loser tree, ascending by
+/// (key, run index) — exactly [`kway_merge`]'s order and tie rule over
+/// the equivalent generic records. The tree replays one leaf-to-root
+/// path (⌈log₂ k⌉ comparisons) per record, against the binary heap's
+/// pop+push, and moves only `(u64, u64)` pairs — zero per-record
+/// allocation.
+pub fn kway_merge_fixed(
+    mut runs: Vec<FixedRun>,
+    mut sink: impl FnMut(u64, u64) -> io::Result<()>,
+) -> io::Result<()> {
+    let k = runs.len();
+    if k == 0 {
+        return Ok(());
+    }
+    let mut heads: Vec<Option<(u64, u64)>> = Vec::with_capacity(k);
+    for run in runs.iter_mut() {
+        heads.push(run.next_pair()?);
+    }
+    // Does leaf `a` win (sort before) leaf `b`? Exhausted runs lose to
+    // everything; ties break toward the lower run index.
+    fn beats(heads: &[Option<(u64, u64)>], a: usize, b: usize) -> bool {
+        match (heads[a], heads[b]) {
+            (Some((ka, _)), Some((kb, _))) => (ka, a) < (kb, b),
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => a < b,
+        }
+    }
+    // Build the tournament bottom-up: leaf j sits at node k + j, node i
+    // has children 2i and 2i+1. Internal node i keeps the loser of its
+    // subtree in `losers[i]`; `losers[0]` holds the overall winner.
+    let mut losers = vec![0usize; k];
+    {
+        let mut winners = vec![0usize; 2 * k];
+        for (j, w) in winners[k..].iter_mut().enumerate() {
+            *w = j;
+        }
+        for node in (1..k).rev() {
+            let (l, r) = (winners[2 * node], winners[2 * node + 1]);
+            let (win, lose) = if beats(&heads, l, r) { (l, r) } else { (r, l) };
+            winners[node] = win;
+            losers[node] = lose;
+        }
+        losers[0] = winners[1];
+    }
+    loop {
+        let w = losers[0];
+        let Some((key, val)) = heads[w] else { break };
+        sink(key, val)?;
+        heads[w] = runs[w].next_pair()?;
+        // replay leaf w's path to the root
+        let mut cur = w;
+        let mut node = (k + w) / 2;
+        while node >= 1 {
+            if beats(&heads, losers[node], cur) {
+                std::mem::swap(&mut losers[node], &mut cur);
+            }
+            node /= 2;
+        }
+        losers[0] = cur;
+    }
+    Ok(())
+}
+
 /// The paper's intermediate merge-round plan (§III, Fig. 4 discussion):
 /// with `n` on-disk files and merge width `factor`, merge the minimum
 /// number of files so that at most `factor` remain for the final merge.
@@ -132,11 +286,74 @@ pub fn merge_round_plan(n: usize, factor: usize) -> Vec<usize> {
 /// remain. `scratch` names new files; `on_read`/`on_write` receive byte
 /// counts for the footprint ledger. Returns the surviving file list.
 pub fn run_merge_rounds(
+    files: Vec<PathBuf>,
+    factor: usize,
+    scratch: &mut impl FnMut(usize) -> PathBuf,
+    on_read: &mut impl FnMut(u64),
+    on_write: &mut impl FnMut(u64),
+) -> io::Result<Vec<PathBuf>> {
+    run_merge_rounds_impl(files, factor, scratch, on_read, on_write, &mut |group, out_path| {
+        let mut in_bytes = 0u64;
+        let runs = group
+            .iter()
+            .map(|p| {
+                in_bytes += std::fs::metadata(p)?.len();
+                Run::from_path(p)
+            })
+            .collect::<io::Result<Vec<_>>>()?;
+        let mut out_bytes = 0u64;
+        let mut w = BufWriter::new(File::create(out_path)?);
+        kway_merge(runs, |rec| {
+            out_bytes += rec.wire_bytes();
+            rec.write_to(&mut w)
+        })?;
+        w.flush()?;
+        Ok((in_bytes, out_bytes))
+    })
+}
+
+/// [`run_merge_rounds`] over fixed-width runs: the same round plan and
+/// byte accounting, with loser-tree merges and strided readers.
+pub fn run_merge_rounds_fixed(
+    files: Vec<PathBuf>,
+    factor: usize,
+    scratch: &mut impl FnMut(usize) -> PathBuf,
+    on_read: &mut impl FnMut(u64),
+    on_write: &mut impl FnMut(u64),
+) -> io::Result<Vec<PathBuf>> {
+    run_merge_rounds_impl(files, factor, scratch, on_read, on_write, &mut |group, out_path| {
+        let mut in_bytes = 0u64;
+        let runs = group
+            .iter()
+            .map(|p| {
+                in_bytes += std::fs::metadata(p)?.len();
+                FixedRun::from_path(p)
+            })
+            .collect::<io::Result<Vec<_>>>()?;
+        let mut out_bytes = 0u64;
+        let mut w = BufWriter::new(File::create(out_path)?);
+        kway_merge_fixed(runs, |key, val| {
+            out_bytes += FIXED_WIRE_BYTES;
+            w.write_all(&fixed_frame(key, val))
+        })?;
+        w.flush()?;
+        Ok((in_bytes, out_bytes))
+    })
+}
+
+/// Merges one file group to the given output, returning (read, written)
+/// bytes — the pluggable heart of a merge round.
+type GroupMergeFn<'a> = &'a mut dyn FnMut(&[PathBuf], &Path) -> io::Result<(u64, u64)>;
+
+/// Shared merge-round driver: plan, group, merge (via `merge_group`,
+/// which returns the group's (read, written) bytes), delete, repeat.
+fn run_merge_rounds_impl(
     mut files: Vec<PathBuf>,
     factor: usize,
     scratch: &mut impl FnMut(usize) -> PathBuf,
     on_read: &mut impl FnMut(u64),
     on_write: &mut impl FnMut(u64),
+    merge_group: GroupMergeFn<'_>,
 ) -> io::Result<Vec<PathBuf>> {
     let mut round = 0usize;
     loop {
@@ -151,24 +368,8 @@ pub fn run_merge_rounds(
         let mut it = files.into_iter();
         for (gi, &gsize) in plan.iter().enumerate() {
             let group: Vec<PathBuf> = it.by_ref().take(gsize).collect();
-            let mut in_bytes = 0u64;
-            let runs = group
-                .iter()
-                .map(|p| {
-                    in_bytes += std::fs::metadata(p)?.len();
-                    Run::from_path(p)
-                })
-                .collect::<io::Result<Vec<_>>>()?;
             let out_path = scratch(round * 1000 + gi);
-            let mut out_bytes = 0u64;
-            {
-                let mut w = BufWriter::new(File::create(&out_path)?);
-                kway_merge(runs, |rec| {
-                    out_bytes += rec.wire_bytes();
-                    rec.write_to(&mut w)
-                })?;
-                w.flush()?;
-            }
+            let (in_bytes, out_bytes) = merge_group(&group, &out_path)?;
             on_read(in_bytes);
             on_write(out_bytes);
             for p in group {
@@ -245,6 +446,154 @@ mod tests {
         // tie on "c": run 0 first
         assert_eq!(got[2].value, b"2");
         assert_eq!(got[3].value, b"4");
+    }
+
+    #[test]
+    fn loser_tree_matches_heap_merge() {
+        // same runs through both merges: order and ties must agree
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let n_runs = 7;
+        let mut fixed_runs = Vec::new();
+        let mut generic_runs = Vec::new();
+        for r in 0..n_runs {
+            let mut v: Vec<(u64, u64)> = (0..200)
+                .map(|i| (rng.below(50), (r * 1000 + i) as u64))
+                .collect();
+            v.sort_unstable();
+            generic_runs.push(Run::from_vec(
+                v.iter()
+                    .map(|&(k, val)| {
+                        Record::new(k.to_be_bytes().to_vec(), val.to_be_bytes().to_vec())
+                    })
+                    .collect(),
+            ));
+            fixed_runs.push(FixedRun::from_vec(v));
+        }
+        let mut got_fixed = Vec::new();
+        kway_merge_fixed(fixed_runs, |k, v| {
+            got_fixed.push((k, v));
+            Ok(())
+        })
+        .unwrap();
+        let mut got_generic = Vec::new();
+        kway_merge(generic_runs, |r| {
+            got_generic.push((
+                u64::from_be_bytes(r.key[..8].try_into().unwrap()),
+                u64::from_be_bytes(r.value[..8].try_into().unwrap()),
+            ));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got_fixed.len(), n_runs * 200);
+        assert_eq!(got_fixed, got_generic);
+    }
+
+    #[test]
+    fn loser_tree_edge_cases() {
+        // zero runs, one run, empty runs mixed with non-empty
+        kway_merge_fixed(Vec::new(), |_, _| panic!("no records")).unwrap();
+        let mut got = Vec::new();
+        kway_merge_fixed(vec![FixedRun::from_vec(vec![(3, 30), (5, 50)])], |k, v| {
+            got.push((k, v));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, vec![(3, 30), (5, 50)]);
+        let runs = vec![
+            FixedRun::from_vec(Vec::new()),
+            FixedRun::from_vec(vec![(2, 1)]),
+            FixedRun::from_vec(Vec::new()),
+            FixedRun::from_vec(vec![(1, 2)]),
+        ];
+        let mut got = Vec::new();
+        kway_merge_fixed(runs, |k, v| {
+            got.push((k, v));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, vec![(1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn fixed_reader_roundtrips_segments() {
+        // frames written through the generic writer read back through
+        // the strided reader, including at a non-zero offset
+        let dir = std::env::temp_dir().join(format!("samr-fixedrun-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("frames");
+        let n = 2500u64; // > FIXED_READ_FRAMES: several refills
+        {
+            let mut w = BufWriter::new(File::create(&p).unwrap());
+            for i in 0..n {
+                Record::new(i.to_be_bytes().to_vec(), (i * 2).to_be_bytes().to_vec())
+                    .write_to(&mut w)
+                    .unwrap();
+            }
+            w.flush().unwrap();
+        }
+        let mut run = FixedRun::from_path(&p).unwrap();
+        let mut i = 0u64;
+        while let Some((k, v)) = run.next_pair().unwrap() {
+            assert_eq!((k, v), (i, i * 2));
+            i += 1;
+        }
+        assert_eq!(i, n);
+        // segment starting 100 records in, 50 records long
+        let mut run = FixedRun::from_segment(&p, 100 * FIXED_WIRE_BYTES, 50).unwrap();
+        let mut got = Vec::new();
+        while let Some(kv) = run.next_pair().unwrap() {
+            got.push(kv);
+        }
+        assert_eq!(got.len(), 50);
+        assert_eq!(got[0], (100, 200));
+        assert_eq!(got[49], (149, 298));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fixed_merge_rounds_match_generic_bytes() {
+        let dir = std::env::temp_dir().join(format!("samr-fmerge-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let make_files = |tag: &str| -> Vec<PathBuf> {
+            (0..25)
+                .map(|i| {
+                    let p = dir.join(format!("{tag}{i}"));
+                    let mut w = BufWriter::new(File::create(&p).unwrap());
+                    w.write_all(&fixed_frame(i as u64, 7)).unwrap();
+                    w.flush().unwrap();
+                    p
+                })
+                .collect()
+        };
+        let mut totals = Vec::new();
+        for fixed in [false, true] {
+            let files = make_files(if fixed { "f" } else { "g" });
+            let mut scratch_n = 0;
+            let (mut read, mut write) = (0u64, 0u64);
+            let tag = if fixed { "fs" } else { "gs" };
+            let mut scratch = |_: usize| {
+                scratch_n += 1;
+                dir.join(format!("{tag}{scratch_n}"))
+            };
+            let out = if fixed {
+                run_merge_rounds_fixed(files, 4, &mut scratch, &mut |b| read += b, &mut |b| {
+                    write += b
+                })
+                .unwrap()
+            } else {
+                run_merge_rounds(files, 4, &mut scratch, &mut |b| read += b, &mut |b| write += b)
+                    .unwrap()
+            };
+            assert!(out.len() <= 4);
+            // surviving files hold identical bytes in both modes
+            let mut contents: Vec<Vec<u8>> =
+                out.iter().map(|p| std::fs::read(p).unwrap()).collect();
+            contents.sort();
+            totals.push((read, write, contents));
+        }
+        assert_eq!(totals[0], totals[1], "fixed and generic rounds must agree");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

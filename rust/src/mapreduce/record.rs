@@ -40,12 +40,96 @@ impl Record {
         };
         r.read_exact(&mut len4)?;
         let vlen = u32::from_be_bytes(len4);
+        if klen > MAX_FIELD_BYTES || vlen > MAX_FIELD_BYTES {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("record field length {} exceeds cap {MAX_FIELD_BYTES} (corrupt spill?)",
+                    klen.max(vlen)),
+            ));
+        }
         let mut key = vec![0u8; klen as usize];
         r.read_exact(&mut key)?;
         let mut value = vec![0u8; vlen as usize];
         r.read_exact(&mut value)?;
         Ok(Some(Record { key, value }))
     }
+}
+
+/// Upper bound on a serialized key or value length. Real records are a
+/// few hundred bytes at most (reads, suffix texts, fixed index pairs);
+/// a larger prefix means a corrupt or truncated spill file, and must
+/// not be trusted to drive a multi-GB allocation.
+pub const MAX_FIELD_BYTES: u32 = 64 << 20;
+
+// ---------------- fixed-width fast path ----------------
+
+/// Fixed-width fast-path record: the scheme's 24 B (prefix-key,
+/// packed-index) pair plus its shuffle partition, packed into 20 bytes
+/// of plain integers instead of two heap-allocated byte vectors. The
+/// on-disk frame ([`fixed_frame`]) is byte-identical to a generic
+/// [`Record`] with an 8-byte key and 8-byte value, so spill files,
+/// segment offsets, and every footprint-ledger total are unchanged —
+/// only CPU time and allocations drop.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FixedRec {
+    /// Shuffle partition (computed once at buffer time).
+    pub partition: u32,
+    /// 8-byte big-endian key, held as the numerically equal `u64`
+    /// (byte-lexicographic order over the frame == unsigned order here).
+    pub key: u64,
+    /// 8-byte big-endian value (the packed suffix index).
+    pub value: u64,
+}
+
+/// On-disk frame size of a fixed record: 4+4 length prefixes + 8 B key
+/// + 8 B value — identical to `Record::wire_bytes()` for such a record.
+pub const FIXED_WIRE_BYTES: u64 = 24;
+
+/// Serialize one fixed record into its 24-byte frame, byte-identical to
+/// `Record::write_to` for an 8-byte key and value.
+#[inline]
+pub fn fixed_frame(key: u64, value: u64) -> [u8; FIXED_WIRE_BYTES as usize] {
+    let mut f = [0u8; FIXED_WIRE_BYTES as usize];
+    f[3] = 8; // klen = 8, big-endian
+    f[7] = 8; // vlen = 8
+    f[8..16].copy_from_slice(&key.to_be_bytes());
+    f[16..24].copy_from_slice(&value.to_be_bytes());
+    f
+}
+
+/// Decode a 24-byte frame written by [`fixed_frame`]; any other framing
+/// means the bytes are not a fixed-width record stream.
+#[inline]
+pub fn decode_fixed_frame(f: &[u8]) -> io::Result<(u64, u64)> {
+    debug_assert_eq!(f.len(), FIXED_WIRE_BYTES as usize);
+    if f[..8] != [0, 0, 0, 8, 0, 0, 0, 8] {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "corrupt fixed-width record frame (framing is not 8+8)",
+        ));
+    }
+    Ok((
+        u64::from_be_bytes(f[8..16].try_into().expect("8-byte key")),
+        u64::from_be_bytes(f[16..24].try_into().expect("8-byte value")),
+    ))
+}
+
+/// Split a generic record into its fixed-width (key, value) parts.
+/// Panics unless the record is exactly 8 B + 8 B: jobs that opt into
+/// the fixed-width shuffle must emit only such records.
+#[inline]
+pub fn to_fixed_parts(rec: &Record) -> (u64, u64) {
+    let key: [u8; 8] = rec
+        .key
+        .as_slice()
+        .try_into()
+        .expect("fixed-width shuffle requires 8-byte keys");
+    let value: [u8; 8] = rec
+        .value
+        .as_slice()
+        .try_into()
+        .expect("fixed-width shuffle requires 8-byte values");
+    (u64::from_be_bytes(key), u64::from_be_bytes(value))
 }
 
 /// Order-preserving key encoding for non-negative i64 (scheme keys).
@@ -85,6 +169,47 @@ mod tests {
             got.push(r);
         }
         assert_eq!(got, recs);
+    }
+
+    #[test]
+    fn corrupt_length_prefix_is_invalid_data_not_alloc() {
+        // a huge klen must be rejected before any allocation happens
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_be_bytes()); // klen ~4 GB
+        buf.extend_from_slice(&8u32.to_be_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        let err = Record::read_from(&mut std::io::Cursor::new(buf)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // truncated-but-sane frames still surface as UnexpectedEof
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_be_bytes());
+        buf.extend_from_slice(&8u32.to_be_bytes());
+        buf.extend_from_slice(&[0u8; 3]); // missing 13 payload bytes
+        let err = Record::read_from(&mut std::io::Cursor::new(buf)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn fixed_frame_matches_generic_wire_format() {
+        let rec = Record::new(
+            0x0102030405060708u64.to_be_bytes().to_vec(),
+            0x1112131415161718u64.to_be_bytes().to_vec(),
+        );
+        let mut generic = Vec::new();
+        rec.write_to(&mut generic).unwrap();
+        let fixed = fixed_frame(0x0102030405060708, 0x1112131415161718);
+        assert_eq!(generic, fixed.to_vec());
+        assert_eq!(rec.wire_bytes(), FIXED_WIRE_BYTES);
+        let (k, v) = decode_fixed_frame(&fixed).unwrap();
+        assert_eq!((k, v), to_fixed_parts(&rec));
+    }
+
+    #[test]
+    fn decode_fixed_frame_rejects_foreign_framing() {
+        let mut f = fixed_frame(1, 2);
+        f[3] = 9; // klen = 9: not a fixed record
+        let err = decode_fixed_frame(&f).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
     }
 
     #[test]

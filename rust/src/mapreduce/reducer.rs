@@ -7,21 +7,35 @@
 //! 1.03 to 1.88 units as the input grows (Table III).
 
 use std::fs::File;
-use std::io::{self, BufWriter, Write};
+use std::io::{self, BufWriter, Read as IoRead, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::footprint::{Channel, Ledger};
 use crate::mapreduce::job::JobConf;
 use crate::mapreduce::mapper::{Segment, SpillFile};
-use crate::mapreduce::merge::{kway_merge, run_merge_rounds, Run};
-use crate::mapreduce::record::Record;
+use crate::mapreduce::merge::{
+    kway_merge, kway_merge_fixed, run_merge_rounds, run_merge_rounds_fixed, FixedRun, Run,
+};
+use crate::mapreduce::record::{fixed_frame, Record, FIXED_WIRE_BYTES};
 
 /// User reduce logic: one call per key group, then `finish` (the scheme
 /// flushes its accumulated sorting groups there).
 pub trait ReduceTask: Send {
     fn reduce(&mut self, key: &[u8], values: Vec<Vec<u8>>, out: &mut dyn FnMut(Record));
     fn finish(&mut self, _out: &mut dyn FnMut(Record)) {}
+
+    /// Fixed-width grouping: one call per key group of packed u64
+    /// values, borrowed from a buffer the merge loop reuses. The
+    /// default adapts to [`reduce`](ReduceTask::reduce) by re-encoding
+    /// the group; hot reducers override it to skip the conversion.
+    fn reduce_fixed(&mut self, key: u64, values: &[u64], out: &mut dyn FnMut(Record)) {
+        self.reduce(
+            &key.to_be_bytes(),
+            values.iter().map(|v| v.to_be_bytes().to_vec()).collect(),
+            out,
+        );
+    }
 }
 
 impl<F: FnMut(&[u8], Vec<Vec<u8>>, &mut dyn FnMut(Record)) + Send> ReduceTask for F {
@@ -185,6 +199,164 @@ fn merge_mem_to_disk(segments: Vec<Vec<Record>>, dst: &Path) -> io::Result<u64> 
     Ok(bytes)
 }
 
+// ---------------- fixed-width fast path ----------------
+
+/// Execute one reduce attempt on the fixed-width fast path: the same
+/// shuffle/merge pipeline as [`run_reduce_task`], but in-memory segments
+/// hold packed `(u64, u64)` pairs, every merge runs on the loser tree
+/// over strided 24 B readers, and key groups reach the task as borrowed
+/// `&[u64]` slices from one reused buffer — zero per-record allocation.
+/// Bytes on every ledger channel (and all stats) are identical to the
+/// generic path; see `tests/shuffle_equivalence`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_reduce_task_fixed(
+    task_id: usize,
+    partition: usize,
+    map_outputs: &[SpillFile],
+    task: &mut dyn ReduceTask,
+    conf: &JobConf,
+    ledger: &Arc<Ledger>,
+    dir: &Path,
+) -> io::Result<(Vec<Record>, ReduceTaskStats)> {
+    let mut stats = ReduceTaskStats::default();
+    let mut disk_files: Vec<PathBuf> = Vec::new();
+    let mut mem_segments: Vec<Vec<(u64, u64)>> = Vec::new();
+    let mut mem_bytes: u64 = 0;
+    let mut scratch = 0usize;
+    let seg_limit = conf.segment_memory_limit();
+    let merge_trigger = conf.merge_trigger();
+
+    // ---- shuffle: fetch this partition's segment from every mapper ----
+    for mo in map_outputs {
+        let seg: Segment = mo.segments[partition];
+        if seg.records == 0 {
+            continue;
+        }
+        ledger.add(Channel::Shuffle, seg.bytes);
+        stats.shuffled_bytes += seg.bytes;
+        stats.shuffled_records += seg.records;
+        if seg.bytes > seg_limit {
+            // oversized segment goes straight to local disk — the frames
+            // are contiguous, so this is one raw byte copy
+            let path = dir.join(format!("red{task_id}_seg{scratch}"));
+            scratch += 1;
+            copy_segment_raw(&mo.path, seg, &path)?;
+            ledger.add(Channel::ReduceLocalWrite, seg.bytes);
+            stats.disk_segments += 1;
+            disk_files.push(path);
+        } else {
+            let mut recs: Vec<(u64, u64)> = Vec::with_capacity(seg.records as usize);
+            let mut run = FixedRun::from_segment(&mo.path, seg.offset, seg.records)?;
+            while let Some(kv) = run.next_pair()? {
+                recs.push(kv);
+            }
+            mem_bytes += seg.bytes;
+            mem_segments.push(recs);
+            if mem_bytes >= merge_trigger {
+                // memory-to-disk merge
+                let path = dir.join(format!("red{task_id}_memmerge{scratch}"));
+                scratch += 1;
+                let written =
+                    merge_mem_to_disk_fixed(std::mem::take(&mut mem_segments), &path)?;
+                ledger.add(Channel::ReduceLocalWrite, written);
+                stats.mem_merges += 1;
+                mem_bytes = 0;
+                disk_files.push(path);
+            }
+        }
+    }
+
+    // ---- intermediate on-disk merge rounds (io.sort.factor) ----
+    let pre_r = ledger.get(Channel::ReduceLocalRead);
+    let disk_files = run_merge_rounds_fixed(
+        disk_files,
+        conf.io_sort_factor,
+        &mut |i| dir.join(format!("red{task_id}_round{i}")),
+        &mut |b| ledger.add(Channel::ReduceLocalRead, b),
+        &mut |b| ledger.add(Channel::ReduceLocalWrite, b),
+    )?;
+    stats.merge_rounds_bytes = ledger.get(Channel::ReduceLocalRead) - pre_r;
+
+    // ---- final merge feeding reduce(), grouped by key ----
+    let mut runs: Vec<FixedRun> = Vec::new();
+    for p in &disk_files {
+        ledger.add(Channel::ReduceLocalRead, std::fs::metadata(p)?.len());
+        runs.push(FixedRun::from_path(p)?);
+    }
+    for seg in mem_segments {
+        runs.push(FixedRun::from_vec(seg));
+    }
+
+    let mut output: Vec<Record> = Vec::new();
+    {
+        let mut out = |rec: Record| {
+            stats.output_records += 1;
+            stats.output_bytes += rec.wire_bytes();
+            output.push(rec);
+        };
+        let mut cur_key: Option<u64> = None;
+        let mut vals: Vec<u64> = Vec::new(); // reused across groups
+        kway_merge_fixed(runs, |key, val| {
+            match cur_key {
+                Some(k) if k == key => vals.push(val),
+                Some(k) => {
+                    stats.groups += 1;
+                    stats.max_group = stats.max_group.max(vals.len() as u64);
+                    task.reduce_fixed(k, &vals, &mut out);
+                    vals.clear();
+                    cur_key = Some(key);
+                    vals.push(val);
+                }
+                None => {
+                    cur_key = Some(key);
+                    vals.push(val);
+                }
+            }
+            Ok(())
+        })?;
+        if let Some(k) = cur_key {
+            stats.groups += 1;
+            stats.max_group = stats.max_group.max(vals.len() as u64);
+            task.reduce_fixed(k, &vals, &mut out);
+        }
+        task.finish(&mut out);
+    }
+    for p in disk_files {
+        let _ = std::fs::remove_file(p);
+    }
+    Ok((output, stats))
+}
+
+/// Copy one fixed-width map-output segment to its own file. Records are
+/// already sorted and frames are contiguous, so this is a raw byte copy
+/// producing exactly the bytes [`copy_segment`] re-encodes.
+fn copy_segment_raw(src: &Path, seg: Segment, dst: &Path) -> io::Result<()> {
+    let mut f = File::open(src)?;
+    f.seek(SeekFrom::Start(seg.offset))?;
+    let mut r = f.take(seg.bytes);
+    let mut w = BufWriter::new(File::create(dst)?);
+    let copied = io::copy(&mut r, &mut w)?;
+    if copied != seg.bytes {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            format!("segment truncated: copied {copied} of {} bytes", seg.bytes),
+        ));
+    }
+    w.flush()
+}
+
+fn merge_mem_to_disk_fixed(segments: Vec<Vec<(u64, u64)>>, dst: &Path) -> io::Result<u64> {
+    let runs: Vec<FixedRun> = segments.into_iter().map(FixedRun::from_vec).collect();
+    let mut w = BufWriter::new(File::create(dst)?);
+    let mut bytes = 0u64;
+    kway_merge_fixed(runs, |key, val| {
+        bytes += FIXED_WIRE_BYTES;
+        w.write_all(&fixed_frame(key, val))
+    })?;
+    w.flush()?;
+    Ok(bytes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +435,62 @@ mod tests {
         // paper Case 1 behaviour: ~1W (all spilled) and ~1R (final merge)
         assert!(w > 0 && r == w, "r={r} w={w}");
         assert!(w >= stats.shuffled_bytes, "everything shuffled must hit disk");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fixed_reduce_task_matches_generic() {
+        // same map outputs (8 B keys + values) through both reduce
+        // paths, with memory tight enough to force spills and rounds
+        let dir = tmpdir("fixedeq");
+        let conf = JobConf {
+            n_reducers: 2,
+            reducer_heap_bytes: 8 << 10,
+            io_sort_factor: 3,
+            ..JobConf::default()
+        };
+        let ledger = Ledger::new();
+        let maps: Vec<SpillFile> = (0..4)
+            .map(|m| {
+                let split: Vec<Record> = (0..300)
+                    .map(|i| {
+                        let k = ((i * 7919 + m * 13) % 500) as u64;
+                        Record::new(k.to_be_bytes().to_vec(), (i as u64).to_be_bytes().to_vec())
+                    })
+                    .collect();
+                let mut mapper =
+                    |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
+                let task: &mut dyn MapTask = &mut mapper;
+                run_map_task(m, &split, task, &conf, &move |k| (k[7] as u32) % 2, &ledger, &dir)
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        let mut results = Vec::new();
+        for fixed in [false, true] {
+            let ledger = Ledger::new();
+            let mut seen: Vec<(Vec<u8>, Vec<Vec<u8>>)> = Vec::new();
+            let mut red = |k: &[u8], vals: Vec<Vec<u8>>, out: &mut dyn FnMut(Record)| {
+                seen.push((k.to_vec(), vals.clone()));
+                out(Record::new(k.to_vec(), (vals.len() as u64).to_be_bytes().to_vec()));
+            };
+            let task: &mut dyn ReduceTask = &mut red;
+            let (out, stats) = if fixed {
+                run_reduce_task_fixed(1, 1, &maps, task, &conf, &ledger, &dir).unwrap()
+            } else {
+                run_reduce_task(1, 1, &maps, task, &conf, &ledger, &dir).unwrap()
+            };
+            assert!(ledger.get(Channel::ReduceLocalWrite) > 0, "want reduce-side spills");
+            results.push((
+                out,
+                seen,
+                stats.shuffled_bytes,
+                stats.groups,
+                stats.max_group,
+                ledger.snapshot(),
+            ));
+        }
+        assert_eq!(results[0], results[1]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

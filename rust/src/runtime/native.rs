@@ -51,15 +51,14 @@ pub fn encode_reads(reads: &[Read], boundaries: &[i64], prefix_len: usize) -> Ve
     out
 }
 
-/// Lexicographic (key, index) pair sort — native `group_sort`.
+/// Lexicographic (key, index) pair sort — native `group_sort`. Backed
+/// by the LSD radix sorter (`util::radix::sort_pairs`): same result as
+/// the old permutation comparison sort for every i64 input, but linear
+/// in the pair count — the fixed-width-integer regime where radix
+/// dominates comparison sorting.
 pub fn group_sort(keys: &mut [i64], indexes: &mut [i64]) {
     debug_assert_eq!(keys.len(), indexes.len());
-    let mut perm: Vec<usize> = (0..keys.len()).collect();
-    perm.sort_unstable_by_key(|&i| (keys[i], indexes[i]));
-    let ks: Vec<i64> = perm.iter().map(|&i| keys[i]).collect();
-    let ixs: Vec<i64> = perm.iter().map(|&i| indexes[i]).collect();
-    keys.copy_from_slice(&ks);
-    indexes.copy_from_slice(&ixs);
+    crate::util::radix::sort_pairs(keys, indexes);
 }
 
 /// Ascending key sort — native `sample_sort`.

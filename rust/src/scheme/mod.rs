@@ -49,6 +49,12 @@ pub struct SchemeConfig {
     /// and emitted, hiding fetch time behind sort time. `false` falls
     /// back to blocking fetches with byte-identical requests.
     pub prefetch: bool,
+    /// Route the shuffle through the fixed-width fast path (packed
+    /// 24 B records, radix-sorted spills, loser-tree merges). Output
+    /// order and every footprint-ledger total are identical either way
+    /// (`tests/shuffle_equivalence.rs`); `false` selects the generic
+    /// `Record` path for comparison.
+    pub fixed_shuffle: bool,
     /// RNG seed for boundary sampling (§IV-A).
     pub seed: u64,
 }
@@ -63,6 +69,7 @@ impl Default for SchemeConfig {
             samples_per_reducer: SAMPLES_PER_REDUCER,
             put_batch: crate::kvstore::shard::BATCH_PAIRS,
             prefetch: true,
+            fixed_shuffle: true,
             seed: 1,
         }
     }
@@ -133,8 +140,11 @@ struct SchemeMapper {
 
 impl SchemeMapper {
     /// Encode pending reads (PJRT tile when available, native otherwise)
-    /// and emit one (key, index) record per valid suffix.
-    fn encode_pending(&mut self, emit: &mut dyn FnMut(Record)) {
+    /// and emit one numeric (key, index) pair per valid suffix. Both
+    /// `MapTask` paths funnel through here: the fixed-width path packs
+    /// the pairs straight into the shuffle, the generic path wraps them
+    /// in big-endian `Record`s with identical bytes.
+    fn encode_pending(&mut self, emit: &mut dyn FnMut(i64, i64)) {
         if self.pending.is_empty() {
             return;
         }
@@ -157,10 +167,7 @@ impl SchemeMapper {
                             for off in 0..=rd.len() {
                                 let j = i * out.lp + off;
                                 debug_assert_eq!(out.valid[j], 1);
-                                emit(Record::new(
-                                    encode_i64_key(out.keys[j]).to_vec(),
-                                    out.indexes[j].to_be_bytes().to_vec(),
-                                ));
+                                emit(out.keys[j], out.indexes[j]);
                             }
                         }
                     }
@@ -178,30 +185,23 @@ impl SchemeMapper {
                 let mut recs = Vec::with_capacity(rd.suffix_count());
                 native::encode_read(rd, &self.boundaries, self.cfg.prefix_len, &mut recs);
                 for r in recs {
-                    emit(Record::new(
-                        encode_i64_key(r.key).to_vec(),
-                        r.index.to_be_bytes().to_vec(),
-                    ));
+                    emit(r.key, r.index);
                 }
             }
         }
         self.all_reads.extend(reads);
     }
-}
 
-impl crate::mapreduce::mapper::MapTask for SchemeMapper {
-    fn map(&mut self, rec: &Record, emit: &mut dyn FnMut(Record)) {
+    /// Queue one input read; returns true when the encode batch is full.
+    fn push_read(&mut self, rec: &Record) -> bool {
         let seq = u64::from_be_bytes(rec.key[..8].try_into().expect("8-byte seq key"));
         self.pending.push(Read::new(seq, rec.value.clone()));
-        if self.pending.len() >= 512 {
-            self.encode_pending(emit);
-        }
+        self.pending.len() >= 512
     }
 
-    fn finish(&mut self, emit: &mut dyn FnMut(Record)) {
-        self.encode_pending(emit);
-        // aggregated put of this split's reads (paper: "when the mappers
-        // finish reading the input file")
+    /// Aggregated put of this split's reads (paper: "when the mappers
+    /// finish reading the input file").
+    fn put_reads(&mut self) {
         let reads = std::mem::take(&mut self.all_reads);
         match self.store.put_reads(&reads) {
             Ok(t) => self.ledger.add(Channel::KvPut, t.total()),
@@ -210,14 +210,45 @@ impl crate::mapreduce::mapper::MapTask for SchemeMapper {
     }
 }
 
+impl crate::mapreduce::mapper::MapTask for SchemeMapper {
+    fn map(&mut self, rec: &Record, emit: &mut dyn FnMut(Record)) {
+        if self.push_read(rec) {
+            self.encode_pending(&mut |k, ix| {
+                emit(Record::new(encode_i64_key(k).to_vec(), ix.to_be_bytes().to_vec()))
+            });
+        }
+    }
+
+    fn finish(&mut self, emit: &mut dyn FnMut(Record)) {
+        self.encode_pending(&mut |k, ix| {
+            emit(Record::new(encode_i64_key(k).to_vec(), ix.to_be_bytes().to_vec()))
+        });
+        self.put_reads();
+    }
+
+    // Fixed-width overrides: identical pairs, no Record allocation.
+    // Keys are non-negative i64, so `as u64` preserves both the value
+    // and the big-endian byte order the generic path would have written.
+    fn map_fixed(&mut self, rec: &Record, emit: &mut dyn FnMut(u64, u64)) {
+        if self.push_read(rec) {
+            self.encode_pending(&mut |k, ix| emit(k as u64, ix as u64));
+        }
+    }
+
+    fn finish_fixed(&mut self, emit: &mut dyn FnMut(u64, u64)) {
+        self.encode_pending(&mut |k, ix| emit(k as u64, ix as u64));
+        self.put_reads();
+    }
+}
+
 // ---------------- reducer ----------------
 
 /// A key-sorted batch whose suffix texts are (possibly) still in flight
-/// on the prefetch thread — the reducer's double buffer.
+/// on the prefetch thread — the reducer's double buffer. Key groups are
+/// not materialized: `key_groups(&keys)` re-derives them on demand.
 struct PendingBatch {
     keys: Vec<i64>,
     indexes: Vec<i64>,
-    groups: Vec<(usize, usize, i64)>,
     /// Positions in `indexes` whose texts were requested: `None` = every
     /// position (write mode), `Some` = tie-break positions only.
     want: Option<Vec<usize>>,
@@ -280,18 +311,17 @@ impl SchemeReducer {
 
         // 2. fetch plan: every text when writing suffixes out, else only
         //    incomplete multi-member groups (tie-breaking).
-        let groups = key_groups(&keys);
         let want: Option<Vec<usize>> = if self.cfg.write_suffixes {
             None
         } else {
-            Some(tie_break_positions(&groups, self.cfg.prefix_len))
+            Some(tie_break_positions(key_groups(&keys), self.cfg.prefix_len))
         };
         let idxs: Vec<i64> = match &want {
             None => indexes.clone(),
             Some(w) => w.iter().map(|&i| indexes[i]).collect(),
         };
         let requested = !idxs.is_empty();
-        let batch = PendingBatch { keys, indexes, groups, want, requested };
+        let batch = PendingBatch { keys, indexes, want, requested };
 
         // accumulation + sort + planning accounted here; fetch stalls,
         // tie-break, and emit are accounted where they happen
@@ -344,7 +374,7 @@ impl SchemeReducer {
         fetched: Vec<Vec<u8>>,
         out: &mut dyn FnMut(Record),
     ) {
-        let PendingBatch { keys, mut indexes, groups, want, .. } = batch;
+        let PendingBatch { keys, mut indexes, want, .. } = batch;
         let mut texts: Vec<Option<Vec<u8>>> = vec![None; keys.len()];
         match &want {
             None => {
@@ -362,7 +392,7 @@ impl SchemeReducer {
         // 3. tie-break: re-sort incomplete multi-member groups by
         //    (suffix text, index).
         let t_tie = Instant::now();
-        for &(s, e, k) in &groups {
+        for (s, e, k) in key_groups(&keys) {
             if e - s > 1 && !key_is_complete(k, self.cfg.prefix_len) {
                 let mut span: Vec<(usize, i64)> =
                     (s..e).map(|i| (i, indexes[i])).collect();
@@ -466,6 +496,16 @@ impl crate::mapreduce::reducer::ReduceTask for SchemeReducer {
         }
     }
 
+    // Fixed-width override: the packed u64s decode straight back into
+    // the numeric pairs the sorting-group buffer stores — no byte
+    // buffers materialized per value.
+    fn reduce_fixed(&mut self, key: u64, values: &[u64], out: &mut dyn FnMut(Record)) {
+        self.buf.push_group(key as i64, values.iter().map(|&v| v as i64));
+        if self.buf.len() >= self.cfg.group_threshold {
+            self.flush(out);
+        }
+    }
+
     fn finish(&mut self, out: &mut dyn FnMut(Record)) {
         self.flush(out);
         // drain the double buffer: the last batch's fetch is still in
@@ -506,9 +546,13 @@ pub fn run(
     let red_times = times.clone();
 
     let part_bounds = boundaries.clone();
+    // the scheme's shuffle records are always 8 B + 8 B index pairs, so
+    // the fixed-width fast path applies whenever the config asks for it
+    let mut jconf = cfg.conf.clone();
+    jconf.fixed_width = cfg.fixed_shuffle;
     let job = Job {
         name: "scheme".into(),
-        conf: cfg.conf.clone(),
+        conf: jconf,
         map_factory: Arc::new(move |_| {
             let mut store = map_store();
             store.set_put_batch(map_cfg.put_batch);

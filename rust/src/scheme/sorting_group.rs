@@ -64,9 +64,17 @@ impl SortingGroupBuffer {
         self.keys.is_empty()
     }
 
-    /// Append every index of one shuffle group under `key`.
+    /// Append every index of one shuffle group under `key`. Reserves
+    /// from the iterator's `size_hint` up front, so exact-size sources
+    /// (the reducer's value batches) grow both vectors at most once
+    /// instead of element-by-element.
     pub fn push_group(&mut self, key: i64, indexes: impl IntoIterator<Item = i64>) {
-        for ix in indexes {
+        let it = indexes.into_iter();
+        let (lo, hi) = it.size_hint();
+        let n = hi.unwrap_or(lo);
+        self.keys.reserve(n);
+        self.indexes.reserve(n);
+        for ix in it {
             self.keys.push(key);
             self.indexes.push(ix);
         }
@@ -78,26 +86,50 @@ impl SortingGroupBuffer {
     }
 }
 
-/// Spans of equal keys in a key-sorted batch: (start, end, key).
-pub fn key_groups(keys: &[i64]) -> Vec<(usize, usize, i64)> {
-    let mut out = Vec::new();
-    let mut start = 0;
-    for i in 1..=keys.len() {
-        if i == keys.len() || keys[i] != keys[start] {
-            out.push((start, i, keys[start]));
-            start = i;
+/// Iterator over spans of equal keys in a key-sorted batch, yielding
+/// `(start, end, key)`. Being an iterator (rather than a collected
+/// `Vec`) lets the reducer walk a flush's groups — twice if needed,
+/// it's `Clone` — without allocating a span list per flush.
+#[derive(Clone)]
+pub struct KeyGroups<'a> {
+    keys: &'a [i64],
+    start: usize,
+}
+
+impl Iterator for KeyGroups<'_> {
+    type Item = (usize, usize, i64);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let keys = self.keys;
+        if self.start >= keys.len() {
+            return None;
         }
+        let start = self.start;
+        let k = keys[start];
+        let mut end = start + 1;
+        while end < keys.len() && keys[end] == k {
+            end += 1;
+        }
+        self.start = end;
+        Some((start, end, k))
     }
-    out
+}
+
+/// Spans of equal keys in a key-sorted batch: (start, end, key).
+pub fn key_groups(keys: &[i64]) -> KeyGroups<'_> {
+    KeyGroups { keys, start: 0 }
 }
 
 /// Positions (into a key-sorted batch) whose suffix texts are needed for
 /// tie-breaking: members of multi-member groups whose key does not embed
 /// the terminator. This is the reducer's fetch plan in index-only mode —
 /// everything else is ordered by (key, index) alone.
-pub fn tie_break_positions(groups: &[(usize, usize, i64)], prefix_len: usize) -> Vec<usize> {
+pub fn tie_break_positions(
+    groups: impl IntoIterator<Item = (usize, usize, i64)>,
+    prefix_len: usize,
+) -> Vec<usize> {
     let mut want = Vec::new();
-    for &(s, e, k) in groups {
+    for (s, e, k) in groups {
         if e - s > 1 && !key_is_complete(k, prefix_len) {
             want.extend(s..e);
         }
@@ -147,9 +179,9 @@ mod tests {
     #[test]
     fn groups_partition_sorted_keys() {
         let keys = vec![1i64, 1, 2, 5, 5, 5, 9];
-        let gs = key_groups(&keys);
+        let gs: Vec<_> = key_groups(&keys).collect();
         assert_eq!(gs, vec![(0, 2, 1), (2, 3, 2), (3, 6, 5), (6, 7, 9)]);
-        assert!(key_groups(&[]).is_empty());
+        assert_eq!(key_groups(&[]).next(), None);
     }
 
     #[test]
@@ -168,10 +200,9 @@ mod tests {
         let incomplete = encode_prefix(&codes_of(b"ACGT"), p);
         let other = encode_prefix(&codes_of(b"GGGG"), p);
         let keys = vec![complete, complete, incomplete, incomplete, incomplete, other];
-        let groups = key_groups(&keys);
         // singleton `other` and complete-key group need no texts
-        assert_eq!(tie_break_positions(&groups, p), vec![2, 3, 4]);
-        assert!(tie_break_positions(&[], p).is_empty());
+        assert_eq!(tie_break_positions(key_groups(&keys), p), vec![2, 3, 4]);
+        assert!(tie_break_positions(key_groups(&[]), p).is_empty());
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Shared utilities: PRNG, statistics, byte formatting.
+//! Shared utilities: PRNG, statistics, byte formatting, radix sorting.
 
 pub mod bytes;
+pub mod radix;
 pub mod rng;
 pub mod stats;

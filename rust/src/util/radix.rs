@@ -1,0 +1,220 @@
+//! LSD radix sorting for the shuffle's fixed-width records and the
+//! reducer's numeric (key, index) group sort.
+//!
+//! The shuffle's hot regime — millions of items, fixed-width integer
+//! keys, stability required — is exactly where radix methods dominate
+//! comparison sorting (arXiv:1808.00963). Every sort here is a stable
+//! byte-wise LSD pass with a 256-bucket counting scatter. A single
+//! pre-scan builds the histogram of every digit at once, and passes
+//! whose digit is constant across the input are skipped, so the common
+//! case (partitions fit one byte, keys far below 2^64) performs only
+//! the informative passes.
+
+use crate::mapreduce::record::FixedRec;
+
+/// A sort item with a fixed number of radix-256 digits, least
+/// significant digit first.
+pub trait RadixKey: Copy + Default {
+    /// Number of byte digits in the sort key.
+    const DIGITS: usize;
+    /// Digit `d` (0 = least significant).
+    fn digit(&self, d: usize) -> u8;
+}
+
+impl RadixKey for u128 {
+    const DIGITS: usize = 16;
+    #[inline]
+    fn digit(&self, d: usize) -> u8 {
+        (*self >> (8 * d)) as u8
+    }
+}
+
+impl RadixKey for FixedRec {
+    // Sort key is (partition, key): the key's 8 bytes are the low
+    // digits, the partition's 4 bytes the high ones. The carried value
+    // never participates — stability keeps equal (partition, key)
+    // records in emission order, like the generic path's stable sort.
+    const DIGITS: usize = 12;
+    #[inline]
+    fn digit(&self, d: usize) -> u8 {
+        if d < 8 {
+            (self.key >> (8 * d)) as u8
+        } else {
+            (self.partition >> (8 * (d - 8))) as u8
+        }
+    }
+}
+
+/// Stable LSD radix sort. `scratch` is resized to `data.len()` and
+/// reused across calls, so steady-state sorting allocates nothing but
+/// the per-call histogram (`DIGITS` × 1 KiB).
+pub fn lsd_sort<T: RadixKey>(data: &mut [T], scratch: &mut Vec<T>) {
+    let n = data.len();
+    if n < 2 {
+        return;
+    }
+    debug_assert!(n <= u32::MAX as usize, "radix counters are u32");
+    scratch.clear();
+    scratch.resize(n, T::default());
+
+    // One pass over the data builds every digit's histogram.
+    let mut hist = vec![[0u32; 256]; T::DIGITS];
+    for item in data.iter() {
+        for (d, h) in hist.iter_mut().enumerate() {
+            h[item.digit(d) as usize] += 1;
+        }
+    }
+
+    // Ping-pong between `data` and `scratch`, skipping constant digits.
+    let mut in_data = true;
+    for (d, h) in hist.iter().enumerate() {
+        if h.iter().any(|&c| c as usize == n) {
+            continue; // every item shares this digit: pass is a no-op
+        }
+        let mut offsets = [0u32; 256];
+        let mut sum = 0u32;
+        for (off, c) in offsets.iter_mut().zip(h.iter()) {
+            *off = sum;
+            sum += *c;
+        }
+        if in_data {
+            scatter(data, scratch, d, &mut offsets);
+        } else {
+            scatter(scratch, data, d, &mut offsets);
+        }
+        in_data = !in_data;
+    }
+    if !in_data {
+        data.copy_from_slice(scratch);
+    }
+}
+
+#[inline]
+fn scatter<T: RadixKey>(src: &[T], dst: &mut [T], d: usize, offsets: &mut [u32; 256]) {
+    for item in src {
+        let b = item.digit(d) as usize;
+        dst[offsets[b] as usize] = *item;
+        offsets[b] += 1;
+    }
+}
+
+/// Sort a mapper spill buffer by (partition, key), stable in emission
+/// order — the radix replacement for the generic path's
+/// `sort_by(partition, key-bytes)` (byte-lexicographic order over an
+/// 8-byte big-endian key equals unsigned numeric order).
+pub fn sort_spill(recs: &mut [FixedRec], scratch: &mut Vec<FixedRec>) {
+    lsd_sort(recs, scratch);
+}
+
+/// Lexicographic (key, index) pair sort over parallel `i64` arrays —
+/// the radix backend of `runtime::native::group_sort`. Sign bits are
+/// flipped into unsigned order, so the full `i64` range sorts exactly
+/// like the comparison sort it replaces.
+pub fn sort_pairs(keys: &mut [i64], indexes: &mut [i64]) {
+    debug_assert_eq!(keys.len(), indexes.len());
+    let mut packed: Vec<u128> = keys
+        .iter()
+        .zip(indexes.iter())
+        .map(|(&k, &ix)| ((flip(k) as u128) << 64) | flip(ix) as u128)
+        .collect();
+    let mut scratch = Vec::new();
+    lsd_sort(&mut packed, &mut scratch);
+    for (i, p) in packed.iter().enumerate() {
+        keys[i] = unflip((p >> 64) as u64);
+        indexes[i] = unflip(*p as u64);
+    }
+}
+
+#[inline]
+fn flip(v: i64) -> u64 {
+    (v as u64) ^ (1 << 63)
+}
+
+#[inline]
+fn unflip(v: u64) -> i64 {
+    (v ^ (1 << 63)) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sort_spill_matches_comparison_sort() {
+        let mut rng = Rng::new(42);
+        let mut recs: Vec<FixedRec> = (0..5000)
+            .map(|i| FixedRec {
+                partition: (rng.below(5)) as u32,
+                key: rng.below(1 << 53),
+                value: i as u64,
+            })
+            .collect();
+        let mut want = recs.clone();
+        want.sort_by(|a, b| {
+            (a.partition, a.key.to_be_bytes()).cmp(&(b.partition, b.key.to_be_bytes()))
+        });
+        let mut scratch = Vec::new();
+        sort_spill(&mut recs, &mut scratch);
+        assert_eq!(recs, want);
+    }
+
+    #[test]
+    fn sort_spill_is_stable() {
+        // equal (partition, key): emission order (the value) survives
+        let mut recs: Vec<FixedRec> = (0..100)
+            .map(|i| FixedRec { partition: (i % 2) as u32, key: (i % 3) as u64, value: i as u64 })
+            .collect();
+        let mut scratch = Vec::new();
+        sort_spill(&mut recs, &mut scratch);
+        for w in recs.windows(2) {
+            if (w[0].partition, w[0].key) == (w[1].partition, w[1].key) {
+                assert!(w[0].value < w[1].value, "stability violated: {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sort_spill_wide_partitions_and_keys() {
+        // exercise the high digit passes the skip logic usually elides
+        let mut rng = Rng::new(7);
+        let mut recs: Vec<FixedRec> = (0..2000)
+            .map(|v| FixedRec {
+                partition: rng.next_u64() as u32,
+                key: rng.next_u64(),
+                value: v as u64,
+            })
+            .collect();
+        let mut want = recs.clone();
+        want.sort_by_key(|r| (r.partition, r.key));
+        let mut scratch = Vec::new();
+        sort_spill(&mut recs, &mut scratch);
+        assert_eq!(recs, want);
+    }
+
+    #[test]
+    fn sort_pairs_matches_comparison_sort_including_negatives() {
+        let mut rng = Rng::new(9);
+        let n = 3000;
+        let mut keys: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64).collect();
+        let mut idxs: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64).collect();
+        let mut want: Vec<(i64, i64)> =
+            keys.iter().copied().zip(idxs.iter().copied()).collect();
+        want.sort_unstable();
+        sort_pairs(&mut keys, &mut idxs);
+        let got: Vec<(i64, i64)> = keys.into_iter().zip(idxs).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_and_singleton_are_noops() {
+        let mut scratch = Vec::new();
+        let mut empty: Vec<FixedRec> = Vec::new();
+        sort_spill(&mut empty, &mut scratch);
+        assert!(empty.is_empty());
+        let mut one = vec![FixedRec { partition: 3, key: 9, value: 1 }];
+        sort_spill(&mut one, &mut scratch);
+        assert_eq!(one[0].value, 1);
+        sort_pairs(&mut [], &mut []);
+    }
+}
