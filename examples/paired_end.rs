@@ -1,6 +1,8 @@
 //! Pair-end sequencing & alignment prep — the paper's Case 6: two input
-//! files (forward + reverse-complement reads of the same fragments) fed
-//! through the scheme as one SA construction, without any degradation.
+//! files (forward reads + reverse-complement mates of the same
+//! fragments) fed through the scheme as ONE construction over a shared
+//! store, without any degradation — then a pair-end seed-alignment query
+//! over the joint suffix array.
 //!
 //!     cargo run --release --example paired_end [n_pairs]
 
@@ -13,6 +15,7 @@ use samr::runtime;
 use samr::scheme::{self, SchemeConfig};
 use samr::suffix::bwt;
 use samr::suffix::reads::{synth_paired_corpus, CorpusSpec};
+use samr::suffix::search::find_pairs;
 use samr::suffix::validate::{read_map, suffix_codes, validate_order};
 use samr::util::bytes::human;
 
@@ -20,7 +23,8 @@ fn main() {
     let n_pairs: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(5_000);
     runtime::init(Some(&runtime::default_artifacts_dir()));
 
-    // two "files": forward reads (seq 0..n) and reverse reads (seq n..2n)
+    // two files over the SAME fragments: file 1 = forward reads (seq 2f),
+    // file 2 = reverse-complement mates (seq 2f+1)
     let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
         n_reads: n_pairs,
         read_len: 100,
@@ -29,19 +33,17 @@ fn main() {
         seed: 0xA17E,
         ..Default::default()
     });
-    let mut reads = fwd;
-    reads.extend(rev);
     println!(
-        "pair-end corpus: 2 × {n_pairs} reads = {} records, {}",
-        reads.len(),
-        human(samr::suffix::reads::corpus_bytes(&reads))
+        "pair-end corpus: 2 files × {n_pairs} reads = {} records, {}",
+        fwd.len() + rev.len(),
+        human(samr::suffix::reads::corpus_bytes(&fwd) + samr::suffix::reads::corpus_bytes(&rev))
     );
 
     let store = SharedStore::new(8);
     let s = store.clone();
     let ledger = Ledger::new();
-    let res = scheme::run(
-        &reads,
+    let res = scheme::run_files(
+        &[&fwd, &rev],
         &SchemeConfig {
             conf: JobConf {
                 n_reducers: 8,
@@ -59,6 +61,14 @@ fn main() {
     )
     .expect("scheme");
 
+    // seeds of a known fragment, taken before folding the files together
+    let probe = n_pairs as u64 / 2;
+    let seed_fwd = fwd[probe as usize].codes[..16].to_vec();
+    // a reverse-mate seed, in the reverse read's own coordinates
+    let seed_rev = rev[probe as usize].codes[..16].to_vec();
+    let mut reads = fwd;
+    reads.extend(rev);
+
     validate_order(&reads, &res.order).expect("pair-end order invalid");
     println!("sorted {} suffixes across both files ✓", res.order.len());
     println!(
@@ -68,9 +78,20 @@ fn main() {
         human(res.kv_memory)
     );
 
+    // pair-end seed alignment over the joint SA: join both mates' hits
+    // by fragment id
+    let map = read_map(&reads);
+    let hits = find_pairs(&res.order, &map, &seed_fwd, &seed_rev, 4 * 100);
+    assert!(
+        hits.iter().any(|h| h.fragment == probe),
+        "planted fragment not recovered"
+    );
+    println!(
+        "find_pairs: {} joined mate pairing(s) for fragment {probe}'s seeds ✓",
+        hits.len()
+    );
     // derive a BWT from one sampled suffix — the index structure the
     // aligner consumes (§I: BWT "can be derived from the former")
-    let map = read_map(&reads);
     let sample = suffix_codes(&map, res.order[reads.len()]);
     let b = bwt::bwt(&sample[..sample.len() - 1]);
     println!("BWT of a sampled suffix ({} chars) derived ✓ — ready for alignment", b.len());

@@ -11,7 +11,7 @@
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -28,6 +28,9 @@ pub struct Server {
     pub bytes_in: Arc<AtomicU64>,
     /// Total reply wire bytes sent (network-footprint accounting).
     pub bytes_out: Arc<AtomicU64>,
+    /// Connection handles still tracked by the accept loop (live
+    /// connections plus at most the finished ones not yet reaped).
+    tracked: Arc<AtomicUsize>,
 }
 
 impl Server {
@@ -44,9 +47,24 @@ impl Server {
         let t_stop = stop.clone();
         let t_in = bytes_in.clone();
         let t_out = bytes_out.clone();
+        let tracked = Arc::new(AtomicUsize::new(0));
+        let t_tracked = tracked.clone();
         let accept_thread = std::thread::spawn(move || {
             let mut workers: Vec<JoinHandle<()>> = Vec::new();
             for conn in listener.incoming() {
+                // reap handles of connections that have since closed —
+                // a long-lived server would otherwise accumulate one
+                // JoinHandle (thread stack bookkeeping included) per
+                // completed connection, forever
+                let mut i = 0;
+                while i < workers.len() {
+                    if workers[i].is_finished() {
+                        // finished: join() returns without blocking
+                        let _ = workers.swap_remove(i).join();
+                    } else {
+                        i += 1;
+                    }
+                }
                 if t_stop.load(Ordering::SeqCst) {
                     break;
                 }
@@ -58,10 +76,12 @@ impl Server {
                 workers.push(std::thread::spawn(move || {
                     let _ = serve_conn(conn, store, stop, bin, bout);
                 }));
+                t_tracked.store(workers.len(), Ordering::SeqCst);
             }
             for w in workers {
                 let _ = w.join();
             }
+            t_tracked.store(0, Ordering::SeqCst);
         });
 
         Ok(Server {
@@ -71,6 +91,7 @@ impl Server {
             accept_thread: Some(accept_thread),
             bytes_in,
             bytes_out,
+            tracked,
         })
     }
 
@@ -88,6 +109,14 @@ impl Server {
     /// Memory used by the instance (payload + metadata model).
     pub fn used_memory(&self) -> u64 {
         self.store.lock().unwrap().used_memory()
+    }
+
+    /// Connection handles the accept loop currently tracks (as of the
+    /// last accepted connection). Stays bounded by the number of
+    /// concurrently live connections — completed ones are reaped, not
+    /// accumulated.
+    pub fn tracked_connections(&self) -> usize {
+        self.tracked.load(Ordering::SeqCst)
     }
 
     /// Stop accepting connections and join the accept thread.
@@ -161,4 +190,46 @@ fn serve_conn(
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::client::Client;
+
+    #[test]
+    fn accept_loop_reaps_closed_connections() {
+        let mut server = Server::start(0).expect("bind");
+        let addr = server.addr();
+        // many sequential connections, each closed before the next opens:
+        // without reaping, the accept loop would track one handle per
+        // completed connection (~40 here)
+        for i in 0..40u64 {
+            let mut c = Client::connect(addr).expect("connect");
+            c.set(&i.to_string().into_bytes(), b"v").expect("set");
+            // drop closes the socket; give serve_conn a beat to return
+        }
+        // each probe connection forces a reap pass; poll with a deadline
+        // instead of fixed sleeps — on a loaded machine the 40 serve
+        // threads can take a while to wind down
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let mut tracked = usize::MAX;
+        while std::time::Instant::now() < deadline {
+            // connect (accept loop reaps, then tracks this probe) and
+            // disconnect again so shutdown never waits on a live peer
+            drop(Client::connect(addr).expect("connect"));
+            tracked = server.tracked_connections();
+            if tracked <= 4 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        assert!(
+            tracked <= 4,
+            "accept loop leaks finished connection handles: {tracked} still tracked after 40 \
+             sequential connections"
+        );
+        server.shutdown();
+        assert_eq!(server.tracked_connections(), 0);
+    }
 }

@@ -18,7 +18,7 @@ use crate::mapreduce::job::JobConf;
 use crate::scheme::gc_model::HeapConfig;
 use crate::scheme::{self, SchemeConfig};
 use crate::simcost::{self, terasort_max_group, CostParams, TimeEstimate, WorkloadShape};
-use crate::suffix::reads::{synth_corpus, CorpusSpec, Read};
+use crate::suffix::reads::{synth_corpus, synth_paired_corpus, CorpusSpec, Read};
 use crate::terasort::{self, TeraSortConfig};
 use crate::util::bytes::{GB, TB};
 
@@ -39,14 +39,26 @@ pub fn table3_inputs() -> Vec<(&'static str, u64)> {
     ]
 }
 
-pub fn table5_inputs() -> Vec<(&'static str, u64)> {
+/// Input-file shape of a scheme workload (Table V): every case is one
+/// single-end file except Case 6, the pair-end case, which is TWO input
+/// files over the same fragments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeWorkload {
+    /// One input file of single-end reads.
+    SingleFile,
+    /// Two input files — forward reads + reverse-complement mates of the
+    /// same fragments (the paper's Case 6).
+    PairEnd,
+}
+
+pub fn table5_inputs() -> Vec<(&'static str, u64, SchemeWorkload)> {
     vec![
-        ("Case 1", (5.86 * GB as f64) as u64),
-        ("Case 2", (11.72 * GB as f64) as u64),
-        ("Case 3", (17.57 * GB as f64) as u64),
-        ("Case 4", (23.43 * GB as f64) as u64),
-        ("Case 5", (31.76 * GB as f64) as u64),
-        ("Case 6", (63.12 * GB as f64) as u64),
+        ("Case 1", (5.86 * GB as f64) as u64, SchemeWorkload::SingleFile),
+        ("Case 2", (11.72 * GB as f64) as u64, SchemeWorkload::SingleFile),
+        ("Case 3", (17.57 * GB as f64) as u64, SchemeWorkload::SingleFile),
+        ("Case 4", (23.43 * GB as f64) as u64, SchemeWorkload::SingleFile),
+        ("Case 5", (31.76 * GB as f64) as u64, SchemeWorkload::SingleFile),
+        ("Case 6", (63.12 * GB as f64) as u64, SchemeWorkload::PairEnd),
     ]
 }
 
@@ -286,9 +298,20 @@ pub fn run_terasort_case(
 }
 
 /// Run one scheme paper case (Table V) at scale and project it.
+///
+/// A [`SchemeWorkload::PairEnd`] case runs as a genuine TWO-input-file
+/// workload (the paper's closing claim, Case 6): the corpus is generated
+/// as forward + reverse-complement mate files over the same fragments
+/// with the fragment-linked pair numbering, and the construction goes
+/// through [`scheme::run_files`] — two files, one shared store, one
+/// joint index stream. The per-unit normalization is identical either
+/// way, which is exactly what lets
+/// `case6_pair_end_ratios_match_single_file` check "no degradation"
+/// mechanically.
 pub fn run_scheme_case(
     label: &str,
     paper_read_input: u64,
+    workload: SchemeWorkload,
     env: &ScaledEnv,
     cluster: &ClusterSpec,
     params: &CostParams,
@@ -303,8 +326,20 @@ pub fn run_scheme_case(
     // our shuffled pair is 24 B (8 key + 8 index + 8 framing)
     let l = env.read_len as f64;
     let shuffle_bytes_per_read = (l + 1.0) * 24.0;
-    let spec = env.corpus_for_ratio(ratio, shuffle_bytes_per_read);
-    let reads = synth_corpus(&spec);
+    let mut spec = env.corpus_for_ratio(ratio, shuffle_bytes_per_read);
+
+    // pair-end: two input files of n/2 fragments each (the paper's
+    // 63.12 GB Case 6 is the TOTAL of both files)
+    let files: Vec<Vec<Read>> = match workload {
+        SchemeWorkload::PairEnd => {
+            spec.n_reads = (spec.n_reads / 2).max(1);
+            let (fwd, rev) = synth_paired_corpus(&spec);
+            vec![fwd, rev]
+        }
+        SchemeWorkload::SingleFile => vec![synth_corpus(&spec)],
+    };
+    let file_refs: Vec<&[Read]> = files.iter().map(|f| f.as_slice()).collect();
+    let n_reads_total: usize = files.iter().map(|f| f.len()).sum();
 
     let ledger = Ledger::new();
     let store = SharedStore::new(cluster.n_nodes());
@@ -318,7 +353,7 @@ pub fn run_scheme_case(
         seed: env.seed,
         ..Default::default()
     };
-    let res = scheme::run(&reads, &cfg, factory, &ledger)?;
+    let res = scheme::run_files(&file_refs, &cfg, factory, &ledger)?;
 
     // Table V normalizes by the OUTPUT size ("1.01 unit" reference)
     let reference = (res.job.footprint.get(Channel::HdfsWrite) as f64 / 1.01) as u64;
@@ -367,7 +402,7 @@ pub fn run_scheme_case(
         time,
         measured: res.job.footprint,
         reference_bytes: reference,
-        mini_reads: reads.len(),
+        mini_reads: n_reads_total,
     })
 }
 
@@ -467,6 +502,7 @@ mod tests {
         let row = run_scheme_case(
             "Case 1",
             (5.86 * GB as f64) as u64,
+            SchemeWorkload::SingleFile,
             &env,
             &cluster,
             &CostParams::default(),
@@ -490,11 +526,93 @@ mod tests {
         let row = run_scheme_case(
             "Case 6",
             (63.12 * GB as f64) as u64,
+            SchemeWorkload::PairEnd,
             &env,
             &cluster,
             &CostParams::default(),
         )
         .unwrap();
         assert!(row.time.completed(), "{:?}", row.time.breakdown);
+        // Case 6 now executes as two real input files
+        assert!(row.mini_reads > 100, "paired corpus actually ran");
+    }
+
+    #[test]
+    fn case6_pair_end_ratios_match_single_file() {
+        // The paper's closing claim, checked mechanically: pair-end
+        // construction from TWO input files shows no degradation in the
+        // normalized per-unit footprint (Table V columns) relative to
+        // single-file construction.
+        let env = quick_env();
+        let cluster = ClusterSpec::table2();
+        let params = CostParams::default();
+        let input6 = (63.12 * GB as f64) as u64;
+
+        // the genuine two-file pair-end run
+        let row6 = run_scheme_case(
+            "Case 6",
+            input6,
+            SchemeWorkload::PairEnd,
+            &env,
+            &cluster,
+            &params,
+        )
+        .unwrap();
+        // control: the SAME total volume as one single file — isolates
+        // two-file-ness from scale
+        let ctl = run_scheme_case(
+            "Case 6 control",
+            input6,
+            SchemeWorkload::SingleFile,
+            &env,
+            &cluster,
+            &params,
+        )
+        .unwrap();
+        // the largest single-file paper case — scale invariance
+        let row5 = run_scheme_case(
+            "Case 5",
+            (31.76 * GB as f64) as u64,
+            SchemeWorkload::SingleFile,
+            &env,
+            &cluster,
+            &params,
+        )
+        .unwrap();
+
+        let close = |name: &str, a: f64, b: f64| {
+            let tol = (0.20 * b.abs()).max(0.08);
+            assert!(
+                (a - b).abs() <= tol,
+                "{name}: pair-end {a:.3} vs single-file {b:.3} (tol {tol:.3})"
+            );
+        };
+        // equal volume, two files vs one: EVERY Table V column must match
+        for (name, a, b) in [
+            ("map_lr", row6.map_lr, ctl.map_lr),
+            ("map_lw", row6.map_lw, ctl.map_lw),
+            ("red_lr", row6.red_lr, ctl.red_lr),
+            ("red_lw", row6.red_lw, ctl.red_lw),
+            ("shuffle", row6.shuffle, ctl.shuffle),
+            ("kv_put", row6.kv_put, ctl.kv_put),
+            ("kv_fetch", row6.kv_fetch, ctl.kv_fetch),
+            ("hdfs_w", row6.hdfs_w, ctl.hdfs_w),
+        ] {
+            close(name, a, b);
+        }
+        // across scale (2× Case 5's volume): the per-unit map/shuffle/KV
+        // columns — the ones the paper's scalability argument rests on —
+        // stay flat
+        for (name, a, b) in [
+            ("map_lr", row6.map_lr, row5.map_lr),
+            ("map_lw", row6.map_lw, row5.map_lw),
+            ("shuffle", row6.shuffle, row5.shuffle),
+            ("kv_put", row6.kv_put, row5.kv_put),
+            ("kv_fetch", row6.kv_fetch, row5.kv_fetch),
+            ("hdfs_w", row6.hdfs_w, row5.hdfs_w),
+        ] {
+            close(name, a, b);
+        }
+        assert!(row6.time.completed());
     }
 }

@@ -119,12 +119,13 @@ impl Reporter {
         ))
     }
 
-    /// Table V: the scheme's footprint across six cases (6 = pair-end).
+    /// Table V: the scheme's footprint across six cases (6 = pair-end,
+    /// executed as a genuine two-input-file workload).
     pub fn table5_rows(&self) -> std::io::Result<Vec<CaseRow>> {
         table5_inputs()
             .iter()
-            .map(|(label, input)| {
-                run_scheme_case(label, *input, &self.env, &self.cluster, &self.params)
+            .map(|(label, input, workload)| {
+                run_scheme_case(label, *input, *workload, &self.env, &self.cluster, &self.params)
             })
             .collect()
     }

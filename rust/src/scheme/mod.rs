@@ -5,6 +5,10 @@
 //! reducers accumulate sorting groups, fetch the suffix texts in bulk via
 //! `MGETSUFFIX`, tie-break equal-prefix groups, and emit the sorted
 //! output. MapReduce never carries a suffix — only its index.
+//!
+//! [`run`] builds over one input file; [`run_files`] over several — the
+//! paper's pair-end Case 6, where two mate files feed one shared store
+//! and one joint shuffled index stream.
 
 pub mod gc_model;
 pub mod sampler;
@@ -525,9 +529,51 @@ pub fn run(
     store_factory: StoreFactory,
     ledger: &Arc<Ledger>,
 ) -> std::io::Result<SchemeResult> {
-    // §IV-A sampling: boundaries over suffix keys
-    let boundaries = sampler::make_boundaries(
-        reads,
+    run_files(&[reads], cfg, store_factory, ledger)
+}
+
+/// Run the scheme over SEVERAL input files as one construction — the
+/// paper's pair-end workload (Case 6): forward reads in one file, their
+/// reverse-complement mates in another, both over the same fragments.
+///
+/// Each file keeps its own input splits (a mapper never straddles a file
+/// boundary, exactly as HDFS would split two files), every mapper puts
+/// its reads into the SAME sharded store with the unchanged `seq mod N`
+/// routing, and all files' (prefix key, packed index) pairs feed one
+/// joint shuffle — so the reducers see a single global index stream and
+/// emit one suffix array spanning both files.
+///
+/// Sequence numbers must be unique across the files (the fragment-linked
+/// [`crate::suffix::reads::pair_seq`] scheme guarantees it); a collision
+/// would silently overwrite a read in the store, so it is rejected here
+/// with a real error.
+pub fn run_files(
+    files: &[&[Read]],
+    cfg: &SchemeConfig,
+    store_factory: StoreFactory,
+    ledger: &Arc<Ledger>,
+) -> std::io::Result<SchemeResult> {
+    // collision-free numbering is a precondition of the shared store
+    let total: usize = files.iter().map(|f| f.len()).sum();
+    let mut seqs: Vec<u64> = files.iter().flat_map(|f| f.iter().map(|r| r.seq)).collect();
+    seqs.sort_unstable();
+    seqs.dedup();
+    if seqs.len() != total {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!(
+                "duplicate sequence numbers across {} input files ({} reads, {} distinct \
+                 seqs): colliding reads would overwrite each other in the store",
+                files.len(),
+                total,
+                seqs.len()
+            ),
+        ));
+    }
+
+    // §IV-A sampling: boundaries over ALL files' suffix keys
+    let boundaries = sampler::make_boundaries_files(
+        files,
         cfg.conf.n_reducers,
         cfg.samples_per_reducer,
         cfg.prefix_len,
@@ -590,7 +636,11 @@ pub fn run(
         }),
     };
 
-    let splits = make_splits(read_records(reads), cfg.conf.split_bytes);
+    // per-file splits: mappers never straddle an input-file boundary
+    let mut splits = Vec::new();
+    for file in files {
+        splits.extend(make_splits(read_records(file), cfg.conf.split_bytes));
+    }
     let result = run_job(&job, splits, ledger)?;
 
     let order: Vec<i64> = result
@@ -701,7 +751,7 @@ mod tests {
     }
 
     #[test]
-    fn paired_end_case6() {
+    fn paired_end_case6_two_files_one_array() {
         let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
             n_reads: 30,
             read_len: 20,
@@ -709,12 +759,36 @@ mod tests {
             genome_len: 4096,
             ..Default::default()
         });
-        let mut reads = fwd;
-        reads.extend(rev);
         let (factory, _store) = inproc_factory(3);
         let ledger = Ledger::new();
-        let res = run(&reads, &small_cfg(2, 400), factory, &ledger).unwrap();
+        let res = run_files(&[&fwd, &rev], &small_cfg(2, 400), factory, &ledger).unwrap();
+        // one joint array over both files, validated against the oracle
+        let mut reads = fwd.clone();
+        reads.extend(rev.clone());
         validate_order(&reads, &res.order).expect("paired-end order invalid");
+
+        // and it equals the single-file run over the concatenation — two
+        // files change the split plan, never the output
+        let (factory2, _store2) = inproc_factory(3);
+        let ledger2 = Ledger::new();
+        let single = run(&reads, &small_cfg(2, 400), factory2, &ledger2).unwrap();
+        assert_eq!(res.order, single.order);
+    }
+
+    #[test]
+    fn run_files_rejects_seq_collisions() {
+        let reads = synth_corpus(&CorpusSpec {
+            n_reads: 10,
+            read_len: 12,
+            genome_len: 1024,
+            ..Default::default()
+        });
+        let (factory, _store) = inproc_factory(2);
+        let ledger = Ledger::new();
+        // the same file twice: every seq collides
+        let err = run_files(&[&reads, &reads], &small_cfg(2, 400), factory, &ledger)
+            .expect_err("colliding seqs must be rejected");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
     }
 
     #[test]

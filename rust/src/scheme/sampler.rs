@@ -14,13 +14,38 @@ pub fn sample_suffix_keys(
     prefix_len: usize,
     seed: u64,
 ) -> Vec<i64> {
+    sample_suffix_keys_files(&[reads], n_samples, prefix_len, seed)
+}
+
+/// Sample suffix keys uniformly over the reads of SEVERAL input files
+/// (pair-end construction samples both mate files as one population, so
+/// the boundaries balance the joint index stream). A global read index
+/// below the total count is drawn and mapped into its file — for a
+/// single file this draws exactly the same sequence as
+/// [`sample_suffix_keys`] always did.
+pub fn sample_suffix_keys_files(
+    files: &[&[Read]],
+    n_samples: usize,
+    prefix_len: usize,
+    seed: u64,
+) -> Vec<i64> {
     let mut rng = Rng::new(seed);
     let mut out = Vec::with_capacity(n_samples);
-    if reads.is_empty() {
+    let total: usize = files.iter().map(|f| f.len()).sum();
+    if total == 0 {
         return out;
     }
     for _ in 0..n_samples {
-        let r = &reads[rng.below(reads.len() as u64) as usize];
+        let mut i = rng.below(total as u64) as usize;
+        let mut r = None;
+        for f in files {
+            if i < f.len() {
+                r = Some(&f[i]);
+                break;
+            }
+            i -= f.len();
+        }
+        let r = r.expect("global index below total");
         let off = rng.below(r.suffix_count() as u64) as usize;
         out.push(suffix_key(&r.codes, off, prefix_len));
     }
@@ -94,7 +119,20 @@ pub fn make_boundaries(
     prefix_len: usize,
     seed: u64,
 ) -> Vec<i64> {
-    let samples = sample_suffix_keys(reads, samples_per_reducer * n_reducers, prefix_len, seed);
+    make_boundaries_files(&[reads], n_reducers, samples_per_reducer, prefix_len, seed)
+}
+
+/// Multi-file convenience: sample all files as one population, sort,
+/// pick boundaries.
+pub fn make_boundaries_files(
+    files: &[&[Read]],
+    n_reducers: usize,
+    samples_per_reducer: usize,
+    prefix_len: usize,
+    seed: u64,
+) -> Vec<i64> {
+    let samples =
+        sample_suffix_keys_files(files, samples_per_reducer * n_reducers, prefix_len, seed);
     boundaries_from_sorted(&sort_samples(samples), n_reducers)
 }
 
@@ -142,7 +180,20 @@ mod tests {
     #[test]
     fn empty_inputs() {
         assert!(sample_suffix_keys(&[], 10, 13, 1).is_empty());
+        assert!(sample_suffix_keys_files(&[&[], &[]], 10, 13, 1).is_empty());
         assert!(boundaries_from_sorted(&[], 4).is_empty());
         assert!(merge_runs(vec![]).is_empty());
+    }
+
+    #[test]
+    fn multi_file_sampling_matches_concatenation() {
+        // splitting one corpus into two files must not change the sampled
+        // keys (same seed, same global read indexing), so single- and
+        // two-file runs of the same data get identical boundaries.
+        let reads = synth_corpus(&CorpusSpec { n_reads: 120, ..Default::default() });
+        let (a, b) = reads.split_at(47);
+        let joint = sample_suffix_keys(&reads, 500, 13, 9);
+        let split = sample_suffix_keys_files(&[a, b], 500, 13, 9);
+        assert_eq!(joint, split);
     }
 }

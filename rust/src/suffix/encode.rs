@@ -21,18 +21,32 @@ pub const I32_PREFIX_LEN: usize = 13;
 /// Longest prefix whose base-5 value fits an `i64` (paper: threshold 26).
 pub const I64_PREFIX_LEN: usize = 26;
 
-/// Map an ASCII nucleotide (or `$`) to its code. `N` bases are mapped to
-/// `A` (synthetic corpora here are N-free; real pipelines mask them).
+/// Strict code of an ASCII nucleotide (or `$`): `None` for anything
+/// outside `$ACGT` (either case), *including* `N` — whether an ambiguous
+/// base is masked or rejected is the parser's policy
+/// ([`crate::suffix::reads::ParsePolicy`]), not the encoder's.
+#[inline]
+pub fn strict_code_of(c: u8) -> Option<u8> {
+    match c {
+        b'$' => Some(0),
+        b'A' | b'a' => Some(1),
+        b'C' | b'c' => Some(2),
+        b'G' | b'g' => Some(3),
+        b'T' | b't' => Some(4),
+        _ => None,
+    }
+}
+
+/// Map an ASCII nucleotide (or `$`) to its code, panicking on anything
+/// else and masking `N` to `A`. For trusted input (literals in tests,
+/// synthetic corpora); untrusted bytes go through the fallible parsers
+/// in `suffix/reads.rs`, which surface `io::Error` instead.
 #[inline]
 pub fn code_of(c: u8) -> u8 {
     match c {
-        b'$' => 0,
-        b'A' | b'a' => 1,
-        b'C' | b'c' => 2,
-        b'G' | b'g' => 3,
-        b'T' | b't' => 4,
         b'N' | b'n' => 1,
-        _ => panic!("invalid read character {:?}", c as char),
+        _ => strict_code_of(c)
+            .unwrap_or_else(|| panic!("invalid read character {:?}", c as char)),
     }
 }
 
@@ -75,10 +89,20 @@ pub fn suffix_key(read: &[u8], offset: usize, prefix_len: usize) -> i64 {
     encode_prefix(&read[offset.min(read.len())..], prefix_len)
 }
 
-/// Pack a suffix identity. Requires `offset < 1000`.
+/// Pack a suffix identity. Guarded *unconditionally*: an offset at or
+/// beyond `OFFSET_RADIX` would alias the suffix into the next sequence
+/// number — the same packed value as a different, valid suffix — and the
+/// construction would emit a wrong suffix array with no error anywhere.
+/// A `debug_assert` here once let exactly that happen in release builds;
+/// ingestion also rejects oversized reads ([`crate::suffix::reads::Read`]),
+/// so this assert is the last line of defense, not the first.
 #[inline]
 pub fn pack_index(seq: u64, offset: usize) -> i64 {
-    debug_assert!((offset as i64) < OFFSET_RADIX);
+    assert!(
+        (offset as i64) < OFFSET_RADIX,
+        "suffix offset {offset} would alias past the packed-index radix {OFFSET_RADIX} \
+         (seq {seq}); reads must be shorter than {OFFSET_RADIX} bp"
+    );
     seq as i64 * OFFSET_RADIX + offset as i64
 }
 
@@ -163,5 +187,32 @@ mod tests {
     #[should_panic]
     fn invalid_char_panics() {
         code_of(b'X');
+    }
+
+    #[test]
+    fn strict_code_rejects_n_and_garbage() {
+        assert_eq!(strict_code_of(b'A'), Some(1));
+        assert_eq!(strict_code_of(b't'), Some(4));
+        assert_eq!(strict_code_of(b'$'), Some(0));
+        assert_eq!(strict_code_of(b'N'), None); // N policy belongs to the parser
+        assert_eq!(strict_code_of(b'n'), None);
+        assert_eq!(strict_code_of(b'X'), None);
+        assert_eq!(strict_code_of(b'\n'), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "alias")]
+    fn pack_index_rejects_aliasing_offset() {
+        // offset == OFFSET_RADIX would collide with (seq+1, 0). This must
+        // panic in BOTH profiles — it was a debug_assert, so release
+        // builds silently produced pack_index(5, 1000) == pack_index(6, 0).
+        pack_index(5, 1000);
+    }
+
+    #[test]
+    fn pack_index_boundary_offset_is_distinct() {
+        // largest legal offset stays distinct from the next seq's first
+        assert_ne!(pack_index(5, 999), pack_index(6, 0));
+        assert_eq!(unpack_index(pack_index(5, 999)), (5, 999));
     }
 }

@@ -1,14 +1,37 @@
-//! Read corpora: synthetic genome generation (the grouper substitute) and
-//! a minimal FASTA/line-format parser.
+//! Read corpora: synthetic genome generation (the grouper substitute),
+//! pair-end fragment sampling, and fallible FASTA/line-format parsers.
 //!
 //! The paper's input files are `<sequence number, read>` records of ~200 bp
-//! reads from a grouper genome. We generate synthetic paired-end reads by
-//! sampling substrings of a synthetic reference genome — footprint and
-//! scaling behaviour depend only on read count/length statistics, which we
-//! match (DESIGN.md §2).
+//! reads from a grouper genome. We generate synthetic reads by sampling
+//! substrings of a synthetic reference genome — footprint and scaling
+//! behaviour depend only on read count/length statistics, which we match
+//! (DESIGN.md §2).
+//!
+//! **Pair-end (paper §III, Case 6).** A sequencing fragment is read from
+//! both ends: the forward read is the fragment's head, the mate is the
+//! reverse complement of its tail, and the two land in two separate input
+//! files. The sequence-number scheme is fragment-linked and collision-free
+//! by construction: fragment `f`'s forward read is `2f`, its mate `2f+1`
+//! ([`pair_seq`]/[`fragment_of`]), so two independently parsed files can
+//! never collide in the shared KV store and any read's fragment and mate
+//! role are recoverable from its sequence number alone.
+//!
+//! **Length invariant.** The packed suffix index is `seq * OFFSET_RADIX +
+//! offset`; a read with `len() + 1 > OFFSET_RADIX` suffixes would alias
+//! its tail offsets into the next sequence number and silently corrupt
+//! the suffix array. Every ingestion point here ([`Read::new`],
+//! [`Read::try_new`], [`Read::from_ascii`], the parsers) enforces
+//! `len() < OFFSET_RADIX` — the parsers with a real `io::Error`, the
+//! constructors with an unconditional assert.
 
-use crate::suffix::encode::{code_of, string_of};
+use std::io;
+
+use crate::suffix::encode::{code_of, string_of, strict_code_of, OFFSET_RADIX};
 use crate::util::rng::Rng;
+
+/// Longest ingestible read: one below [`OFFSET_RADIX`], so offsets
+/// `0..=len` (including the `$` suffix) all pack without aliasing.
+pub const MAX_READ_LEN: usize = (OFFSET_RADIX - 1) as usize;
 
 /// One sequencing read: a global sequence number plus base codes (0..4,
 /// no terminator — the terminator is implicit, `$` = code 0).
@@ -19,12 +42,36 @@ pub struct Read {
 }
 
 impl Read {
+    /// Construct from trusted codes. Panics (in every profile) if the
+    /// read is too long to pack — see [`Read::try_new`] for the fallible
+    /// ingestion variant.
     pub fn new(seq: u64, codes: Vec<u8>) -> Self {
+        assert!(
+            codes.len() <= MAX_READ_LEN,
+            "read {seq} has {} bp; the packed index holds offsets below {OFFSET_RADIX}",
+            codes.len()
+        );
         Self { seq, codes }
     }
 
+    /// Fallible construction for untrusted input: rejects reads whose
+    /// `len() + 1` suffixes would overflow the packed-index offset radix.
+    pub fn try_new(seq: u64, codes: Vec<u8>) -> io::Result<Self> {
+        if codes.len() > MAX_READ_LEN {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "read {seq} has {} bp but the packed suffix index only holds \
+                     offsets below {OFFSET_RADIX}; split or truncate the read",
+                    codes.len()
+                ),
+            ));
+        }
+        Ok(Self { seq, codes })
+    }
+
     pub fn from_ascii(seq: u64, s: &[u8]) -> Self {
-        Self { seq, codes: s.iter().map(|&c| code_of(c)).collect() }
+        Self::new(seq, s.iter().map(|&c| code_of(c)).collect())
     }
 
     pub fn len(&self) -> usize {
@@ -52,9 +99,77 @@ impl Read {
     }
 }
 
+// ---------------------------------------------------------------------
+// pair-end numbering
+// ---------------------------------------------------------------------
+
+/// Which end of the fragment a read comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mate {
+    /// The fragment's head, read forward (file 1).
+    Forward,
+    /// The fragment's tail, read as its reverse complement (file 2).
+    Reverse,
+}
+
+/// Fragment-linked sequence number: fragment `f`'s forward read is `2f`,
+/// its reverse mate `2f + 1`. Collision-free across the two input files
+/// by construction, with no need to know either file's size up front.
+#[inline]
+pub fn pair_seq(fragment: u64, mate: Mate) -> u64 {
+    fragment * 2
+        + match mate {
+            Mate::Forward => 0,
+            Mate::Reverse => 1,
+        }
+}
+
+/// Recover `(fragment, mate)` from a pair-numbered sequence number.
+#[inline]
+pub fn fragment_of(seq: u64) -> (u64, Mate) {
+    (seq / 2, if seq % 2 == 0 { Mate::Forward } else { Mate::Reverse })
+}
+
+/// A↔T, C↔G on codes.
+#[inline]
+pub fn complement(code: u8) -> u8 {
+    match code {
+        1 => 4,
+        2 => 3,
+        3 => 2,
+        4 => 1,
+        other => other,
+    }
+}
+
+/// Reverse complement of a code slice (the mate's view of a fragment
+/// tail).
+pub fn reverse_complement(codes: &[u8]) -> Vec<u8> {
+    codes.iter().rev().map(|&c| complement(c)).collect()
+}
+
+/// Both reads of one fragment: the forward read is the fragment's first
+/// `read_len` bases, the mate is the reverse complement of its last
+/// `read_len` bases (they overlap when the fragment is shorter than two
+/// read lengths). Sequence numbers follow [`pair_seq`].
+pub fn paired_reads_from_fragment(fragment_id: u64, frag: &[u8], read_len: usize) -> (Read, Read) {
+    let take = read_len.min(frag.len());
+    let fwd = Read::new(pair_seq(fragment_id, Mate::Forward), frag[..take].to_vec());
+    let rev = Read::new(
+        pair_seq(fragment_id, Mate::Reverse),
+        reverse_complement(&frag[frag.len() - take..]),
+    );
+    (fwd, rev)
+}
+
+// ---------------------------------------------------------------------
+// synthetic corpora
+// ---------------------------------------------------------------------
+
 /// Corpus generation parameters.
 #[derive(Clone, Debug)]
 pub struct CorpusSpec {
+    /// Reads per file (pair-end: fragments, i.e. reads per *each* file).
     pub n_reads: usize,
     pub read_len: usize,
     /// +- jitter on read length (paper: "about 200 bp").
@@ -97,62 +212,50 @@ pub fn synth_genome(len: usize, gc: f64, rng: &mut Rng) -> Vec<u8> {
         .collect()
 }
 
+fn jittered_len(spec: &CorpusSpec, rng: &mut Rng) -> usize {
+    let jitter = if spec.len_jitter > 0 {
+        rng.below(2 * spec.len_jitter as u64 + 1) as i64 - spec.len_jitter as i64
+    } else {
+        0
+    };
+    ((spec.read_len as i64 + jitter).max(1) as usize).min(MAX_READ_LEN)
+}
+
 /// Sample a read corpus from a synthetic genome (single-direction file).
 pub fn synth_corpus(spec: &CorpusSpec) -> Vec<Read> {
     let mut rng = Rng::new(spec.seed);
     let genome = synth_genome(spec.genome_len, spec.gc_content, &mut rng);
-    sample_reads(&genome, spec, 0, &mut rng, false)
-}
-
-/// Paired-end corpora (paper §III): one file of forward reads, one file of
-/// the same fragments read from the opposite direction (reverse
-/// complement). Sequence numbers of the pair files are disjoint.
-pub fn synth_paired_corpus(spec: &CorpusSpec) -> (Vec<Read>, Vec<Read>) {
-    let mut rng = Rng::new(spec.seed);
-    let genome = synth_genome(spec.genome_len, spec.gc_content, &mut rng);
-    let fwd = sample_reads(&genome, spec, 0, &mut rng, false);
-    let rev = sample_reads(&genome, spec, spec.n_reads as u64, &mut rng, true);
-    (fwd, rev)
-}
-
-fn sample_reads(
-    genome: &[u8],
-    spec: &CorpusSpec,
-    seq_base: u64,
-    rng: &mut Rng,
-    reverse_complement: bool,
-) -> Vec<Read> {
     let mut reads = Vec::with_capacity(spec.n_reads);
     for i in 0..spec.n_reads {
-        let jitter = if spec.len_jitter > 0 {
-            rng.below(2 * spec.len_jitter as u64 + 1) as i64 - spec.len_jitter as i64
-        } else {
-            0
-        };
-        let len = ((spec.read_len as i64 + jitter).max(1) as usize).min(genome.len());
+        let len = jittered_len(spec, &mut rng).min(genome.len());
         let start = rng.below((genome.len() - len + 1) as u64) as usize;
-        let mut codes = genome[start..start + len].to_vec();
-        if reverse_complement {
-            codes.reverse();
-            for c in codes.iter_mut() {
-                *c = complement(*c);
-            }
-        }
-        reads.push(Read::new(seq_base + i as u64, codes));
+        reads.push(Read::new(i as u64, genome[start..start + len].to_vec()));
     }
     reads
 }
 
-/// A↔T, C↔G on codes.
-#[inline]
-pub fn complement(code: u8) -> u8 {
-    match code {
-        1 => 4,
-        2 => 3,
-        3 => 2,
-        4 => 1,
-        other => other,
+/// Pair-end corpora (paper §III, Case 6): two input files over the SAME
+/// sampled fragments. Each fragment is `~2.5×` read length; file 1 holds
+/// its head read forward, file 2 the reverse complement of its tail, and
+/// sequence numbers are fragment-linked via [`pair_seq`] — so the two
+/// files are genuinely two views of one library, not two independent
+/// corpora.
+pub fn synth_paired_corpus(spec: &CorpusSpec) -> (Vec<Read>, Vec<Read>) {
+    let mut rng = Rng::new(spec.seed);
+    let genome = synth_genome(spec.genome_len, spec.gc_content, &mut rng);
+    let mut fwd = Vec::with_capacity(spec.n_reads);
+    let mut rev = Vec::with_capacity(spec.n_reads);
+    for i in 0..spec.n_reads {
+        let read_len = jittered_len(spec, &mut rng);
+        // fragment = head read + inner gap + tail read (insert ≈ 2.5 L)
+        let frag_len = (read_len * 2 + spec.read_len / 2).min(genome.len());
+        let start = rng.below((genome.len() - frag_len + 1) as u64) as usize;
+        let frag = &genome[start..start + frag_len];
+        let (f, r) = paired_reads_from_fragment(i as u64, frag, read_len);
+        fwd.push(f);
+        rev.push(r);
     }
+    (fwd, rev)
 }
 
 /// Total bytes of the `<seq, read>` records — the paper's "input size".
@@ -173,16 +276,55 @@ pub fn materialized_suffix_bytes(reads: &[Read]) -> u64 {
         .sum()
 }
 
-/// Parse a FASTA or plain-lines byte buffer into reads.
-pub fn parse_fasta(data: &[u8], seq_base: u64) -> Vec<Read> {
-    let mut reads = Vec::new();
-    let mut current: Vec<u8> = Vec::new();
-    let mut seq = seq_base;
-    let flush = |current: &mut Vec<u8>, seq: &mut u64, reads: &mut Vec<Read>| {
-        if !current.is_empty() {
-            reads.push(Read::new(*seq, std::mem::take(current)));
-            *seq += 1;
+// ---------------------------------------------------------------------
+// parsing (untrusted input)
+// ---------------------------------------------------------------------
+
+/// What the parser does with an ambiguous `N`/`n` base. An explicit
+/// policy instead of the encoder silently remapping: real pipelines
+/// either mask (the paper's grouper corpus is N-free after masking) or
+/// reject, and which one is a per-ingest decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParsePolicy {
+    /// Mask `N`/`n` to `A` (code 1).
+    MaskN,
+    /// Reject any character outside `ACGT` (either case), `N` included.
+    Strict,
+}
+
+fn parse_line(line: &[u8], policy: ParsePolicy, out: &mut Vec<u8>) -> io::Result<()> {
+    for &c in line {
+        match strict_code_of(c) {
+            // code 0 is '$', the INTERNAL terminator sentinel — an input
+            // file may never smuggle it into a read body
+            Some(code) if code != 0 => out.push(code),
+            None if policy == ParsePolicy::MaskN && (c == b'N' || c == b'n') => out.push(1),
+            _ => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("invalid read character {:?} (0x{c:02x})", c as char),
+                ))
+            }
         }
+    }
+    Ok(())
+}
+
+/// Parse a FASTA or plain-lines byte buffer into code vectors (one per
+/// `>`-delimited record; headerless input is one concatenated record).
+/// Errors on invalid characters (per `policy`), on records longer than
+/// [`MAX_READ_LEN`], and on headers with no sequence at all — an empty
+/// record silently dropped would shift every later record's index,
+/// which the pair-end ingest turns into wrong mate pairings.
+fn parse_records(data: &[u8], policy: ParsePolicy) -> io::Result<Vec<Vec<u8>>> {
+    let mut records = Vec::new();
+    let mut current: Vec<u8> = Vec::new();
+    let mut open_header = false;
+    let empty_record = |n: usize| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("record {n} has a header but no sequence"),
+        )
     };
     for line in data.split(|&b| b == b'\n') {
         let line = line.strip_suffix(b"\r").unwrap_or(line);
@@ -190,13 +332,77 @@ pub fn parse_fasta(data: &[u8], seq_base: u64) -> Vec<Read> {
             continue;
         }
         if line[0] == b'>' {
-            flush(&mut current, &mut seq, &mut reads);
+            if open_header && current.is_empty() {
+                return Err(empty_record(records.len()));
+            }
+            if !current.is_empty() {
+                records.push(std::mem::take(&mut current));
+            }
+            open_header = true;
         } else {
-            current.extend(line.iter().map(|&c| code_of(c)));
+            parse_line(line, policy, &mut current)?;
+            if current.len() > MAX_READ_LEN {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "record {} is {} bp; the packed suffix index only holds \
+                         offsets below {OFFSET_RADIX}",
+                        records.len(),
+                        current.len()
+                    ),
+                ));
+            }
         }
     }
-    flush(&mut current, &mut seq, &mut reads);
-    reads
+    if open_header && current.is_empty() {
+        return Err(empty_record(records.len()));
+    }
+    if !current.is_empty() {
+        records.push(current);
+    }
+    Ok(records)
+}
+
+/// Parse one single-end FASTA/line file into reads numbered consecutively
+/// from `seq_base`.
+pub fn parse_fasta(data: &[u8], seq_base: u64, policy: ParsePolicy) -> io::Result<Vec<Read>> {
+    let records = parse_records(data, policy)?;
+    records
+        .into_iter()
+        .enumerate()
+        .map(|(i, codes)| Read::try_new(seq_base + i as u64, codes))
+        .collect()
+}
+
+/// Two-file pair-end ingest: record `i` of `fwd_data` and record `i` of
+/// `rev_data` are the two mates of fragment `i`, numbered with the
+/// collision-free [`pair_seq`] scheme. Errors if the files hold different
+/// record counts — a truncated mate file would otherwise silently break
+/// every downstream pairing.
+pub fn parse_paired_files(
+    fwd_data: &[u8],
+    rev_data: &[u8],
+    policy: ParsePolicy,
+) -> io::Result<(Vec<Read>, Vec<Read>)> {
+    let fwd_recs = parse_records(fwd_data, policy)?;
+    let rev_recs = parse_records(rev_data, policy)?;
+    if fwd_recs.len() != rev_recs.len() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "pair-end files disagree: {} forward reads vs {} mates",
+                fwd_recs.len(),
+                rev_recs.len()
+            ),
+        ));
+    }
+    let number = |recs: Vec<Vec<u8>>, mate: Mate| -> io::Result<Vec<Read>> {
+        recs.into_iter()
+            .enumerate()
+            .map(|(i, codes)| Read::try_new(pair_seq(i as u64, mate), codes))
+            .collect()
+    };
+    Ok((number(fwd_recs, Mate::Forward)?, number(rev_recs, Mate::Reverse)?))
 }
 
 #[cfg(test)]
@@ -227,7 +433,32 @@ mod tests {
     }
 
     #[test]
-    fn paired_reads_are_reverse_complements_statistically() {
+    fn pair_numbering_roundtrips_and_never_collides() {
+        for f in [0u64, 1, 2, 50, 1 << 40] {
+            assert_eq!(fragment_of(pair_seq(f, Mate::Forward)), (f, Mate::Forward));
+            assert_eq!(fragment_of(pair_seq(f, Mate::Reverse)), (f, Mate::Reverse));
+            assert_ne!(pair_seq(f, Mate::Forward), pair_seq(f, Mate::Reverse));
+        }
+        // adjacent fragments stay disjoint
+        assert_ne!(pair_seq(3, Mate::Reverse), pair_seq(4, Mate::Forward));
+    }
+
+    #[test]
+    fn fragment_mates_are_exact_reverse_complements() {
+        // fragment == read length: the mates fully overlap, so the
+        // reverse read must be the exact reverse complement of the
+        // forward one — the strongest possible linkage check.
+        let frag = vec![1u8, 2, 3, 4, 4, 1, 2];
+        let (fwd, rev) = paired_reads_from_fragment(9, &frag, frag.len());
+        assert_eq!(fwd.seq, 18);
+        assert_eq!(rev.seq, 19);
+        assert_eq!(fwd.codes, frag);
+        assert_eq!(rev.codes, reverse_complement(&frag));
+        assert_eq!(reverse_complement(&rev.codes), frag); // involution
+    }
+
+    #[test]
+    fn paired_corpus_is_fragment_linked() {
         let spec = CorpusSpec {
             n_reads: 50,
             read_len: 30,
@@ -238,26 +469,36 @@ mod tests {
         let (fwd, rev) = synth_paired_corpus(&spec);
         assert_eq!(fwd.len(), 50);
         assert_eq!(rev.len(), 50);
-        // disjoint sequence numbers
-        assert_eq!(rev[0].seq, 50);
-        // reverse strand has complementary GC/AT composition overall
-        let at = |rs: &[Read]| {
-            rs.iter()
-                .flat_map(|r| &r.codes)
-                .filter(|&&c| c == 1)
-                .count()
+        for (i, (f, r)) in fwd.iter().zip(&rev).enumerate() {
+            // interleaved, collision-free numbering
+            assert_eq!(f.seq, pair_seq(i as u64, Mate::Forward));
+            assert_eq!(r.seq, f.seq + 1);
+            assert_eq!(fragment_of(f.seq), (i as u64, Mate::Forward));
+            assert_eq!(fragment_of(r.seq), (i as u64, Mate::Reverse));
+            assert_eq!(f.len(), 30);
+            assert_eq!(r.len(), 30);
+        }
+        // deterministic
+        let (fwd2, rev2) = synth_paired_corpus(&spec);
+        assert_eq!(fwd, fwd2);
+        assert_eq!(rev, rev2);
+    }
+
+    #[test]
+    fn paired_reads_share_their_fragment() {
+        // read length == fragment length is forced by a genome exactly
+        // one fragment long: mates must be exact reverse complements.
+        let spec = CorpusSpec {
+            n_reads: 10,
+            read_len: 64,
+            len_jitter: 0,
+            genome_len: 64, // fragment clamps to the whole genome
+            ..Default::default()
         };
-        let fwd_a = at(&fwd);
-        let rev_t: usize = rev
-            .iter()
-            .flat_map(|r| &r.codes)
-            .filter(|&&c| c == 4)
-            .count();
-        // complements map every A on the forward strand to a T when the
-        // same position is read in reverse; counts need not be identical
-        // (different fragments) but should be within noise of each other.
-        let diff = (fwd_a as f64 - rev_t as f64).abs() / fwd_a as f64;
-        assert!(diff < 0.25, "fwd_a={fwd_a} rev_t={rev_t}");
+        let (fwd, rev) = synth_paired_corpus(&spec);
+        for (f, r) in fwd.iter().zip(&rev) {
+            assert_eq!(reverse_complement(&f.codes), r.codes);
+        }
     }
 
     #[test]
@@ -279,7 +520,7 @@ mod tests {
     #[test]
     fn fasta_parse() {
         let data = b">r1\nACGT\nACG\n>r2\nTTT\n";
-        let reads = parse_fasta(data, 10);
+        let reads = parse_fasta(data, 10, ParsePolicy::Strict).unwrap();
         assert_eq!(reads.len(), 2);
         assert_eq!(reads[0].to_ascii(), "ACGTACG");
         assert_eq!(reads[1].to_ascii(), "TTT");
@@ -288,7 +529,95 @@ mod tests {
 
     #[test]
     fn plain_lines_parse() {
-        let reads = parse_fasta(b"ACG\nTGA\n", 0);
+        let reads = parse_fasta(b"ACG\nTGA\n", 0, ParsePolicy::Strict).unwrap();
         assert_eq!(reads.len(), 1); // no '>' headers: one concatenated read
+    }
+
+    #[test]
+    fn empty_records_are_errors_not_skipped() {
+        // a header with no sequence, silently dropped, would shift every
+        // later record's index — and the pair-end ingest pairs by index,
+        // so it would mispair every subsequent mate with no error
+        for data in [&b">a\n>b\nACGT\n"[..], b">a\nACGT\n>b\n", b">only\n"] {
+            let err = parse_fasta(data, 0, ParsePolicy::Strict).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{data:?}");
+            assert!(err.to_string().contains("no sequence"), "{err}");
+        }
+        // an empty FILE is fine — zero records, not an empty record
+        assert!(parse_fasta(b"", 0, ParsePolicy::Strict).unwrap().is_empty());
+        // and a mid-file empty record in one mate file can no longer
+        // shift the pairing silently
+        let err = parse_paired_files(b">f0\nAC\n>f1\n>f2\nGT\n", b">r0\nTT\n>r1\nGG\n>r2\nCC\n", ParsePolicy::Strict)
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn parser_n_policy_is_explicit() {
+        // masked: N -> A
+        let masked = parse_fasta(b">r\nANT\n", 0, ParsePolicy::MaskN).unwrap();
+        assert_eq!(masked[0].to_ascii(), "AAT");
+        // strict: a real io::Error, not a process abort
+        let err = parse_fasta(b">r\nANT\n", 0, ParsePolicy::Strict).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // garbage fails under BOTH policies
+        for policy in [ParsePolicy::MaskN, ParsePolicy::Strict] {
+            let err = parse_fasta(b">r\nACXGT\n", 0, policy).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{policy:?}");
+            assert!(err.to_string().contains('X'), "{err}");
+            // and so does '$' — the internal terminator sentinel must
+            // never enter a read body from an input file
+            let err = parse_fasta(b">r\nAC$GT\n", 0, policy).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn parser_rejects_oversized_reads() {
+        // 1000+ bp read: construction must fail loudly at ingestion —
+        // in release mode too — instead of aliasing packed indexes into
+        // the next sequence number and emitting a wrong suffix array.
+        let mut data = b">huge\n".to_vec();
+        data.extend(vec![b'A'; OFFSET_RADIX as usize]); // len == 1000 > MAX_READ_LEN
+        data.push(b'\n');
+        let err = parse_fasta(&data, 0, ParsePolicy::Strict).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("1000"), "{err}");
+        // the boundary length is still fine
+        let mut ok = b">edge\n".to_vec();
+        ok.extend(vec![b'A'; MAX_READ_LEN]);
+        let reads = parse_fasta(&ok, 0, ParsePolicy::Strict).unwrap();
+        assert_eq!(reads[0].len(), MAX_READ_LEN);
+        assert_eq!(reads[0].suffix_count(), OFFSET_RADIX as usize);
+    }
+
+    #[test]
+    fn try_new_rejects_what_new_panics_on() {
+        assert!(Read::try_new(0, vec![1; MAX_READ_LEN]).is_ok());
+        let err = Read::try_new(7, vec![1; MAX_READ_LEN + 1]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    #[should_panic(expected = "packed index")]
+    fn new_rejects_oversized_read_in_every_profile() {
+        // plain assert!, not debug_assert! — release builds must refuse too
+        let _ = Read::new(0, vec![1; MAX_READ_LEN + 1]);
+    }
+
+    #[test]
+    fn paired_files_parse_and_pair() {
+        let fwd = b">f0\nACGT\n>f1\nGGCC\n";
+        let rev = b">r0\nTTTT\n>r1\nCACA\n";
+        let (f, r) = parse_paired_files(fwd, rev, ParsePolicy::Strict).unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(r.len(), 2);
+        assert_eq!(f[0].seq, pair_seq(0, Mate::Forward));
+        assert_eq!(r[0].seq, pair_seq(0, Mate::Reverse));
+        assert_eq!(f[1].seq, 2);
+        assert_eq!(r[1].seq, 3);
+        // truncated mate file is an error, not a silent mispairing
+        let err = parse_paired_files(fwd, b">r0\nTTTT\n", ParsePolicy::Strict).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
     }
 }

@@ -9,6 +9,7 @@
 use std::collections::HashMap;
 
 use crate::suffix::encode::unpack_index;
+use crate::suffix::reads::{fragment_of, Mate};
 use crate::suffix::sa;
 
 /// All occurrences (start positions) of `pattern` in `text`, via binary
@@ -75,6 +76,86 @@ pub fn find_in_corpus(
     out
 }
 
+/// One joined pair-end seed hit: both mates of a fragment carry their
+/// seed, at compatible positions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PairHit {
+    /// Fragment id both mates belong to.
+    pub fragment: u64,
+    /// `(seq, offset)` of the forward seed in the forward-mate read.
+    pub forward: (u64, usize),
+    /// `(seq, offset)` of the reverse seed in the reverse-mate read.
+    pub reverse: (u64, usize),
+}
+
+/// Pair-end seed alignment over the joint suffix array of a two-file
+/// pair-end construction — the query half of the paper's Case 6 claim
+/// ("complete the pair-end sequencing and alignment with two input
+/// files").
+///
+/// `seed_fwd` is searched among forward mates and `seed_rev` (already in
+/// the reverse read's coordinates, i.e. the reverse complement of the
+/// fragment-strand seed) among reverse mates; hits are joined by the
+/// fragment id recovered from the pair-numbered sequence
+/// (`crate::suffix::reads::fragment_of`), and a joined pair survives only
+/// if it is compatible with a sequencing insert of at most `max_insert`
+/// bases. Geometry: a forward seed at offset `of` occupies fragment
+/// positions `[of, of + |seed_fwd|)` from the fragment's start; a
+/// reverse seed at offset `or` occupies the `|seed_rev|` bases ending
+/// `or` before the fragment's END. The smallest fragment consistent with
+/// both is therefore `max(of + |seed_fwd|, or + |seed_rev|)` — mates of
+/// short fragments may overlap (see
+/// `crate::suffix::reads::paired_reads_from_fragment`), so the two seed
+/// intervals are allowed to cover the same bases.
+///
+/// Both seed lookups are `O(|seed| log n)` binary searches on the joint
+/// SA; the join is hash-by-fragment. Results are sorted by
+/// (fragment, forward offset, reverse offset).
+pub fn find_pairs(
+    order: &[i64],
+    reads: &HashMap<u64, Vec<u8>>,
+    seed_fwd: &[u8],
+    seed_rev: &[u8],
+    max_insert: usize,
+) -> Vec<PairHit> {
+    if seed_fwd.is_empty() || seed_rev.is_empty() {
+        return Vec::new();
+    }
+    // hits on the correct mate only: a forward seed found in a reverse
+    // read (or vice versa) is not a mate pairing
+    let mate_hits = |seed: &[u8], want: Mate| -> HashMap<u64, Vec<usize>> {
+        let mut by_fragment: HashMap<u64, Vec<usize>> = HashMap::new();
+        for (seq, off) in find_in_corpus(order, reads, seed) {
+            let (fragment, mate) = fragment_of(seq);
+            if mate == want {
+                by_fragment.entry(fragment).or_default().push(off);
+            }
+        }
+        by_fragment
+    };
+    let fwd_hits = mate_hits(seed_fwd, Mate::Forward);
+    let rev_hits = mate_hits(seed_rev, Mate::Reverse);
+
+    let mut out = Vec::new();
+    for (&fragment, f_offs) in &fwd_hits {
+        let Some(r_offs) = rev_hits.get(&fragment) else { continue };
+        for &of in f_offs {
+            for &or in r_offs {
+                let min_fragment = (of + seed_fwd.len()).max(or + seed_rev.len());
+                if min_fragment <= max_insert {
+                    out.push(PairHit {
+                        fragment,
+                        forward: (crate::suffix::reads::pair_seq(fragment, Mate::Forward), of),
+                        reverse: (crate::suffix::reads::pair_seq(fragment, Mate::Reverse), or),
+                    });
+                }
+            }
+        }
+    }
+    out.sort_by_key(|h| (h.fragment, h.forward.1, h.reverse.1));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +192,73 @@ mod tests {
                 assert_eq!(got, want, "plen={plen}");
             }
         }
+    }
+
+    #[test]
+    fn find_pairs_joins_planted_fragments() {
+        use crate::suffix::reads::paired_reads_from_fragment;
+        // 20 bp fragments, 8 bp reads from each end, pair-numbered seqs.
+        // fragment 0 carries BOTH seeds: "ACGT" in its forward read
+        // (offsets 0 and 4) and "AAAC" in its reverse read (offset 0).
+        // fragments 1-3 are decoys missing one seed or carrying it on
+        // the wrong mate.
+        let frags: [&[u8]; 4] = [
+            b"ACGTACGTAAACCCGGGTTT", // fwd ACGTACGT, rev revcomp(CCGGGTTT)=AAACCCGG
+            b"ACGTGGGGGGGGTTTTGGGG", // fwd has ACGT, rev CCCCAAAA lacks AAAC
+            b"GGGGGGGGGGGGCCGGGTTT", // rev has AAAC, fwd GGGGGGGG lacks ACGT
+            b"AAACGGGGGGGGACGTACGT", // seeds present but each on the WRONG mate
+        ];
+        let mut reads = Vec::new();
+        for (f, frag) in frags.iter().enumerate() {
+            let (fwd, rev) = paired_reads_from_fragment(f as u64, &codes_of(frag), 8);
+            reads.push(fwd);
+            reads.push(rev);
+        }
+        let order = reference_order(&reads);
+        let map = read_map(&reads);
+        let seed_fwd = codes_of(b"ACGT");
+        let seed_rev = codes_of(b"AAAC");
+
+        let hits = find_pairs(&order, &map, &seed_fwd, &seed_rev, 30);
+        assert_eq!(
+            hits,
+            vec![
+                PairHit { fragment: 0, forward: (0, 0), reverse: (1, 0) },
+                PairHit { fragment: 0, forward: (0, 4), reverse: (1, 0) },
+            ]
+        );
+
+        // insert window: min fragment = max(of+|sf|, or+|sr|) — 4 for
+        // (of=0, or=0), 8 for (of=4, or=0) — prunes mechanically
+        let tight = find_pairs(&order, &map, &seed_fwd, &seed_rev, 7);
+        assert_eq!(tight.len(), 1);
+        assert_eq!(tight[0].forward.1, 0);
+        assert!(find_pairs(&order, &map, &seed_fwd, &seed_rev, 3).is_empty());
+        // empty seeds never match
+        assert!(find_pairs(&order, &map, &[], &seed_rev, 30).is_empty());
+    }
+
+    #[test]
+    fn find_pairs_keeps_overlapping_mates_of_short_fragments() {
+        use crate::suffix::reads::paired_reads_from_fragment;
+        // fragment length == read length: the mates fully overlap, so
+        // both seeds cover the SAME fragment bases. A formula that
+        // forces the reverse seed downstream of the forward one would
+        // wrongly prune this genuine pairing.
+        let frag = codes_of(b"ACGTTGCA");
+        let (fwd, rev) = paired_reads_from_fragment(0, &frag, frag.len());
+        let reads = vec![fwd, rev];
+        let order = reference_order(&reads);
+        let map = read_map(&reads);
+        // fwd seed = fragment tail (of=4); rev seed = the revcomp view
+        // of that same tail, i.e. the rev read's head (or=0)
+        let seed_fwd = codes_of(b"TGCA");
+        let seed_rev = codes_of(b"TGCA"); // revcomp(TGCA) == TGCA
+        let hits = find_pairs(&order, &map, &seed_fwd, &seed_rev, frag.len());
+        assert!(
+            hits.iter().any(|h| h.fragment == 0 && h.forward.1 == 4 && h.reverse.1 == 0),
+            "overlapping-mate pairing wrongly pruned: {hits:?}"
+        );
     }
 
     #[test]

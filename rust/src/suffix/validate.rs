@@ -58,6 +58,56 @@ pub fn reference_order(reads: &[Read]) -> Vec<i64> {
     idx
 }
 
+/// Single-process SA-IS reference over the *concatenated* corpus — the
+/// independent oracle the pair-end equivalence tests compare the
+/// distributed two-file order against.
+///
+/// The reads (ascending seq) are joined into one text, each followed by
+/// its `$` terminator (code 0), and SA-IS sorts every suffix of the
+/// concatenation in linear time. Each concatenation position maps back
+/// to exactly one `(read, offset)` with `offset ∈ 0..=len` (the
+/// terminator position is the read's lone-`$` suffix), so the filtered
+/// array is a permutation of all packed indexes. One correction remains:
+/// where two read-suffixes are EQUAL as `$`-terminated strings, the
+/// concatenation ordered them by whatever text follows the terminator,
+/// while the pipeline's contract is ascending packed index — so equal-
+/// text runs are re-sorted by index. Everything else is untouched: `$`
+/// sorts below every base, so a proper prefix already precedes its
+/// extensions in the concatenation order.
+pub fn sais_reference_order(reads: &[Read]) -> Vec<i64> {
+    let mut by_seq: Vec<&Read> = reads.iter().collect();
+    by_seq.sort_by_key(|r| r.seq);
+
+    let total: usize = by_seq.iter().map(|r| r.suffix_count()).sum();
+    let mut text = Vec::with_capacity(total);
+    // packed index of every concatenation position
+    let mut index_at = Vec::with_capacity(total);
+    for r in &by_seq {
+        for (off, &c) in r.codes.iter().enumerate() {
+            text.push(c);
+            index_at.push(pack_index(r.seq, off));
+        }
+        text.push(0); // terminator position = the lone-'$' suffix
+        index_at.push(pack_index(r.seq, r.len()));
+    }
+
+    let sa = crate::suffix::sa::sais(&text);
+    let mut order: Vec<i64> = sa.iter().map(|&p| index_at[p as usize]).collect();
+
+    // stabilize equal-text runs by packed index
+    let map = read_map(reads);
+    let mut start = 0;
+    for i in 1..=order.len() {
+        if i == order.len() || cmp_suffix(&map, order[i - 1], order[i]) != Ordering::Equal {
+            if i - start > 1 {
+                order[start..i].sort_unstable();
+            }
+            start = i;
+        }
+    }
+    order
+}
+
 /// Validate a pipeline output against the corpus: must be a permutation of
 /// all suffix indexes in (text, index) order.
 pub fn validate_order(reads: &[Read], order: &[i64]) -> Result<(), String> {
@@ -148,6 +198,31 @@ mod tests {
                 assert!(w[0] < w[1]);
             }
         }
+    }
+
+    #[test]
+    fn sais_reference_matches_naive_reference() {
+        // the concatenated-corpus SA-IS reference must agree with the
+        // naive (text, index) sort on corpora with heavy duplication —
+        // where the equal-run re-stabilization actually has work to do
+        let mut corpus = reads::synth_corpus(&CorpusSpec {
+            n_reads: 40,
+            read_len: 16,
+            genome_len: 256, // repetitive: many equal suffix texts
+            ..Default::default()
+        });
+        // exact duplicate reads: maximal equal-text runs
+        let dup = corpus[3].codes.clone();
+        corpus.push(Read::new(40, dup.clone()));
+        corpus.push(Read::new(41, dup));
+        let want = reference_order(&corpus);
+        let got = sais_reference_order(&corpus);
+        assert_eq!(got, want);
+        validate_order(&corpus, &got).expect("sais reference invalid");
+        // degenerate corpora
+        assert!(sais_reference_order(&[]).is_empty());
+        let one = vec![Read::from_ascii(9, b"A")];
+        assert_eq!(sais_reference_order(&one), reference_order(&one));
     }
 
     #[test]

@@ -45,18 +45,17 @@ fn full_stack_over_tcp_matches_baseline() {
         seed: 77,
         ..Default::default()
     });
-    let mut reads = fwd;
-    reads.extend(rev);
 
-    // scheme over real sockets
+    // pair-end scheme over real sockets: TWO input files, one shared
+    // sharded store, one joint index stream (paper Case 6)
     let kv = LocalKvCluster::start(5).expect("kv cluster");
     let addrs = kv.addrs();
     let factory: scheme::StoreFactory = Arc::new(move || {
         Box::new(ShardedClient::connect(&addrs).expect("connect")) as Box<dyn SuffixStore>
     });
     let ledger = Ledger::new();
-    let res = scheme::run(
-        &reads,
+    let res = scheme::run_files(
+        &[&fwd, &rev],
         &SchemeConfig {
             conf: conf(3),
             group_threshold: 20_000,
@@ -67,6 +66,8 @@ fn full_stack_over_tcp_matches_baseline() {
         &ledger,
     )
     .expect("scheme");
+    let mut reads = fwd;
+    reads.extend(rev);
     validate_order(&reads, &res.order).expect("scheme order");
 
     // baseline on the same corpus
@@ -137,6 +138,35 @@ fn scheme_all_identical_reads_stress_tie_breaking() {
     )
     .expect("scheme");
     validate_order(&reads, &res.order).expect("order with max duplicates");
+}
+
+#[test]
+fn oversized_read_is_rejected_not_aliased() {
+    // A 1000+ bp read has suffix offsets that alias into the NEXT
+    // sequence number when packed (seq*1000 + offset) — release builds
+    // used to let this through (the guard was a debug_assert) and emit a
+    // silently wrong suffix array. This test runs in BOTH profiles (CI
+    // runs the suite under --release too): ingestion must fail loudly.
+    use samr::suffix::reads::{parse_fasta, ParsePolicy, Read};
+
+    // parser-level ingestion: a real io::Error
+    let mut fasta = b">huge\n".to_vec();
+    fasta.extend(vec![b'A'; 1000]);
+    let err = parse_fasta(&fasta, 0, ParsePolicy::Strict).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+    // fallible constructor: same rejection
+    assert!(Read::try_new(0, vec![1u8; 1000]).is_err());
+    assert!(Read::try_new(0, vec![1u8; 999]).is_ok());
+
+    // and the packed index itself refuses to alias, even in release
+    let packed = std::panic::catch_unwind(|| samr::suffix::encode::pack_index(5, 1000));
+    assert!(packed.is_err(), "pack_index must panic on aliasing offsets");
+    assert_eq!(
+        samr::suffix::encode::pack_index(5, 999),
+        samr::suffix::encode::pack_index(6, 0) - 1,
+        "boundary offsets stay distinct"
+    );
 }
 
 #[test]

@@ -12,7 +12,8 @@ use samr::mapreduce::JobConf;
 use samr::runtime::native;
 use samr::scheme::{self, SchemeConfig};
 use samr::suffix::encode::{encode_prefix, unpack_index};
-use samr::suffix::validate::{reference_order, validate_order};
+use samr::suffix::reads::{synth_paired_corpus, CorpusSpec};
+use samr::suffix::validate::{reference_order, sais_reference_order, validate_order};
 use samr::terasort::{self, TeraSortConfig};
 use samr::testkit::{gen, property};
 
@@ -176,6 +177,60 @@ fn prop_pipelines_match_reference() {
         validate_order(&reads, &res.order).map_err(|e| e)?;
         Ok(())
     });
+}
+
+/// Pair-end equivalence (paper Case 6): the distributed TWO-input-file
+/// construction must produce exactly the order of a single-process SA-IS
+/// reference over the concatenated corpus — across shard counts {1, 3}
+/// and both shuffle implementations (`fixed_shuffle` on/off).
+#[test]
+fn pair_end_two_files_match_sais_reference() {
+    let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+        n_reads: 60,
+        read_len: 24,
+        len_jitter: 2,
+        genome_len: 2048, // repetitive: plenty of cross-file tie groups
+        seed: 0xCA5E6,
+        ..Default::default()
+    });
+    let mut all = fwd.clone();
+    all.extend(rev.clone());
+    // independent oracle: SA-IS over the concatenation, not the pipeline
+    let want = sais_reference_order(&all);
+    assert_eq!(want, reference_order(&all), "oracles disagree");
+
+    for n_shards in [1usize, 3] {
+        for fixed_shuffle in [true, false] {
+            let store = SharedStore::new(n_shards);
+            let s = store.clone();
+            let cfg = SchemeConfig {
+                conf: JobConf {
+                    n_reducers: 3,
+                    io_sort_bytes: 4 << 10,
+                    split_bytes: 4 << 10,
+                    reducer_heap_bytes: 48 << 10,
+                    ..JobConf::default()
+                },
+                group_threshold: 700,
+                samples_per_reducer: 200,
+                fixed_shuffle,
+                ..Default::default()
+            };
+            let ledger = Ledger::new();
+            let res = scheme::run_files(
+                &[&fwd, &rev],
+                &cfg,
+                Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+                &ledger,
+            )
+            .expect("two-file scheme run");
+            assert_eq!(
+                res.order, want,
+                "two-file order != SA-IS reference (shards {n_shards}, fixed {fixed_shuffle})"
+            );
+            validate_order(&all, &res.order).expect("invalid two-file order");
+        }
+    }
 }
 
 /// The KV store returns exactly the suffix bytes for any (read, offset).
