@@ -1,0 +1,131 @@
+//! `cargo bench --bench dataflow` — streamed (disk-backed) vs
+//! materialized input at 1M+ records.
+//!
+//! Three legs: (1) scanning 1M records out of a spooled record file
+//! through `RecordReader` vs iterating the same records resident in a
+//! `Vec` — the price of the out-of-core input path; (2) spooling the
+//! records to split files vs cloning them into a resident `Vec<Vec<_>>`
+//! — the price at generation time; (3) one full identity-sort job over
+//! the streamed splits, reporting wall time and the peak resident
+//! record count the buffer budgets allowed (against the 1M-record
+//! input that never sits in memory).
+
+use std::hint::black_box;
+use std::sync::Arc;
+
+use samr::bench_support::{bench_throughput, section};
+use samr::footprint::Ledger;
+use samr::mapreduce::io::spool_records;
+use samr::mapreduce::partitioner::RangePartitioner;
+use samr::mapreduce::{resident, run_job, Job, JobConf, Record, ScratchDir};
+use samr::util::rng::Rng;
+
+fn synth(n: usize, seed: u64) -> Vec<Record> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            Record::new(
+                rng.next_u64().to_be_bytes().to_vec(),
+                rng.next_u64().to_be_bytes().to_vec(),
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let n: usize = std::env::var("SAMR_DATAFLOW_RECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 20);
+    let recs = synth(n, 17);
+    let dir = ScratchDir::new(None, "bench-dataflow").expect("scratch");
+    let split_bytes = 1 << 20;
+
+    section(&format!("input generation at {n} records"));
+    let m = bench_throughput("materialized: clone into resident splits", 1, 5, n as f64, "recs", || {
+        let mut splits: Vec<Vec<Record>> = Vec::new();
+        let mut cur: Vec<Record> = Vec::new();
+        let mut bytes = 0u64;
+        for r in &recs {
+            bytes += r.wire_bytes();
+            cur.push(r.clone());
+            if bytes >= split_bytes {
+                splits.push(std::mem::take(&mut cur));
+                bytes = 0;
+            }
+        }
+        splits.push(cur);
+        black_box(splits.len());
+    });
+    println!("{m}");
+    let m = bench_throughput("streamed: spool to disk-backed splits", 1, 5, n as f64, "recs", || {
+        // one path reused across iterations: File::create truncates, so
+        // disk use stays bounded at one spool regardless of rep count
+        let splits = spool_records(dir.path.join("in"), &recs, split_bytes).unwrap();
+        black_box(splits.len());
+    });
+    println!("{m}");
+
+    section(&format!("full scan at {n} records"));
+    let m = bench_throughput("materialized Vec scan", 1, 5, n as f64, "recs", || {
+        let mut total = 0u64;
+        for r in &recs {
+            total += r.wire_bytes();
+        }
+        black_box(total);
+    });
+    println!("{m}");
+    let splits = spool_records(dir.path.join("scan"), &recs, split_bytes).unwrap();
+    let m = bench_throughput("streamed RecordReader scan", 1, 5, n as f64, "recs", || {
+        let mut total = 0u64;
+        for s in &splits {
+            let mut rd = s.open().unwrap();
+            while let Some(r) = rd.next_record().unwrap() {
+                total += r.wire_bytes();
+            }
+        }
+        black_box(total);
+    });
+    println!("{m}");
+
+    section("end-to-end identity sort over streamed splits");
+    let n_reducers = 4;
+    let samples: Vec<Vec<u8>> = recs.iter().take(4000).map(|r| r.key.clone()).collect();
+    let part = Arc::new(RangePartitioner::from_samples(samples, n_reducers));
+    let job = Job {
+        name: "bench-dataflow".into(),
+        conf: JobConf {
+            n_reducers,
+            split_bytes,
+            io_sort_bytes: 4 << 20,
+            reducer_heap_bytes: 16 << 20,
+            fixed_width: true,
+            ..JobConf::default()
+        },
+        map_factory: Arc::new(|_| {
+            Box::new(|rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone()))
+        }),
+        reduce_factory: Arc::new(|_| {
+            Box::new(
+                |key: &[u8], vals: Vec<Vec<u8>>, out: &mut dyn FnMut(Record)| {
+                    for v in vals {
+                        out(Record::new(key.to_vec(), v));
+                    }
+                },
+            )
+        }),
+        partitioner: part.as_fn(),
+    };
+    let job_splits = spool_records(dir.path.join("job"), &recs, split_bytes).unwrap();
+    resident::reset();
+    let ledger = Ledger::new();
+    let t0 = std::time::Instant::now();
+    let res = run_job(&job, job_splits, &ledger).expect("job");
+    println!(
+        "    {n} records sorted in {:?}; peak resident records {} ({:.2}% of input)",
+        t0.elapsed(),
+        resident::peak(),
+        100.0 * resident::peak() as f64 / n as f64
+    );
+    drop(res);
+}

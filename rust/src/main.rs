@@ -197,6 +197,7 @@ fn conf_from(args: &Args) -> samr::mapreduce::JobConf {
 fn run_terasort(args: &Args) -> i32 {
     let reads = corpus_from(args);
     let ledger = Ledger::new();
+    samr::mapreduce::resident::reset();
     let t0 = std::time::Instant::now();
     let res = terasort::run(
         &reads,
@@ -211,12 +212,16 @@ fn run_terasort(args: &Args) -> i32 {
         res.order.len(),
         t0.elapsed()
     );
-    println!("suffix input {}", human(res.suffix_input_bytes));
+    println!("suffix input {} (disk-backed: splits + output spooled)", human(res.suffix_input_bytes));
     print!("{}", res.job.footprint);
     println!(
         "max sorting group: {} records / {}",
         res.max_group_records,
         human(res.max_group_bytes)
+    );
+    println!(
+        "peak resident shuffle records: {}",
+        samr::mapreduce::resident::peak()
     );
     0
 }
@@ -231,6 +236,7 @@ fn run_scheme(args: &Args) -> i32 {
         samples_per_reducer: 1000,
         ..Default::default()
     };
+    samr::mapreduce::resident::reset();
     let t0 = std::time::Instant::now();
     let n_instances = args.get_parse("instances", 4usize);
     let res = if args.has("tcp") {
@@ -270,6 +276,10 @@ fn run_scheme(args: &Args) -> i32 {
     let (f, s, o) = res.time_split.percentages();
     println!("reducer time split: fetch {f:.0}% / sort {s:.0}% / other {o:.0}% (paper: 60/13/27)");
     println!("KV memory: {}", human(res.kv_memory));
+    println!(
+        "peak resident shuffle records: {}",
+        samr::mapreduce::resident::peak()
+    );
     0
 }
 

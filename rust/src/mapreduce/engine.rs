@@ -1,10 +1,18 @@
-//! The job engine: splits input, runs map attempts on a worker pool,
-//! shuffles, runs reduce attempts, and accounts every byte in the
-//! footprint ledger. This is an *in-process* Hadoop: real records, real
-//! spill files, real merges — only the cluster (nodes/disks/network) is
+//! The job engine: streams disk-backed input splits through map attempts
+//! on a worker pool, shuffles, and streams reduce output back to spooled
+//! per-reducer "HDFS" files, accounting every byte in the footprint
+//! ledger. This is an *in-process* Hadoop: real records, real spill
+//! files, real merges — only the cluster (nodes/disks/network) is
 //! simulated elsewhere (`simcost`).
+//!
+//! Neither end of the dataflow is memory-resident: input is a list of
+//! [`InputSplit`] byte ranges pulled through [`RecordReader`]s, output
+//! is written through per-reducer `FileSink`s as it is produced, so the
+//! runnable input volume is bounded by disk, not RAM (see
+//! `docs/ARCHITECTURE.md` "Dataflow").
 
 use std::io;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -13,9 +21,10 @@ use std::time::{Duration, Instant};
 use crate::mapreduce::pool::WorkerPool;
 
 use crate::footprint::{Channel, Footprint, Ledger};
+use crate::mapreduce::io::{FileSink, InputSplit, OutputFile, RecordReader};
 use crate::mapreduce::job::JobConf;
 use crate::mapreduce::mapper::{run_map_task, run_map_task_fixed, MapTask, MapTaskStats, SpillFile};
-use crate::mapreduce::record::{batch_bytes, Record};
+use crate::mapreduce::record::Record;
 use crate::mapreduce::reducer::{
     run_reduce_task, run_reduce_task_fixed, ReduceTask, ReduceTaskStats,
 };
@@ -33,10 +42,14 @@ pub struct Job {
     pub partitioner: PartitionFn,
 }
 
-/// Everything a run produces.
+/// Everything a run produces. Output records live in per-reducer
+/// spooled files (the "HDFS" output), not in memory; they are deleted
+/// when this result is dropped.
 pub struct JobResult {
-    /// Per-reducer output records (the "HDFS" output files).
-    pub output: Vec<Vec<Record>>,
+    /// Per-reducer sealed output files, in partition order.
+    pub output: Vec<OutputFile>,
+    /// Keeps the output files on disk for exactly this result's lifetime.
+    _out_dir: Arc<ScratchDir>,
     pub footprint: Footprint,
     pub map_stats: Vec<MapTaskStats>,
     pub reduce_stats: Vec<ReduceTaskStats>,
@@ -48,8 +61,58 @@ impl JobResult {
         self.footprint.get(Channel::HdfsWrite)
     }
 
-    pub fn all_output(&self) -> impl Iterator<Item = &Record> {
-        self.output.iter().flatten()
+    /// Stream reducer `r`'s output file.
+    pub fn output_reader(&self, r: usize) -> io::Result<RecordReader> {
+        self.output[r].open()
+    }
+
+    /// Stream every output record in reducer order — the reducer files
+    /// concatenate to the job's globally ordered output. This is the
+    /// out-of-core consumption path: one record resident at a time.
+    pub fn for_each_output(
+        &self,
+        mut f: impl FnMut(Record) -> io::Result<()>,
+    ) -> io::Result<()> {
+        for file in &self.output {
+            let mut r = file.open()?;
+            while let Some(rec) = r.next_record()? {
+                f(rec)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Opt-in collect of all reducer outputs — the whole output is
+    /// resident again; use only for small tests.
+    pub fn collect_output(&self) -> io::Result<Vec<Vec<Record>>> {
+        self.output.iter().map(OutputFile::read_all).collect()
+    }
+
+    /// Stream every output record in reducer order and decode the first
+    /// 8 bytes of its value as a big-endian i64 — how both suffix
+    /// pipelines recover their packed-index order from the sinks
+    /// without materializing the records.
+    pub fn collect_i64_values(&self) -> io::Result<Vec<i64>> {
+        let n: u64 = self.output.iter().map(|o| o.records).sum();
+        let mut out = Vec::with_capacity(n as usize);
+        self.for_each_output(|r| {
+            let prefix: [u8; 8] = r
+                .value
+                .get(..8)
+                .and_then(|s| s.try_into().ok())
+                .ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!(
+                            "output value is {} bytes; an 8-byte i64 prefix is required",
+                            r.value.len()
+                        ),
+                    )
+                })?;
+            out.push(i64::from_be_bytes(prefix));
+            Ok(())
+        })?;
+        Ok(out)
     }
 }
 
@@ -78,37 +141,44 @@ impl Drop for ScratchDir {
     }
 }
 
-/// Split input records into Hadoop-style input splits by byte budget.
-pub fn make_splits(records: Vec<Record>, split_bytes: u64) -> Vec<Vec<Record>> {
-    let mut splits = Vec::new();
-    let mut cur = Vec::new();
-    let mut cur_bytes = 0u64;
-    for rec in records {
-        cur_bytes += rec.wire_bytes();
-        cur.push(rec);
-        if cur_bytes >= split_bytes {
-            splits.push(std::mem::take(&mut cur));
-            cur_bytes = 0;
-        }
-    }
-    if !cur.is_empty() {
-        splits.push(cur);
-    }
-    splits
+/// A caught task panic, surfaced as a real error naming the task
+/// instead of unwinding through the engine.
+fn task_panic_error(
+    phase: &str,
+    id: usize,
+    job: &str,
+    payload: Box<dyn std::any::Any + Send>,
+) -> io::Error {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string());
+    io::Error::other(format!("{phase} task {id} of job {job:?} panicked: {msg}"))
 }
 
-/// Run a job over pre-split input. The ledger accumulates the footprint
-/// (callers pass a fresh one per experiment, or share across stages).
+/// Run a job over disk-backed input splits. The ledger accumulates the
+/// footprint (callers pass a fresh one per experiment, or share across
+/// stages). The split spool files must outlive this call.
 ///
 /// Task attempts run on the process-wide [`WorkerPool`] so worker threads
 /// (and their thread-local PJRT engines) persist across phases and jobs.
+/// A panicking task attempt is caught on its worker and returned as an
+/// `io::Error` naming the task — it cannot take down the pool or
+/// surface as an opaque unwind.
 pub fn run_job(
     job: &Job,
-    splits: Vec<Vec<Record>>,
+    splits: Vec<InputSplit>,
     ledger: &Arc<Ledger>,
 ) -> io::Result<JobResult> {
     let start = Instant::now();
     let scratch = Arc::new(ScratchDir::new(job.conf.spill_dir.as_deref(), &job.name)?);
+    // output files live in their own dir: spills die with `scratch` when
+    // this function returns, output dies with the JobResult
+    let out_dir = Arc::new(ScratchDir::new(
+        job.conf.spill_dir.as_deref(),
+        &format!("{}-out", job.name),
+    )?);
     let splits = Arc::new(splits);
     let n_maps = splits.len();
     let n_reds = job.conf.n_reducers;
@@ -127,22 +197,30 @@ pub fn run_job(
             let conf = job.conf.clone();
             let partitioner = job.partitioner.clone();
             let factory = job.map_factory.clone();
+            let name = job.name.clone();
             let out = map_outputs.clone();
             Box::new(move || {
-                ledger.add(Channel::HdfsRead, batch_bytes(&splits[i]));
-                let mut task = factory(i);
-                // both paths produce byte-identical spill files and
-                // ledger charges; fixed_width only changes CPU cost
-                let run = if conf.fixed_width { run_map_task_fixed } else { run_map_task };
-                let res = run(
-                    i,
-                    &splits[i],
-                    task.as_mut(),
-                    &conf,
-                    &*partitioner,
-                    &ledger,
-                    &scratch.path,
-                );
+                let attempt = || -> io::Result<(SpillFile, MapTaskStats)> {
+                    let split = &splits[i];
+                    let mut reader = split.open()?;
+                    // reading the split IS the HDFS read of this task
+                    ledger.add(Channel::HdfsRead, split.bytes);
+                    let mut task = factory(i);
+                    // both paths produce byte-identical spill files and
+                    // ledger charges; fixed_width only changes CPU cost
+                    let run = if conf.fixed_width { run_map_task_fixed } else { run_map_task };
+                    run(
+                        i,
+                        &mut reader,
+                        task.as_mut(),
+                        &conf,
+                        &*partitioner,
+                        &ledger,
+                        &scratch.path,
+                    )
+                };
+                let res = catch_unwind(AssertUnwindSafe(attempt))
+                    .unwrap_or_else(|p| Err(task_panic_error("map", i, &name, p)));
                 out.lock().unwrap()[i] = Some(res);
             }) as Box<dyn FnOnce() + Send>
         })
@@ -150,37 +228,52 @@ pub fn run_job(
     pool.run_all(tasks, threads);
     let mut outputs = Vec::with_capacity(n_maps);
     let mut map_stats = Vec::with_capacity(n_maps);
-    for slot in map_outputs.lock().unwrap().drain(..) {
-        let (o, s) = slot.expect("map slot")?;
+    for (i, slot) in map_outputs.lock().unwrap().drain(..).enumerate() {
+        let (o, s) = slot
+            .unwrap_or_else(|| Err(io::Error::other(format!("map task {i} reported no result"))))?;
         outputs.push(o);
         map_stats.push(s);
     }
     let outputs = Arc::new(outputs);
 
     // ---------------- reduce phase ----------------
-    type RedSlot = Option<io::Result<(Vec<Record>, ReduceTaskStats)>>;
+    type RedSlot = Option<io::Result<(OutputFile, ReduceTaskStats)>>;
     let red_results: Arc<Mutex<Vec<RedSlot>>> =
         Arc::new(Mutex::new((0..n_reds).map(|_| None).collect()));
     let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..n_reds)
         .map(|r| {
             let ledger = ledger.clone();
             let scratch = scratch.clone();
+            let out_dir = out_dir.clone();
             let conf = job.conf.clone();
             let factory = job.reduce_factory.clone();
+            let name = job.name.clone();
             let outputs = outputs.clone();
             let out = red_results.clone();
             Box::new(move || {
-                let mut task = factory(r);
-                let run = if conf.fixed_width { run_reduce_task_fixed } else { run_reduce_task };
-                let res = run(
-                    r,
-                    r,
-                    &outputs,
-                    task.as_mut(),
-                    &conf,
-                    &ledger,
-                    &scratch.path,
-                );
+                let attempt = || -> io::Result<(OutputFile, ReduceTaskStats)> {
+                    let mut task = factory(r);
+                    let mut sink = FileSink::create(out_dir.path.join(format!("part-{r:05}")))?;
+                    let run =
+                        if conf.fixed_width { run_reduce_task_fixed } else { run_reduce_task };
+                    let stats = run(
+                        r,
+                        r,
+                        &outputs,
+                        task.as_mut(),
+                        &mut sink,
+                        &conf,
+                        &ledger,
+                        &scratch.path,
+                    )?;
+                    let file = sink.finish()?;
+                    // write output to "HDFS": charged as the file seals,
+                    // totalling exactly the old end-of-job charge
+                    ledger.add(Channel::HdfsWrite, file.bytes);
+                    Ok((file, stats))
+                };
+                let res = catch_unwind(AssertUnwindSafe(attempt))
+                    .unwrap_or_else(|p| Err(task_panic_error("reduce", r, &name, p)));
                 out.lock().unwrap()[r] = Some(res);
             }) as Box<dyn FnOnce() + Send>
         })
@@ -191,19 +284,17 @@ pub fn run_job(
     }
     let mut output = Vec::with_capacity(n_reds);
     let mut reduce_stats = Vec::with_capacity(n_reds);
-    for slot in red_results.lock().unwrap().drain(..) {
-        let (o, s) = slot.expect("reduce slot")?;
+    for (r, slot) in red_results.lock().unwrap().drain(..).enumerate() {
+        let (o, s) = slot.unwrap_or_else(|| {
+            Err(io::Error::other(format!("reduce task {r} reported no result")))
+        })?;
         output.push(o);
         reduce_stats.push(s);
     }
 
-    // write output to "HDFS"
-    for recs in &output {
-        ledger.add(Channel::HdfsWrite, batch_bytes(recs));
-    }
-
     Ok(JobResult {
         output,
+        _out_dir: out_dir,
         footprint: ledger.snapshot(),
         map_stats,
         reduce_stats,
@@ -214,7 +305,9 @@ pub fn run_job(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mapreduce::io::spool_records;
     use crate::mapreduce::partitioner::RangePartitioner;
+    use crate::mapreduce::record::batch_bytes;
     use crate::util::rng::Rng;
 
     /// Identity sort job = TeraSort in miniature: random keys in, globally
@@ -246,15 +339,27 @@ mod tests {
         (job, input)
     }
 
+    /// Spool `input` to a fresh scratch dir at the given split budget.
+    fn spool(input: &[Record], split_bytes: u64) -> (ScratchDir, Vec<InputSplit>) {
+        let dir = ScratchDir::new(None, "engine-test-in").unwrap();
+        let splits = spool_records(dir.path.join("input"), input, split_bytes).unwrap();
+        (dir, splits)
+    }
+
     #[test]
     fn end_to_end_sort_is_correct() {
         let (job, input) = sort_job(4, JobConf { split_bytes: 16 << 10, ..JobConf::default() });
         let ledger = Ledger::new();
-        let splits = make_splits(input.clone(), job.conf.split_bytes);
+        let (_spool, splits) = spool(&input, job.conf.split_bytes);
         assert!(splits.len() > 1);
         let res = run_job(&job, splits, &ledger).unwrap();
         // concatenated reducer outputs = globally sorted input
-        let got: Vec<Vec<u8>> = res.all_output().map(|r| r.key.clone()).collect();
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        res.for_each_output(|r| {
+            got.push(r.key);
+            Ok(())
+        })
+        .unwrap();
         let mut want: Vec<Vec<u8>> = input.iter().map(|r| r.key.clone()).collect();
         want.sort();
         assert_eq!(got, want);
@@ -281,10 +386,10 @@ mod tests {
             let (job, input) =
                 sort_job(3, JobConf { fixed_width: fixed, ..conf.clone() });
             let ledger = Ledger::new();
-            let res =
-                run_job(&job, make_splits(input, job.conf.split_bytes), &ledger).unwrap();
+            let (_spool, splits) = spool(&input, job.conf.split_bytes);
+            let res = run_job(&job, splits, &ledger).unwrap();
             assert!(res.map_stats.iter().any(|s| s.spills > 1));
-            results.push((res.output, res.footprint));
+            results.push((res.collect_output().unwrap(), res.footprint));
         }
         assert_eq!(results[0], results[1]);
     }
@@ -293,8 +398,10 @@ mod tests {
     fn reducer_outputs_are_range_disjoint() {
         let (job, input) = sort_job(3, JobConf { split_bytes: 32 << 10, ..JobConf::default() });
         let ledger = Ledger::new();
-        let res = run_job(&job, make_splits(input, job.conf.split_bytes), &ledger).unwrap();
-        for pair in res.output.windows(2) {
+        let (_spool, splits) = spool(&input, job.conf.split_bytes);
+        let res = run_job(&job, splits, &ledger).unwrap();
+        let collected = res.collect_output().unwrap();
+        for pair in collected.windows(2) {
             if let (Some(last), Some(first)) = (pair[0].last(), pair[1].first()) {
                 assert!(last.key <= first.key);
             }
@@ -314,8 +421,14 @@ mod tests {
             },
         );
         let ledger = Ledger::new();
-        let res = run_job(&job, make_splits(input.clone(), 8 << 10), &ledger).unwrap();
-        let got: Vec<Vec<u8>> = res.all_output().map(|r| r.key.clone()).collect();
+        let (_spool, splits) = spool(&input, 8 << 10);
+        let res = run_job(&job, splits, &ledger).unwrap();
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        res.for_each_output(|r| {
+            got.push(r.key);
+            Ok(())
+        })
+        .unwrap();
         let mut want: Vec<Vec<u8>> = input.iter().map(|r| r.key.clone()).collect();
         want.sort();
         assert_eq!(got, want);
@@ -327,12 +440,57 @@ mod tests {
     }
 
     #[test]
-    fn make_splits_respects_budget() {
-        let recs: Vec<Record> = (0..100)
-            .map(|i| Record::new(vec![i as u8], vec![0u8; 92]))
-            .collect();
-        let splits = make_splits(recs, 1000);
-        assert!(splits.len() >= 10);
-        assert_eq!(splits.iter().map(Vec::len).sum::<usize>(), 100);
+    fn output_files_die_with_the_result() {
+        let (job, input) = sort_job(2, JobConf::default());
+        let ledger = Ledger::new();
+        let (_spool, splits) = spool(&input, 1 << 20);
+        let res = run_job(&job, splits, &ledger).unwrap();
+        let paths: Vec<PathBuf> = res.output.iter().map(|o| o.path.clone()).collect();
+        assert!(paths.iter().all(|p| p.exists()));
+        drop(res);
+        assert!(paths.iter().all(|p| !p.exists()), "output must be cleaned up on drop");
+    }
+
+    #[test]
+    fn panicking_map_task_is_a_named_error() {
+        let (job, input) = sort_job(2, JobConf::default());
+        let job = Job {
+            map_factory: Arc::new(|_| {
+                Box::new(|_: &Record, _: &mut dyn FnMut(Record)| {
+                    panic!("injected map failure")
+                })
+            }),
+            ..job
+        };
+        let (_spool, splits) = spool(&input, 16 << 10);
+        let err = run_job(&job, splits, &Ledger::new()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("map task"), "{msg}");
+        assert!(msg.contains("minisort"), "{msg}");
+        assert!(msg.contains("injected map failure"), "{msg}");
+        // the pool survives: the same job minus the panic still runs
+        let (job2, input2) = sort_job(2, JobConf::default());
+        let (_spool2, splits2) = spool(&input2, 16 << 10);
+        run_job(&job2, splits2, &Ledger::new()).unwrap();
+    }
+
+    #[test]
+    fn panicking_reduce_task_is_a_named_error() {
+        let (job, input) = sort_job(2, JobConf::default());
+        let job = Job {
+            reduce_factory: Arc::new(|_| {
+                Box::new(
+                    |_: &[u8], _: Vec<Vec<u8>>, _: &mut dyn FnMut(Record)| {
+                        panic!("injected reduce failure")
+                    },
+                )
+            }),
+            ..job
+        };
+        let (_spool, splits) = spool(&input, 16 << 10);
+        let err = run_job(&job, splits, &Ledger::new()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("reduce task"), "{msg}");
+        assert!(msg.contains("injected reduce failure"), "{msg}");
     }
 }

@@ -1,0 +1,358 @@
+//! Disk-backed dataflow: record files in, record files out.
+//!
+//! The paper's jobs read their input from HDFS files and write their
+//! output back to HDFS files — nothing requires either end to fit in
+//! memory. This module is that boundary for the in-process engine:
+//!
+//! * **Input**: a [`SplitWriter`] spools records into one disk-backed
+//!   record file and cuts [`InputSplit`] descriptors at the job's split
+//!   byte budget. A split names a byte range of that file; the mapper
+//!   pulls records through a [`RecordReader`] instead of iterating a
+//!   resident `Vec`.
+//! * **Output**: each reduce task streams its records into an
+//!   [`OutputSink`] — per-reducer spooled "HDFS" [`OutputFile`]s — so
+//!   the engine never materializes `Vec<Record>` output either.
+//!
+//! Wire format is exactly [`Record::write_to`], byte-identical to what
+//! the resident-vector dataflow serialized, so every footprint-ledger
+//! charge (HdfsRead/HdfsWrite in particular) is unchanged. What *is*
+//! resident at any moment is only the engine's bounded buffers — see
+//! [`crate::mapreduce::resident`] for the gauge that proves it.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::mapreduce::record::Record;
+
+/// One Hadoop-style input split: a byte range of a disk-backed record
+/// file. Splits of one spool share the file via `Arc`, so descriptors
+/// are cheap to clone into task closures.
+#[derive(Clone, Debug)]
+pub struct InputSplit {
+    /// The record file this split is a range of.
+    pub path: Arc<PathBuf>,
+    /// Byte offset of the split's first record in the file.
+    pub offset: u64,
+    /// Serialized bytes in the range (sum of record wire bytes) — the
+    /// HdfsRead charge for the map task that consumes it.
+    pub bytes: u64,
+    /// Records in the range.
+    pub records: u64,
+}
+
+impl InputSplit {
+    /// Open a streaming reader over this split's records.
+    pub fn open(&self) -> io::Result<RecordReader> {
+        RecordReader::open(self.path.as_ref(), self.offset, self.records)
+    }
+}
+
+/// Streams [`Record`]s out of a byte range of a record file — what a
+/// map task iterates instead of a resident slice.
+pub struct RecordReader {
+    r: BufReader<File>,
+    remaining: u64,
+}
+
+impl RecordReader {
+    /// Open `records` records starting `offset` bytes into `path`.
+    pub fn open(path: &Path, offset: u64, records: u64) -> io::Result<Self> {
+        let mut f = File::open(path)?;
+        if offset > 0 {
+            f.seek(SeekFrom::Start(offset))?;
+        }
+        Ok(Self { r: BufReader::new(f), remaining: records })
+    }
+
+    /// Next record, or `None` once the range is exhausted. A file that
+    /// ends before the declared record count is a real error, not a
+    /// silent short read.
+    pub fn next_record(&mut self) -> io::Result<Option<Record>> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        match Record::read_from(&mut self.r)? {
+            Some(rec) => {
+                self.remaining -= 1;
+                Ok(Some(rec))
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("record file truncated with {} records unread", self.remaining),
+            )),
+        }
+    }
+}
+
+/// Spools records into one disk-backed record file, cutting
+/// [`InputSplit`] descriptors every `split_bytes` — the out-of-core
+/// replacement for materializing `Vec<Vec<Record>>` splits. Boundaries
+/// match the old in-memory splitter exactly: a split closes at the
+/// first record that reaches the byte budget.
+pub struct SplitWriter {
+    w: BufWriter<File>,
+    path: Arc<PathBuf>,
+    split_bytes: u64,
+    splits: Vec<InputSplit>,
+    /// Absolute write position (== total bytes spooled).
+    offset: u64,
+    /// Offset where the current (open) split began.
+    start: u64,
+    cur_bytes: u64,
+    cur_records: u64,
+}
+
+impl SplitWriter {
+    /// Create the spool file at `path` with the given split byte budget.
+    pub fn create(path: PathBuf, split_bytes: u64) -> io::Result<Self> {
+        let w = BufWriter::new(File::create(&path)?);
+        Ok(Self {
+            w,
+            path: Arc::new(path),
+            split_bytes,
+            splits: Vec::new(),
+            offset: 0,
+            start: 0,
+            cur_bytes: 0,
+            cur_records: 0,
+        })
+    }
+
+    /// Append one record to the spool.
+    pub fn push(&mut self, rec: &Record) -> io::Result<()> {
+        rec.write_to(&mut self.w)?;
+        let b = rec.wire_bytes();
+        self.offset += b;
+        self.cur_bytes += b;
+        self.cur_records += 1;
+        if self.cur_bytes >= self.split_bytes {
+            self.cut();
+        }
+        Ok(())
+    }
+
+    fn cut(&mut self) {
+        if self.cur_records == 0 {
+            return;
+        }
+        self.splits.push(InputSplit {
+            path: self.path.clone(),
+            offset: self.start,
+            bytes: self.cur_bytes,
+            records: self.cur_records,
+        });
+        self.start = self.offset;
+        self.cur_bytes = 0;
+        self.cur_records = 0;
+    }
+
+    /// Total serialized bytes spooled so far.
+    pub fn bytes(&self) -> u64 {
+        self.offset
+    }
+
+    /// Flush the file and return the split descriptors. The spool file
+    /// must outlive the job that reads the splits.
+    pub fn finish(mut self) -> io::Result<Vec<InputSplit>> {
+        self.cut();
+        self.w.flush()?;
+        Ok(self.splits)
+    }
+}
+
+/// Spool a record batch to `path` in one call — convenience for tests,
+/// benches, and callers that already hold the records.
+pub fn spool_records(
+    path: PathBuf,
+    records: &[Record],
+    split_bytes: u64,
+) -> io::Result<Vec<InputSplit>> {
+    let mut w = SplitWriter::create(path, split_bytes)?;
+    for r in records {
+        w.push(r)?;
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------------
+// output
+// ---------------------------------------------------------------------
+
+/// Streaming destination for a reduce task's output records — the
+/// engine hands each task a spooled [`FileSink`]; unit tests pass a
+/// plain `Vec<Record>`.
+pub trait OutputSink {
+    /// Accept one output record.
+    fn push(&mut self, rec: Record) -> io::Result<()>;
+}
+
+/// Collecting sink for unit tests and small in-memory jobs.
+impl OutputSink for Vec<Record> {
+    fn push(&mut self, rec: Record) -> io::Result<()> {
+        Vec::push(self, rec);
+        Ok(())
+    }
+}
+
+/// One reducer's sealed, spooled "HDFS" output file. The file lives as
+/// long as the owning `JobResult`'s output directory; cloning the
+/// descriptor does not extend that lifetime.
+#[derive(Clone, Debug)]
+pub struct OutputFile {
+    /// Location of the spooled records.
+    pub path: PathBuf,
+    /// Serialized bytes (== the HdfsWrite charge for this reducer).
+    pub bytes: u64,
+    /// Record count.
+    pub records: u64,
+}
+
+impl OutputFile {
+    /// Open a streaming reader over the output records.
+    pub fn open(&self) -> io::Result<RecordReader> {
+        RecordReader::open(&self.path, 0, self.records)
+    }
+
+    /// Opt-in collect — the full output is resident again; small
+    /// tests only.
+    pub fn read_all(&self) -> io::Result<Vec<Record>> {
+        let mut r = self.open()?;
+        let mut out = Vec::with_capacity(self.records as usize);
+        while let Some(rec) = r.next_record()? {
+            out.push(rec);
+        }
+        Ok(out)
+    }
+}
+
+/// File-backed [`OutputSink`]: streams records to disk with the exact
+/// wire bytes the resident-vector path would have serialized.
+pub struct FileSink {
+    w: BufWriter<File>,
+    path: PathBuf,
+    bytes: u64,
+    records: u64,
+}
+
+impl FileSink {
+    /// Create the sink's backing file.
+    pub fn create(path: PathBuf) -> io::Result<Self> {
+        let w = BufWriter::new(File::create(&path)?);
+        Ok(Self { w, path, bytes: 0, records: 0 })
+    }
+
+    /// Flush and seal the file, returning its descriptor.
+    pub fn finish(mut self) -> io::Result<OutputFile> {
+        self.w.flush()?;
+        Ok(OutputFile { path: self.path, bytes: self.bytes, records: self.records })
+    }
+}
+
+impl OutputSink for FileSink {
+    fn push(&mut self, rec: Record) -> io::Result<()> {
+        rec.write_to(&mut self.w)?;
+        self.bytes += rec.wire_bytes();
+        self.records += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("samr-io-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn split_writer_respects_budget_and_roundtrips() {
+        let dir = tmp("splits");
+        let recs: Vec<Record> =
+            (0..100).map(|i| Record::new(vec![i as u8], vec![0u8; 92])).collect();
+        // 1000-byte budget over ~101 B records: >= 10 splits, like the
+        // old in-memory make_splits
+        let splits = spool_records(dir.join("input"), &recs, 1000).unwrap();
+        assert!(splits.len() >= 10);
+        assert_eq!(splits.iter().map(|s| s.records).sum::<u64>(), 100);
+        let total: u64 = recs.iter().map(Record::wire_bytes).sum();
+        assert_eq!(splits.iter().map(|s| s.bytes).sum::<u64>(), total);
+        // offsets tile the file exactly
+        let mut expect_offset = 0;
+        for s in &splits {
+            assert_eq!(s.offset, expect_offset);
+            expect_offset += s.bytes;
+        }
+        // every record reads back, in order, through the split readers
+        let mut got = Vec::new();
+        for s in &splits {
+            let mut r = s.open().unwrap();
+            while let Some(rec) = r.next_record().unwrap() {
+                got.push(rec);
+            }
+        }
+        assert_eq!(got, recs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_record_file_is_an_error() {
+        let dir = tmp("trunc");
+        let recs: Vec<Record> =
+            (0..10).map(|i| Record::new(vec![i as u8; 8], vec![7u8; 8])).collect();
+        let splits = spool_records(dir.join("input"), &recs, u64::MAX).unwrap();
+        let len = std::fs::metadata(splits[0].path.as_ref()).unwrap().len();
+        // chop the last record in half
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(splits[0].path.as_ref())
+            .unwrap();
+        f.set_len(len - 10).unwrap();
+        drop(f);
+        let mut r = splits[0].open().unwrap();
+        let err = loop {
+            match r.next_record() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("truncation must not read as clean EOF"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_sink_writes_exactly_the_record_wire_bytes() {
+        let dir = tmp("sink");
+        let recs: Vec<Record> = (0..50)
+            .map(|i| Record::new(format!("k{i:03}").into_bytes(), vec![i as u8; 11]))
+            .collect();
+        let mut sink = FileSink::create(dir.join("part-0")).unwrap();
+        for r in &recs {
+            OutputSink::push(&mut sink, r.clone()).unwrap();
+        }
+        let out = sink.finish().unwrap();
+        assert_eq!(out.records, 50);
+        assert_eq!(out.bytes, recs.iter().map(Record::wire_bytes).sum::<u64>());
+        // raw file bytes == the records' serialized form
+        let raw = std::fs::read(&out.path).unwrap();
+        let mut want = Vec::new();
+        for r in &recs {
+            r.write_to(&mut want).unwrap();
+        }
+        assert_eq!(raw, want);
+        assert_eq!(out.read_all().unwrap(), recs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn vec_sink_collects() {
+        let mut v: Vec<Record> = Vec::new();
+        OutputSink::push(&mut v, Record::new(b"a".to_vec(), b"b".to_vec())).unwrap();
+        assert_eq!(v.len(), 1);
+    }
+}

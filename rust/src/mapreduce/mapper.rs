@@ -1,9 +1,11 @@
 //! Map task execution with Hadoop's buffer/spill/merge mechanics (Fig. 3):
-//! records buffer in a sort buffer; at the spill threshold (80% of
-//! io.sort.mb) they are sorted by (partition, key) and spilled; at task
-//! end the spills are merged into one partitioned map-output file —
-//! exactly the "1R / 2W per input unit" behaviour of the paper's Table III
-//! when a 128 MB split spills twice.
+//! records stream in from a disk-backed [`RecordReader`] split and buffer
+//! in a sort buffer; at the spill threshold (80% of io.sort.mb) they are
+//! sorted by (partition, key) and spilled; at task end the spills are
+//! merged into one partitioned map-output file — exactly the "1R / 2W per
+//! input unit" behaviour of the paper's Table III when a 128 MB split
+//! spills twice. The sort buffer (gauged by [`resident`]) is the only
+//! place map-side records sit in memory.
 
 use std::fs::File;
 use std::io::{self, BufWriter, Write};
@@ -11,11 +13,13 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::footprint::{Channel, Ledger};
+use crate::mapreduce::io::RecordReader;
 use crate::mapreduce::job::JobConf;
 use crate::mapreduce::merge::{kway_merge, kway_merge_fixed, merge_round_plan, FixedRun, Run};
 use crate::mapreduce::record::{
     fixed_frame, to_fixed_parts, FixedRec, Record, FIXED_WIRE_BYTES,
 };
+use crate::mapreduce::resident;
 use crate::util::radix;
 
 /// User map logic. `finish` runs once after the split is exhausted (the
@@ -208,11 +212,11 @@ pub struct MapTaskStats {
     pub spills: u64,
 }
 
-/// Execute one map attempt over `split`.
+/// Execute one map attempt, pulling records through the split reader.
 #[allow(clippy::too_many_arguments)]
 pub fn run_map_task(
     task_id: usize,
-    split: &[Record],
+    input: &mut RecordReader,
     task: &mut dyn MapTask,
     conf: &JobConf,
     partitioner: &(dyn Fn(&[u8]) -> u32 + Sync),
@@ -225,10 +229,16 @@ pub fn run_map_task(
     let mut buffer: Vec<(u32, Record)> = Vec::new();
     let mut buffered: u64 = 0;
     let trigger = conf.spill_trigger();
+    // buffered records not yet published to the resident gauge: hot
+    // loops count task-locally and publish per GAUGE_BATCH, keeping
+    // atomic RMWs off the per-record path (invariant: published +
+    // ungauged == buffer.len())
+    let mut ungauged: u64 = 0;
 
     let spill_now = |buffer: &mut Vec<(u32, Record)>,
                          buffered: &mut u64,
-                         spills: &mut Vec<SpillFile>|
+                         spills: &mut Vec<SpillFile>,
+                         ungauged: &mut u64|
      -> io::Result<()> {
         if buffer.is_empty() {
             return Ok(());
@@ -240,6 +250,8 @@ pub fn run_map_task(
         let sf = write_spill(path, n_partitions, buffer)?;
         ledger.add(Channel::MapLocalWrite, sf.bytes);
         spills.push(sf);
+        resident::sub(buffer.len() as u64 - *ungauged);
+        *ungauged = 0;
         buffer.clear();
         *buffered = 0;
         Ok(())
@@ -251,6 +263,7 @@ pub fn run_map_task(
                           buffer: &mut Vec<(u32, Record)>,
                           buffered: &mut u64,
                           spills: &mut Vec<SpillFile>,
+                          ungauged: &mut u64,
                           stats: &mut MapTaskStats|
          -> io::Result<()> {
             for rec in pending.drain(..) {
@@ -260,22 +273,27 @@ pub fn run_map_task(
                 stats.output_bytes += rec.wire_bytes();
                 *buffered += rec.wire_bytes();
                 buffer.push((p, rec));
+                *ungauged += 1;
+                if *ungauged >= resident::GAUGE_BATCH {
+                    resident::add(*ungauged);
+                    *ungauged = 0;
+                }
                 if *buffered >= trigger {
-                    spill_now(buffer, buffered, spills)?;
+                    spill_now(buffer, buffered, spills, ungauged)?;
                 }
             }
             Ok(())
         };
-        for rec in split {
+        while let Some(rec) = input.next_record()? {
             stats.input_records += 1;
             stats.input_bytes += rec.wire_bytes();
-            task.map(rec, &mut |r| pending.push(r));
-            absorb(&mut pending, &mut buffer, &mut buffered, &mut spills, &mut stats)?;
+            task.map(&rec, &mut |r| pending.push(r));
+            absorb(&mut pending, &mut buffer, &mut buffered, &mut spills, &mut ungauged, &mut stats)?;
         }
         task.finish(&mut |r| pending.push(r));
-        absorb(&mut pending, &mut buffer, &mut buffered, &mut spills, &mut stats)?;
+        absorb(&mut pending, &mut buffer, &mut buffered, &mut spills, &mut ungauged, &mut stats)?;
     }
-    spill_now(&mut buffer, &mut buffered, &mut spills)?;
+    spill_now(&mut buffer, &mut buffered, &mut spills, &mut ungauged)?;
     stats.spills = spills.len() as u64;
 
     // ---- merge spills into the final map output (Fig. 3) ----
@@ -358,16 +376,16 @@ fn finalize_map_output(
     }
 }
 
-/// Execute one map attempt over `split` on the fixed-width fast path:
-/// the spill buffer holds packed [`FixedRec`]s (no per-record heap
-/// allocation), spills are LSD-radix sorted on (partition, key), and
-/// spill merging runs on the loser tree. Wire bytes, segment layout,
-/// ledger charges, and stats are identical to [`run_map_task`] over the
-/// equivalent 8 B + 8 B records — proven in `tests/shuffle_equivalence`.
+/// Execute one map attempt on the fixed-width fast path: the spill
+/// buffer holds packed [`FixedRec`]s (no per-record heap allocation),
+/// spills are LSD-radix sorted on (partition, key), and spill merging
+/// runs on the loser tree. Wire bytes, segment layout, ledger charges,
+/// and stats are identical to [`run_map_task`] over the equivalent
+/// 8 B + 8 B records — proven in `tests/shuffle_equivalence`.
 #[allow(clippy::too_many_arguments)]
 pub fn run_map_task_fixed(
     task_id: usize,
-    split: &[Record],
+    input: &mut RecordReader,
     task: &mut dyn MapTask,
     conf: &JobConf,
     partitioner: &(dyn Fn(&[u8]) -> u32 + Sync),
@@ -383,11 +401,15 @@ pub fn run_map_task_fixed(
     // radix scratch survives across spills: steady state allocates
     // nothing per record or per spill
     let mut scratch: Vec<FixedRec> = Vec::new();
+    // task-local gauge batch, as in the generic path: keep atomic RMWs
+    // out of the allocation-free per-record loop
+    let mut ungauged: u64 = 0;
 
     let spill_now = |buffer: &mut Vec<FixedRec>,
                          scratch: &mut Vec<FixedRec>,
                          buffered: &mut u64,
-                         spills: &mut Vec<SpillFile>|
+                         spills: &mut Vec<SpillFile>,
+                         ungauged: &mut u64|
      -> io::Result<()> {
         if buffer.is_empty() {
             return Ok(());
@@ -399,6 +421,8 @@ pub fn run_map_task_fixed(
         let sf = write_spill_fixed(path, n_partitions, buffer)?;
         ledger.add(Channel::MapLocalWrite, sf.bytes);
         spills.push(sf);
+        resident::sub(buffer.len() as u64 - *ungauged);
+        *ungauged = 0;
         buffer.clear();
         *buffered = 0;
         Ok(())
@@ -411,6 +435,7 @@ pub fn run_map_task_fixed(
                           scratch: &mut Vec<FixedRec>,
                           buffered: &mut u64,
                           spills: &mut Vec<SpillFile>,
+                          ungauged: &mut u64,
                           stats: &mut MapTaskStats|
          -> io::Result<()> {
             for (key, value) in pending.drain(..) {
@@ -420,22 +445,27 @@ pub fn run_map_task_fixed(
                 stats.output_bytes += FIXED_WIRE_BYTES;
                 *buffered += FIXED_WIRE_BYTES;
                 buffer.push(FixedRec { partition: p, key, value });
+                *ungauged += 1;
+                if *ungauged >= resident::GAUGE_BATCH {
+                    resident::add(*ungauged);
+                    *ungauged = 0;
+                }
                 if *buffered >= trigger {
-                    spill_now(buffer, scratch, buffered, spills)?;
+                    spill_now(buffer, scratch, buffered, spills, ungauged)?;
                 }
             }
             Ok(())
         };
-        for rec in split {
+        while let Some(rec) = input.next_record()? {
             stats.input_records += 1;
             stats.input_bytes += rec.wire_bytes();
-            task.map_fixed(rec, &mut |k, v| pending.push((k, v)));
-            absorb(&mut pending, &mut buffer, &mut scratch, &mut buffered, &mut spills, &mut stats)?;
+            task.map_fixed(&rec, &mut |k, v| pending.push((k, v)));
+            absorb(&mut pending, &mut buffer, &mut scratch, &mut buffered, &mut spills, &mut ungauged, &mut stats)?;
         }
         task.finish_fixed(&mut |k, v| pending.push((k, v)));
-        absorb(&mut pending, &mut buffer, &mut scratch, &mut buffered, &mut spills, &mut stats)?;
+        absorb(&mut pending, &mut buffer, &mut scratch, &mut buffered, &mut spills, &mut ungauged, &mut stats)?;
     }
-    spill_now(&mut buffer, &mut scratch, &mut buffered, &mut spills)?;
+    spill_now(&mut buffer, &mut scratch, &mut buffered, &mut spills, &mut ungauged)?;
     stats.spills = spills.len() as u64;
 
     let output = finalize_map_output(
@@ -454,11 +484,18 @@ pub fn run_map_task_fixed(
 mod tests {
     use super::*;
     use crate::footprint::Ledger;
+    use crate::mapreduce::io::spool_records;
 
     fn tmpdir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!("samr-map-{tag}-{}", std::process::id()));
         std::fs::create_dir_all(&d).unwrap();
         d
+    }
+
+    /// Spool a record batch into `dir` as one split and open its reader.
+    fn reader_over(dir: &std::path::Path, recs: &[Record]) -> RecordReader {
+        let splits = spool_records(dir.join("input"), recs, u64::MAX).unwrap();
+        splits[0].open().unwrap()
     }
 
     fn identity_split(n: usize, vlen: usize) -> Vec<Record> {
@@ -473,9 +510,10 @@ mod tests {
         let ledger = Ledger::new();
         let conf = JobConf { io_sort_bytes: 1 << 20, n_reducers: 2, ..Default::default() };
         let split = identity_split(100, 10);
+        let mut input = reader_over(&dir, &split);
         let mut mapper = |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
         let (out, stats) = run_map_task(
-            0, &split, &mut mapper, &conf,
+            0, &mut input, &mut mapper, &conf,
             &|k| u32::from(k >= b"k0050".as_slice()),
             &ledger, &dir,
         )
@@ -502,9 +540,10 @@ mod tests {
             n_reducers: 4,
             ..Default::default()
         };
+        let mut input = reader_over(&dir, &split);
         let mut mapper = |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
         let (out, stats) =
-            run_map_task(1, &split, &mut mapper, &conf, &|k| (k[3] as u32) % 4, &ledger, &dir)
+            run_map_task(1, &mut input, &mut mapper, &conf, &|k| (k[3] as u32) % 4, &ledger, &dir)
                 .unwrap();
         assert_eq!(stats.spills, 2);
         let w = ledger.get(Channel::MapLocalWrite) as f64;
@@ -541,12 +580,13 @@ mod tests {
         for fixed in [false, true] {
             let dir = tmpdir(if fixed { "eqf" } else { "eqg" });
             let ledger = Ledger::new();
+            let mut input = reader_over(&dir, &split);
             let mut mapper = |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
             let task: &mut dyn MapTask = &mut mapper;
             let (out, stats) = if fixed {
-                run_map_task_fixed(9, &split, task, &conf, &part, &ledger, &dir).unwrap()
+                run_map_task_fixed(9, &mut input, task, &conf, &part, &ledger, &dir).unwrap()
             } else {
-                run_map_task(9, &split, task, &conf, &part, &ledger, &dir).unwrap()
+                run_map_task(9, &mut input, task, &conf, &part, &ledger, &dir).unwrap()
             };
             assert!(stats.spills > 3, "want merge rounds, got {} spills", stats.spills);
             let bytes = std::fs::read(&out.path).unwrap();
@@ -568,9 +608,10 @@ mod tests {
         let ledger = Ledger::new();
         let split = identity_split(500, 20);
         let conf = JobConf { io_sort_bytes: 4 << 10, n_reducers: 3, ..Default::default() };
+        let mut input = reader_over(&dir, &split);
         let mut mapper = |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
         let (out, stats) =
-            run_map_task(2, &split, &mut mapper, &conf, &|k| (k[4] as u32) % 3, &ledger, &dir)
+            run_map_task(2, &mut input, &mut mapper, &conf, &|k| (k[4] as u32) % 3, &ledger, &dir)
                 .unwrap();
         assert!(stats.spills > 2);
         let mut total = 0u64;

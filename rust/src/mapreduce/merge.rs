@@ -188,34 +188,36 @@ impl FixedRun {
     }
 }
 
-/// K-way merge of fixed-width runs on a loser tree, ascending by
-/// (key, run index) — exactly [`kway_merge`]'s order and tie rule over
-/// the equivalent generic records. The tree replays one leaf-to-root
-/// path (⌈log₂ k⌉ comparisons) per record, against the binary heap's
-/// pop+push, and moves only `(u64, u64)` pairs — zero per-record
-/// allocation.
-pub fn kway_merge_fixed(
-    mut runs: Vec<FixedRun>,
-    mut sink: impl FnMut(u64, u64) -> io::Result<()>,
+/// Loser-tree tournament merge over `k` run cursors: `refill(i)` yields
+/// run `i`'s next head, `wins(a, i, b, j)` orders two live heads
+/// (exhausted runs lose to everything). The tree replays one
+/// leaf-to-root path (⌈log₂ k⌉ comparisons) per record. Factored out so
+/// the shuffle merge (order by key, ties by run index) and the scheme's
+/// pair-run merge (order by the full (key, value) pair) share one
+/// tournament.
+fn loser_tree_merge<T: Copy>(
+    k: usize,
+    mut refill: impl FnMut(usize) -> io::Result<Option<T>>,
+    wins: impl Fn(&T, usize, &T, usize) -> bool,
+    mut sink: impl FnMut(T) -> io::Result<()>,
 ) -> io::Result<()> {
-    let k = runs.len();
     if k == 0 {
         return Ok(());
     }
-    let mut heads: Vec<Option<(u64, u64)>> = Vec::with_capacity(k);
-    for run in runs.iter_mut() {
-        heads.push(run.next_pair()?);
+    let mut heads: Vec<Option<T>> = Vec::with_capacity(k);
+    for i in 0..k {
+        heads.push(refill(i)?);
     }
     // Does leaf `a` win (sort before) leaf `b`? Exhausted runs lose to
-    // everything; ties break toward the lower run index.
-    fn beats(heads: &[Option<(u64, u64)>], a: usize, b: usize) -> bool {
-        match (heads[a], heads[b]) {
-            (Some((ka, _)), Some((kb, _))) => (ka, a) < (kb, b),
+    // everything; None/None ties break toward the lower run index.
+    let beats = |heads: &[Option<T>], a: usize, b: usize| -> bool {
+        match (&heads[a], &heads[b]) {
+            (Some(x), Some(y)) => wins(x, a, y, b),
             (Some(_), None) => true,
             (None, Some(_)) => false,
             (None, None) => a < b,
         }
-    }
+    };
     // Build the tournament bottom-up: leaf j sits at node k + j, node i
     // has children 2i and 2i+1. Internal node i keeps the loser of its
     // subtree in `losers[i]`; `losers[0]` holds the overall winner.
@@ -235,9 +237,9 @@ pub fn kway_merge_fixed(
     }
     loop {
         let w = losers[0];
-        let Some((key, val)) = heads[w] else { break };
-        sink(key, val)?;
-        heads[w] = runs[w].next_pair()?;
+        let Some(head) = heads[w] else { break };
+        sink(head)?;
+        heads[w] = refill(w)?;
         // replay leaf w's path to the root
         let mut cur = w;
         let mut node = (k + w) / 2;
@@ -250,6 +252,51 @@ pub fn kway_merge_fixed(
         losers[0] = cur;
     }
     Ok(())
+}
+
+/// K-way merge of fixed-width runs on the loser tree, ascending by
+/// (key, run index) — exactly [`kway_merge`]'s order and tie rule over
+/// the equivalent generic records, moving only `(u64, u64)` pairs with
+/// zero per-record allocation.
+pub fn kway_merge_fixed(
+    mut runs: Vec<FixedRun>,
+    mut sink: impl FnMut(u64, u64) -> io::Result<()>,
+) -> io::Result<()> {
+    let k = runs.len();
+    loser_tree_merge(
+        k,
+        |i| runs[i].next_pair(),
+        |a, i, b, j| (a.0, i) < (b.0, j),
+        |(key, val)| sink(key, val),
+    )
+}
+
+/// K-way merge of in-memory sorted `(keys, values)` i64 pair runs,
+/// ascending by the FULL (key, value) pair — the ordering the scheme's
+/// reducer group-sort merge needs, as opposed to the shuffle merges'
+/// (key, run-index) rule; run index only breaks exact pair ties (which
+/// the scheme's unique packed indexes make impossible). O(n log k) on
+/// the shared loser tree, replacing the old O(n·k) pairwise pop-merge.
+pub fn kway_merge_pairs(runs: &[(Vec<i64>, Vec<i64>)], mut sink: impl FnMut(i64, i64)) {
+    let mut cursors = vec![0usize; runs.len()];
+    loser_tree_merge(
+        runs.len(),
+        |i| {
+            let c = cursors[i];
+            Ok(if c < runs[i].0.len() {
+                cursors[i] = c + 1;
+                Some((runs[i].0[c], runs[i].1[c]))
+            } else {
+                None
+            })
+        },
+        |a, i, b, j| (a.0, a.1, i) < (b.0, b.1, j),
+        |(key, val)| {
+            sink(key, val);
+            Ok(())
+        },
+    )
+    .expect("in-memory pair merge cannot fail");
 }
 
 /// The paper's intermediate merge-round plan (§III, Fig. 4 discussion):
@@ -487,6 +534,81 @@ mod tests {
         .unwrap();
         assert_eq!(got_fixed.len(), n_runs * 200);
         assert_eq!(got_fixed, got_generic);
+    }
+
+    #[test]
+    fn pair_merge_orders_by_full_pair_not_run_index() {
+        // equal keys whose VALUES are out of order across runs: a
+        // (key, run)-ordered merge would emit (5, 9) before (5, 3);
+        // the pair merge must not.
+        let runs = vec![
+            (vec![1i64, 5, 7], vec![10i64, 9, 1]),
+            (vec![5i64, 5, 8], vec![3i64, 11, 0]),
+        ];
+        let mut got = Vec::new();
+        kway_merge_pairs(&runs, |k, v| got.push((k, v)));
+        assert_eq!(got, vec![(1, 10), (5, 3), (5, 9), (5, 11), (7, 1), (8, 0)]);
+    }
+
+    #[test]
+    fn pair_merge_matches_pairwise_reference() {
+        // the old O(n·k) pairwise pop-merge, kept as the test oracle
+        fn reference(mut runs: Vec<(Vec<i64>, Vec<i64>)>) -> (Vec<i64>, Vec<i64>) {
+            while runs.len() > 1 {
+                let (kb, ib) = runs.pop().unwrap();
+                let (ka, ia) = runs.pop().unwrap();
+                let mut k = Vec::with_capacity(ka.len() + kb.len());
+                let mut ix = Vec::with_capacity(k.capacity());
+                let (mut i, mut j) = (0, 0);
+                while i < ka.len() && j < kb.len() {
+                    if (ka[i], ia[i]) <= (kb[j], ib[j]) {
+                        k.push(ka[i]);
+                        ix.push(ia[i]);
+                        i += 1;
+                    } else {
+                        k.push(kb[j]);
+                        ix.push(ib[j]);
+                        j += 1;
+                    }
+                }
+                k.extend_from_slice(&ka[i..]);
+                ix.extend_from_slice(&ia[i..]);
+                k.extend_from_slice(&kb[j..]);
+                ix.extend_from_slice(&ib[j..]);
+                runs.push((k, ix));
+            }
+            runs.pop().unwrap_or_default()
+        }
+
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(41);
+        for n_runs in [0usize, 1, 2, 5, 9] {
+            let mut runs = Vec::new();
+            let mut next_index = 0i64;
+            for _ in 0..n_runs {
+                // duplicate-heavy keys, globally unique indexes (the
+                // scheme's regime), sorted by (key, index)
+                let mut pairs: Vec<(i64, i64)> = (0..1 + rng.below(300))
+                    .map(|_| {
+                        next_index += 1;
+                        (rng.below(40) as i64, next_index)
+                    })
+                    .collect();
+                pairs.sort_unstable();
+                runs.push((
+                    pairs.iter().map(|p| p.0).collect::<Vec<i64>>(),
+                    pairs.iter().map(|p| p.1).collect::<Vec<i64>>(),
+                ));
+            }
+            let want = reference(runs.clone());
+            let mut keys = Vec::new();
+            let mut ixs = Vec::new();
+            kway_merge_pairs(&runs, |k, v| {
+                keys.push(k);
+                ixs.push(v);
+            });
+            assert_eq!((keys, ixs), want, "n_runs={n_runs}");
+        }
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! In-process MapReduce runtime with Hadoop's exact spill/merge mechanics
 //! (the substrate the paper's analysis is about): job conf, records,
-//! map-side buffer/spill/merge, shuffle, reduce-side memory merger and
-//! on-disk merge rounds, sampled range partitioner, and the job engine.
+//! disk-backed input splits and spooled output files (`io`), map-side
+//! buffer/spill/merge, shuffle, reduce-side memory merger and on-disk
+//! merge rounds, sampled range partitioner, and the job engine. Both
+//! ends of the dataflow live on disk, so input volume is bounded by
+//! storage, not memory (`resident` gauges what stays in RAM).
 
 pub mod engine;
+pub mod io;
 pub mod job;
 pub mod mapper;
 pub mod merge;
@@ -11,7 +15,9 @@ pub mod partitioner;
 pub mod pool;
 pub mod record;
 pub mod reducer;
+pub mod resident;
 
-pub use engine::{make_splits, run_job, Job, JobResult};
+pub use engine::{run_job, Job, JobResult, ScratchDir};
+pub use io::{InputSplit, OutputFile, OutputSink, RecordReader, SplitWriter};
 pub use job::JobConf;
 pub use record::Record;

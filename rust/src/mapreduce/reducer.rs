@@ -2,7 +2,9 @@
 //! fetched map segments land in a memory buffer (70% of heap); the
 //! in-memory merger spills to disk at 66% occupancy; oversized segments
 //! bypass memory; on-disk files above io.sort.factor trigger intermediate
-//! merge rounds; the final k-way merge feeds `reduce()` grouped by key.
+//! merge rounds; the final k-way merge feeds `reduce()` grouped by key,
+//! and output records stream straight into an [`OutputSink`] (the
+//! engine's spooled "HDFS" file) instead of accumulating in memory.
 //! This module is what makes TeraSort's reduce-side Local R/W grow from
 //! 1.03 to 1.88 units as the input grows (Table III).
 
@@ -12,12 +14,14 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::footprint::{Channel, Ledger};
+use crate::mapreduce::io::OutputSink;
 use crate::mapreduce::job::JobConf;
 use crate::mapreduce::mapper::{Segment, SpillFile};
 use crate::mapreduce::merge::{
     kway_merge, kway_merge_fixed, run_merge_rounds, run_merge_rounds_fixed, FixedRun, Run,
 };
 use crate::mapreduce::record::{fixed_frame, Record, FIXED_WIRE_BYTES};
+use crate::mapreduce::resident;
 
 /// User reduce logic: one call per key group, then `finish` (the scheme
 /// flushes its accumulated sorting groups there).
@@ -60,17 +64,19 @@ pub struct ReduceTaskStats {
 
 /// Execute one reduce attempt: fetch segment `partition` of every map
 /// output, run the merge pipeline, call `task` per key group. Output
-/// records are returned (the engine writes them to "HDFS").
+/// records stream into `sink` as they are produced — the engine passes
+/// a spooled "HDFS" file sink, so the output is never memory-resident.
 #[allow(clippy::too_many_arguments)]
 pub fn run_reduce_task(
     task_id: usize,
     partition: usize,
     map_outputs: &[SpillFile],
     task: &mut dyn ReduceTask,
+    sink: &mut dyn OutputSink,
     conf: &JobConf,
     ledger: &Arc<Ledger>,
     dir: &Path,
-) -> io::Result<(Vec<Record>, ReduceTaskStats)> {
+) -> io::Result<ReduceTaskStats> {
     let mut stats = ReduceTaskStats::default();
     let mut disk_files: Vec<PathBuf> = Vec::new();
     let mut mem_segments: Vec<Vec<Record>> = Vec::new();
@@ -104,12 +110,16 @@ pub fn run_reduce_task(
                 Ok(())
             })?;
             mem_bytes += seg.bytes;
+            resident::add(seg.records);
             mem_segments.push(recs);
             if mem_bytes >= merge_trigger {
                 // memory-to-disk merge
                 let path = dir.join(format!("red{task_id}_memmerge{scratch}"));
                 scratch += 1;
-                let written = merge_mem_to_disk(std::mem::take(&mut mem_segments), &path)?;
+                let taken = std::mem::take(&mut mem_segments);
+                let drained: u64 = taken.iter().map(|s| s.len() as u64).sum();
+                let written = merge_mem_to_disk(taken, &path)?;
+                resident::sub(drained);
                 ledger.add(Channel::ReduceLocalWrite, written);
                 stats.mem_merges += 1;
                 mem_bytes = 0;
@@ -135,20 +145,31 @@ pub fn run_reduce_task(
         ledger.add(Channel::ReduceLocalRead, std::fs::metadata(p)?.len());
         runs.push(Run::from_path(p)?);
     }
+    let mem_resident: u64 = mem_segments.iter().map(|s| s.len() as u64).sum();
     for seg in mem_segments {
         runs.push(Run::from_vec(seg));
     }
 
-    let mut output: Vec<Record> = Vec::new();
+    // the user task's emit closure cannot return an error, so a sink
+    // failure is stashed — and the merge loop, which CAN error, aborts
+    // on the next record instead of burning the rest of the partition
+    let mut sink_err: Option<io::Error> = None;
+    let sink_broken = std::cell::Cell::new(false);
+    let merge_res;
     {
         let mut out = |rec: Record| {
             stats.output_records += 1;
             stats.output_bytes += rec.wire_bytes();
-            output.push(rec);
+            if !sink_broken.get() {
+                if let Err(e) = sink.push(rec) {
+                    sink_err = Some(e);
+                    sink_broken.set(true);
+                }
+            }
         };
         let mut cur_key: Option<Vec<u8>> = None;
         let mut cur_vals: Vec<Vec<u8>> = Vec::new();
-        kway_merge(runs, |rec| {
+        merge_res = kway_merge(runs, |rec| {
             match &cur_key {
                 Some(k) if *k == rec.key => cur_vals.push(rec.value),
                 Some(k) => {
@@ -163,19 +184,30 @@ pub fn run_reduce_task(
                     cur_vals.push(rec.value);
                 }
             }
+            if sink_broken.get() {
+                return Err(io::Error::other("output sink failed; aborting the merge"));
+            }
             Ok(())
-        })?;
-        if let Some(k) = cur_key {
-            stats.groups += 1;
-            stats.max_group = stats.max_group.max(cur_vals.len() as u64);
-            task.reduce(&k, cur_vals, &mut out);
+        });
+        if merge_res.is_ok() && !sink_broken.get() {
+            if let Some(k) = cur_key {
+                stats.groups += 1;
+                stats.max_group = stats.max_group.max(cur_vals.len() as u64);
+                task.reduce(&k, cur_vals, &mut out);
+            }
+            task.finish(&mut out);
         }
-        task.finish(&mut out);
     }
+    resident::sub(mem_resident);
+    // the sink's own error outranks the merge-abort placeholder
+    if let Some(e) = sink_err {
+        return Err(e);
+    }
+    merge_res?;
     for p in disk_files {
         let _ = std::fs::remove_file(p);
     }
-    Ok((output, stats))
+    Ok(stats)
 }
 
 /// Copy one map-output segment to its own file (records pass through
@@ -206,6 +238,7 @@ fn merge_mem_to_disk(segments: Vec<Vec<Record>>, dst: &Path) -> io::Result<u64> 
 /// hold packed `(u64, u64)` pairs, every merge runs on the loser tree
 /// over strided 24 B readers, and key groups reach the task as borrowed
 /// `&[u64]` slices from one reused buffer — zero per-record allocation.
+/// Output records stream into `sink` exactly as in [`run_reduce_task`].
 /// Bytes on every ledger channel (and all stats) are identical to the
 /// generic path; see `tests/shuffle_equivalence`.
 #[allow(clippy::too_many_arguments)]
@@ -214,10 +247,11 @@ pub fn run_reduce_task_fixed(
     partition: usize,
     map_outputs: &[SpillFile],
     task: &mut dyn ReduceTask,
+    sink: &mut dyn OutputSink,
     conf: &JobConf,
     ledger: &Arc<Ledger>,
     dir: &Path,
-) -> io::Result<(Vec<Record>, ReduceTaskStats)> {
+) -> io::Result<ReduceTaskStats> {
     let mut stats = ReduceTaskStats::default();
     let mut disk_files: Vec<PathBuf> = Vec::new();
     let mut mem_segments: Vec<Vec<(u64, u64)>> = Vec::new();
@@ -251,13 +285,16 @@ pub fn run_reduce_task_fixed(
                 recs.push(kv);
             }
             mem_bytes += seg.bytes;
+            resident::add(seg.records);
             mem_segments.push(recs);
             if mem_bytes >= merge_trigger {
                 // memory-to-disk merge
                 let path = dir.join(format!("red{task_id}_memmerge{scratch}"));
                 scratch += 1;
-                let written =
-                    merge_mem_to_disk_fixed(std::mem::take(&mut mem_segments), &path)?;
+                let taken = std::mem::take(&mut mem_segments);
+                let drained: u64 = taken.iter().map(|s| s.len() as u64).sum();
+                let written = merge_mem_to_disk_fixed(taken, &path)?;
+                resident::sub(drained);
                 ledger.add(Channel::ReduceLocalWrite, written);
                 stats.mem_merges += 1;
                 mem_bytes = 0;
@@ -283,20 +320,29 @@ pub fn run_reduce_task_fixed(
         ledger.add(Channel::ReduceLocalRead, std::fs::metadata(p)?.len());
         runs.push(FixedRun::from_path(p)?);
     }
+    let mem_resident: u64 = mem_segments.iter().map(|s| s.len() as u64).sum();
     for seg in mem_segments {
         runs.push(FixedRun::from_vec(seg));
     }
 
-    let mut output: Vec<Record> = Vec::new();
+    // as in [`run_reduce_task`]: stash the sink error, abort the merge
+    let mut sink_err: Option<io::Error> = None;
+    let sink_broken = std::cell::Cell::new(false);
+    let merge_res;
     {
         let mut out = |rec: Record| {
             stats.output_records += 1;
             stats.output_bytes += rec.wire_bytes();
-            output.push(rec);
+            if !sink_broken.get() {
+                if let Err(e) = sink.push(rec) {
+                    sink_err = Some(e);
+                    sink_broken.set(true);
+                }
+            }
         };
         let mut cur_key: Option<u64> = None;
         let mut vals: Vec<u64> = Vec::new(); // reused across groups
-        kway_merge_fixed(runs, |key, val| {
+        merge_res = kway_merge_fixed(runs, |key, val| {
             match cur_key {
                 Some(k) if k == key => vals.push(val),
                 Some(k) => {
@@ -312,19 +358,29 @@ pub fn run_reduce_task_fixed(
                     vals.push(val);
                 }
             }
+            if sink_broken.get() {
+                return Err(io::Error::other("output sink failed; aborting the merge"));
+            }
             Ok(())
-        })?;
-        if let Some(k) = cur_key {
-            stats.groups += 1;
-            stats.max_group = stats.max_group.max(vals.len() as u64);
-            task.reduce_fixed(k, &vals, &mut out);
+        });
+        if merge_res.is_ok() && !sink_broken.get() {
+            if let Some(k) = cur_key {
+                stats.groups += 1;
+                stats.max_group = stats.max_group.max(vals.len() as u64);
+                task.reduce_fixed(k, &vals, &mut out);
+            }
+            task.finish(&mut out);
         }
-        task.finish(&mut out);
     }
+    resident::sub(mem_resident);
+    if let Some(e) = sink_err {
+        return Err(e);
+    }
+    merge_res?;
     for p in disk_files {
         let _ = std::fs::remove_file(p);
     }
-    Ok((output, stats))
+    Ok(stats)
 }
 
 /// Copy one fixed-width map-output segment to its own file. Records are
@@ -360,6 +416,7 @@ fn merge_mem_to_disk_fixed(segments: Vec<Vec<(u64, u64)>>, dst: &Path) -> io::Re
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mapreduce::io::spool_records;
     use crate::mapreduce::mapper::{run_map_task, MapTask};
 
     fn tmpdir(tag: &str) -> PathBuf {
@@ -368,7 +425,7 @@ mod tests {
         d
     }
 
-    /// Build map outputs by actually running map tasks.
+    /// Build map outputs by actually running map tasks over spooled splits.
     fn make_map_outputs(
         dir: &Path,
         conf: &JobConf,
@@ -384,13 +441,24 @@ mod tests {
                         Record::new(k.into_bytes(), vec![m as u8; 16])
                     })
                     .collect();
+                let splits =
+                    spool_records(dir.join(format!("in{m}")), &split, u64::MAX).unwrap();
+                let mut input = splits[0].open().unwrap();
                 let n_parts = conf.n_reducers as u32;
                 let mut mapper =
                     |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
                 let task: &mut dyn MapTask = &mut mapper;
-                run_map_task(m, &split, task, conf, &move |k| (k[5] as u32) % n_parts, &ledger, dir)
-                    .unwrap()
-                    .0
+                run_map_task(
+                    m,
+                    &mut input,
+                    task,
+                    conf,
+                    &move |k| (k[5] as u32) % n_parts,
+                    &ledger,
+                    dir,
+                )
+                .unwrap()
+                .0
             })
             .collect()
     }
@@ -405,8 +473,9 @@ mod tests {
         let mut red = |_k: &[u8], vals: Vec<Vec<u8>>, _out: &mut dyn FnMut(Record)| {
             seen += vals.len() as u64;
         };
-        let (out, stats) =
-            run_reduce_task(0, 0, &maps, &mut red, &conf, &ledger, &dir).unwrap();
+        let mut out: Vec<Record> = Vec::new();
+        let stats =
+            run_reduce_task(0, 0, &maps, &mut red, &mut out, &conf, &ledger, &dir).unwrap();
         assert!(out.is_empty());
         assert!(stats.shuffled_records > 0);
         assert_eq!(seen, stats.shuffled_records);
@@ -428,8 +497,9 @@ mod tests {
         let maps = make_map_outputs(&dir, &conf, 4, 300);
         let ledger = Ledger::new();
         let mut red = |_k: &[u8], _v: Vec<Vec<u8>>, _o: &mut dyn FnMut(Record)| {};
-        let (_, stats) =
-            run_reduce_task(1, 1, &maps, &mut red, &conf, &ledger, &dir).unwrap();
+        let mut out: Vec<Record> = Vec::new();
+        let stats =
+            run_reduce_task(1, 1, &maps, &mut red, &mut out, &conf, &ledger, &dir).unwrap();
         let w = ledger.get(Channel::ReduceLocalWrite);
         let r = ledger.get(Channel::ReduceLocalRead);
         // paper Case 1 behaviour: ~1W (all spilled) and ~1R (final merge)
@@ -458,10 +528,13 @@ mod tests {
                         Record::new(k.to_be_bytes().to_vec(), (i as u64).to_be_bytes().to_vec())
                     })
                     .collect();
+                let splits =
+                    spool_records(dir.join(format!("fin{m}")), &split, u64::MAX).unwrap();
+                let mut input = splits[0].open().unwrap();
                 let mut mapper =
                     |rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone());
                 let task: &mut dyn MapTask = &mut mapper;
-                run_map_task(m, &split, task, &conf, &move |k| (k[7] as u32) % 2, &ledger, &dir)
+                run_map_task(m, &mut input, task, &conf, &move |k| (k[7] as u32) % 2, &ledger, &dir)
                     .unwrap()
                     .0
             })
@@ -475,10 +548,12 @@ mod tests {
                 out(Record::new(k.to_vec(), (vals.len() as u64).to_be_bytes().to_vec()));
             };
             let task: &mut dyn ReduceTask = &mut red;
-            let (out, stats) = if fixed {
-                run_reduce_task_fixed(1, 1, &maps, task, &conf, &ledger, &dir).unwrap()
+            let mut out: Vec<Record> = Vec::new();
+            let stats = if fixed {
+                run_reduce_task_fixed(1, 1, &maps, task, &mut out, &conf, &ledger, &dir)
+                    .unwrap()
             } else {
-                run_reduce_task(1, 1, &maps, task, &conf, &ledger, &dir).unwrap()
+                run_reduce_task(1, 1, &maps, task, &mut out, &conf, &ledger, &dir).unwrap()
             };
             assert!(ledger.get(Channel::ReduceLocalWrite) > 0, "want reduce-side spills");
             results.push((
@@ -507,8 +582,9 @@ mod tests {
             total += vals.len();
             out(Record::new(k.to_vec(), (vals.len() as u32).to_be_bytes().to_vec()));
         };
-        let (out, stats) =
-            run_reduce_task(0, 0, &maps, &mut red, &conf, &ledger, &dir).unwrap();
+        let mut out: Vec<Record> = Vec::new();
+        let stats =
+            run_reduce_task(0, 0, &maps, &mut red, &mut out, &conf, &ledger, &dir).unwrap();
         assert_eq!(total as u64, stats.shuffled_records);
         assert_eq!(out.len(), keys.len());
         for w in keys.windows(2) {

@@ -15,19 +15,21 @@ pub mod sampler;
 pub mod sorting_group;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::footprint::{Channel, Ledger};
 use crate::kvstore::prefetch::SuffixPrefetcher;
 use crate::kvstore::shard::{SuffixStore, Traffic};
-use crate::mapreduce::engine::{make_splits, run_job, Job, JobResult};
+use crate::mapreduce::engine::{run_job, Job, JobResult, ScratchDir};
+use crate::mapreduce::io::SplitWriter;
 use crate::mapreduce::job::JobConf;
+use crate::mapreduce::merge::kway_merge_pairs;
 use crate::mapreduce::partitioner::SAMPLES_PER_REDUCER;
 use crate::mapreduce::record::{decode_i64_key, encode_i64_key, Record};
 use crate::runtime::{self, native};
 use crate::suffix::encode::DEFAULT_PREFIX_LEN;
-use crate::suffix::reads::Read;
+use crate::suffix::reads::{spool_read_records, Read};
 use sorting_group::{key_groups, key_is_complete, tie_break_positions, SortingGroupBuffer};
 
 /// Scheme configuration (paper defaults, scaled knobs in `JobConf`).
@@ -121,21 +123,19 @@ pub struct SchemeResult {
     pub boundaries: Vec<i64>,
 }
 
-/// Turn a corpus into the job's input records: key = seq (8 B BE),
-/// value = read codes.
-pub fn read_records(reads: &[Read]) -> Vec<Record> {
-    reads
-        .iter()
-        .map(|r| Record::new(r.seq.to_be_bytes().to_vec(), r.codes.clone()))
-        .collect()
-}
-
 // ---------------- mapper ----------------
+
+/// Shared slot where one finished mapper parks its store handle so the
+/// pipeline can reuse it for the post-job `used_memory` probe instead
+/// of opening a fresh (in cluster mode: TCP) connection.
+type StoreSlot = Arc<Mutex<Option<Box<dyn SuffixStore>>>>;
 
 struct SchemeMapper {
     cfg: SchemeConfig,
     boundaries: Vec<i64>,
-    store: Box<dyn SuffixStore>,
+    /// Store handle; moved into `park` after the final aggregated put.
+    store: Option<Box<dyn SuffixStore>>,
+    park: StoreSlot,
     ledger: Arc<Ledger>,
     /// Reads held for tile-encoding and the aggregated KV put.
     pending: Vec<Read>,
@@ -207,9 +207,16 @@ impl SchemeMapper {
     /// finish reading the input file").
     fn put_reads(&mut self) {
         let reads = std::mem::take(&mut self.all_reads);
-        match self.store.put_reads(&reads) {
+        let store = self.store.as_mut().expect("mapper store handle");
+        match store.put_reads(&reads) {
             Ok(t) => self.ledger.add(Channel::KvPut, t.total()),
             Err(e) => panic!("KV put failed: {e}"),
+        }
+        // the task is done with the handle: park it for the pipeline's
+        // used_memory probe (first finisher wins; the rest just drop)
+        let mut slot = self.park.lock().unwrap();
+        if slot.is_none() {
+            *slot = self.store.take();
         }
     }
 }
@@ -458,32 +465,22 @@ fn is_pair_sorted(keys: &[i64], indexes: &[i64]) -> bool {
     (1..keys.len()).all(|i| (keys[i - 1], indexes[i - 1]) <= (keys[i], indexes[i]))
 }
 
-/// Merge sorted (key, index) runs.
+/// Merge sorted (key, index) runs in one k-way pass on the loser tree
+/// (`mapreduce/merge.rs`): O(n log k) where the old pairwise pop-merge
+/// was O(n·k), with identical output — indexes are unique, so ascending
+/// (key, index) order is the unique sorted order either way.
 fn merge_pair_runs(mut runs: Vec<(Vec<i64>, Vec<i64>)>) -> (Vec<i64>, Vec<i64>) {
-    while runs.len() > 1 {
-        let (kb, ib) = runs.pop().unwrap();
-        let (ka, ia) = runs.pop().unwrap();
-        let mut k = Vec::with_capacity(ka.len() + kb.len());
-        let mut ix = Vec::with_capacity(k.capacity());
-        let (mut i, mut j) = (0, 0);
-        while i < ka.len() && j < kb.len() {
-            if (ka[i], ia[i]) <= (kb[j], ib[j]) {
-                k.push(ka[i]);
-                ix.push(ia[i]);
-                i += 1;
-            } else {
-                k.push(kb[j]);
-                ix.push(ib[j]);
-                j += 1;
-            }
-        }
-        k.extend_from_slice(&ka[i..]);
-        ix.extend_from_slice(&ia[i..]);
-        k.extend_from_slice(&kb[j..]);
-        ix.extend_from_slice(&ib[j..]);
-        runs.push((k, ix));
+    if runs.len() <= 1 {
+        return runs.pop().unwrap_or_default();
     }
-    runs.pop().unwrap_or_default()
+    let total: usize = runs.iter().map(|(k, _)| k.len()).sum();
+    let mut keys = Vec::with_capacity(total);
+    let mut indexes = Vec::with_capacity(total);
+    kway_merge_pairs(&runs, |k, ix| {
+        keys.push(k);
+        indexes.push(ix);
+    });
+    (keys, indexes)
 }
 
 impl crate::mapreduce::reducer::ReduceTask for SchemeReducer {
@@ -581,10 +578,12 @@ pub fn run_files(
     );
 
     let times = Arc::new(TimeSplit::default());
+    let parked: StoreSlot = Arc::new(Mutex::new(None));
     let map_bounds = boundaries.clone();
     let map_cfg = cfg.clone();
     let map_store = store_factory.clone();
     let map_ledger = ledger.clone();
+    let map_park = parked.clone();
     let red_bounds = boundaries.clone();
     let red_cfg = cfg.clone();
     let red_store = store_factory.clone();
@@ -605,7 +604,8 @@ pub fn run_files(
             Box::new(SchemeMapper {
                 cfg: map_cfg.clone(),
                 boundaries: map_bounds.clone(),
-                store,
+                store: Some(store),
+                park: map_park.clone(),
                 ledger: map_ledger.clone(),
                 pending: Vec::new(),
                 all_reads: Vec::new(),
@@ -636,18 +636,34 @@ pub fn run_files(
         }),
     };
 
-    // per-file splits: mappers never straddle an input-file boundary
+    // spool each file's <seq, read> records to its own disk-backed
+    // record file (the paper's HDFS input) and cut per-file splits —
+    // a mapper never straddles an input-file boundary, exactly as HDFS
+    // would split two files. The corpus is never re-materialized as
+    // resident job records.
+    let spool = ScratchDir::new(cfg.conf.spill_dir.as_deref(), "scheme-in")?;
     let mut splits = Vec::new();
-    for file in files {
-        splits.extend(make_splits(read_records(file), cfg.conf.split_bytes));
+    for (fi, file) in files.iter().enumerate() {
+        let mut w = SplitWriter::create(
+            spool.path.join(format!("reads{fi}")),
+            cfg.conf.split_bytes,
+        )?;
+        spool_read_records(file, &mut w)?;
+        splits.extend(w.finish()?);
     }
     let result = run_job(&job, splits, ledger)?;
+    drop(spool); // input consumed; release the spool files
 
-    let order: Vec<i64> = result
-        .all_output()
-        .map(|r| i64::from_be_bytes(r.value[..8].try_into().unwrap()))
-        .collect();
-    let kv_memory = store_factory().used_memory();
+    // stream the order straight out of the per-reducer output sinks —
+    // one record resident at a time, not the whole output
+    let order = result.collect_i64_values()?;
+
+    // memory probe on a handle a map task already opened (parked in
+    // put_reads); only an empty job falls back to a fresh connection
+    let kv_memory = match parked.lock().unwrap().take() {
+        Some(mut store) => store.used_memory(),
+        None => store_factory().used_memory(),
+    };
 
     Ok(SchemeResult {
         job: result,
@@ -789,6 +805,36 @@ mod tests {
         let err = run_files(&[&reads, &reads], &small_cfg(2, 400), factory, &ledger)
             .expect_err("colliding seqs must be rejected");
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+    }
+
+    #[test]
+    fn memory_probe_reuses_a_task_store_handle() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let reads = synth_corpus(&CorpusSpec {
+            n_reads: 30,
+            read_len: 20,
+            genome_len: 1024,
+            ..Default::default()
+        });
+        let store = SharedStore::new(2);
+        let s = store.clone();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = calls.clone();
+        let factory: StoreFactory = Arc::new(move || {
+            c.fetch_add(1, Ordering::Relaxed);
+            Box::new(s.clone()) as Box<dyn SuffixStore>
+        });
+        let ledger = Ledger::new();
+        let res = run(&reads, &small_cfg(2, 400), factory, &ledger).unwrap();
+        assert!(res.kv_memory > 0);
+        // exactly one handle per task — the post-job used_memory probe
+        // reuses a parked mapper handle instead of opening another
+        // (in cluster mode: a throwaway TCP connection)
+        assert_eq!(
+            calls.load(Ordering::Relaxed),
+            res.job.map_stats.len() + res.job.reduce_stats.len(),
+            "store_factory must not be called beyond one handle per task"
+        );
     }
 
     #[test]

@@ -26,6 +26,8 @@
 
 use std::io;
 
+use crate::mapreduce::io::SplitWriter;
+use crate::mapreduce::record::Record;
 use crate::suffix::encode::{code_of, string_of, strict_code_of, OFFSET_RADIX};
 use crate::util::rng::Rng;
 
@@ -261,6 +263,23 @@ pub fn synth_paired_corpus(spec: &CorpusSpec) -> (Vec<Read>, Vec<Read>) {
 /// Total bytes of the `<seq, read>` records — the paper's "input size".
 pub fn corpus_bytes(reads: &[Read]) -> u64 {
     reads.iter().map(|r| r.record_bytes()).sum()
+}
+
+/// The job-input record of one read: key = sequence number (8 B
+/// big-endian), value = base codes.
+pub fn read_record(read: &Read) -> Record {
+    Record::new(read.seq.to_be_bytes().to_vec(), read.codes.clone())
+}
+
+/// Spool a corpus to a disk-backed record file through `w` — the
+/// paper's HDFS input file of `<seq, read>` records. The scheme's jobs
+/// stream their splits out of this file instead of holding a second,
+/// record-shaped copy of the corpus in memory.
+pub fn spool_read_records(reads: &[Read], w: &mut SplitWriter) -> io::Result<()> {
+    for r in reads {
+        w.push(&read_record(r))?;
+    }
+    Ok(())
 }
 
 /// Total suffix bytes if materialized (TeraSort's self-expansion): for a
@@ -515,6 +534,29 @@ mod tests {
         let suffixes = materialized_suffix_bytes(&reads);
         let factor = suffixes as f64 / input as f64;
         assert!((90.0..110.0).contains(&factor), "factor={factor}");
+    }
+
+    #[test]
+    fn spooled_read_records_roundtrip() {
+        let spec = CorpusSpec { n_reads: 40, read_len: 30, ..Default::default() };
+        let reads = synth_corpus(&spec);
+        let dir = std::env::temp_dir().join(format!("samr-readspool-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = SplitWriter::create(dir.join("reads"), 256).unwrap();
+        spool_read_records(&reads, &mut w).unwrap();
+        assert_eq!(w.bytes(), reads.iter().map(|r| read_record(r).wire_bytes()).sum::<u64>());
+        let splits = w.finish().unwrap();
+        assert!(splits.len() > 1, "256 B budget must cut multiple splits");
+        let mut got = Vec::new();
+        for s in &splits {
+            let mut rd = s.open().unwrap();
+            while let Some(rec) = rd.next_record().unwrap() {
+                let seq = u64::from_be_bytes(rec.key[..8].try_into().unwrap());
+                got.push(Read::new(seq, rec.value));
+            }
+        }
+        assert_eq!(got, reads, "spooled records must reconstruct the corpus in order");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -11,7 +11,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::footprint::Ledger;
-use crate::mapreduce::engine::{make_splits, run_job, Job, JobResult};
+use crate::mapreduce::engine::{run_job, Job, JobResult, ScratchDir};
+use crate::mapreduce::io::SplitWriter;
 use crate::mapreduce::job::JobConf;
 use crate::mapreduce::partitioner::{RangePartitioner, SAMPLES_PER_REDUCER};
 use crate::mapreduce::record::Record;
@@ -58,16 +59,22 @@ pub fn group_key(read: &Read, offset: usize) -> Vec<u8> {
     k
 }
 
-/// Materialize the suffix records of a corpus: key = 10-char prefix,
-/// value = packed index (8 B) + full suffix text. This is the "generation
-/// of suffixes" the paper performs before TeraSort.
+/// One suffix record: key = 10-char prefix, value = packed index (8 B)
+/// + full suffix text.
+fn suffix_record(read: &Read, off: usize) -> Record {
+    let mut value = pack_index(read.seq, off).to_be_bytes().to_vec();
+    value.extend_from_slice(&read.codes[off..]);
+    Record::new(group_key(read, off), value)
+}
+
+/// Materialize the suffix records of a corpus in memory. [`run`] no
+/// longer does this — it spools the records straight to disk-backed
+/// split files — but tests and benches still use the resident form.
 pub fn materialize_suffixes(reads: &[Read]) -> Vec<Record> {
     let mut out = Vec::new();
     for r in reads {
         for off in 0..=r.len() {
-            let mut value = pack_index(r.seq, off).to_be_bytes().to_vec();
-            value.extend_from_slice(&r.codes[off..]);
-            out.push(Record::new(group_key(r, off), value));
+            out.push(suffix_record(r, off));
         }
     }
     out
@@ -91,8 +98,19 @@ pub fn sample_keys(reads: &[Read], n_samples: usize, seed: u64) -> Vec<Vec<u8>> 
 /// Run the baseline on a corpus. The returned footprint covers the sort
 /// job only (suffix generation is excluded, as in Table III).
 pub fn run(reads: &[Read], cfg: &TeraSortConfig, ledger: &Arc<Ledger>) -> std::io::Result<TeraSortResult> {
-    let suffixes = materialize_suffixes(reads);
-    let suffix_input_bytes: u64 = suffixes.iter().map(|r| r.wire_bytes()).sum();
+    // generate the self-expanded suffix records straight into
+    // disk-backed split files — the paper writes its suffix files to
+    // HDFS before the timed job, and like there, the ~100x expanded
+    // volume never lives in memory
+    let spool = ScratchDir::new(cfg.conf.spill_dir.as_deref(), "terasort-in")?;
+    let mut w = SplitWriter::create(spool.path.join("suffixes"), cfg.conf.split_bytes)?;
+    for r in reads {
+        for off in 0..=r.len() {
+            w.push(&suffix_record(r, off))?;
+        }
+    }
+    let suffix_input_bytes: u64 = w.bytes();
+    let splits = w.finish()?;
 
     let samples = sample_keys(reads, cfg.samples_per_reducer * cfg.conf.n_reducers, cfg.seed);
     let partitioner = Arc::new(RangePartitioner::from_samples(samples, cfg.conf.n_reducers));
@@ -130,12 +148,10 @@ pub fn run(reads: &[Read], cfg: &TeraSortConfig, ledger: &Arc<Ledger>) -> std::i
         partitioner: partitioner.as_fn(),
     };
 
-    let splits = make_splits(suffixes, cfg.conf.split_bytes);
     let result = run_job(&job, splits, ledger)?;
-    let order = result
-        .all_output()
-        .map(|r| i64::from_be_bytes(r.value[..8].try_into().unwrap()))
-        .collect();
+    drop(spool); // input consumed; release the spooled suffix files
+    // stream the order out of the per-reducer output sinks
+    let order = result.collect_i64_values()?;
     Ok(TeraSortResult {
         job: result,
         suffix_input_bytes,

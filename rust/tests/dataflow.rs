@@ -1,0 +1,192 @@
+//! Out-of-core dataflow tests: the engine streams disk-backed input
+//! splits in and spooled reduce output back out, so (1) the streaming
+//! consumption path is byte-identical to the opt-in collected path with
+//! identical totals on every footprint-ledger channel, on both shuffle
+//! implementations, and (2) an input far larger than the configured
+//! record-buffer budgets completes with peak resident records bounded
+//! by those budgets — not by input volume.
+
+use std::sync::{Arc, Mutex};
+
+use samr::footprint::{Channel, Footprint, Ledger, CHANNELS};
+use samr::mapreduce::io::spool_records;
+use samr::mapreduce::partitioner::RangePartitioner;
+use samr::mapreduce::record::batch_bytes;
+use samr::mapreduce::{resident, run_job, Job, JobConf, Record, ScratchDir};
+use samr::util::rng::Rng;
+
+/// The resident gauge is process-global, so every job-running test in
+/// this binary serializes through this gate.
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Identity sort job over `n` random 8 B + 8 B records.
+fn sort_job(n: usize, n_reducers: usize, conf: JobConf, seed: u64) -> (Job, Vec<Record>) {
+    let mut rng = Rng::new(seed);
+    let input: Vec<Record> = (0..n)
+        .map(|_| {
+            Record::new(
+                rng.next_u64().to_be_bytes().to_vec(),
+                rng.next_u64().to_be_bytes().to_vec(),
+            )
+        })
+        .collect();
+    let samples: Vec<Vec<u8>> = input.iter().take(2000).map(|r| r.key.clone()).collect();
+    let part = Arc::new(RangePartitioner::from_samples(samples, n_reducers));
+    let job = Job {
+        name: "dataflow-sort".into(),
+        conf: JobConf { n_reducers, ..conf },
+        map_factory: Arc::new(|_| {
+            Box::new(|rec: &Record, emit: &mut dyn FnMut(Record)| emit(rec.clone()))
+        }),
+        reduce_factory: Arc::new(|_| {
+            Box::new(
+                |key: &[u8], vals: Vec<Vec<u8>>, out: &mut dyn FnMut(Record)| {
+                    for v in vals {
+                        out(Record::new(key.to_vec(), v));
+                    }
+                },
+            )
+        }),
+        partitioner: part.as_fn(),
+    };
+    (job, input)
+}
+
+#[test]
+fn streamed_and_collected_outputs_are_identical_on_both_shuffle_paths() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let conf = JobConf {
+        split_bytes: 8 << 10,
+        io_sort_bytes: 4 << 10,
+        reducer_heap_bytes: 16 << 10,
+        io_sort_factor: 3,
+        ..JobConf::default()
+    };
+    let mut footprints: Vec<Footprint> = Vec::new();
+    let mut outputs: Vec<Vec<Record>> = Vec::new();
+    for fixed in [false, true] {
+        let (job, input) =
+            sort_job(6000, 3, JobConf { fixed_width: fixed, ..conf.clone() }, 99);
+        let spool = ScratchDir::new(None, "dataflow-eq-in").unwrap();
+        let splits =
+            spool_records(spool.path.join("input"), &input, job.conf.split_bytes).unwrap();
+        let ledger = Ledger::new();
+        let res = run_job(&job, splits, &ledger).unwrap();
+
+        // collected path: opt-in full materialization
+        let collected = res.collect_output().unwrap();
+
+        // streaming path must visit exactly the same records...
+        let mut streamed: Vec<Record> = Vec::new();
+        res.for_each_output(|r| {
+            streamed.push(r);
+            Ok(())
+        })
+        .unwrap();
+        let flat: Vec<Record> = collected.iter().flatten().cloned().collect();
+        assert_eq!(streamed, flat, "streamed vs collected records (fixed={fixed})");
+
+        // ...and the raw output-file bytes must equal the collected
+        // records' serialized form, reducer by reducer
+        for (file, recs) in res.output.iter().zip(&collected) {
+            let raw = std::fs::read(&file.path).unwrap();
+            let mut reencoded = Vec::new();
+            for r in recs {
+                r.write_to(&mut reencoded).unwrap();
+            }
+            assert_eq!(raw, reencoded, "output file bytes (fixed={fixed})");
+            assert_eq!(file.records as usize, recs.len());
+            assert_eq!(file.bytes, batch_bytes(recs));
+        }
+
+        // ledger invariants: the disk-backed ends charge exactly the
+        // record wire bytes, as the resident-vector dataflow did
+        let fp = ledger.snapshot();
+        assert_eq!(fp.get(Channel::HdfsRead), batch_bytes(&input));
+        assert_eq!(fp.get(Channel::HdfsWrite), batch_bytes(&flat));
+        footprints.push(fp);
+        outputs.push(flat);
+    }
+    // both shuffle paths: identical records and identical totals on
+    // every footprint channel
+    assert_eq!(outputs[0], outputs[1]);
+    for ch in CHANNELS {
+        assert_eq!(
+            footprints[0].get(ch),
+            footprints[1].get(ch),
+            "{} must match across shuffle paths",
+            ch.name()
+        );
+    }
+}
+
+#[test]
+fn input_beyond_buffer_budgets_stays_under_budget() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // tiny budgets, big input: 20k records x 24 B = ~480 KB against a
+    // ~6.5 KB map spill trigger and an ~8 KB reducer heap. The spill
+    // trigger (~273 records) deliberately exceeds resident::GAUGE_BATCH
+    // so the task-local gauge batches actually publish.
+    let conf = JobConf {
+        split_bytes: 16 << 10,
+        io_sort_bytes: 8 << 10,
+        reducer_heap_bytes: 8 << 10,
+        io_sort_factor: 4,
+        task_parallelism: 2,
+        ..JobConf::default()
+    };
+    for fixed in [false, true] {
+        let (job, input) =
+            sort_job(20_000, 2, JobConf { fixed_width: fixed, ..conf.clone() }, 7);
+        let wire = input[0].wire_bytes(); // 24 B, uniform
+
+        // record-count budgets implied by the byte knobs (+ slack for
+        // the one emit batch that lands past a trigger)
+        let per_map = job.conf.spill_trigger() / wire + 64;
+        let per_reduce =
+            (job.conf.merge_trigger() + job.conf.segment_memory_limit()) / wire + 64;
+        let parallel = job.conf.task_parallelism as u64;
+        let budget = parallel * per_map.max(per_reduce);
+        assert!(
+            (input.len() as u64) > 8 * budget,
+            "input ({}) must dwarf the budget ({budget})",
+            input.len()
+        );
+
+        let spool = ScratchDir::new(None, "dataflow-smoke-in").unwrap();
+        let splits =
+            spool_records(spool.path.join("input"), &input, job.conf.split_bytes).unwrap();
+        assert!(splits.len() > 20, "tiny split_bytes must cut many splits");
+        assert!(
+            job.conf.spill_trigger() / wire > samr::mapreduce::resident::GAUGE_BATCH,
+            "spill trigger must exceed the gauge publish batch or peak stays 0"
+        );
+
+        resident::reset();
+        let ledger = Ledger::new();
+        let res = run_job(&job, splits, &ledger).unwrap();
+        let peak = resident::peak();
+
+        // the job really ran out-of-core...
+        assert!(res.map_stats.iter().any(|s| s.spills > 1), "want multi-spill maps");
+        assert!(ledger.get(Channel::ReduceLocalWrite) > 0, "want reduce-side spills");
+        // ...and the sort is correct
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        res.for_each_output(|r| {
+            got.push(r.key);
+            Ok(())
+        })
+        .unwrap();
+        let mut want: Vec<Vec<u8>> = input.iter().map(|r| r.key.clone()).collect();
+        want.sort();
+        assert_eq!(got, want);
+
+        // headline: peak resident records bounded by the buffer
+        // budgets, while the input is 8x+ larger
+        assert!(peak > 0, "gauge must have seen the buffers fill");
+        assert!(
+            peak <= budget,
+            "peak resident records {peak} exceeds budget {budget} (fixed={fixed})"
+        );
+    }
+}

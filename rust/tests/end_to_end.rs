@@ -173,7 +173,8 @@ fn oversized_read_is_rejected_not_aliased() {
 fn missing_read_in_store_fails_loudly() {
     init_runtime();
     // a store that was never populated must make the reducer panic (fetch
-    // error), not silently emit garbage — run_job propagates the panic.
+    // error), not silently emit garbage — the engine catches the panic
+    // and surfaces it as an io::Error naming the task.
     let mut empty = SharedStore::new(2);
     // sabotage: pre-fetch proves it's empty
     assert!(empty.fetch_suffixes(&[0]).is_err());

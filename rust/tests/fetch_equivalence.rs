@@ -120,7 +120,13 @@ fn run_scheme_once(
     };
     let ledger = Ledger::new();
     let res = scheme::run(reads, &cfg, factory, &ledger).expect("scheme");
-    let output: Vec<Vec<u8>> = res.job.all_output().map(|r| r.key.clone()).collect();
+    let mut output: Vec<Vec<u8>> = Vec::new();
+    res.job
+        .for_each_output(|r| {
+            output.push(r.key);
+            Ok(())
+        })
+        .expect("stream output");
     (
         res.order,
         ledger.get(Channel::KvFetch),

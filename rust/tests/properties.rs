@@ -5,7 +5,8 @@ use std::sync::Arc;
 
 use samr::footprint::{Channel, Ledger};
 use samr::kvstore::shard::{InProcStore, SharedStore, SuffixStore};
-use samr::mapreduce::engine::{make_splits, run_job, Job};
+use samr::mapreduce::engine::{run_job, Job, ScratchDir};
+use samr::mapreduce::io::spool_records;
 use samr::mapreduce::partitioner::RangePartitioner;
 use samr::mapreduce::record::{encode_i64_key, Record};
 use samr::mapreduce::JobConf;
@@ -107,9 +108,16 @@ fn prop_mr_sorts_any_conf() {
             partitioner: part.as_fn(),
         };
         let ledger = Ledger::new();
-        let res = run_job(&job, make_splits(records.clone(), conf.split_bytes), &ledger)
+        let spool = ScratchDir::new(None, "prop-sort-in").map_err(|e| e.to_string())?;
+        let splits = spool_records(spool.path.join("input"), &records, conf.split_bytes)
             .map_err(|e| e.to_string())?;
-        let got: Vec<Vec<u8>> = res.all_output().map(|r| r.key.clone()).collect();
+        let res = run_job(&job, splits, &ledger).map_err(|e| e.to_string())?;
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        res.for_each_output(|r| {
+            got.push(r.key);
+            Ok(())
+        })
+        .map_err(|e| e.to_string())?;
         let mut want: Vec<Vec<u8>> = records.iter().map(|r| r.key.clone()).collect();
         want.sort();
         (got == want).then_some(()).ok_or_else(|| {

@@ -9,8 +9,9 @@ use std::sync::Arc;
 
 use samr::footprint::{Channel, Footprint, Ledger, CHANNELS};
 use samr::kvstore::shard::{SharedStore, SuffixStore};
+use samr::mapreduce::io::spool_records;
 use samr::mapreduce::partitioner::RangePartitioner;
-use samr::mapreduce::{make_splits, run_job, Job, JobConf, Record};
+use samr::mapreduce::{run_job, Job, JobConf, Record, ScratchDir};
 use samr::scheme::{self, SchemeConfig, StoreFactory};
 use samr::suffix::reads::{synth_corpus, CorpusSpec, Read};
 use samr::suffix::validate::validate_order;
@@ -46,7 +47,13 @@ fn scheme_once(
     };
     let ledger = Ledger::new();
     let res = scheme::run(reads, &cfg, factory, &ledger).expect("scheme run");
-    let output: Vec<Record> = res.job.all_output().cloned().collect();
+    let output: Vec<Record> = res
+        .job
+        .collect_output()
+        .expect("collect output")
+        .into_iter()
+        .flatten()
+        .collect();
     (res.order, output, ledger.snapshot())
 }
 
@@ -138,9 +145,11 @@ fn fixed_width_engine_runs_generic_tasks_via_adapters() {
             partitioner: part.as_fn(),
         };
         let ledger = Ledger::new();
-        let splits = make_splits(input.clone(), job.conf.split_bytes);
+        let spool = ScratchDir::new(None, "adapter-in").expect("scratch");
+        let splits =
+            spool_records(spool.path.join("input"), &input, job.conf.split_bytes).expect("spool");
         let res = run_job(&job, splits, &ledger).expect("job");
-        results.push((res.output, ledger.snapshot()));
+        results.push((res.collect_output().expect("collect"), ledger.snapshot()));
     }
     assert_eq!(results[0], results[1], "adapter path must be byte-identical");
     // and the sort is actually a sort
