@@ -1,0 +1,93 @@
+//! `cargo bench --bench fetch` — the zero-copy suffix-fetch ablation:
+//! old `Vec<Vec<u8>>` fetch vs the flat `SuffixBatch` arena path, at
+//! 100k and ~1M suffixes, sequential vs pipelined, over 1/4/8 shards.
+//! The §IV-D claim under test: fetch cost should be bounded by moving
+//! bytes, not by the allocator.
+//!
+//! `SAMR_FETCH_SUFFIXES` scales the big corpus (default 1_000_000).
+
+use samr::bench_support::{bench_throughput, section};
+use samr::kvstore::batch::SuffixBatch;
+use samr::kvstore::shard::{InProcStore, SuffixStore};
+use samr::kvstore::LocalKvCluster;
+use samr::suffix::encode::pack_index;
+use samr::suffix::reads::Read;
+use samr::util::bytes::parse_count;
+
+/// A corpus of `n_reads` reads of `len` bases plus the request list for
+/// every suffix of every read.
+fn corpus(n_reads: u64, len: usize) -> (Vec<Read>, Vec<i64>) {
+    let reads: Vec<Read> =
+        (0..n_reads).map(|i| Read::new(i, vec![(i % 4 + 1) as u8; len])).collect();
+    let reqs: Vec<i64> = reads
+        .iter()
+        .flat_map(|r| (0..=r.len()).map(|o| pack_index(r.seq, o)))
+        .collect();
+    (reads, reqs)
+}
+
+fn bench_inproc(label: &str, n_suffixes: usize) {
+    section(&format!("{label}: Vec-of-Vecs vs SuffixBatch (in-process, 4 shards)"));
+    let len = 49usize; // 50 suffixes per read
+    let n_reads = (n_suffixes / (len + 1)) as u64;
+    let (reads, reqs) = corpus(n_reads, len);
+    let mut store = InProcStore::new(4);
+    store.put_reads(&reads).expect("put");
+
+    let m_vec =
+        bench_throughput("vec fetch (alloc per suffix)", 1, 3, reqs.len() as f64, "suffixes", || {
+            std::hint::black_box(store.fetch_suffixes(&reqs).unwrap());
+        });
+    println!("{m_vec}");
+    let mut batch = SuffixBatch::new();
+    let m_arena =
+        bench_throughput("arena fetch (flat batch)", 1, 3, reqs.len() as f64, "suffixes", || {
+            batch.clear();
+            store.fetch_suffixes_into(&reqs, &mut batch).unwrap();
+            std::hint::black_box(batch.len());
+        });
+    println!("{m_arena}");
+    let speedup = m_vec.mean.as_secs_f64() / m_arena.mean.as_secs_f64();
+    println!("    arena speedup at {}: {speedup:.2}x", reqs.len());
+}
+
+fn main() {
+    let big: usize = std::env::var("SAMR_FETCH_SUFFIXES")
+        .ok()
+        .and_then(|s| parse_count(&s).map(|v| v as usize))
+        .unwrap_or(1_000_000);
+
+    // the acceptance target: a measurable win at 1M suffixes
+    bench_inproc("100k suffixes", 100_000);
+    bench_inproc(&format!("{big} suffixes"), big);
+
+    // over real sockets: sequential vs pipelined, Vec vs arena
+    let (reads, reqs) = corpus(2_000, 49); // 100k suffixes over TCP
+    for shards in [1usize, 4, 8] {
+        section(&format!("TCP fetch paths, {shards} shard(s), {} suffixes", reqs.len()));
+        let kv = LocalKvCluster::start(shards).expect("kv cluster");
+        let mut loader = kv.client().expect("loader");
+        loader.put_reads(&reads).expect("put");
+
+        let mut client = kv.client().expect("client");
+        let m = bench_throughput("sequential vec fetch", 1, 3, reqs.len() as f64, "suffixes", || {
+            std::hint::black_box(client.fetch_suffixes_sequential(&reqs).unwrap());
+        });
+        println!("{m}");
+        let m_vec =
+            bench_throughput("pipelined vec fetch", 1, 3, reqs.len() as f64, "suffixes", || {
+                std::hint::black_box(client.fetch_suffixes(&reqs).unwrap());
+            });
+        println!("{m_vec}");
+        let mut batch = SuffixBatch::new();
+        let m_arena =
+            bench_throughput("pipelined arena fetch", 1, 3, reqs.len() as f64, "suffixes", || {
+                batch.clear();
+                client.fetch_suffixes_into(&reqs, &mut batch).unwrap();
+                std::hint::black_box(batch.len());
+            });
+        println!("{m_arena}");
+        let speedup = m_vec.mean.as_secs_f64() / m_arena.mean.as_secs_f64();
+        println!("    arena vs vec (pipelined) at {shards} shard(s): {speedup:.2}x");
+    }
+}

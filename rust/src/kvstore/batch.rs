@@ -1,0 +1,292 @@
+//! Flat suffix-text batches: one contiguous byte arena plus a spans
+//! table, in place of `Vec<Vec<u8>>` on the whole fetch path.
+//!
+//! The paper's own breakdown (§IV-D) puts ~60% of reducer wall time in
+//! *getting suffixes*; a heap `Vec<u8>` per suffix at every layer makes
+//! that path allocator-bound instead of memory-bandwidth-bound (the
+//! lesson of flat string sets in scalable string/suffix sorting —
+//! PAPERS.md: Bingmann 2018, KIT distributed-SA 2024). A [`SuffixBatch`]
+//! stores every text of one fetch back to back in `data`, with one
+//! `(start, len)` span per entry:
+//!
+//! ```text
+//!   data:  [ t e x t 0 | t e x t 1 | t e x t 2 | ... ]      one Vec<u8>
+//!   spans: [ (0,5)     , (5,5)     , (10,5)    , ... ]      one Vec<Span>
+//! ```
+//!
+//! Entries are read as borrowed `&[u8]` slices ([`SuffixBatch::slice`]),
+//! reordering is a *spans* permutation (the bytes never move), and
+//! [`SuffixBatch::clear`] keeps both capacities — so a reused batch does
+//! zero allocations in steady state (proved by the counting-allocator
+//! test `tests/alloc_count.rs`).
+//!
+//! Ownership rules (see docs/ARCHITECTURE.md "Zero-copy suffix fetch"):
+//! the batch owns its bytes; producers append (RESP decode streams
+//! socket bytes straight into the arena, the in-process store copies
+//! store slices in), consumers only borrow. A "missing" entry (RESP null
+//! bulk) is a sentinel span, distinct from an empty text.
+
+use std::fmt;
+
+/// One entry's location in the arena. `start == usize::MAX` marks a
+/// missing entry (RESP `$-1` null bulk — key not in the store).
+#[derive(Clone, Copy, Debug)]
+struct Span {
+    start: usize,
+    len: usize,
+}
+
+const MISSING: Span = Span { start: usize::MAX, len: 0 };
+
+/// A flat batch of suffix texts: one byte arena + a spans table.
+#[derive(Default)]
+pub struct SuffixBatch {
+    data: Vec<u8>,
+    spans: Vec<Span>,
+}
+
+impl SuffixBatch {
+    /// An empty batch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty batch with pre-sized spans table and arena.
+    pub fn with_capacity(entries: usize, arena_bytes: usize) -> Self {
+        Self {
+            data: Vec::with_capacity(arena_bytes),
+            spans: Vec::with_capacity(entries),
+        }
+    }
+
+    /// Drop every entry but keep both allocations — the reuse point that
+    /// makes steady-state fetches allocation-free.
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.spans.clear();
+    }
+
+    /// Number of entries (missing ones included).
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// True when the batch holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Bytes currently in the arena.
+    pub fn arena_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Entry `i` as a borrowed slice; `None` if it is missing.
+    pub fn get(&self, i: usize) -> Option<&[u8]> {
+        let s = self.spans[i];
+        if s.start == usize::MAX {
+            None
+        } else {
+            Some(&self.data[s.start..s.start + s.len])
+        }
+    }
+
+    /// Entry `i` as a borrowed slice; panics if it is missing.
+    pub fn slice(&self, i: usize) -> &[u8] {
+        self.get(i).expect("missing suffix entry")
+    }
+
+    /// True when entry `i` is a missing (null) entry.
+    pub fn is_missing(&self, i: usize) -> bool {
+        self.spans[i].start == usize::MAX
+    }
+
+    /// Append one entry by copying `bytes` into the arena.
+    pub fn push(&mut self, bytes: &[u8]) {
+        let start = self.data.len();
+        self.data.extend_from_slice(bytes);
+        self.spans.push(Span { start, len: bytes.len() });
+    }
+
+    /// Append one missing (null) entry.
+    pub fn push_missing(&mut self) {
+        self.spans.push(MISSING);
+    }
+
+    /// Append `n` missing slots, to be filled out of order by
+    /// [`SuffixBatch::fill_slot`]/[`SuffixBatch::set_slot`] — the scatter
+    /// step of a sharded fetch, where per-shard replies arrive grouped by
+    /// shard but land at their original request positions.
+    pub fn reserve_slots(&mut self, n: usize) {
+        self.spans.resize(self.spans.len() + n, MISSING);
+    }
+
+    /// Fill reserved slot `i` by appending `bytes` to the arena.
+    pub fn fill_slot(&mut self, i: usize, bytes: &[u8]) {
+        let start = self.data.len();
+        self.data.extend_from_slice(bytes);
+        self.spans[i] = Span { start, len: bytes.len() };
+    }
+
+    /// Point slot `i` at arena range `start..start + len` (already
+    /// appended, e.g. via [`SuffixBatch::append_arena`]).
+    pub fn set_slot(&mut self, i: usize, start: usize, len: usize) {
+        assert!(start + len <= self.data.len(), "span outside the arena");
+        self.spans[i] = Span { start, len };
+    }
+
+    /// Entry `i`'s `(start, len)` within its arena; `None` if missing.
+    pub fn entry_span(&self, i: usize) -> Option<(usize, usize)> {
+        let s = self.spans[i];
+        if s.start == usize::MAX {
+            None
+        } else {
+            Some((s.start, s.len))
+        }
+    }
+
+    /// Append `other`'s whole arena (one bulk copy, no per-entry work)
+    /// and return the base offset its spans must be rebased by. The
+    /// sharded fetch concatenates per-shard arenas this way: one
+    /// `memcpy` per *shard*, then a spans permutation per entry.
+    pub fn append_arena(&mut self, other: &SuffixBatch) -> usize {
+        let base = self.data.len();
+        self.data.extend_from_slice(&other.data);
+        base
+    }
+
+    /// Append raw bytes to the arena without creating an entry —
+    /// streaming producers (RESP decode copying straight out of the
+    /// socket buffer) append chunks, then call
+    /// [`SuffixBatch::seal_entry`] once the entry is complete. This is
+    /// append-only: no zero-fill pass over the payload.
+    pub fn append_raw(&mut self, bytes: &[u8]) {
+        self.data.extend_from_slice(bytes);
+    }
+
+    /// Append one entry spanning the last `len` arena bytes.
+    pub fn seal_entry(&mut self, len: usize) {
+        let start = self.data.len().checked_sub(len).expect("arena underflow");
+        self.spans.push(Span { start, len });
+    }
+
+    /// Iterate entries in order as `Option<&[u8]>` (missing = `None`).
+    pub fn iter(&self) -> impl Iterator<Item = Option<&[u8]>> + '_ {
+        (0..self.len()).map(|i| self.get(i))
+    }
+}
+
+/// Logical equality: same entries in the same order, regardless of how
+/// the arenas are laid out (scatter order differs across shard counts).
+impl PartialEq for SuffixBatch {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len() && self.iter().eq(other.iter())
+    }
+}
+
+impl Eq for SuffixBatch {}
+
+/// Compact Debug: entry count + arena bytes, not megabytes of payload.
+impl fmt::Debug for SuffixBatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SuffixBatch")
+            .field("entries", &self.len())
+            .field("arena_bytes", &self.arena_len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_roundtrip() {
+        let mut b = SuffixBatch::new();
+        b.push(b"ACGT");
+        b.push_missing();
+        b.push(b"");
+        b.push(b"TT");
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.get(0), Some(&b"ACGT"[..]));
+        assert_eq!(b.get(1), None);
+        assert!(b.is_missing(1));
+        assert_eq!(b.get(2), Some(&b""[..]));
+        assert_eq!(b.get(3), Some(&b"TT"[..]));
+        assert_eq!(b.arena_len(), 6);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut b = SuffixBatch::new();
+        b.push(&[7u8; 1000]);
+        let cap = b.data.capacity();
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.arena_len(), 0);
+        assert_eq!(b.data.capacity(), cap);
+    }
+
+    #[test]
+    fn scatter_via_slots() {
+        // per-shard arrival order {2, 0} then {1}, request order 0..3
+        let mut shard_a = SuffixBatch::new();
+        shard_a.push(b"two");
+        shard_a.push(b"zero");
+        let mut shard_b = SuffixBatch::new();
+        shard_b.push(b"one");
+
+        let mut out = SuffixBatch::new();
+        out.reserve_slots(3);
+        let base = out.append_arena(&shard_a);
+        for (j, &pos) in [2usize, 0].iter().enumerate() {
+            let (s, l) = shard_a.entry_span(j).unwrap();
+            out.set_slot(pos, base + s, l);
+        }
+        let base = out.append_arena(&shard_b);
+        let (s, l) = shard_b.entry_span(0).unwrap();
+        out.set_slot(1, base + s, l);
+
+        assert_eq!(out.slice(0), b"zero");
+        assert_eq!(out.slice(1), b"one");
+        assert_eq!(out.slice(2), b"two");
+    }
+
+    #[test]
+    fn streaming_arena_ops() {
+        // the RESP decode pattern: a payload arrives in chunks (socket
+        // buffer refills), appended raw and sealed as one entry
+        let mut b = SuffixBatch::new();
+        b.append_raw(b"AC");
+        b.append_raw(b"GT");
+        b.seal_entry(4);
+        assert_eq!(b.slice(0), b"ACGT");
+        // a second streamed entry lands right behind it
+        b.append_raw(b"TT");
+        b.seal_entry(2);
+        assert_eq!(b.slice(1), b"TT");
+        assert_eq!(b.arena_len(), 6);
+    }
+
+    #[test]
+    fn logical_equality_ignores_layout() {
+        let mut a = SuffixBatch::new();
+        a.push(b"x");
+        a.push(b"yy");
+        let mut b = SuffixBatch::new();
+        b.reserve_slots(2);
+        b.fill_slot(1, b"yy");
+        b.fill_slot(0, b"x");
+        assert_eq!(a, b);
+        b.push_missing();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing suffix entry")]
+    fn slice_panics_on_missing() {
+        let mut b = SuffixBatch::new();
+        b.push_missing();
+        b.slice(0);
+    }
+}

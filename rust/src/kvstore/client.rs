@@ -10,12 +10,16 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream};
 
+use crate::kvstore::batch::SuffixBatch;
 use crate::kvstore::resp::{self, Value};
+use crate::util::bytes::{dec_len, fmt_dec};
 
 /// Connection to one KV instance (reader/writer halves of one socket).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Reused RESP line scratch for the streaming (arena) reply path.
+    scratch: Vec<u8>,
     /// Request wire bytes written so far (footprint ledger input).
     pub bytes_sent: u64,
     /// Reply wire bytes read so far (footprint ledger input).
@@ -58,6 +62,18 @@ impl From<std::io::Error> for KvError {
     }
 }
 
+/// A KV failure as an `io::Error` — how a clean fetch/put error travels
+/// through the reducer and the job engine (which speak `io::Result`)
+/// without becoming a panic. Transport errors keep their `ErrorKind`.
+impl From<KvError> for std::io::Error {
+    fn from(e: KvError) -> Self {
+        match e {
+            KvError::Io(e) => e,
+            other => std::io::Error::other(format!("kv store: {other}")),
+        }
+    }
+}
+
 /// Client-side KV result.
 pub type Result<T> = std::result::Result<T, KvError>;
 
@@ -76,6 +92,7 @@ impl Client {
         Ok(Client {
             reader: BufReader::new(conn.try_clone()?),
             writer: BufWriter::new(conn),
+            scratch: Vec::with_capacity(32),
             bytes_sent: 0,
             bytes_received: 0,
         })
@@ -240,6 +257,88 @@ impl Client {
             }
         }
         Ok(out)
+    }
+
+    /// Serialize one `MGETSUFFIX` command for `chunk` without building
+    /// an argv: keys and offsets are formatted through a stack buffer
+    /// (no `to_string().into_bytes()` per request) and written straight
+    /// to the connection's buffered writer. Bytes and accounting are
+    /// identical to `write_command` over the equivalent argv.
+    fn send_mgetsuffix(&mut self, chunk: &[(u64, usize)]) -> Result<()> {
+        let n_args = 1 + chunk.len() * 2;
+        let mut wire = 1 + dec_len(n_args as u64) as u64 + 2;
+        wire += resp::bulk_wire_len(b"MGETSUFFIX".len());
+        write!(self.writer, "*{n_args}\r\n$10\r\nMGETSUFFIX\r\n")?;
+        let mut buf = [0u8; 20];
+        for &(seq, off) in chunk {
+            let key = fmt_dec(seq, &mut buf);
+            wire += resp::bulk_wire_len(key.len());
+            write!(self.writer, "${}\r\n", key.len())?;
+            self.writer.write_all(key)?;
+            self.writer.write_all(b"\r\n")?;
+            let off = fmt_dec(off as u64, &mut buf);
+            wire += resp::bulk_wire_len(off.len());
+            write!(self.writer, "${}\r\n", off.len())?;
+            self.writer.write_all(off)?;
+            self.writer.write_all(b"\r\n")?;
+        }
+        self.bytes_sent += wire;
+        Ok(())
+    }
+
+    /// Windowed pipelined `MGETSUFFIX` appending the replies into `out`'s
+    /// arena — the zero-copy fetch path. One entry per request in request
+    /// order (missing keys as missing entries); requests are (sequence
+    /// number, offset) pairs formatted on the fly. Wire bytes in both
+    /// directions are identical to [`Client::mgetsuffix_pipelined`] over
+    /// the same requests — only the reply's destination changes: socket
+    /// buffer → arena in one append per suffix, zero per-suffix `Vec`s.
+    ///
+    /// On error, entries already appended to `out` are unspecified;
+    /// callers discard the batch.
+    pub fn mgetsuffix_pipelined_into(
+        &mut self,
+        reqs: &[(u64, usize)],
+        chunk_pairs: usize,
+        out: &mut SuffixBatch,
+    ) -> Result<()> {
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        let chunk = chunk_pairs.max(1);
+        let n_chunks = reqs.len().div_ceil(chunk);
+        let bounds = |i: usize| (i * chunk, ((i + 1) * chunk).min(reqs.len()));
+        let mut sent = 0;
+        let mut done = 0;
+        while done < n_chunks {
+            while sent < n_chunks && sent - done < PIPELINE_WINDOW {
+                let (lo, hi) = bounds(sent);
+                self.send_mgetsuffix(&reqs[lo..hi])?;
+                sent += 1;
+            }
+            self.writer.flush()?;
+            let (lo, hi) = bounds(done);
+            match resp::read_bulk_array_into(&mut self.reader, &mut self.scratch, out)? {
+                resp::ArrayReply::Appended { n, wire_len } => {
+                    self.bytes_received += wire_len;
+                    if n != hi - lo {
+                        return Err(KvError::Server(format!(
+                            "MGETSUFFIX replied {n} elements for {} requests",
+                            hi - lo
+                        )));
+                    }
+                }
+                resp::ArrayReply::Other(v) => {
+                    self.bytes_received += v.wire_len();
+                    if let Value::Error(e) = v {
+                        return Err(KvError::Server(e));
+                    }
+                    return Err(KvError::Unexpected(v));
+                }
+            }
+            done += 1;
+        }
+        Ok(())
     }
 
     /// The paper's `mgetsuffix`: fetch value[offset..] for many

@@ -1,8 +1,10 @@
 //! The distributed in-memory data store system (the Redis role in the
 //! paper): RESP protocol, store with memory accounting and `MGETSUFFIX`,
-//! threaded TCP server, pipelined client, mod-N sharding, and the
-//! reducer-side suffix prefetcher.
+//! threaded TCP server, pipelined client, mod-N sharding, the flat
+//! [`batch::SuffixBatch`] arenas the zero-copy fetch path runs on, and
+//! the reducer-side suffix prefetcher.
 
+pub mod batch;
 pub mod client;
 pub mod prefetch;
 pub mod resp;

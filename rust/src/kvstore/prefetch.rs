@@ -7,6 +7,14 @@
 //! the other: while sorting group *i* is tie-break sorted and emitted,
 //! group *i+1*'s texts are already streaming in.
 //!
+//! Texts travel as flat [`SuffixBatch`] arenas, and the arenas are
+//! *recycled*: the caller hands an arena in with each
+//! [`SuffixPrefetcher::request`] (typically the one it just finished
+//! consuming) and gets it back, filled, from
+//! [`SuffixPrefetcher::wait`]. With one batch in flight and one being
+//! consumed, two arenas rotate forever — steady state does zero arena
+//! allocations (`tests/alloc_count.rs`).
+//!
 //! Requests are answered strictly in FIFO order and are byte-identical to
 //! the blocking path — the prefetcher only moves *when* the fetch runs,
 //! never *what* is fetched — so the footprint ledger sees exactly the
@@ -16,13 +24,14 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
+use crate::kvstore::batch::SuffixBatch;
 use crate::kvstore::client::{KvError, Result};
 use crate::kvstore::shard::{SuffixStore, Traffic};
 
 /// One in-flight-capable fetch worker wrapping a [`SuffixStore`] handle.
 pub struct SuffixPrefetcher {
-    tx: Option<Sender<Vec<i64>>>,
-    rx: Receiver<Result<(Vec<Vec<u8>>, Traffic)>>,
+    tx: Option<Sender<(Vec<i64>, SuffixBatch)>>,
+    rx: Receiver<Result<(SuffixBatch, Traffic)>>,
     worker: Option<JoinHandle<()>>,
     in_flight: usize,
 }
@@ -31,13 +40,14 @@ impl SuffixPrefetcher {
     /// Move `store` onto a dedicated fetch thread and return the handle
     /// used to overlap fetches with caller-side work.
     pub fn spawn(mut store: Box<dyn SuffixStore>) -> SuffixPrefetcher {
-        let (tx, req_rx) = channel::<Vec<i64>>();
+        let (tx, req_rx) = channel::<(Vec<i64>, SuffixBatch)>();
         let (res_tx, rx) = channel();
         let worker = std::thread::Builder::new()
             .name("samr-prefetch".into())
             .spawn(move || {
-                while let Ok(indexes) = req_rx.recv() {
-                    let res = store.fetch_suffixes(&indexes);
+                while let Ok((indexes, mut batch)) = req_rx.recv() {
+                    batch.clear();
+                    let res = store.fetch_suffixes_into(&indexes, &mut batch).map(|t| (batch, t));
                     if res_tx.send(res).is_err() {
                         break; // owner dropped
                     }
@@ -47,13 +57,15 @@ impl SuffixPrefetcher {
         SuffixPrefetcher { tx: Some(tx), rx, worker: Some(worker), in_flight: 0 }
     }
 
-    /// Queue a fetch; returns immediately. Results arrive in request
-    /// order via [`SuffixPrefetcher::wait`].
-    pub fn request(&mut self, indexes: Vec<i64>) {
+    /// Queue a fetch into `batch` (cleared on the worker before filling —
+    /// pass a recycled arena to keep steady state allocation-free);
+    /// returns immediately. Results arrive in request order via
+    /// [`SuffixPrefetcher::wait`].
+    pub fn request(&mut self, indexes: Vec<i64>, batch: SuffixBatch) {
         self.tx
             .as_ref()
             .expect("prefetcher running")
-            .send(indexes)
+            .send((indexes, batch))
             .expect("prefetch thread alive");
         self.in_flight += 1;
     }
@@ -64,8 +76,9 @@ impl SuffixPrefetcher {
     }
 
     /// Block until the oldest outstanding request completes and return
-    /// its texts (request order) plus the wire traffic it caused.
-    pub fn wait(&mut self) -> Result<(Vec<Vec<u8>>, Traffic)> {
+    /// its filled arena (entries in request order) plus the wire traffic
+    /// it caused.
+    pub fn wait(&mut self) -> Result<(SuffixBatch, Traffic)> {
         assert!(self.in_flight > 0, "no prefetch in flight");
         self.in_flight -= 1;
         self.rx
@@ -97,22 +110,38 @@ mod tests {
             (0..10u64).map(|i| Read::new(i, vec![(i % 4 + 1) as u8; 8])).collect();
         store.put_reads(&reads).unwrap();
         let mut pf = SuffixPrefetcher::spawn(Box::new(store.clone()));
-        pf.request(vec![pack_index(3, 0)]);
-        pf.request(vec![pack_index(7, 2)]);
+        pf.request(vec![pack_index(3, 0)], SuffixBatch::new());
+        pf.request(vec![pack_index(7, 2)], SuffixBatch::new());
         assert_eq!(pf.in_flight(), 2);
         let (first, t1) = pf.wait().unwrap();
         let (second, t2) = pf.wait().unwrap();
-        assert_eq!(first, vec![vec![4u8; 8]]);
-        assert_eq!(second, vec![vec![4u8; 6]]);
+        assert_eq!(first.slice(0), &[4u8; 8][..]);
+        assert_eq!(second.slice(0), &[4u8; 6][..]);
         assert!(t1.total() > 0 && t2.total() > 0);
         assert_eq!(pf.in_flight(), 0);
+    }
+
+    #[test]
+    fn recycled_arenas_are_cleared_before_reuse() {
+        let mut store = SharedStore::new(1);
+        let reads: Vec<Read> = (0..4u64).map(|i| Read::new(i, vec![2u8; 6])).collect();
+        store.put_reads(&reads).unwrap();
+        let mut pf = SuffixPrefetcher::spawn(Box::new(store.clone()));
+        pf.request(vec![pack_index(0, 0), pack_index(1, 3)], SuffixBatch::new());
+        let (batch, _) = pf.wait().unwrap();
+        assert_eq!(batch.len(), 2);
+        // hand the same arena back, still full: the worker must clear it
+        pf.request(vec![pack_index(2, 1)], batch);
+        let (batch, _) = pf.wait().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.slice(0), &[2u8; 5][..]);
     }
 
     #[test]
     fn fetch_errors_surface_on_wait() {
         let store = SharedStore::new(1);
         let mut pf = SuffixPrefetcher::spawn(Box::new(store));
-        pf.request(vec![pack_index(42, 0)]); // nothing stored
+        pf.request(vec![pack_index(42, 0)], SuffixBatch::new()); // nothing stored
         assert!(pf.wait().is_err());
     }
 }

@@ -1,8 +1,18 @@
 //! RESP (REdis Serialization Protocol) subset — the wire format of the
 //! in-memory data store. Enough of RESP2 for the pipeline: simple strings,
 //! errors, integers, bulk strings (incl. null), arrays.
+//!
+//! Two reply readers exist: [`read_value`] materializes a [`Value`]
+//! (one `Vec` per bulk — the original path, kept as the equivalence
+//! baseline), and [`read_bulk_array_into`] streams an `MGETSUFFIX`-style
+//! array of bulks straight into a caller-provided
+//! [`SuffixBatch`](crate::kvstore::batch::SuffixBatch) arena — the
+//! zero-copy fetch hot path, which never allocates per suffix.
 
 use std::io::{self, BufRead, Write};
+
+use crate::kvstore::batch::SuffixBatch;
+use crate::util::bytes::dec_len;
 
 /// One RESP value.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -39,10 +49,10 @@ impl Value {
             Value::Simple(s) => 1 + s.len() as u64 + 2,
             Value::Error(s) => 1 + s.len() as u64 + 2,
             Value::Int(i) => 1 + i.to_string().len() as u64 + 2,
-            Value::Bulk(b) => 1 + b.len().to_string().len() as u64 + 2 + b.len() as u64 + 2,
+            Value::Bulk(b) => bulk_wire_len(b.len()),
             Value::Null => 5, // $-1\r\n
             Value::Array(vs) => {
-                1 + vs.len().to_string().len() as u64
+                1 + dec_len(vs.len() as u64) as u64
                     + 2
                     + vs.iter().map(Value::wire_len).sum::<u64>()
             }
@@ -84,11 +94,18 @@ pub fn write_command(w: &mut impl Write, args: &[&[u8]]) -> io::Result<()> {
     Ok(())
 }
 
-/// Wire length of a command without materializing it.
+/// Wire length of one bulk string of `len` payload bytes:
+/// `$<len>\r\n<payload>\r\n`.
+pub fn bulk_wire_len(len: usize) -> u64 {
+    1 + dec_len(len as u64) as u64 + 2 + len as u64 + 2
+}
+
+/// Wire length of a command without materializing it (and, since the
+/// zero-copy refactor, without a digit-count `to_string` per argument).
 pub fn command_wire_len(args: &[&[u8]]) -> u64 {
-    let mut total = 1 + args.len().to_string().len() as u64 + 2;
+    let mut total = 1 + dec_len(args.len() as u64) as u64 + 2;
     for a in args {
-        total += 1 + a.len().to_string().len() as u64 + 2 + a.len() as u64 + 2;
+        total += bulk_wire_len(a.len());
     }
     total
 }
@@ -122,13 +139,13 @@ pub fn read_value(r: &mut impl BufRead) -> io::Result<Value> {
     read_value_buf(r, &mut scratch)
 }
 
-fn read_value_buf(r: &mut impl BufRead, scratch: &mut Vec<u8>) -> io::Result<Value> {
+/// Decode the remainder of a *scalar* value whose tag line (`tag` +
+/// `rest`) has already been consumed: simple string, error, integer,
+/// bulk (incl. null). Shared by [`read_value`] and
+/// [`read_bulk_array_into`]'s cold path, so the two readers can never
+/// disagree on scalar decoding. Arrays are each caller's business.
+fn read_scalar(r: &mut impl BufRead, tag: u8, rest: &[u8]) -> io::Result<Value> {
     let bad = |what: &str| io::Error::new(io::ErrorKind::InvalidData, what.to_string());
-    let line = read_line_into(r, scratch)?;
-    if line.is_empty() {
-        return Err(bad("empty RESP line"));
-    }
-    let (tag, rest) = (line[0], &line[1..]);
     match tag {
         b'+' => Ok(Value::Simple(String::from_utf8_lossy(rest).into_owned())),
         b'-' => Ok(Value::Error(String::from_utf8_lossy(rest).into_owned())),
@@ -146,18 +163,125 @@ fn read_value_buf(r: &mut impl BufRead, scratch: &mut Vec<u8>) -> io::Result<Val
             buf.truncate(n as usize);
             Ok(Value::Bulk(buf))
         }
+        _ => Err(bad("unknown RESP tag")),
+    }
+}
+
+fn read_value_buf(r: &mut impl BufRead, scratch: &mut Vec<u8>) -> io::Result<Value> {
+    let bad = |what: &str| io::Error::new(io::ErrorKind::InvalidData, what.to_string());
+    let line = read_line_into(r, scratch)?;
+    if line.is_empty() {
+        return Err(bad("empty RESP line"));
+    }
+    let (tag, rest) = (line[0], &line[1..]);
+    if tag == b'*' {
+        let n = parse_int(rest)?;
+        if n < 0 {
+            return Ok(Value::Null);
+        }
+        let mut vs = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            vs.push(read_value_buf(r, scratch)?);
+        }
+        return Ok(Value::Array(vs));
+    }
+    read_scalar(r, tag, rest)
+}
+
+/// Shape of one reply consumed by [`read_bulk_array_into`].
+#[derive(Debug)]
+pub enum ArrayReply {
+    /// A `*n` array of bulk/null elements: `n` entries were appended to
+    /// the batch in wire order (null bulks as missing entries), and the
+    /// whole reply measured `wire_len` bytes. No per-element `Vec`s.
+    Appended {
+        /// Elements appended to the batch.
+        n: usize,
+        /// Total wire bytes of the reply (accounting input).
+        wire_len: u64,
+    },
+    /// Any other reply shape (server errors included), materialized as a
+    /// [`Value`] — the cold path; a healthy fetch never takes it.
+    Other(Value),
+}
+
+/// Append exactly `n` payload bytes from `r` to `batch`'s arena by
+/// copying straight out of the reader's internal buffer — append-only,
+/// no pre-zeroing pass over the payload (the fetch path is meant to be
+/// memory-bandwidth-bound; a `resize` + `read_exact` would write every
+/// byte twice).
+fn append_exact(r: &mut impl BufRead, batch: &mut SuffixBatch, mut n: usize) -> io::Result<()> {
+    while n > 0 {
+        let avail = r.fill_buf()?;
+        if avail.is_empty() {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "bulk payload truncated",
+            ));
+        }
+        let take = avail.len().min(n);
+        batch.append_raw(&avail[..take]);
+        r.consume(take);
+        n -= take;
+    }
+    Ok(())
+}
+
+/// Decode one reply, streaming an array-of-bulks payload straight into
+/// `batch`'s arena: per element, the payload bytes move reader buffer →
+/// arena in one append, with no intermediate `Vec` — the client side of
+/// the zero-copy `MGETSUFFIX` path. `scratch` is the reused line buffer
+/// (the caller owns it so a pipelined connection allocates nothing per
+/// reply).
+///
+/// An array element that is not a bulk/null is a protocol violation and
+/// surfaces as `InvalidData` (partial entries may remain in `batch`;
+/// callers discard the batch on error).
+pub fn read_bulk_array_into(
+    r: &mut impl BufRead,
+    scratch: &mut Vec<u8>,
+    batch: &mut SuffixBatch,
+) -> io::Result<ArrayReply> {
+    let bad = |what: &str| io::Error::new(io::ErrorKind::InvalidData, what.to_string());
+    let line = read_line_into(r, scratch)?;
+    if line.is_empty() {
+        return Err(bad("empty RESP line"));
+    }
+    let (tag, rest) = (line[0], &line[1..]);
+    match tag {
         b'*' => {
             let n = parse_int(rest)?;
             if n < 0 {
-                return Ok(Value::Null);
+                return Ok(ArrayReply::Other(Value::Null));
             }
-            let mut vs = Vec::with_capacity(n as usize);
+            let n = n as usize;
+            let mut wire = 1 + dec_len(n as u64) as u64 + 2;
             for _ in 0..n {
-                vs.push(read_value_buf(r, scratch)?);
+                let line = read_line_into(r, scratch)?;
+                if line.first() != Some(&b'$') {
+                    return Err(bad("bulk-array element is not a bulk string"));
+                }
+                let len = parse_int(&line[1..])?;
+                if len < 0 {
+                    batch.push_missing();
+                    wire += 5; // $-1\r\n
+                    continue;
+                }
+                let len = len as usize;
+                append_exact(r, batch, len)?;
+                let mut crlf = [0u8; 2];
+                r.read_exact(&mut crlf)?;
+                if &crlf != b"\r\n" {
+                    return Err(bad("bulk without CRLF"));
+                }
+                batch.seal_entry(len);
+                wire += bulk_wire_len(len);
             }
-            Ok(Value::Array(vs))
+            Ok(ArrayReply::Appended { n, wire_len: wire })
         }
-        _ => Err(bad("unknown RESP tag")),
+        // cold path: scalar replies (errors included) decode through the
+        // same helper `read_value` uses
+        _ => read_scalar(r, tag, rest).map(ArrayReply::Other),
     }
 }
 
@@ -231,5 +355,61 @@ mod tests {
     fn binary_safe_bulk() {
         let v = Value::bulk(vec![0u8, 1, 2, 3, 255, b'\r', b'\n']);
         assert_eq!(roundtrip(&v), v);
+    }
+
+    #[test]
+    fn streamed_bulk_array_matches_materialized() {
+        use crate::kvstore::batch::SuffixBatch;
+        // array with bulks (binary-safe, empty) and a null
+        let v = Value::Array(vec![
+            Value::bulk(b"ACGT".to_vec()),
+            Value::Null,
+            Value::bulk(b"".to_vec()),
+            Value::bulk(vec![0u8, b'\r', b'\n', 255]),
+        ]);
+        let mut wire = Vec::new();
+        write_value(&mut wire, &v).unwrap();
+        let mut scratch = Vec::new();
+        let mut batch = SuffixBatch::new();
+        let got = read_bulk_array_into(&mut BufReader::new(&wire[..]), &mut scratch, &mut batch)
+            .unwrap();
+        match got {
+            ArrayReply::Appended { n, wire_len } => {
+                assert_eq!(n, 4);
+                assert_eq!(wire_len, v.wire_len());
+                assert_eq!(wire_len, wire.len() as u64);
+            }
+            other => panic!("expected Appended, got {other:?}"),
+        }
+        assert_eq!(batch.get(0), Some(&b"ACGT"[..]));
+        assert_eq!(batch.get(1), None);
+        assert_eq!(batch.get(2), Some(&b""[..]));
+        assert_eq!(batch.get(3), Some(&[0u8, b'\r', b'\n', 255][..]));
+    }
+
+    #[test]
+    fn streamed_reader_surfaces_other_replies() {
+        use crate::kvstore::batch::SuffixBatch;
+        let mut scratch = Vec::new();
+        let mut batch = SuffixBatch::new();
+        for v in [Value::Error("ERR nope".into()), Value::ok(), Value::Int(3), Value::Null] {
+            let mut wire = Vec::new();
+            write_value(&mut wire, &v).unwrap();
+            let got =
+                read_bulk_array_into(&mut BufReader::new(&wire[..]), &mut scratch, &mut batch)
+                    .unwrap();
+            match got {
+                ArrayReply::Other(o) => assert_eq!(o, v),
+                other => panic!("expected Other({v:?}), got {other:?}"),
+            }
+        }
+        assert!(batch.is_empty());
+        // a non-bulk array element is a protocol violation
+        let v = Value::Array(vec![Value::Int(1)]);
+        let mut wire = Vec::new();
+        write_value(&mut wire, &v).unwrap();
+        let err = read_bulk_array_into(&mut BufReader::new(&wire[..]), &mut scratch, &mut batch)
+            .unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
     }
 }

@@ -16,7 +16,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::kvstore::resp::{self, Value};
-use crate::kvstore::store::{Reply, Store};
+use crate::kvstore::store::{parse_offset, Reply, Store};
+use crate::util::bytes::dec_len;
 
 /// Shared handle to a running server.
 pub struct Server {
@@ -164,23 +165,41 @@ fn serve_conn(
     conn.set_nodelay(true).ok();
     let mut reader = BufReader::new(conn.try_clone()?);
     let mut writer = BufWriter::new(conn);
+    // reused MGETSUFFIX scratch (offsets + staged reply bytes) — no
+    // per-command allocation in steady state
+    let mut offsets: Vec<usize> = Vec::new();
+    let mut reply_buf: Vec<u8> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         let Some(args) = resp::read_command(&mut reader)? else {
             break; // client closed
         };
         // arithmetic wire length — no clones on the request path
-        let mut in_len: u64 = 1 + args.len().to_string().len() as u64 + 2;
+        let mut in_len: u64 = 1 + dec_len(args.len() as u64) as u64 + 2;
         for a in &args {
-            in_len += 1 + a.len().to_string().len() as u64 + 2 + a.len() as u64 + 2;
+            in_len += resp::bulk_wire_len(a.len());
         }
         bytes_in.fetch_add(in_len, Ordering::Relaxed);
-        let reply = {
-            let mut s = store.lock().unwrap();
-            s.dispatch(&args)
+        let out_len = if is_mgetsuffix(&args) {
+            // hot path: serialize the reply straight from the store's
+            // value slices — no Reply::Multi, no Vec per suffix. It is
+            // staged in the reused `reply_buf` (infallible writes) so
+            // the store lock is released BEFORE the blocking socket
+            // write: a slow peer must never stall other connections
+            // at store.lock().
+            reply_buf.clear();
+            let n = write_mgetsuffix_reply(&args, &store, &mut reply_buf, &mut offsets)?;
+            writer.write_all(&reply_buf)?;
+            n
+        } else {
+            let reply = {
+                let mut s = store.lock().unwrap();
+                s.dispatch(&args)
+            };
+            let v = reply_to_value(reply);
+            resp::write_value(&mut writer, &v)?;
+            v.wire_len()
         };
-        let v = reply_to_value(reply);
-        bytes_out.fetch_add(v.wire_len(), Ordering::Relaxed);
-        resp::write_value(&mut writer, &v)?;
+        bytes_out.fetch_add(out_len, Ordering::Relaxed);
         // Flush only when no further pipelined request bytes are already
         // buffered: anything still in `reader`'s buffer was fully sent by
         // the client before it started waiting, so delaying the flush
@@ -192,10 +211,118 @@ fn serve_conn(
     Ok(())
 }
 
+/// Is this a well-formed `MGETSUFFIX key off [key off ...]` command (the
+/// arity [`Store::dispatch`] would accept)? Malformed variants fall
+/// through to `dispatch` so its error replies stay byte-identical.
+fn is_mgetsuffix(args: &[Vec<u8>]) -> bool {
+    args.len() >= 3 && args.len() % 2 == 1 && args[0].eq_ignore_ascii_case(b"MGETSUFFIX")
+}
+
+/// Serialize the `MGETSUFFIX` reply straight from [`Store::get_suffix`]
+/// slices: `*n` then one bulk (or null) per pair, byte-identical to what
+/// `reply_to_value(dispatch(..))` serializes, without materializing a
+/// single suffix `Vec`. Returns the reply's wire length — measured as
+/// the buffer's growth, so the accounting can never drift from the
+/// bytes actually written.
+///
+/// `w` is an in-memory staging buffer by type, not the socket: the store
+/// mutex is held across every write here (that is what lets the slices
+/// be borrowed), so a blocking destination would let one stalled peer
+/// wedge the whole shard.
+///
+/// Offsets are validated up front (into the reused `offsets` scratch)
+/// because `dispatch` answers a bad offset with one error reply and no
+/// partial results — the error must preempt the first array byte.
+fn write_mgetsuffix_reply(
+    args: &[Vec<u8>],
+    store: &Arc<Mutex<Store>>,
+    w: &mut Vec<u8>,
+    offsets: &mut Vec<usize>,
+) -> std::io::Result<u64> {
+    let start = w.len();
+    offsets.clear();
+    for kv in args[1..].chunks(2) {
+        match parse_offset(&kv[1]) {
+            Some(o) => offsets.push(o),
+            None => {
+                resp::write_value(w, &Value::Error("ERR bad offset".into()))?;
+                return Ok((w.len() - start) as u64);
+            }
+        }
+    }
+    // lock held only while serializing into the staging buffer: Redis
+    // is single-threaded, so serializing command processing is faithful
+    let s = store.lock().unwrap();
+    let n = (args.len() - 1) / 2;
+    write!(w, "*{n}\r\n")?;
+    for (kv, &off) in args[1..].chunks(2).zip(offsets.iter()) {
+        match s.get_suffix(&kv[0], off) {
+            Some(suffix) => {
+                write!(w, "${}\r\n", suffix.len())?;
+                w.extend_from_slice(suffix);
+                w.extend_from_slice(b"\r\n");
+            }
+            None => w.extend_from_slice(b"$-1\r\n"),
+        }
+    }
+    Ok((w.len() - start) as u64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::kvstore::client::Client;
+
+    #[test]
+    fn streamed_mgetsuffix_reply_matches_dispatch_bytes() {
+        // the streaming fast path must serialize exactly what
+        // reply_to_value(dispatch(..)) would, and account it exactly
+        let mut direct = Store::new();
+        direct.set_exact(b"5".to_vec(), b"ACGTACGT".to_vec());
+        let args: Vec<Vec<u8>> = [
+            "MGETSUFFIX", "5", "3", "5", "8", "missing", "0", "5", "bogus",
+        ]
+        .iter()
+        .map(|s| s.as_bytes().to_vec())
+        .collect();
+        for args in [&args[..7], &args[..]] {
+            // reference bytes via dispatch + write_value
+            let mut expected = Vec::new();
+            let v = reply_to_value(direct.dispatch(args));
+            resp::write_value(&mut expected, &v).unwrap();
+            // streamed bytes
+            let shared = Arc::new(Mutex::new(Store::new()));
+            shared
+                .lock()
+                .unwrap()
+                .set_exact(b"5".to_vec(), b"ACGTACGT".to_vec());
+            let mut streamed = Vec::new();
+            let mut offsets = Vec::new();
+            let wire =
+                write_mgetsuffix_reply(args, &shared, &mut streamed, &mut offsets).unwrap();
+            assert_eq!(streamed, expected);
+            assert_eq!(wire, expected.len() as u64, "accounted wire length");
+        }
+    }
+
+    #[test]
+    fn server_accounts_streamed_replies_exactly() {
+        let server = Server::start(0).expect("bind");
+        let mut c = Client::connect(server.addr()).expect("connect");
+        c.set(b"1", b"GATTACA").expect("set");
+        let out = c
+            .mgetsuffix(&[(b"1".to_vec(), 2), (b"1".to_vec(), 7), (b"nope".to_vec(), 0)])
+            .expect("mgetsuffix");
+        assert_eq!(out, vec![Some(b"TTACA".to_vec()), Some(b"".to_vec()), None]);
+        // server-side accounting is arithmetic on the streamed path; the
+        // client measures the same reply through materialized Values
+        assert_eq!(
+            server.bytes_out.load(Ordering::Relaxed),
+            c.bytes_received,
+            "server bytes_out must equal client bytes_received"
+        );
+        assert_eq!(server.bytes_in.load(Ordering::Relaxed), c.bytes_sent);
+    }
 
     #[test]
     fn accept_loop_reaps_closed_connections() {

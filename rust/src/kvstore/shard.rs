@@ -16,11 +16,13 @@
 
 use std::net::SocketAddr;
 
+use crate::kvstore::batch::SuffixBatch;
 use crate::kvstore::client::{Client, KvError, Result};
-use crate::kvstore::resp::Value;
+use crate::kvstore::resp::{self, Value};
 use crate::kvstore::store::Store;
 use crate::suffix::encode::unpack_index;
 use crate::suffix::reads::Read;
+use crate::util::bytes::{dec_len, fmt_dec};
 
 /// Wire traffic (client side) for the footprint ledger.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -45,8 +47,24 @@ pub trait SuffixStore: Send {
     /// Store reads (aggregated per instance, batched).
     fn put_reads(&mut self, reads: &[Read]) -> Result<Traffic>;
     /// Fetch suffix code bytes (terminator NOT included) for packed
-    /// indexes, in request order.
+    /// indexes, in request order — the original `Vec`-of-`Vec`s path,
+    /// kept as the baseline the arena path is equivalence-tested against.
     fn fetch_suffixes(&mut self, indexes: &[i64]) -> Result<(Vec<Vec<u8>>, Traffic)>;
+    /// Zero-copy fetch: append one entry per index (request order) into
+    /// `out`'s flat arena. Wire bytes, reply bytes, and ledger traffic
+    /// are identical to [`SuffixStore::fetch_suffixes`]; only the
+    /// destination changes. A missing read is an error, as in the `Vec`
+    /// path; on error `out`'s appended contents are unspecified.
+    ///
+    /// The default adapts via `fetch_suffixes` (one copy per suffix);
+    /// real stores override it with a genuinely flat path.
+    fn fetch_suffixes_into(&mut self, indexes: &[i64], out: &mut SuffixBatch) -> Result<Traffic> {
+        let (texts, traffic) = self.fetch_suffixes(indexes)?;
+        for t in &texts {
+            out.push(t);
+        }
+        Ok(traffic)
+    }
     /// Client-side wire traffic so far.
     fn traffic(&self) -> Traffic;
     /// Total memory used by all instances (payload + metadata).
@@ -74,17 +92,19 @@ fn key_of(seq: u64) -> Vec<u8> {
 /// Run one closure per (client, per-shard request) pair, concurrently
 /// when real cores exist; on a single-CPU host the extra threads are
 /// pure context-switch overhead, so go sequential (§Perf iteration 5).
-/// Shards whose `skip(req)` is true (empty request lists — common in
-/// index-only mode where a tie-break plan touches few shards) yield
-/// `Ok(T::default())` without spawning a thread.
+/// Requests are handed out `&mut` so a shard can fill per-shard state
+/// (the arena fetch path's reply batches) in place. Shards whose
+/// `skip(req)` is true (empty request lists — common in index-only mode
+/// where a tie-break plan touches few shards) yield `Ok(T::default())`
+/// without spawning a thread.
 fn for_each_shard<R, T>(
     clients: &mut [Client],
-    reqs: &[R],
+    reqs: &mut [R],
     skip: impl Fn(&R) -> bool + Sync,
-    f: impl Fn(&mut Client, &R) -> Result<T> + Sync,
+    f: impl Fn(&mut Client, &mut R) -> Result<T> + Sync,
 ) -> Vec<Result<T>>
 where
-    R: Sync,
+    R: Send,
     T: Default + Send,
 {
     static PARALLEL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
@@ -97,7 +117,7 @@ where
         std::thread::scope(|scope| {
             let handles: Vec<_> = clients
                 .iter_mut()
-                .zip(reqs.iter())
+                .zip(reqs.iter_mut())
                 .map(|(client, req)| {
                     if skip(req) {
                         None
@@ -118,7 +138,7 @@ where
     } else {
         clients
             .iter_mut()
-            .zip(reqs.iter())
+            .zip(reqs.iter_mut())
             .map(|(c, r)| if skip(r) { Ok(T::default()) } else { f(c, r) })
             .collect()
     }
@@ -133,6 +153,20 @@ where
 pub struct ShardedClient {
     clients: Vec<Client>,
     put_batch: usize,
+    /// Reusable per-shard fetch plan + reply arenas for the zero-copy
+    /// path: after warm-up, a steady-state `fetch_suffixes_into` call
+    /// allocates nothing here.
+    plan: Vec<ShardPlan>,
+}
+
+/// One shard's slice of an arena fetch: which request positions route to
+/// it, the (seq, offset) pairs to ask for, and the reply arena its
+/// pipeline streams into.
+#[derive(Default)]
+struct ShardPlan {
+    positions: Vec<usize>,
+    reqs: Vec<(u64, usize)>,
+    arena: SuffixBatch,
 }
 
 impl ShardedClient {
@@ -142,7 +176,8 @@ impl ShardedClient {
             .iter()
             .map(|&a| Client::connect(a))
             .collect::<Result<Vec<_>>>()?;
-        Ok(Self { clients, put_batch: BATCH_PAIRS })
+        let plan = (0..clients.len()).map(|_| ShardPlan::default()).collect();
+        Ok(Self { clients, put_batch: BATCH_PAIRS, plan })
     }
 
     fn shard_of(&self, seq: u64) -> usize {
@@ -170,7 +205,18 @@ impl ShardedClient {
     ) -> Result<Vec<Vec<u8>>> {
         let mut out: Vec<Vec<u8>> = vec![Vec::new(); indexes.len()];
         for ((positions, _), replies) in per_shard.iter().zip(results) {
-            for (pos, r) in positions.iter().zip(replies?) {
+            let replies = replies?;
+            // a short reply (server bug / protocol desync) must be an
+            // error, not silently-empty trailing texts — the arena path
+            // guards this per chunk in mgetsuffix_pipelined_into
+            if replies.len() != positions.len() {
+                return Err(KvError::Server(format!(
+                    "shard replied {} texts for {} requests",
+                    replies.len(),
+                    positions.len()
+                )));
+            }
+            for (pos, r) in positions.iter().zip(replies) {
                 out[*pos] = r.ok_or_else(|| {
                     KvError::Server(format!("missing read for index {}", indexes[*pos]))
                 })?;
@@ -230,7 +276,7 @@ impl SuffixStore for ShardedClient {
         let batch = self.put_batch;
         let results = for_each_shard(
             &mut self.clients,
-            &per_shard,
+            &mut per_shard,
             |pairs: &Vec<(Vec<u8>, Vec<u8>)>| pairs.is_empty(),
             |client, pairs| client.mset_pipelined(pairs, batch),
         );
@@ -242,18 +288,66 @@ impl SuffixStore for ShardedClient {
 
     fn fetch_suffixes(&mut self, indexes: &[i64]) -> Result<(Vec<Vec<u8>>, Traffic)> {
         let before = self.traffic();
-        let per_shard = self.plan_fetch(indexes);
+        let mut per_shard = self.plan_fetch(indexes);
         // one windowed MGETSUFFIX pipeline per shard, all shards
         // concurrently: fetch latency hides behind the slowest shard
         // instead of the sum of all shards
         let results = for_each_shard(
             &mut self.clients,
-            &per_shard,
+            &mut per_shard,
             |(_, reqs): &(Vec<usize>, Vec<(Vec<u8>, usize)>)| reqs.is_empty(),
             |client, (_, reqs)| client.mgetsuffix_pipelined(reqs, BATCH_PAIRS),
         );
         let out = Self::scatter(indexes, &per_shard, results)?;
         Ok((out, self.traffic_delta(before)))
+    }
+
+    fn fetch_suffixes_into(&mut self, indexes: &[i64], out: &mut SuffixBatch) -> Result<Traffic> {
+        let before = self.traffic();
+        // plan into the reused scratch: same mod-N grouping and request
+        // order as plan_fetch, but (seq, off) pairs instead of key Vecs —
+        // the keys are formatted into a stack buffer at send time
+        let n = self.clients.len();
+        for p in &mut self.plan {
+            p.positions.clear();
+            p.reqs.clear();
+            p.arena.clear();
+        }
+        for (pos, &idx) in indexes.iter().enumerate() {
+            let (seq, off) = unpack_index(idx);
+            let shard = (seq % n as u64) as usize;
+            self.plan[shard].positions.push(pos);
+            self.plan[shard].reqs.push((seq, off));
+        }
+        // one pipeline per shard, each streaming replies into its own
+        // reused arena, all shards concurrently
+        let results = for_each_shard(
+            &mut self.clients,
+            &mut self.plan,
+            |p: &ShardPlan| p.reqs.is_empty(),
+            |client, p| client.mgetsuffix_pipelined_into(&p.reqs, BATCH_PAIRS, &mut p.arena),
+        );
+        // interleave back to request order: per-shard arenas are appended
+        // wholesale (one bulk copy per SHARD, not per suffix) and the
+        // per-suffix work is a spans permutation
+        let base_entry = out.len();
+        out.reserve_slots(indexes.len());
+        for (p, res) in self.plan.iter().zip(results) {
+            res?;
+            let base = out.append_arena(&p.arena);
+            for (j, &pos) in p.positions.iter().enumerate() {
+                match p.arena.entry_span(j) {
+                    Some((start, len)) => out.set_slot(base_entry + pos, base + start, len),
+                    None => {
+                        return Err(KvError::Server(format!(
+                            "missing read for index {}",
+                            indexes[pos]
+                        )))
+                    }
+                }
+            }
+        }
+        Ok(self.traffic_delta(before))
     }
 
     fn traffic(&self) -> Traffic {
@@ -294,6 +388,9 @@ pub struct InProcStore {
     shards: Vec<Store>,
     traffic: Traffic,
     put_batch: usize,
+    /// Reusable per-shard fetch plan (request positions) — zero
+    /// steady-state allocations, same as the TCP client's scratch.
+    plan: Vec<Vec<usize>>,
 }
 
 impl InProcStore {
@@ -304,6 +401,7 @@ impl InProcStore {
             shards: (0..n_shards).map(|_| Store::new()).collect(),
             traffic: Traffic::default(),
             put_batch: BATCH_PAIRS,
+            plan: (0..n_shards).map(|_| Vec::new()).collect(),
         }
     }
 
@@ -314,9 +412,9 @@ impl InProcStore {
 
     fn wire_len_of_cmd(args_len: &[usize]) -> u64 {
         // *N\r\n + per-arg $len\r\n...\r\n
-        let mut total = 1 + args_len.len().to_string().len() as u64 + 2;
+        let mut total = 1 + dec_len(args_len.len() as u64) as u64 + 2;
         for &l in args_len {
-            total += 1 + l.to_string().len() as u64 + 2 + l as u64 + 2;
+            total += resp::bulk_wire_len(l);
         }
         total
     }
@@ -350,6 +448,11 @@ impl SuffixStore for InProcStore {
     }
 
     fn fetch_suffixes(&mut self, indexes: &[i64]) -> Result<(Vec<Vec<u8>>, Traffic)> {
+        // Deliberately NOT a wrapper over fetch_suffixes_into: this is
+        // the preserved pre-arena path (per-request key Vecs, per-suffix
+        // output Vecs), kept independent so the equivalence tests compare
+        // two real implementations and the fetch bench's baseline pays
+        // exactly what the old code paid.
         let before = self.traffic;
         let n = self.shards.len();
         let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -366,18 +469,18 @@ impl SuffixStore for InProcStore {
                     let (seq, off) = unpack_index(indexes[pos]);
                     let k = key_of(seq);
                     arg_lens.push(k.len());
-                    arg_lens.push(off.to_string().len());
+                    arg_lens.push(dec_len(off as u64));
                     let suffix = self.shards[shard].get_suffix(&k, off).ok_or_else(|| {
                         KvError::Server(format!("missing read for index {}", indexes[pos]))
                     })?;
                     reply_lens.push(suffix.len());
-                    out[pos] = suffix;
+                    out[pos] = suffix.to_vec();
                 }
                 self.traffic.sent += Self::wire_len_of_cmd(&arg_lens);
                 // reply: *N + bulk per suffix
-                let mut rl = 1 + chunk.len().to_string().len() as u64 + 2;
+                let mut rl = 1 + dec_len(chunk.len() as u64) as u64 + 2;
                 for l in reply_lens {
-                    rl += 1 + l.to_string().len() as u64 + 2 + l as u64 + 2;
+                    rl += resp::bulk_wire_len(l);
                 }
                 self.traffic.received += rl;
             }
@@ -387,6 +490,54 @@ impl SuffixStore for InProcStore {
             received: self.traffic.received - before.received,
         };
         Ok((out, delta))
+    }
+
+    fn fetch_suffixes_into(&mut self, indexes: &[i64], out: &mut SuffixBatch) -> Result<Traffic> {
+        let before = self.traffic;
+        let n = self.shards.len();
+        // plan into the reused scratch (taken out of self so the loop can
+        // borrow shards immutably while charging traffic mutably); an
+        // earlier error return leaves the scratch empty, so re-grow it
+        let mut plan = std::mem::take(&mut self.plan);
+        plan.resize_with(n, Vec::new);
+        for p in &mut plan {
+            p.clear();
+        }
+        for (pos, &idx) in indexes.iter().enumerate() {
+            let (seq, _) = unpack_index(idx);
+            plan[(seq % n as u64) as usize].push(pos);
+        }
+        let base_entry = out.len();
+        out.reserve_slots(indexes.len());
+        let mut keybuf = [0u8; 20];
+        for (shard, positions) in plan.iter().enumerate() {
+            for chunk in positions.chunks(BATCH_PAIRS) {
+                // wire lengths modeled arithmetically (identical numbers
+                // to the old materializing loop, no Vec per argument)
+                let n_args = 1 + chunk.len() * 2;
+                let mut sent = 1 + dec_len(n_args as u64) as u64 + 2;
+                sent += resp::bulk_wire_len(10); // "MGETSUFFIX"
+                let mut received = 1 + dec_len(chunk.len() as u64) as u64 + 2;
+                for &pos in chunk {
+                    let (seq, off) = unpack_index(indexes[pos]);
+                    let key = fmt_dec(seq, &mut keybuf);
+                    sent += resp::bulk_wire_len(key.len());
+                    sent += resp::bulk_wire_len(dec_len(off as u64));
+                    let suffix = self.shards[shard].get_suffix(key, off).ok_or_else(|| {
+                        KvError::Server(format!("missing read for index {}", indexes[pos]))
+                    })?;
+                    received += resp::bulk_wire_len(suffix.len());
+                    out.fill_slot(base_entry + pos, suffix);
+                }
+                self.traffic.sent += sent;
+                self.traffic.received += received;
+            }
+        }
+        self.plan = plan;
+        Ok(Traffic {
+            sent: self.traffic.sent - before.sent,
+            received: self.traffic.received - before.received,
+        })
     }
 
     fn traffic(&self) -> Traffic {
@@ -425,6 +576,10 @@ impl SuffixStore for SharedStore {
 
     fn fetch_suffixes(&mut self, indexes: &[i64]) -> Result<(Vec<Vec<u8>>, Traffic)> {
         self.0.lock().unwrap().fetch_suffixes(indexes)
+    }
+
+    fn fetch_suffixes_into(&mut self, indexes: &[i64], out: &mut SuffixBatch) -> Result<Traffic> {
+        self.0.lock().unwrap().fetch_suffixes_into(indexes, out)
     }
 
     fn traffic(&self) -> Traffic {
@@ -482,6 +637,38 @@ mod tests {
         let mut st = InProcStore::new(2);
         st.put_reads(&corpus()).unwrap();
         assert!(st.fetch_suffixes(&[pack_index(99, 0)]).is_err());
+        let mut batch = SuffixBatch::new();
+        assert!(st.fetch_suffixes_into(&[pack_index(99, 0)], &mut batch).is_err());
+        // the store must recover after an error (scratch re-grown)
+        batch.clear();
+        st.fetch_suffixes_into(&[pack_index(2, 3)], &mut batch).unwrap();
+        assert_eq!(batch.slice(0), &Read::from_ascii(0, b"TACA").codes[..]);
+    }
+
+    #[test]
+    fn inproc_arena_fetch_matches_vec_fetch() {
+        let mut st = InProcStore::new(3);
+        st.put_reads(&corpus()).unwrap();
+        let reqs = vec![
+            pack_index(2, 0),
+            pack_index(7, 1),
+            pack_index(0, 4),
+            pack_index(2, 3),
+            pack_index(1, 0),
+        ];
+        let (vecs, t_vec) = st.fetch_suffixes(&reqs).unwrap();
+        let mut batch = SuffixBatch::new();
+        // two rounds through the same reused batch: reuse must not leak
+        // previous entries into the next fetch
+        for _ in 0..2 {
+            batch.clear();
+            let t_arena = st.fetch_suffixes_into(&reqs, &mut batch).unwrap();
+            assert_eq!(t_arena, t_vec, "identical modeled wire traffic");
+            assert_eq!(batch.len(), vecs.len());
+            for (i, v) in vecs.iter().enumerate() {
+                assert_eq!(batch.slice(i), &v[..], "entry {i}");
+            }
+        }
     }
 
     #[test]

@@ -55,8 +55,8 @@ impl Store {
     }
 
     /// Borrow the value for `key`, if present.
-    pub fn get(&self, key: &[u8]) -> Option<&Vec<u8>> {
-        self.map.get(key)
+    pub fn get(&self, key: &[u8]) -> Option<&[u8]> {
+        self.map.get(key).map(Vec::as_slice)
     }
 
     /// Remove `key`; true if it existed.
@@ -70,8 +70,10 @@ impl Store {
     }
 
     /// Suffix of the value from `offset` (clamped) — `MGETSUFFIX` core.
-    pub fn get_suffix(&self, key: &[u8], offset: usize) -> Option<Vec<u8>> {
-        self.map.get(key).map(|v| v[offset.min(v.len())..].to_vec())
+    /// Borrowed: the server streams it onto the wire and the in-process
+    /// store appends it to a fetch arena, neither copies it first.
+    pub fn get_suffix(&self, key: &[u8], offset: usize) -> Option<&[u8]> {
+        self.map.get(key).map(|v| &v[offset.min(v.len())..])
     }
 
     /// Number of keys stored.
@@ -101,59 +103,70 @@ impl Store {
         self.payload_bytes + self.map.len() as u64 * META_OVERHEAD_PER_ENTRY
     }
 
-    /// Dispatch one RESP-style command (argv) against the store.
+    /// Dispatch one RESP-style command (argv) against the store. The
+    /// command name is matched case-insensitively on the raw bytes — no
+    /// per-command uppercased `String` (the old
+    /// `from_utf8_lossy(..).to_ascii_uppercase()` was one allocation per
+    /// dispatched command). `MGETSUFFIX` replies still materialize
+    /// `Vec`s here; the TCP server bypasses this method for that command
+    /// and streams the reply straight from [`Store::get_suffix`] slices
+    /// (`server.rs::write_mgetsuffix_reply`, byte-identical).
     pub fn dispatch(&mut self, args: &[Vec<u8>]) -> Reply {
         if args.is_empty() {
             return Reply::Err("ERR empty command".into());
         }
-        let cmd = String::from_utf8_lossy(&args[0]).to_ascii_uppercase();
-        match cmd.as_str() {
-            "PING" => Reply::Bulk(b"PONG".to_vec()),
-            "SET" if args.len() == 3 => {
-                self.set_exact(args[1].clone(), args[2].clone());
-                Reply::Ok
-            }
-            "GET" if args.len() == 2 => match self.get(&args[1]) {
-                Some(v) => Reply::Bulk(v.clone()),
+        let cmd = args[0].as_slice();
+        let is = |name: &[u8]| cmd.eq_ignore_ascii_case(name);
+        if is(b"PING") {
+            Reply::Bulk(b"PONG".to_vec())
+        } else if is(b"SET") && args.len() == 3 {
+            self.set_exact(args[1].clone(), args[2].clone());
+            Reply::Ok
+        } else if is(b"GET") && args.len() == 2 {
+            match self.get(&args[1]) {
+                Some(v) => Reply::Bulk(v.to_vec()),
                 None => Reply::Null,
-            },
-            "DEL" if args.len() >= 2 => {
-                let n = args[1..].iter().filter(|k| self.del(k)).count();
-                Reply::Int(n as i64)
             }
-            "MSET" if args.len() >= 3 && args.len() % 2 == 1 => {
-                for kv in args[1..].chunks(2) {
-                    self.set_exact(kv[0].clone(), kv[1].clone());
-                }
-                Reply::Ok
+        } else if is(b"DEL") && args.len() >= 2 {
+            let n = args[1..].iter().filter(|k| self.del(k)).count();
+            Reply::Int(n as i64)
+        } else if is(b"MSET") && args.len() >= 3 && args.len() % 2 == 1 {
+            for kv in args[1..].chunks(2) {
+                self.set_exact(kv[0].clone(), kv[1].clone());
             }
-            "MGET" if args.len() >= 2 => {
-                Reply::Multi(args[1..].iter().map(|k| self.get(k).cloned()).collect())
-            }
+            Reply::Ok
+        } else if is(b"MGET") && args.len() >= 2 {
+            Reply::Multi(args[1..].iter().map(|k| self.get(k).map(<[u8]>::to_vec)).collect())
+        } else if is(b"MGETSUFFIX") && args.len() >= 3 && args.len() % 2 == 1 {
             // MGETSUFFIX key off [key off ...] — the paper's added command.
-            "MGETSUFFIX" if args.len() >= 3 && args.len() % 2 == 1 => {
-                let mut out = Vec::with_capacity((args.len() - 1) / 2);
-                for kv in args[1..].chunks(2) {
-                    let off: usize = match std::str::from_utf8(&kv[1])
-                        .ok()
-                        .and_then(|s| s.parse().ok())
-                    {
-                        Some(o) => o,
-                        None => return Reply::Err("ERR bad offset".into()),
-                    };
-                    out.push(self.get_suffix(&kv[0], off));
-                }
-                Reply::Multi(out)
+            let mut out = Vec::with_capacity((args.len() - 1) / 2);
+            for kv in args[1..].chunks(2) {
+                let off: usize = match parse_offset(&kv[1]) {
+                    Some(o) => o,
+                    None => return Reply::Err("ERR bad offset".into()),
+                };
+                out.push(self.get_suffix(&kv[0], off).map(<[u8]>::to_vec));
             }
-            "DBSIZE" => Reply::Int(self.len() as i64),
-            "MEMORY" => Reply::Int(self.used_memory() as i64),
-            "FLUSHDB" => {
-                self.flush();
-                Reply::Ok
-            }
-            _ => Reply::Err(format!("ERR unknown or malformed command '{cmd}'")),
+            Reply::Multi(out)
+        } else if is(b"DBSIZE") {
+            Reply::Int(self.len() as i64)
+        } else if is(b"MEMORY") {
+            Reply::Int(self.used_memory() as i64)
+        } else if is(b"FLUSHDB") {
+            self.flush();
+            Reply::Ok
+        } else {
+            let cmd = String::from_utf8_lossy(cmd).to_ascii_uppercase();
+            Reply::Err(format!("ERR unknown or malformed command '{cmd}'"))
         }
     }
+}
+
+/// Parse an `MGETSUFFIX` offset argument (decimal ASCII), shared by
+/// [`Store::dispatch`] and the server's streaming reply path so the two
+/// can never disagree on what a valid offset is.
+pub fn parse_offset(bytes: &[u8]) -> Option<usize> {
+    std::str::from_utf8(bytes).ok().and_then(|s| s.parse().ok())
 }
 
 #[cfg(test)]
@@ -164,7 +177,7 @@ mod tests {
     fn set_get_del() {
         let mut s = Store::new();
         s.set_exact(b"k".to_vec(), b"value".to_vec());
-        assert_eq!(s.get(b"k"), Some(&b"value".to_vec()));
+        assert_eq!(s.get(b"k"), Some(&b"value"[..]));
         assert!(s.del(b"k"));
         assert!(!s.del(b"k"));
         assert_eq!(s.get(b"k"), None);
@@ -224,7 +237,7 @@ mod tests {
     fn suffix_offset_clamps() {
         let mut s = Store::new();
         s.set_exact(b"k".to_vec(), b"AC".to_vec());
-        assert_eq!(s.get_suffix(b"k", 100), Some(vec![]));
+        assert_eq!(s.get_suffix(b"k", 100), Some(&b""[..]));
     }
 
     #[test]
@@ -235,15 +248,21 @@ mod tests {
             s.dispatch(&[b"SET".to_vec(), b"a".to_vec(), b"1".to_vec()]),
             Reply::Ok
         );
-        assert_eq!(
-            s.dispatch(&[b"MSET".to_vec(), b"b".to_vec(), b"2".to_vec(), b"c".to_vec(), b"3".to_vec()]),
-            Reply::Ok
-        );
+        let mset: Vec<Vec<u8>> =
+            [b"MSET" as &[u8], b"b", b"2", b"c", b"3"].iter().map(|a| a.to_vec()).collect();
+        assert_eq!(s.dispatch(&mset), Reply::Ok);
         assert_eq!(
             s.dispatch(&[b"MGET".to_vec(), b"a".to_vec(), b"zz".to_vec()]),
             Reply::Multi(vec![Some(b"1".to_vec()), None])
         );
         assert_eq!(s.dispatch(&[b"DBSIZE".to_vec()]), Reply::Int(3));
+        // command matching is case-insensitive on the raw bytes (the old
+        // uppercased-String dispatch accepted these too)
+        assert_eq!(s.dispatch(&[b"ping".to_vec()]), Reply::Bulk(b"PONG".to_vec()));
+        assert_eq!(
+            s.dispatch(&[b"mGet".to_vec(), b"a".to_vec()]),
+            Reply::Multi(vec![Some(b"1".to_vec())])
+        );
         assert!(matches!(s.dispatch(&[b"NOPE".to_vec()]), Reply::Err(_)));
         assert_eq!(s.dispatch(&[b"FLUSHDB".to_vec()]), Reply::Ok);
         assert_eq!(s.dispatch(&[b"DBSIZE".to_vec()]), Reply::Int(0));

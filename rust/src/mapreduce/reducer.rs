@@ -24,27 +24,50 @@ use crate::mapreduce::record::{fixed_frame, Record, FIXED_WIRE_BYTES};
 use crate::mapreduce::resident;
 
 /// User reduce logic: one call per key group, then `finish` (the scheme
-/// flushes its accumulated sorting groups there).
+/// flushes its accumulated sorting groups there). Both hooks are
+/// fallible: a clean failure (a KV fetch error, say) returns an
+/// `io::Error` that aborts the merge and surfaces from the job — it is
+/// *not* a panic (panics are reserved for bugs; the engine's
+/// catch_unwind path converts those separately).
 pub trait ReduceTask: Send {
-    fn reduce(&mut self, key: &[u8], values: Vec<Vec<u8>>, out: &mut dyn FnMut(Record));
-    fn finish(&mut self, _out: &mut dyn FnMut(Record)) {}
+    fn reduce(
+        &mut self,
+        key: &[u8],
+        values: Vec<Vec<u8>>,
+        out: &mut dyn FnMut(Record),
+    ) -> io::Result<()>;
+    fn finish(&mut self, _out: &mut dyn FnMut(Record)) -> io::Result<()> {
+        Ok(())
+    }
 
     /// Fixed-width grouping: one call per key group of packed u64
     /// values, borrowed from a buffer the merge loop reuses. The
     /// default adapts to [`reduce`](ReduceTask::reduce) by re-encoding
     /// the group; hot reducers override it to skip the conversion.
-    fn reduce_fixed(&mut self, key: u64, values: &[u64], out: &mut dyn FnMut(Record)) {
+    fn reduce_fixed(
+        &mut self,
+        key: u64,
+        values: &[u64],
+        out: &mut dyn FnMut(Record),
+    ) -> io::Result<()> {
         self.reduce(
             &key.to_be_bytes(),
             values.iter().map(|v| v.to_be_bytes().to_vec()).collect(),
             out,
-        );
+        )
     }
 }
 
+/// Infallible closures are reduce tasks (the common test/bench shape).
 impl<F: FnMut(&[u8], Vec<Vec<u8>>, &mut dyn FnMut(Record)) + Send> ReduceTask for F {
-    fn reduce(&mut self, key: &[u8], values: Vec<Vec<u8>>, out: &mut dyn FnMut(Record)) {
-        self(key, values, out)
+    fn reduce(
+        &mut self,
+        key: &[u8],
+        values: Vec<Vec<u8>>,
+        out: &mut dyn FnMut(Record),
+    ) -> io::Result<()> {
+        self(key, values, out);
+        Ok(())
     }
 }
 
@@ -152,10 +175,13 @@ pub fn run_reduce_task(
 
     // the user task's emit closure cannot return an error, so a sink
     // failure is stashed — and the merge loop, which CAN error, aborts
-    // on the next record instead of burning the rest of the partition
+    // on the next record instead of burning the rest of the partition.
+    // The task's own clean errors propagate through the merge closure
+    // (mid-stream groups) or `tail_res` (last group + finish).
     let mut sink_err: Option<io::Error> = None;
     let sink_broken = std::cell::Cell::new(false);
     let merge_res;
+    let mut tail_res: io::Result<()> = Ok(());
     {
         let mut out = |rec: Record| {
             stats.output_records += 1;
@@ -175,7 +201,7 @@ pub fn run_reduce_task(
                 Some(k) => {
                     stats.groups += 1;
                     stats.max_group = stats.max_group.max(cur_vals.len() as u64);
-                    task.reduce(k, std::mem::take(&mut cur_vals), &mut out);
+                    task.reduce(k, std::mem::take(&mut cur_vals), &mut out)?;
                     cur_key = Some(rec.key);
                     cur_vals.push(rec.value);
                 }
@@ -190,12 +216,14 @@ pub fn run_reduce_task(
             Ok(())
         });
         if merge_res.is_ok() && !sink_broken.get() {
-            if let Some(k) = cur_key {
-                stats.groups += 1;
-                stats.max_group = stats.max_group.max(cur_vals.len() as u64);
-                task.reduce(&k, cur_vals, &mut out);
-            }
-            task.finish(&mut out);
+            tail_res = (|| {
+                if let Some(k) = cur_key {
+                    stats.groups += 1;
+                    stats.max_group = stats.max_group.max(cur_vals.len() as u64);
+                    task.reduce(&k, cur_vals, &mut out)?;
+                }
+                task.finish(&mut out)
+            })();
         }
     }
     resident::sub(mem_resident);
@@ -204,6 +232,7 @@ pub fn run_reduce_task(
         return Err(e);
     }
     merge_res?;
+    tail_res?;
     for p in disk_files {
         let _ = std::fs::remove_file(p);
     }
@@ -329,6 +358,7 @@ pub fn run_reduce_task_fixed(
     let mut sink_err: Option<io::Error> = None;
     let sink_broken = std::cell::Cell::new(false);
     let merge_res;
+    let mut tail_res: io::Result<()> = Ok(());
     {
         let mut out = |rec: Record| {
             stats.output_records += 1;
@@ -348,7 +378,7 @@ pub fn run_reduce_task_fixed(
                 Some(k) => {
                     stats.groups += 1;
                     stats.max_group = stats.max_group.max(vals.len() as u64);
-                    task.reduce_fixed(k, &vals, &mut out);
+                    task.reduce_fixed(k, &vals, &mut out)?;
                     vals.clear();
                     cur_key = Some(key);
                     vals.push(val);
@@ -364,12 +394,14 @@ pub fn run_reduce_task_fixed(
             Ok(())
         });
         if merge_res.is_ok() && !sink_broken.get() {
-            if let Some(k) = cur_key {
-                stats.groups += 1;
-                stats.max_group = stats.max_group.max(vals.len() as u64);
-                task.reduce_fixed(k, &vals, &mut out);
-            }
-            task.finish(&mut out);
+            tail_res = (|| {
+                if let Some(k) = cur_key {
+                    stats.groups += 1;
+                    stats.max_group = stats.max_group.max(vals.len() as u64);
+                    task.reduce_fixed(k, &vals, &mut out)?;
+                }
+                task.finish(&mut out)
+            })();
         }
     }
     resident::sub(mem_resident);
@@ -377,6 +409,7 @@ pub fn run_reduce_task_fixed(
         return Err(e);
     }
     merge_res?;
+    tail_res?;
     for p in disk_files {
         let _ = std::fs::remove_file(p);
     }

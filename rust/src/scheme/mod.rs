@@ -19,6 +19,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::footprint::{Channel, Ledger};
+use crate::kvstore::batch::SuffixBatch;
 use crate::kvstore::prefetch::SuffixPrefetcher;
 use crate::kvstore::shard::{SuffixStore, Traffic};
 use crate::mapreduce::engine::{run_job, Job, JobResult, ScratchDir};
@@ -224,15 +225,18 @@ impl SchemeMapper {
 impl crate::mapreduce::mapper::MapTask for SchemeMapper {
     fn map(&mut self, rec: &Record, emit: &mut dyn FnMut(Record)) {
         if self.push_read(rec) {
+            // the [u8; 8] arrays convert straight into the Record's Vecs:
+            // one allocation each (Record owns its bytes), no `.to_vec()`
+            // staging copy
             self.encode_pending(&mut |k, ix| {
-                emit(Record::new(encode_i64_key(k).to_vec(), ix.to_be_bytes().to_vec()))
+                emit(Record::new(encode_i64_key(k), ix.to_be_bytes()))
             });
         }
     }
 
     fn finish(&mut self, emit: &mut dyn FnMut(Record)) {
         self.encode_pending(&mut |k, ix| {
-            emit(Record::new(encode_i64_key(k).to_vec(), ix.to_be_bytes().to_vec()))
+            emit(Record::new(encode_i64_key(k), ix.to_be_bytes()))
         });
         self.put_reads();
     }
@@ -279,12 +283,27 @@ struct SchemeReducer {
     buf: SortingGroupBuffer,
     /// The previous sorting group, emitted once its texts arrive.
     pending: Option<PendingBatch>,
+    /// Recycled fetch arenas: the blocking path rotates one, the
+    /// prefetching path two (one in flight, one being consumed) — steady
+    /// state allocates no arena.
+    spares: Vec<SuffixBatch>,
 }
 
 impl SchemeReducer {
-    fn flush(&mut self, out: &mut dyn FnMut(Record)) {
+    /// A cleared arena from the recycle pool (or a fresh one, first use).
+    fn spare_arena(&mut self) -> SuffixBatch {
+        self.spares.pop().unwrap_or_default()
+    }
+
+    /// Return a consumed arena to the pool for the next fetch.
+    fn recycle(&mut self, mut arena: SuffixBatch) {
+        arena.clear();
+        self.spares.push(arena);
+    }
+
+    fn flush(&mut self, out: &mut dyn FnMut(Record)) -> std::io::Result<()> {
         if self.buf.is_empty() {
-            return;
+            return Ok(());
         }
         let t_start = Instant::now();
         let (mut keys, mut indexes) = self.buf.take();
@@ -348,94 +367,105 @@ impl SchemeReducer {
             // sort and emit hide this batch's fetch latency (and the
             // fetch queued last flush hid behind this batch's sort).
             if requested {
-                self.prefetcher.as_mut().expect("checked above").request(idxs);
+                let arena = self.spare_arena();
+                self.prefetcher.as_mut().expect("checked above").request(idxs, arena);
             }
             let prev = self.pending.replace(batch);
-            self.complete(prev, out);
+            self.complete(prev, out)
         } else {
             // blocking path: byte-identical requests, no overlap.
-            let fetched = if requested {
+            let mut arena = self.spare_arena();
+            if requested {
                 let store = self.store.as_mut().expect("blocking reducer holds the store");
-                account_fetch(&self.ledger, &self.times, || store.fetch_suffixes(&idxs))
-            } else {
-                Vec::new()
-            };
-            self.finish_batch(batch, fetched, out);
+                account_fetch(&self.ledger, &self.times, || {
+                    store.fetch_suffixes_into(&idxs, &mut arena).map(|t| ((), t))
+                })?;
+            }
+            self.finish_batch(batch, &arena, out);
+            self.recycle(arena);
+            Ok(())
         }
     }
 
     /// Wait for `prev`'s in-flight texts and finish it (double-buffered
     /// path). Only the time spent *stalled* in the wait counts as fetch
     /// time — that is exactly the fetch cost the overlap failed to hide.
-    fn complete(&mut self, prev: Option<PendingBatch>, out: &mut dyn FnMut(Record)) {
-        let Some(prev) = prev else { return };
-        let fetched = if prev.requested {
+    fn complete(
+        &mut self,
+        prev: Option<PendingBatch>,
+        out: &mut dyn FnMut(Record),
+    ) -> std::io::Result<()> {
+        let Some(prev) = prev else { return Ok(()) };
+        let arena = if prev.requested {
             let pf = self.prefetcher.as_mut().expect("prefetching reducer holds the worker");
-            account_fetch(&self.ledger, &self.times, || pf.wait())
+            account_fetch(&self.ledger, &self.times, || pf.wait())?
         } else {
-            Vec::new()
+            self.spare_arena() // empty: nothing was requested
         };
-        self.finish_batch(prev, fetched, out);
+        self.finish_batch(prev, &arena, out);
+        self.recycle(arena);
+        Ok(())
     }
 
-    /// Tie-break, emit, and account one batch whose texts have arrived.
+    /// Tie-break, emit, and account one batch whose texts have arrived in
+    /// `texts`' flat arena. Tie-breaking compares borrowed arena slices
+    /// and permutes only the (index, arena-entry) table — suffix bytes
+    /// never move or copy until the one unavoidable copy into the emitted
+    /// `Record` (which must own its key).
     fn finish_batch(
         &mut self,
         batch: PendingBatch,
-        fetched: Vec<Vec<u8>>,
+        texts: &SuffixBatch,
         out: &mut dyn FnMut(Record),
     ) {
         let PendingBatch { keys, mut indexes, want, .. } = batch;
-        let mut texts: Vec<Option<Vec<u8>>> = vec![None; keys.len()];
+        // position -> arena entry (NO_TEXT where no text was fetched)
+        const NO_TEXT: usize = usize::MAX;
+        let mut entry_at: Vec<usize> = vec![NO_TEXT; keys.len()];
         match &want {
             None => {
-                for (slot, t) in texts.iter_mut().zip(fetched) {
-                    *slot = Some(t);
+                for (i, e) in entry_at.iter_mut().enumerate() {
+                    *e = i;
                 }
             }
             Some(w) => {
-                for (&pos, t) in w.iter().zip(fetched) {
-                    texts[pos] = Some(t);
+                for (j, &pos) in w.iter().enumerate() {
+                    entry_at[pos] = j;
                 }
             }
         }
 
         // 3. tie-break: re-sort incomplete multi-member groups by
-        //    (suffix text, index).
+        //    (suffix text, index) — a spans permutation, no byte moves.
         let t_tie = Instant::now();
+        let mut span: Vec<(usize, i64)> = Vec::new(); // (entry, index), reused
         for (s, e, k) in key_groups(&keys) {
             if e - s > 1 && !key_is_complete(k, self.cfg.prefix_len) {
-                let mut span: Vec<(usize, i64)> =
-                    (s..e).map(|i| (i, indexes[i])).collect();
+                span.clear();
+                span.extend((s..e).map(|i| (entry_at[i], indexes[i])));
                 span.sort_by(|a, b| {
-                    texts[a.0]
-                        .as_ref()
-                        .unwrap()
-                        .cmp(texts[b.0].as_ref().unwrap())
-                        .then(a.1.cmp(&b.1))
+                    texts.slice(a.0).cmp(texts.slice(b.0)).then(a.1.cmp(&b.1))
                 });
-                // apply permutation to indexes and texts
-                let new_idx: Vec<i64> = span.iter().map(|&(i, _)| indexes[i]).collect();
-                let new_txt: Vec<Option<Vec<u8>>> =
-                    span.iter().map(|&(i, _)| texts[i].take()).collect();
-                for (off, (ix, tx)) in new_idx.into_iter().zip(new_txt).enumerate() {
+                for (off, &(entry, ix)) in span.iter().enumerate() {
+                    entry_at[s + off] = entry;
                     indexes[s + off] = ix;
-                    texts[s + off] = tx;
                 }
             }
         }
         let tie_ns = t_tie.elapsed().as_nanos() as u64;
 
-        // 4. emit
+        // 4. emit. `Record` owns its bytes, so each record costs exactly
+        //    the two Vecs it is made of — nothing else is allocated.
         let t_emit = Instant::now();
         for i in 0..keys.len() {
-            let value = indexes[i].to_be_bytes().to_vec();
-            let key = if self.cfg.write_suffixes {
-                texts[i].take().expect("text fetched in write mode")
+            let value = indexes[i].to_be_bytes();
+            let rec = if self.cfg.write_suffixes {
+                // entry_at[i] is always a fetched entry in write mode
+                Record::new(texts.slice(entry_at[i]), value)
             } else {
-                encode_i64_key(keys[i]).to_vec()
+                Record::new(encode_i64_key(keys[i]), value)
             };
-            out(Record::new(key, value));
+            out(rec);
         }
 
         self.times.sort_ns.fetch_add(tie_ns, Ordering::Relaxed);
@@ -447,17 +477,25 @@ impl SchemeReducer {
 
 /// Run one fetch (blocking call or prefetch wait), charge the ledger,
 /// and book the elapsed stall as fetch time. Both reducer paths go
-/// through here so their accounting can never diverge.
-fn account_fetch(
+/// through here so their accounting can never diverge. A fetch failure
+/// is a clean `io::Error` out of the reducer (and so out of the job) —
+/// not a panic.
+fn account_fetch<T>(
     ledger: &Ledger,
     times: &TimeSplit,
-    fetch: impl FnOnce() -> crate::kvstore::client::Result<(Vec<Vec<u8>>, Traffic)>,
-) -> Vec<Vec<u8>> {
+    fetch: impl FnOnce() -> crate::kvstore::client::Result<(T, Traffic)>,
+) -> std::io::Result<T> {
     let t = Instant::now();
-    let (texts, traffic) = fetch().expect("KV fetch failed");
-    ledger.add(Channel::KvFetch, traffic.total());
+    let res = fetch();
     times.fetch_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-    texts
+    let (value, traffic) = res.map_err(|e| {
+        // one conversion policy (client.rs: From<KvError> for io::Error,
+        // kind-preserving), plus this call site's context
+        let e = std::io::Error::from(e);
+        std::io::Error::new(e.kind(), format!("suffix fetch failed: {e}"))
+    })?;
+    ledger.add(Channel::KvFetch, traffic.total());
+    Ok(value)
 }
 
 /// Is the (key, index) sequence already lexicographically sorted?
@@ -484,7 +522,12 @@ fn merge_pair_runs(mut runs: Vec<(Vec<i64>, Vec<i64>)>) -> (Vec<i64>, Vec<i64>) 
 }
 
 impl crate::mapreduce::reducer::ReduceTask for SchemeReducer {
-    fn reduce(&mut self, key: &[u8], values: Vec<Vec<u8>>, out: &mut dyn FnMut(Record)) {
+    fn reduce(
+        &mut self,
+        key: &[u8],
+        values: Vec<Vec<u8>>,
+        out: &mut dyn FnMut(Record),
+    ) -> std::io::Result<()> {
         let k = decode_i64_key(key);
         self.buf.push_group(
             k,
@@ -493,26 +536,33 @@ impl crate::mapreduce::reducer::ReduceTask for SchemeReducer {
                 .map(|v| i64::from_be_bytes(v[..8].try_into().expect("8-byte index"))),
         );
         if self.buf.len() >= self.cfg.group_threshold {
-            self.flush(out);
+            self.flush(out)?;
         }
+        Ok(())
     }
 
     // Fixed-width override: the packed u64s decode straight back into
     // the numeric pairs the sorting-group buffer stores — no byte
     // buffers materialized per value.
-    fn reduce_fixed(&mut self, key: u64, values: &[u64], out: &mut dyn FnMut(Record)) {
+    fn reduce_fixed(
+        &mut self,
+        key: u64,
+        values: &[u64],
+        out: &mut dyn FnMut(Record),
+    ) -> std::io::Result<()> {
         self.buf.push_group(key as i64, values.iter().map(|&v| v as i64));
         if self.buf.len() >= self.cfg.group_threshold {
-            self.flush(out);
+            self.flush(out)?;
         }
+        Ok(())
     }
 
-    fn finish(&mut self, out: &mut dyn FnMut(Record)) {
-        self.flush(out);
+    fn finish(&mut self, out: &mut dyn FnMut(Record)) -> std::io::Result<()> {
+        self.flush(out)?;
         // drain the double buffer: the last batch's fetch is still in
         // flight when the input runs out
         let prev = self.pending.take();
-        self.complete(prev, out);
+        self.complete(prev, out)
     }
 }
 
@@ -629,6 +679,7 @@ pub fn run_files(
                 times: red_times.clone(),
                 buf: SortingGroupBuffer::new(),
                 pending: None,
+                spares: Vec::new(),
             })
         }),
         partitioner: Arc::new(move |key: &[u8]| {
@@ -805,6 +856,75 @@ mod tests {
         let err = run_files(&[&reads, &reads], &small_cfg(2, 400), factory, &ledger)
             .expect_err("colliding seqs must be rejected");
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+    }
+
+    /// A store whose puts work but whose fetches always fail — the
+    /// "suffix source went away mid-job" scenario.
+    struct FailingFetchStore(SharedStore);
+
+    impl SuffixStore for FailingFetchStore {
+        fn put_reads(
+            &mut self,
+            reads: &[crate::suffix::reads::Read],
+        ) -> crate::kvstore::client::Result<Traffic> {
+            self.0.put_reads(reads)
+        }
+
+        fn fetch_suffixes(
+            &mut self,
+            _indexes: &[i64],
+        ) -> crate::kvstore::client::Result<(Vec<Vec<u8>>, Traffic)> {
+            Err(crate::kvstore::client::KvError::Server("store on fire".into()))
+        }
+
+        fn fetch_suffixes_into(
+            &mut self,
+            _indexes: &[i64],
+            _out: &mut SuffixBatch,
+        ) -> crate::kvstore::client::Result<Traffic> {
+            Err(crate::kvstore::client::KvError::Server("store on fire".into()))
+        }
+
+        fn traffic(&self) -> Traffic {
+            self.0.traffic()
+        }
+
+        fn used_memory(&mut self) -> u64 {
+            self.0.used_memory()
+        }
+
+        fn n_shards(&self) -> usize {
+            self.0.n_shards()
+        }
+    }
+
+    #[test]
+    fn fetch_failure_is_a_clean_error_not_a_panic() {
+        let reads = synth_corpus(&CorpusSpec {
+            n_reads: 30,
+            read_len: 20,
+            genome_len: 1024,
+            ..Default::default()
+        });
+        for prefetch in [false, true] {
+            let shared = SharedStore::new(2);
+            let s = shared.clone();
+            let factory: StoreFactory =
+                Arc::new(move || Box::new(FailingFetchStore(s.clone())) as Box<dyn SuffixStore>);
+            let cfg = SchemeConfig { prefetch, ..small_cfg(2, 400) };
+            let ledger = Ledger::new();
+            let err = run(&reads, &cfg, factory, &ledger)
+                .expect_err("a failing fetch must error the job");
+            let msg = err.to_string();
+            assert!(
+                msg.contains("suffix fetch failed") && msg.contains("store on fire"),
+                "clean fetch error expected, got: {msg}"
+            );
+            assert!(
+                !msg.contains("panicked"),
+                "fetch failure must not travel as a panic: {msg}"
+            );
+        }
     }
 
     #[test]

@@ -8,6 +8,32 @@ pub const TB: u64 = 1000 * GB;
 pub const MIB: u64 = 1 << 20;
 pub const GIB: u64 = 1 << 30;
 
+/// Decimal digit count of `v` — `v.to_string().len()` without the
+/// allocation. The RESP wire-length arithmetic on the fetch hot path
+/// (client, server, and the modeled in-process store) all use this, so
+/// their totals match the materializing `Value::wire_len` byte for byte.
+pub fn dec_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 10 {
+        v /= 10;
+        n += 1;
+    }
+    n
+}
+
+/// Format `v` in decimal into a stack buffer, returning the used prefix —
+/// the per-request key/offset formatting of `MGETSUFFIX` commands without
+/// a `to_string().into_bytes()` heap Vec each (20 bytes fits `u64::MAX`).
+pub fn fmt_dec(v: u64, buf: &mut [u8; 20]) -> &[u8] {
+    let n = dec_len(v);
+    let mut v = v;
+    for i in (0..n).rev() {
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+    }
+    &buf[..n]
+}
+
 /// Render bytes the way the paper's tables do (decimal units, 2 decimals).
 pub fn human(bytes: u64) -> String {
     human_f(bytes as f64)
@@ -90,6 +116,21 @@ mod tests {
         assert_eq!(human(1_240_000_000_000), "1.24 TB");
         assert_eq!(human(1234), "1.23 KB");
         assert_eq!(human(12), "12 B");
+    }
+
+    #[test]
+    fn dec_len_matches_to_string() {
+        for v in [0u64, 1, 9, 10, 99, 100, 999, 1000, 123_456, u64::MAX] {
+            assert_eq!(dec_len(v), v.to_string().len(), "v={v}");
+        }
+    }
+
+    #[test]
+    fn fmt_dec_matches_to_string() {
+        let mut buf = [0u8; 20];
+        for v in [0u64, 7, 42, 999, 1_000, 98_765_432, u64::MAX] {
+            assert_eq!(fmt_dec(v, &mut buf), v.to_string().as_bytes(), "v={v}");
+        }
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! Counting-allocator proof of the zero-copy fetch path's allocation
+//! contract: a steady-state `fetch_suffixes_into` loop performs O(1)
+//! heap allocations per batch — a bounded constant, NOT O(suffixes) —
+//! while the old `Vec`-of-`Vec`s path allocates at least one `Vec` per
+//! suffix. This lives in its own integration-test binary because a
+//! `#[global_allocator]` is process-wide; the single `#[test]` keeps the
+//! counting window free of concurrent test noise.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use samr::kvstore::batch::SuffixBatch;
+use samr::kvstore::shard::{InProcStore, SuffixStore};
+use samr::suffix::encode::pack_index;
+use samr::suffix::reads::Read;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Count allocations during `f`, on this thread only by construction
+/// (nothing else runs in this test binary while counting).
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    f();
+    COUNTING.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_arena_fetch_allocates_o1_per_batch() {
+    // a corpus big enough that O(suffixes) allocations are unmistakable
+    let reads: Vec<Read> = (0..500u64)
+        .map(|i| Read::new(i, vec![(i % 4 + 1) as u8; 40]))
+        .collect();
+    let n_suffixes: usize = reads.iter().map(|r| r.suffix_count()).sum();
+    assert!(n_suffixes > 20_000);
+    let reqs: Vec<i64> = reads
+        .iter()
+        .flat_map(|r| (0..=r.len()).map(|o| pack_index(r.seq, o)))
+        .collect();
+
+    let mut store = InProcStore::new(4);
+    store.put_reads(&reads).expect("put");
+
+    // warm up: first calls size the plan scratch, the arena, and the
+    // spans table; steady state reuses all of them
+    let mut batch = SuffixBatch::new();
+    for _ in 0..3 {
+        batch.clear();
+        store.fetch_suffixes_into(&reqs, &mut batch).expect("warmup fetch");
+    }
+
+    const BATCHES: u64 = 5;
+    let arena_allocs = count_allocs(|| {
+        for _ in 0..BATCHES {
+            batch.clear();
+            store.fetch_suffixes_into(&reqs, &mut batch).expect("steady-state fetch");
+        }
+    });
+    assert_eq!(batch.len(), reqs.len());
+
+    // the old path: one Vec per suffix (plus the outer Vec), every batch
+    let vec_allocs = count_allocs(|| {
+        let (out, _) = store.fetch_suffixes(&reqs).expect("vec fetch");
+        assert_eq!(out.len(), reqs.len());
+    });
+
+    // O(1) per batch: a handful of allocations TOTAL across 5 batches of
+    // 20k+ suffixes (ideally zero; the bound absorbs platform noise),
+    // vs >= one per suffix on the Vec path.
+    assert!(
+        arena_allocs <= 8 * BATCHES,
+        "arena path must not allocate per suffix: {arena_allocs} allocations \
+         across {BATCHES} batches of {n_suffixes} suffixes"
+    );
+    assert!(
+        vec_allocs >= n_suffixes as u64,
+        "sanity: the counting allocator must see the Vec path's per-suffix \
+         allocations ({vec_allocs} < {n_suffixes})"
+    );
+}

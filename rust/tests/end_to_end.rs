@@ -172,9 +172,10 @@ fn oversized_read_is_rejected_not_aliased() {
 #[test]
 fn missing_read_in_store_fails_loudly() {
     init_runtime();
-    // a store that was never populated must make the reducer panic (fetch
-    // error), not silently emit garbage — the engine catches the panic
-    // and surfaces it as an io::Error naming the task.
+    // a store that was never populated must fail the fetch — the reducer
+    // propagates it as a clean io::Error through the job (see
+    // scheme::tests::fetch_failure_is_a_clean_error_not_a_panic), never
+    // silently emitting garbage.
     let mut empty = SharedStore::new(2);
     // sabotage: pre-fetch proves it's empty
     assert!(empty.fetch_suffixes(&[0]).is_err());

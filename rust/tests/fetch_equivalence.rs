@@ -1,11 +1,14 @@
-//! Property tests for the overlapped fetch path: pipelining and
-//! prefetching may only change *when* bytes move, never *which* bytes —
-//! suffix order and ledger totals must be bit-identical to the blocking
-//! sequential path, across shard counts {1, 2, 5}.
+//! Property tests for the overlapped, zero-copy fetch path: pipelining,
+//! prefetching, and the flat `SuffixBatch` arenas may only change *when*
+//! bytes move (and where they land), never *which* bytes — suffix order,
+//! wire traffic, and ledger totals must be bit-identical to the blocking
+//! `Vec`-of-`Vec`s path, across shard counts {1, 2, 5} and prefetch
+//! {on, off}.
 
 use std::sync::Arc;
 
-use samr::footprint::{Channel, Ledger};
+use samr::footprint::{Channel, Footprint, Ledger};
+use samr::kvstore::batch::SuffixBatch;
 use samr::kvstore::shard::{SharedStore, ShardedClient, SuffixStore};
 use samr::kvstore::LocalKvCluster;
 use samr::mapreduce::JobConf;
@@ -75,6 +78,63 @@ fn pipelined_fetch_matches_sequential_over_tcp() {
 }
 
 #[test]
+fn arena_fetch_matches_vec_fetch_over_tcp() {
+    // the tentpole property: the zero-copy SuffixBatch path issues
+    // byte-identical requests and receives byte-identical replies to the
+    // old Vec-of-Vecs path — only the allocation pattern differs
+    for &shards in &SHARD_COUNTS {
+        let (reads, reqs) = corpus_and_requests(21 + shards as u64);
+        let kv = LocalKvCluster::start(shards).expect("kv cluster");
+        let mut loader = kv.client().expect("loader");
+        loader.put_reads(&reads).expect("put");
+
+        let mut vec_client = kv.client().expect("vec client");
+        let (vec_out, vec_traffic) = vec_client.fetch_suffixes(&reqs).expect("vec fetch");
+
+        let mut arena_client = kv.client().expect("arena client");
+        let mut batch = SuffixBatch::new();
+        // two rounds through one reused batch: reuse must not change
+        // results (steady state is exactly this loop)
+        for round in 0..2 {
+            batch.clear();
+            let arena_traffic = arena_client
+                .fetch_suffixes_into(&reqs, &mut batch)
+                .expect("arena fetch");
+            assert_eq!(
+                arena_traffic, vec_traffic,
+                "wire totals must match at {shards} shards (round {round})"
+            );
+            assert_eq!(batch.len(), vec_out.len());
+            for (i, v) in vec_out.iter().enumerate() {
+                assert_eq!(
+                    batch.get(i),
+                    Some(&v[..]),
+                    "text {i} must match at {shards} shards (round {round})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn arena_fetch_matches_vec_fetch_inproc() {
+    // same property through the modeled in-process backend
+    for &shards in &SHARD_COUNTS {
+        let (reads, reqs) = corpus_and_requests(33 + shards as u64);
+        let mut store = SharedStore::new(shards);
+        store.put_reads(&reads).expect("put");
+        let (vec_out, vec_traffic) = store.fetch_suffixes(&reqs).expect("vec fetch");
+        let mut batch = SuffixBatch::new();
+        let arena_traffic = store.fetch_suffixes_into(&reqs, &mut batch).expect("arena fetch");
+        assert_eq!(arena_traffic, vec_traffic, "modeled traffic at {shards} shards");
+        assert_eq!(batch.len(), vec_out.len());
+        for (i, v) in vec_out.iter().enumerate() {
+            assert_eq!(batch.get(i), Some(&v[..]), "text {i} at {shards} shards");
+        }
+    }
+}
+
+#[test]
 fn pipelined_put_matches_single_batch_puts() {
     for &shards in &SHARD_COUNTS {
         let (reads, reqs) = corpus_and_requests(40 + shards as u64);
@@ -100,7 +160,7 @@ fn run_scheme_once(
     shards: usize,
     prefetch: bool,
     write_suffixes: bool,
-) -> (Vec<i64>, u64, u64, Vec<Vec<u8>>) {
+) -> (Vec<i64>, Footprint, Vec<Vec<u8>>) {
     let store = SharedStore::new(shards);
     let s = store.clone();
     let factory: StoreFactory = Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>);
@@ -127,12 +187,7 @@ fn run_scheme_once(
             Ok(())
         })
         .expect("stream output");
-    (
-        res.order,
-        ledger.get(Channel::KvFetch),
-        ledger.get(Channel::KvPut),
-        output,
-    )
+    (res.order, ledger.snapshot(), output)
 }
 
 #[test]
@@ -146,10 +201,8 @@ fn prefetching_reducer_is_equivalent_to_blocking() {
             ..Default::default()
         });
         for write_suffixes in [true, false] {
-            let (order_b, fetch_b, put_b, out_b) =
-                run_scheme_once(&reads, shards, false, write_suffixes);
-            let (order_p, fetch_p, put_p, out_p) =
-                run_scheme_once(&reads, shards, true, write_suffixes);
+            let (order_b, fp_b, out_b) = run_scheme_once(&reads, shards, false, write_suffixes);
+            let (order_p, fp_p, out_p) = run_scheme_once(&reads, shards, true, write_suffixes);
             assert_eq!(
                 order_p, order_b,
                 "suffix order must be byte-identical ({shards} shards, write={write_suffixes})"
@@ -158,14 +211,17 @@ fn prefetching_reducer_is_equivalent_to_blocking() {
                 out_p, out_b,
                 "emitted records must match ({shards} shards, write={write_suffixes})"
             );
-            assert_eq!(
-                fetch_p, fetch_b,
-                "KvFetch ledger bytes must match ({shards} shards, write={write_suffixes})"
-            );
-            assert_eq!(
-                put_p, put_b,
-                "KvPut ledger bytes must match ({shards} shards, write={write_suffixes})"
-            );
+            // ALL NINE ledger channels — the zero-copy arenas and the
+            // prefetch overlap may not move a single accounted byte
+            for ch in samr::footprint::CHANNELS {
+                assert_eq!(
+                    fp_p.get(ch),
+                    fp_b.get(ch),
+                    "{} bytes must match ({shards} shards, write={write_suffixes})",
+                    ch.name()
+                );
+            }
+            assert!(fp_p.get(Channel::KvFetch) > 0 && fp_p.get(Channel::KvPut) > 0);
             validate_order(&reads, &order_p).expect("order invalid");
         }
     }
