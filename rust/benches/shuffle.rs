@@ -6,9 +6,14 @@
 //! pairs), and the reducer's numeric (key, index) group sort
 //! (permutation comparison sort vs radix). Reports records/s and the
 //! fixed/generic speedup — the acceptance target is >1x on every leg.
+//! A thread-scaling series (1/2/4/8 threads on each parallel in-node
+//! sorting path) follows, snapshotted to `BENCH_sort.json` at the repo
+//! root for the baseline trajectory.
 
 use samr::bench_support::{bench_throughput, section, Measurement};
-use samr::mapreduce::merge::{kway_merge, kway_merge_fixed, FixedRun, Run};
+use samr::mapreduce::merge::{
+    kway_merge, kway_merge_fixed, merge_fixed_segments_threads, FixedRun, Run,
+};
 use samr::mapreduce::record::{FixedRec, Record};
 use samr::runtime::native;
 use samr::util::radix;
@@ -146,4 +151,103 @@ fn main() {
     });
     println!("{m_fix}");
     println!("{}", speedup(&m_gen, &m_fix));
+
+    // ---------------- parallel in-node sorting: thread scaling ----------------
+    // Every series point is the SAME work at a different
+    // parallel_sort_threads value; threads = 1 is the literal sequential
+    // code, so the 1-thread row doubles as the regression baseline.
+    let threads_series = [1usize, 2, 4, 8];
+    let mut snapshot: Vec<(String, usize, Measurement)> = Vec::new();
+
+    section(&format!("spill radix sort, thread scaling ({n} records)"));
+    for &t in &threads_series {
+        let mut scratch: Vec<FixedRec> = Vec::new();
+        let m = bench_throughput(
+            &format!("sort_spill_threads(threads={t})"),
+            1,
+            3,
+            n as f64,
+            "recs",
+            || {
+                let mut buf: Vec<FixedRec> = recs.clone();
+                radix::sort_spill_threads(&mut buf, &mut scratch, t);
+                std::hint::black_box(buf.len());
+            },
+        );
+        println!("{m}");
+        snapshot.push(("spill_radix".into(), t, m));
+    }
+
+    section(&format!("group (key, index) pair sort, thread scaling ({n} pairs)"));
+    for &t in &threads_series {
+        let m = bench_throughput(
+            &format!("sort_pairs_threads(threads={t})"),
+            1,
+            3,
+            n as f64,
+            "pairs",
+            || {
+                let mut k = keys.clone();
+                let mut ix = idxs.clone();
+                radix::sort_pairs_threads(&mut k, &mut ix, t);
+                std::hint::black_box((k, ix));
+            },
+        );
+        println!("{m}");
+        snapshot.push(("pair_sort".into(), t, m));
+    }
+
+    section(&format!("8-segment range-partitioned merge, thread scaling ({n} records)"));
+    for &t in &threads_series {
+        let m = bench_throughput(
+            &format!("merge_fixed_segments_threads(threads={t})"),
+            1,
+            3,
+            n as f64,
+            "recs",
+            || {
+                let mut count = 0u64;
+                merge_fixed_segments_threads(runs.clone(), t, |_, v| {
+                    count += v & 1;
+                    Ok(())
+                })
+                .unwrap();
+                std::hint::black_box(count);
+            },
+        );
+        println!("{m}");
+        snapshot.push(("segment_merge".into(), t, m));
+    }
+
+    write_snapshot(n, &snapshot);
+}
+
+/// Spool the thread-scaling series to `BENCH_sort.json` (the trajectory
+/// file at the repo root; override the path with SAMR_BENCH_JSON, or set
+/// it empty to skip). Hand-rolled JSON — the offline vendor set has no
+/// serde — with fixed ASCII keys, so no escaping is needed.
+fn write_snapshot(n: usize, series: &[(String, usize, Measurement)]) {
+    let path = match std::env::var("SAMR_BENCH_JSON") {
+        Ok(p) if p.is_empty() => return,
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::path::PathBuf::from("../BENCH_sort.json"),
+    };
+    let mut rows = Vec::new();
+    for (bench, threads, m) in series {
+        rows.push(format!(
+            "    {{\"bench\": \"{bench}\", \"threads\": {threads}, \"mean_s\": {:.6}, \
+             \"sigma_s\": {:.6}, \"recs_per_s\": {:.0}}}",
+            m.mean.as_secs_f64(),
+            m.sigma.as_secs_f64(),
+            n as f64 / m.mean.as_secs_f64(),
+        ));
+    }
+    let doc = format!(
+        "{{\n  \"schema\": \"samr-bench-sort-v1\",\n  \"records\": {n},\n  \"series\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write(&path, doc) {
+        Ok(()) => println!("\nwrote thread-scaling snapshot to {}", path.display()),
+        Err(e) => println!("\ncould not write {}: {e}", path.display()),
+    }
 }

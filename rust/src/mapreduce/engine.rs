@@ -163,6 +163,10 @@ fn task_panic_error(
 ///
 /// Task attempts run on the process-wide [`WorkerPool`] so worker threads
 /// (and their thread-local PJRT engines) persist across phases and jobs.
+/// Both phases dispatch heaviest-first (map: split bytes; reduce:
+/// partition shuffle bytes) so an oversized task overlaps the lighter
+/// ones — scheduling order cannot change results, which are stored by
+/// task index with commutative ledger adds.
 /// A panicking task attempt is caught on its worker and returned as an
 /// `io::Error` naming the task — it cannot take down the pool or
 /// surface as an opaque unwind.
@@ -189,8 +193,11 @@ pub fn run_job(
     type MapSlot = Option<io::Result<(SpillFile, MapTaskStats)>>;
     let map_outputs: Arc<Mutex<Vec<MapSlot>>> =
         Arc::new(Mutex::new((0..n_maps).map(|_| None).collect()));
-    let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..n_maps)
+    let tasks: Vec<(u64, Box<dyn FnOnce() + Send>)> = (0..n_maps)
         .map(|i| {
+            // weight = split bytes: the biggest split is dispatched first
+            // so it overlaps the lighter ones instead of straggling
+            let weight = splits[i].bytes;
             let splits = splits.clone();
             let ledger = ledger.clone();
             let scratch = scratch.clone();
@@ -199,7 +206,7 @@ pub fn run_job(
             let factory = job.map_factory.clone();
             let name = job.name.clone();
             let out = map_outputs.clone();
-            Box::new(move || {
+            let task = Box::new(move || {
                 let attempt = || -> io::Result<(SpillFile, MapTaskStats)> {
                     let split = &splits[i];
                     let mut reader = split.open()?;
@@ -222,10 +229,11 @@ pub fn run_job(
                 let res = catch_unwind(AssertUnwindSafe(attempt))
                     .unwrap_or_else(|p| Err(task_panic_error("map", i, &name, p)));
                 out.lock().unwrap()[i] = Some(res);
-            }) as Box<dyn FnOnce() + Send>
+            }) as Box<dyn FnOnce() + Send>;
+            (weight, task)
         })
         .collect();
-    pool.run_all(tasks, threads);
+    pool.run_all_weighted(tasks, threads);
     let mut outputs = Vec::with_capacity(n_maps);
     let mut map_stats = Vec::with_capacity(n_maps);
     for (i, slot) in map_outputs.lock().unwrap().drain(..).enumerate() {
@@ -240,8 +248,12 @@ pub fn run_job(
     type RedSlot = Option<io::Result<(OutputFile, ReduceTaskStats)>>;
     let red_results: Arc<Mutex<Vec<RedSlot>>> =
         Arc::new(Mutex::new((0..n_reds).map(|_| None).collect()));
-    let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..n_reds)
+    let tasks: Vec<(u64, Box<dyn FnOnce() + Send>)> = (0..n_reds)
         .map(|r| {
+            // weight = this partition's shuffle bytes across all map
+            // outputs: the oversized sorting partition starts first, so
+            // it cannot straggle the job from the dispatch tail
+            let weight: u64 = outputs.iter().map(|o| o.segments[r].bytes).sum();
             let ledger = ledger.clone();
             let scratch = scratch.clone();
             let out_dir = out_dir.clone();
@@ -250,7 +262,7 @@ pub fn run_job(
             let name = job.name.clone();
             let outputs = outputs.clone();
             let out = red_results.clone();
-            Box::new(move || {
+            let task = Box::new(move || {
                 let attempt = || -> io::Result<(OutputFile, ReduceTaskStats)> {
                     let mut task = factory(r);
                     let mut sink = FileSink::create(out_dir.path.join(format!("part-{r:05}")))?;
@@ -275,10 +287,11 @@ pub fn run_job(
                 let res = catch_unwind(AssertUnwindSafe(attempt))
                     .unwrap_or_else(|p| Err(task_panic_error("reduce", r, &name, p)));
                 out.lock().unwrap()[r] = Some(res);
-            }) as Box<dyn FnOnce() + Send>
+            }) as Box<dyn FnOnce() + Send>;
+            (weight, task)
         })
         .collect();
-    pool.run_all(tasks, threads);
+    pool.run_all_weighted(tasks, threads);
     for o in outputs.iter() {
         o.remove();
     }

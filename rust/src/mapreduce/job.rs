@@ -30,6 +30,12 @@ pub struct JobConf {
     pub shuffle_memory_limit_percent: f64,
     /// Worker threads for map/reduce task execution.
     pub task_parallelism: usize,
+    /// Threads for the in-node sorting hot paths inside one task: the
+    /// fixed-width spill radix sort and the reducer's in-memory segment
+    /// merges. 1 (the default) dispatches the literal sequential code —
+    /// the equivalence baseline; any value produces byte-identical
+    /// output and ledger totals (see `tests/sort_equivalence.rs`).
+    pub parallel_sort_threads: usize,
     /// Directory for spill files; None = std::env::temp_dir().
     pub spill_dir: Option<std::path::PathBuf>,
     /// Route the shuffle through the fixed-width fast path: packed
@@ -56,6 +62,7 @@ impl Default for JobConf {
             task_parallelism: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4),
+            parallel_sort_threads: 1,
             spill_dir: None,
             fixed_width: false,
         }

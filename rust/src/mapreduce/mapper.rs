@@ -398,6 +398,7 @@ pub fn run_map_task_fixed(
     let mut buffer: Vec<FixedRec> = Vec::new();
     let mut buffered: u64 = 0;
     let trigger = conf.spill_trigger();
+    let sort_threads = conf.parallel_sort_threads;
     // radix scratch survives across spills: steady state allocates
     // nothing per record or per spill
     let mut scratch: Vec<FixedRec> = Vec::new();
@@ -416,7 +417,8 @@ pub fn run_map_task_fixed(
         }
         // stable LSD radix on (partition, key): same order (and same
         // equal-key emission-order ties) as the generic stable sort.
-        radix::sort_spill(buffer, scratch);
+        // threads = 1 is the literal sequential sort_spill.
+        radix::sort_spill_threads(buffer, scratch, sort_threads);
         let path = dir.join(format!("map{task_id}_spill{}", spills.len()));
         let sf = write_spill_fixed(path, n_partitions, buffer)?;
         ledger.add(Channel::MapLocalWrite, sf.bytes);

@@ -299,6 +299,226 @@ pub fn kway_merge_pairs(runs: &[(Vec<i64>, Vec<i64>)], mut sink: impl FnMut(i64,
     .expect("in-memory pair merge cannot fail");
 }
 
+// ---------------- parallel range-partitioned merges ----------------
+
+/// Fewest items per merge range before the parallel merges engage —
+/// below this the splitter bookkeeping costs more than the merge, so
+/// the call degrades to the sequential loser tree (byte-identical
+/// output either way; see `tests/sort_equivalence.rs`).
+const PAR_MERGE_MIN_PER_PART: usize = 1 << 13;
+
+/// Splitter-sample positions taken per run — fixed fractional offsets,
+/// so splitter selection is a pure function of the run contents and
+/// never of thread timing.
+const SPLITTER_SAMPLES_PER_RUN: usize = 64;
+
+/// First position in the sorted-by-(key, index) pair run whose pair
+/// exceeds `s` — the range cut. `<=` keeps pairs equal to the splitter
+/// wholly on the low side, so a cut can never separate equal pairs.
+fn partition_upper_pair(keys: &[i64], ixs: &[i64], s: (i64, i64)) -> usize {
+    let (mut lo, mut hi) = (0, keys.len());
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if (keys[mid], ixs[mid]) <= s {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// [`kway_merge_pairs`] with the key space cut into disjoint ranges by
+/// deterministic splitters and each range merged concurrently, then the
+/// range outputs concatenated in splitter order.
+///
+/// Why this is byte-identical to the sequential merge: the runs are
+/// sorted by the full (key, value) pair, and every cut uses the
+/// predicate `pair <= splitter` — monotone along a sorted run — so a
+/// range holds exactly the global-output pairs between two splitters,
+/// equal pairs never straddle a cut, and within a range every run keeps
+/// its original index (empty slices included), preserving the
+/// (key, value, run) tie-break of the global loser tree. Concatenating
+/// ranges in splitter order therefore reproduces the sequential output
+/// exactly, independent of thread scheduling.
+///
+/// `threads <= 1` dispatches the literal sequential [`kway_merge_pairs`].
+pub fn kway_merge_pairs_threads(
+    runs: &[(Vec<i64>, Vec<i64>)],
+    threads: usize,
+    mut sink: impl FnMut(i64, i64),
+) {
+    if threads <= 1 || runs.len() < 2 {
+        return kway_merge_pairs(runs, sink);
+    }
+    let total: usize = runs.iter().map(|r| r.0.len()).sum();
+    let parts = threads.min(total / PAR_MERGE_MIN_PER_PART);
+    if parts < 2 {
+        return kway_merge_pairs(runs, sink);
+    }
+    // deterministic splitters: fixed fractional sample positions per
+    // run, pooled, sorted, then quantiles
+    let mut samples: Vec<(i64, i64)> = Vec::new();
+    for (keys, ixs) in runs {
+        let s = SPLITTER_SAMPLES_PER_RUN.min(keys.len());
+        for i in 0..s {
+            let p = i * keys.len() / s;
+            samples.push((keys[p], ixs[p]));
+        }
+    }
+    samples.sort_unstable();
+    let splitters: Vec<(i64, i64)> =
+        (1..parts).map(|t| samples[t * samples.len() / parts]).collect();
+    // cuts[r] = run r's range boundaries 0 ..= len, monotone because the
+    // splitters are sorted
+    let cuts: Vec<Vec<usize>> = runs
+        .iter()
+        .map(|(keys, ixs)| {
+            let mut c = Vec::with_capacity(parts + 1);
+            c.push(0);
+            for s in &splitters {
+                c.push(partition_upper_pair(keys, ixs, *s));
+            }
+            c.push(keys.len());
+            c
+        })
+        .collect();
+    let buffers: Vec<Vec<(i64, i64)>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..parts)
+            .map(|t| {
+                let slices: Vec<(&[i64], &[i64])> = runs
+                    .iter()
+                    .enumerate()
+                    .map(|(r, (keys, ixs))| {
+                        let (lo, hi) = (cuts[r][t], cuts[r][t + 1]);
+                        (&keys[lo..hi], &ixs[lo..hi])
+                    })
+                    .collect();
+                sc.spawn(move || {
+                    let mut out: Vec<(i64, i64)> =
+                        Vec::with_capacity(slices.iter().map(|sl| sl.0.len()).sum());
+                    let mut cursors = vec![0usize; slices.len()];
+                    loser_tree_merge(
+                        slices.len(),
+                        |i| {
+                            let c = cursors[i];
+                            Ok(if c < slices[i].0.len() {
+                                cursors[i] = c + 1;
+                                Some((slices[i].0[c], slices[i].1[c]))
+                            } else {
+                                None
+                            })
+                        },
+                        |a, i, b, j| (a.0, a.1, i) < (b.0, b.1, j),
+                        |p| {
+                            out.push(p);
+                            Ok(())
+                        },
+                    )
+                    .expect("in-memory pair merge cannot fail");
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("merge thread")).collect()
+    });
+    for buf in buffers {
+        for (k, v) in buf {
+            sink(k, v);
+        }
+    }
+}
+
+/// Parallel merge of in-memory fixed-width segments, ascending by
+/// (key, segment index) — the reducer's memory-to-disk merge with the
+/// key space range-partitioned like [`kway_merge_pairs_threads`].
+///
+/// Splitters here are KEYS alone (the merge order's primary component):
+/// the cut `key <= splitter` keeps every instance of an equal key in
+/// one range, so the segment-index tie-break inside a range is
+/// identical to the global merge's. `threads <= 1` dispatches the
+/// literal sequential path — [`FixedRun::from_vec`] cursors through
+/// [`kway_merge_fixed`] — byte-for-byte the pre-existing code.
+pub fn merge_fixed_segments_threads(
+    segments: Vec<Vec<(u64, u64)>>,
+    threads: usize,
+    mut sink: impl FnMut(u64, u64) -> io::Result<()>,
+) -> io::Result<()> {
+    let total: usize = segments.iter().map(|s| s.len()).sum();
+    let parts = if threads <= 1 || segments.len() < 2 {
+        1
+    } else {
+        threads.min(total / PAR_MERGE_MIN_PER_PART)
+    };
+    if parts < 2 {
+        let runs: Vec<FixedRun> = segments.into_iter().map(FixedRun::from_vec).collect();
+        return kway_merge_fixed(runs, sink);
+    }
+    let mut samples: Vec<u64> = Vec::new();
+    for seg in &segments {
+        let s = SPLITTER_SAMPLES_PER_RUN.min(seg.len());
+        for i in 0..s {
+            samples.push(seg[i * seg.len() / s].0);
+        }
+    }
+    samples.sort_unstable();
+    let splitters: Vec<u64> = (1..parts).map(|t| samples[t * samples.len() / parts]).collect();
+    let cuts: Vec<Vec<usize>> = segments
+        .iter()
+        .map(|seg| {
+            let mut c = Vec::with_capacity(parts + 1);
+            c.push(0);
+            for s in &splitters {
+                c.push(seg.partition_point(|&(k, _)| k <= *s));
+            }
+            c.push(seg.len());
+            c
+        })
+        .collect();
+    let buffers: Vec<Vec<(u64, u64)>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..parts)
+            .map(|t| {
+                let slices: Vec<&[(u64, u64)]> = segments
+                    .iter()
+                    .enumerate()
+                    .map(|(r, seg)| &seg[cuts[r][t]..cuts[r][t + 1]])
+                    .collect();
+                sc.spawn(move || {
+                    let mut out: Vec<(u64, u64)> =
+                        Vec::with_capacity(slices.iter().map(|s| s.len()).sum());
+                    let mut cursors = vec![0usize; slices.len()];
+                    loser_tree_merge(
+                        slices.len(),
+                        |i| {
+                            let c = cursors[i];
+                            Ok(if c < slices[i].len() {
+                                cursors[i] = c + 1;
+                                Some(slices[i][c])
+                            } else {
+                                None
+                            })
+                        },
+                        |a, i, b, j| (a.0, i) < (b.0, j),
+                        |p| {
+                            out.push(p);
+                            Ok(())
+                        },
+                    )
+                    .expect("in-memory merge cannot fail");
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("merge thread")).collect()
+    });
+    for buf in buffers {
+        for (k, v) in buf {
+            sink(k, v)?;
+        }
+    }
+    Ok(())
+}
+
 /// The paper's intermediate merge-round plan (§III, Fig. 4 discussion):
 /// with `n` on-disk files and merge width `factor`, merge the minimum
 /// number of files so that at most `factor` remain for the final merge.

@@ -60,9 +60,24 @@ impl WorkerPool {
     /// Run every task to completion (at most `max_parallel` in flight),
     /// re-raising the first panic on the caller thread.
     pub fn run_all(&self, tasks: Vec<Task>, max_parallel: usize) {
+        self.run_all_weighted(tasks.into_iter().map(|t| (0u64, t)).collect(), max_parallel);
+    }
+
+    /// [`run_all`] with straggler mitigation: tasks are dispatched
+    /// heaviest-first (longest-processing-time-first list scheduling),
+    /// so one oversized reduce partition starts immediately and overlaps
+    /// every lighter task instead of running alone at the tail. The sort
+    /// is stable and ties keep submission order, so the dispatch order —
+    /// and with uniform weights, the whole schedule — is deterministic.
+    /// Scheduling never touches task results: the engine stores them by
+    /// task index and ledger adds are commutative, so outputs are
+    /// byte-identical regardless of dispatch order.
+    pub fn run_all_weighted(&self, mut tasks: Vec<(u64, Task)>, max_parallel: usize) {
         if tasks.is_empty() {
             return;
         }
+        tasks.sort_by_key(|(w, _)| std::cmp::Reverse(*w));
+        let tasks: Vec<Task> = tasks.into_iter().map(|(_, t)| t).collect();
         let max_parallel = max_parallel.max(1);
         #[allow(clippy::type_complexity)]
         let state: Arc<(
@@ -138,6 +153,25 @@ mod tests {
             WorkerPool::global().run_all(tasks, 2);
         });
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn weighted_dispatch_is_heaviest_first_and_deterministic() {
+        // max_parallel = 1 serializes execution into dispatch order, so
+        // the observed order IS the schedule: weight-descending, ties in
+        // submission order, identical on every run.
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for _ in 0..2 {
+            let tasks: Vec<(u64, Task)> = [3u64, 9, 1, 7, 5]
+                .iter()
+                .map(|&w| {
+                    let o = order.clone();
+                    (w, Box::new(move || o.lock().unwrap().push(w)) as Task)
+                })
+                .collect();
+            WorkerPool::global().run_all_weighted(tasks, 1);
+        }
+        assert_eq!(*order.lock().unwrap(), vec![9, 7, 5, 3, 1, 9, 7, 5, 3, 1]);
     }
 
     #[test]

@@ -18,7 +18,8 @@ use crate::mapreduce::io::OutputSink;
 use crate::mapreduce::job::JobConf;
 use crate::mapreduce::mapper::{Segment, SpillFile};
 use crate::mapreduce::merge::{
-    kway_merge, kway_merge_fixed, run_merge_rounds, run_merge_rounds_fixed, FixedRun, Run,
+    kway_merge, kway_merge_fixed, merge_fixed_segments_threads, run_merge_rounds,
+    run_merge_rounds_fixed, FixedRun, Run,
 };
 use crate::mapreduce::record::{fixed_frame, Record, FIXED_WIRE_BYTES};
 use crate::mapreduce::resident;
@@ -322,7 +323,8 @@ pub fn run_reduce_task_fixed(
                 scratch += 1;
                 let taken = std::mem::take(&mut mem_segments);
                 let drained: u64 = taken.iter().map(|s| s.len() as u64).sum();
-                let written = merge_mem_to_disk_fixed(taken, &path)?;
+                let written =
+                    merge_mem_to_disk_fixed(taken, &path, conf.parallel_sort_threads)?;
                 resident::sub(drained);
                 ledger.add(Channel::ReduceLocalWrite, written);
                 stats.mem_merges += 1;
@@ -434,11 +436,18 @@ fn copy_segment_raw(src: &Path, seg: Segment, dst: &Path) -> io::Result<()> {
     w.flush()
 }
 
-fn merge_mem_to_disk_fixed(segments: Vec<Vec<(u64, u64)>>, dst: &Path) -> io::Result<u64> {
-    let runs: Vec<FixedRun> = segments.into_iter().map(FixedRun::from_vec).collect();
+/// Spill buffered shuffle segments to one sorted on-disk run. `threads`
+/// > 1 range-partitions the merge (`merge_fixed_segments_threads`);
+/// 1 keeps the literal sequential `FixedRun` + `kway_merge_fixed` path
+/// — identical bytes either way, so `ReduceLocalWrite` totals match.
+fn merge_mem_to_disk_fixed(
+    segments: Vec<Vec<(u64, u64)>>,
+    dst: &Path,
+    threads: usize,
+) -> io::Result<u64> {
     let mut w = BufWriter::new(File::create(dst)?);
     let mut bytes = 0u64;
-    kway_merge_fixed(runs, |key, val| {
+    merge_fixed_segments_threads(segments, threads, |key, val| {
         bytes += FIXED_WIRE_BYTES;
         w.write_all(&fixed_frame(key, val))
     })?;

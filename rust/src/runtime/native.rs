@@ -61,6 +61,18 @@ pub fn group_sort(keys: &mut [i64], indexes: &mut [i64]) {
     crate::util::radix::sort_pairs(keys, indexes);
 }
 
+/// [`group_sort`] with the radix passes split over `threads` chunks
+/// (`util::radix::sort_pairs_threads`). `threads <= 1` dispatches the
+/// literal sequential [`group_sort`]; any thread count yields identical
+/// arrays.
+pub fn group_sort_threads(keys: &mut [i64], indexes: &mut [i64], threads: usize) {
+    if threads <= 1 {
+        return group_sort(keys, indexes);
+    }
+    debug_assert_eq!(keys.len(), indexes.len());
+    crate::util::radix::sort_pairs_threads(keys, indexes, threads);
+}
+
 /// Ascending key sort — native `sample_sort`.
 pub fn sample_sort(keys: &mut [i64]) {
     keys.sort_unstable();

@@ -25,7 +25,7 @@ use crate::kvstore::shard::{SuffixStore, Traffic};
 use crate::mapreduce::engine::{run_job, Job, JobResult, ScratchDir};
 use crate::mapreduce::io::SplitWriter;
 use crate::mapreduce::job::JobConf;
-use crate::mapreduce::merge::kway_merge_pairs;
+use crate::mapreduce::merge::{kway_merge_pairs, kway_merge_pairs_threads};
 use crate::mapreduce::partitioner::SAMPLES_PER_REDUCER;
 use crate::mapreduce::record::{decode_i64_key, encode_i64_key, Record};
 use crate::runtime::{self, native};
@@ -62,6 +62,13 @@ pub struct SchemeConfig {
     /// (`tests/shuffle_equivalence.rs`); `false` selects the generic
     /// `Record` path for comparison.
     pub fixed_shuffle: bool,
+    /// Threads for the in-node sorting hot paths: the shuffle's spill
+    /// radix sort, the reducer's in-memory segment merges, and the
+    /// sorting-group (key, index) sort + run merge. 1 (the default)
+    /// dispatches the literal sequential code path — the equivalence
+    /// baseline; any value leaves output order and every footprint
+    /// channel byte-identical (`tests/sort_equivalence.rs`).
+    pub parallel_sort_threads: usize,
     /// RNG seed for boundary sampling (§IV-A).
     pub seed: u64,
 }
@@ -77,6 +84,7 @@ impl Default for SchemeConfig {
             put_batch: crate::kvstore::shard::BATCH_PAIRS,
             prefetch: true,
             fixed_shuffle: true,
+            parallel_sort_threads: 1,
             seed: 1,
         }
     }
@@ -312,6 +320,7 @@ impl SchemeReducer {
         //    native. Input arrives key-ordered, so blocks are nearly
         //    sorted; the kernel still performs the full network (§IV-C).
         let t_sort = Instant::now();
+        let sort_threads = self.cfg.parallel_sort_threads;
         runtime::with_engine(|eng| match eng {
             Some(eng) if eng.max_group_block() > 0 => {
                 let block = eng.preferred_group_block();
@@ -331,11 +340,11 @@ impl SchemeReducer {
                     runs.push((kb, ib));
                     i = j;
                 }
-                let (k, ix) = merge_pair_runs(runs);
+                let (k, ix) = merge_pair_runs(runs, sort_threads);
                 keys = k;
                 indexes = ix;
             }
-            _ => native::group_sort(&mut keys, &mut indexes),
+            _ => native::group_sort_threads(&mut keys, &mut indexes, sort_threads),
         });
         let sort_ns = t_sort.elapsed().as_nanos() as u64;
 
@@ -506,18 +515,28 @@ fn is_pair_sorted(keys: &[i64], indexes: &[i64]) -> bool {
 /// Merge sorted (key, index) runs in one k-way pass on the loser tree
 /// (`mapreduce/merge.rs`): O(n log k) where the old pairwise pop-merge
 /// was O(n·k), with identical output — indexes are unique, so ascending
-/// (key, index) order is the unique sorted order either way.
-fn merge_pair_runs(mut runs: Vec<(Vec<i64>, Vec<i64>)>) -> (Vec<i64>, Vec<i64>) {
+/// (key, index) order is the unique sorted order either way. `threads`
+/// > 1 range-partitions the merge across that many threads with the
+/// same output (`kway_merge_pairs_threads`); 1 keeps the sequential
+/// loser tree.
+fn merge_pair_runs(mut runs: Vec<(Vec<i64>, Vec<i64>)>, threads: usize) -> (Vec<i64>, Vec<i64>) {
     if runs.len() <= 1 {
         return runs.pop().unwrap_or_default();
     }
     let total: usize = runs.iter().map(|(k, _)| k.len()).sum();
     let mut keys = Vec::with_capacity(total);
     let mut indexes = Vec::with_capacity(total);
-    kway_merge_pairs(&runs, |k, ix| {
-        keys.push(k);
-        indexes.push(ix);
-    });
+    if threads <= 1 {
+        kway_merge_pairs(&runs, |k, ix| {
+            keys.push(k);
+            indexes.push(ix);
+        });
+    } else {
+        kway_merge_pairs_threads(&runs, threads, |k, ix| {
+            keys.push(k);
+            indexes.push(ix);
+        });
+    }
     (keys, indexes)
 }
 
@@ -645,6 +664,7 @@ pub fn run_files(
     // the fixed-width fast path applies whenever the config asks for it
     let mut jconf = cfg.conf.clone();
     jconf.fixed_width = cfg.fixed_shuffle;
+    jconf.parallel_sort_threads = cfg.parallel_sort_threads;
     let job = Job {
         name: "scheme".into(),
         conf: jconf,

@@ -98,12 +98,208 @@ fn scatter<T: RadixKey>(src: &[T], dst: &mut [T], d: usize, offsets: &mut [u32; 
     }
 }
 
+// ---------------- parallel path ----------------
+
+/// Fewest items per worker chunk before [`lsd_sort_threads`] engages its
+/// parallel scatter — below this, thread spawn and cache-line contention
+/// cost more than they save, so the call degrades to [`lsd_sort`]
+/// (byte-identical output either way; see `tests/sort_equivalence.rs`).
+const PAR_MIN_PER_CHUNK: usize = 1 << 13;
+
+/// A raw destination pointer that may cross thread boundaries. Each
+/// scatter thread writes a provably disjoint index set (see
+/// [`par_scatter`]), which is what makes sharing it sound.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+
+/// Parallel stable LSD radix sort — the same digit plan, digit skipping,
+/// and ping-pong as [`lsd_sort`], with each pass's histogram and scatter
+/// split over `threads` contiguous chunks. The scatter is deterministic:
+/// within every bucket the destination region is partitioned
+/// chunk-major (chunk 0's items first, then chunk 1's, ...), and each
+/// chunk scatters in input order — so equal digits land in global input
+/// order, exactly as the sequential scatter places them. Output is
+/// therefore byte-identical to [`lsd_sort`] for every input and thread
+/// count, independent of scheduling.
+///
+/// `threads <= 1` dispatches the literal sequential [`lsd_sort`] — the
+/// equivalence baseline, not a 1-thread instance of this code.
+pub fn lsd_sort_threads<T: RadixKey + Send + Sync>(
+    data: &mut [T],
+    scratch: &mut Vec<T>,
+    threads: usize,
+) {
+    let n = data.len();
+    if threads <= 1 {
+        return lsd_sort(data, scratch);
+    }
+    let chunks = threads.min(n / PAR_MIN_PER_CHUNK);
+    if chunks < 2 {
+        return lsd_sort(data, scratch);
+    }
+    debug_assert!(n <= u32::MAX as usize, "radix counters are u32");
+    scratch.clear();
+    scratch.resize(n, T::default());
+
+    // chunk c covers [bounds[c], bounds[c+1]) of the current source
+    let bounds: Vec<usize> = (0..=chunks).map(|c| c * n / chunks).collect();
+
+    // Parallel pre-scan: per-chunk histograms of every digit at once,
+    // reduced to the global histogram for the skip test. The per-chunk
+    // counts stay valid for the first executed pass (items have not
+    // moved yet), so that pass skips its counting sweep.
+    let chunk_hists = par_all_digit_counts(&*data, &bounds);
+    let mut hist = vec![[0u32; 256]; T::DIGITS];
+    for ch in &chunk_hists {
+        for (d, hd) in ch.iter().enumerate() {
+            for (b, c) in hd.iter().enumerate() {
+                hist[d][b] += *c;
+            }
+        }
+    }
+
+    let mut in_data = true;
+    let mut first_pass = true;
+    for (d, h) in hist.iter().enumerate() {
+        if h.iter().any(|&c| c as usize == n) {
+            continue; // every item shares this digit: pass is a no-op
+        }
+        // per-chunk counts of digit d over the CURRENT source layout
+        let counts: Vec<[u32; 256]> = if first_pass {
+            chunk_hists.iter().map(|ch| ch[d]).collect()
+        } else if in_data {
+            par_digit_counts(&*data, &bounds, d)
+        } else {
+            par_digit_counts(scratch, &bounds, d)
+        };
+        first_pass = false;
+        // exclusive prefix sums in (bucket, chunk) order: bucket b's
+        // destination region starts after all smaller buckets and is
+        // itself laid out chunk-major — the stability invariant.
+        let mut starts: Vec<[u32; 256]> = vec![[0u32; 256]; chunks];
+        let mut sum = 0u32;
+        for b in 0..256 {
+            for (c, st) in starts.iter_mut().enumerate() {
+                st[b] = sum;
+                sum += counts[c][b];
+            }
+        }
+        if in_data {
+            par_scatter(&*data, scratch, &bounds, d, starts);
+        } else {
+            par_scatter(scratch, data, &bounds, d, starts);
+        }
+        in_data = !in_data;
+    }
+    if !in_data {
+        data.copy_from_slice(scratch);
+    }
+}
+
+/// Histogram every digit of every chunk of `src` at once, in parallel —
+/// the parallel analogue of [`lsd_sort`]'s single pre-scan.
+fn par_all_digit_counts<T: RadixKey + Send + Sync>(
+    src: &[T],
+    bounds: &[usize],
+) -> Vec<Vec<[u32; 256]>> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = bounds
+            .windows(2)
+            .map(|w| {
+                let chunk = &src[w[0]..w[1]];
+                s.spawn(move || {
+                    let mut h = vec![[0u32; 256]; T::DIGITS];
+                    for item in chunk {
+                        for (d, hd) in h.iter_mut().enumerate() {
+                            hd[item.digit(d) as usize] += 1;
+                        }
+                    }
+                    h
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("histogram thread")).collect()
+    })
+}
+
+/// Count digit `d` per chunk of `src`, in parallel.
+fn par_digit_counts<T: RadixKey + Send + Sync>(
+    src: &[T],
+    bounds: &[usize],
+    d: usize,
+) -> Vec<[u32; 256]> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = bounds
+            .windows(2)
+            .map(|w| {
+                let chunk = &src[w[0]..w[1]];
+                s.spawn(move || {
+                    let mut h = [0u32; 256];
+                    for item in chunk {
+                        h[item.digit(d) as usize] += 1;
+                    }
+                    h
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("count thread")).collect()
+    })
+}
+
+/// Scatter every chunk of `src` into `dst` concurrently, chunk c using
+/// its own running cursors `starts[c]`.
+///
+/// Safety of the shared `dst` pointer: the cursor construction in
+/// [`lsd_sort_threads`] gives chunk c exactly `counts[c][b]` slots in
+/// bucket b starting at `starts[c][b]`, and those slot ranges tile
+/// [0, n) without overlap across all (bucket, chunk) pairs — every
+/// `dst` index is written by exactly one thread, exactly once.
+fn par_scatter<T: RadixKey + Send + Sync>(
+    src: &[T],
+    dst: &mut [T],
+    bounds: &[usize],
+    d: usize,
+    starts: Vec<[u32; 256]>,
+) {
+    let dst_base = dst.as_mut_ptr();
+    std::thread::scope(|s| {
+        for (c, mut offsets) in starts.into_iter().enumerate() {
+            let chunk = &src[bounds[c]..bounds[c + 1]];
+            let dst = SendPtr(dst_base);
+            s.spawn(move || {
+                // destructure the whole wrapper so the closure captures
+                // `SendPtr` (Send), not the raw pointer field
+                let SendPtr(dst) = dst;
+                for item in chunk {
+                    let b = item.digit(d) as usize;
+                    // SAFETY: disjoint (bucket, chunk) slot ranges — see
+                    // the function-level invariant above.
+                    unsafe { *dst.add(offsets[b] as usize) = *item };
+                    offsets[b] += 1;
+                }
+            });
+        }
+    });
+}
+
 /// Sort a mapper spill buffer by (partition, key), stable in emission
 /// order — the radix replacement for the generic path's
 /// `sort_by(partition, key-bytes)` (byte-lexicographic order over an
 /// 8-byte big-endian key equals unsigned numeric order).
 pub fn sort_spill(recs: &mut [FixedRec], scratch: &mut Vec<FixedRec>) {
     lsd_sort(recs, scratch);
+}
+
+/// [`sort_spill`] with the spill buffer split over `threads` scatter
+/// chunks. `threads <= 1` calls the literal sequential [`sort_spill`];
+/// any thread count produces byte-identical output (stability included)
+/// — proven in `tests/sort_equivalence.rs`.
+pub fn sort_spill_threads(recs: &mut [FixedRec], scratch: &mut Vec<FixedRec>, threads: usize) {
+    if threads <= 1 {
+        sort_spill(recs, scratch);
+    } else {
+        lsd_sort_threads(recs, scratch, threads);
+    }
 }
 
 /// Lexicographic (key, index) pair sort over parallel `i64` arrays —
@@ -119,6 +315,28 @@ pub fn sort_pairs(keys: &mut [i64], indexes: &mut [i64]) {
         .collect();
     let mut scratch = Vec::new();
     lsd_sort(&mut packed, &mut scratch);
+    for (i, p) in packed.iter().enumerate() {
+        keys[i] = unflip((p >> 64) as u64);
+        indexes[i] = unflip(*p as u64);
+    }
+}
+
+/// [`sort_pairs`] with the radix passes split over `threads` chunks.
+/// The pack/unpack sweeps stay sequential (they are order-preserving
+/// maps); only the sort itself parallelizes. `threads <= 1` calls the
+/// literal sequential [`sort_pairs`].
+pub fn sort_pairs_threads(keys: &mut [i64], indexes: &mut [i64], threads: usize) {
+    if threads <= 1 {
+        return sort_pairs(keys, indexes);
+    }
+    debug_assert_eq!(keys.len(), indexes.len());
+    let mut packed: Vec<u128> = keys
+        .iter()
+        .zip(indexes.iter())
+        .map(|(&k, &ix)| ((flip(k) as u128) << 64) | flip(ix) as u128)
+        .collect();
+    let mut scratch = Vec::new();
+    lsd_sort_threads(&mut packed, &mut scratch, threads);
     for (i, p) in packed.iter().enumerate() {
         keys[i] = unflip((p >> 64) as u64);
         indexes[i] = unflip(*p as u64);
@@ -204,6 +422,44 @@ mod tests {
         sort_pairs(&mut keys, &mut idxs);
         let got: Vec<(i64, i64)> = keys.into_iter().zip(idxs).collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_sort_matches_sequential_above_engage_threshold() {
+        // big enough that lsd_sort_threads actually splits into chunks
+        let n = 4 * PAR_MIN_PER_CHUNK + 37;
+        let mut rng = Rng::new(11);
+        let base: Vec<FixedRec> = (0..n)
+            .map(|v| FixedRec {
+                partition: rng.below(7) as u32,
+                key: rng.below(1 << 20), // duplicate-heavy: stability matters
+                value: v as u64,
+            })
+            .collect();
+        let mut want = base.clone();
+        let mut scratch = Vec::new();
+        sort_spill(&mut want, &mut scratch);
+        for threads in [2, 3, 8] {
+            let mut got = base.clone();
+            sort_spill_threads(&mut got, &mut scratch, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_pairs_match_sequential() {
+        let n = 2 * PAR_MIN_PER_CHUNK + 5;
+        let mut rng = Rng::new(23);
+        let keys0: Vec<i64> = (0..n).map(|_| rng.below(512) as i64 - 256).collect();
+        let idxs0: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64).collect();
+        let (mut k_seq, mut i_seq) = (keys0.clone(), idxs0.clone());
+        sort_pairs(&mut k_seq, &mut i_seq);
+        for threads in [2, 8] {
+            let (mut k, mut i) = (keys0.clone(), idxs0.clone());
+            sort_pairs_threads(&mut k, &mut i, threads);
+            assert_eq!(k, k_seq, "keys, threads={threads}");
+            assert_eq!(i, i_seq, "indexes, threads={threads}");
+        }
     }
 
     #[test]

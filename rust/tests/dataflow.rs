@@ -64,9 +64,15 @@ fn streamed_and_collected_outputs_are_identical_on_both_shuffle_paths() {
     };
     let mut footprints: Vec<Footprint> = Vec::new();
     let mut outputs: Vec<Vec<Record>> = Vec::new();
-    for fixed in [false, true] {
-        let (job, input) =
-            sort_job(6000, 3, JobConf { fixed_width: fixed, ..conf.clone() }, 99);
+    for (fixed, sort_threads) in
+        [(false, 1), (false, 4), (true, 1), (true, 4)]
+    {
+        let (job, input) = sort_job(
+            6000,
+            3,
+            JobConf { fixed_width: fixed, parallel_sort_threads: sort_threads, ..conf.clone() },
+            99,
+        );
         let spool = ScratchDir::new(None, "dataflow-eq-in").unwrap();
         let splits =
             spool_records(spool.path.join("input"), &input, job.conf.split_bytes).unwrap();
@@ -107,16 +113,18 @@ fn streamed_and_collected_outputs_are_identical_on_both_shuffle_paths() {
         footprints.push(fp);
         outputs.push(flat);
     }
-    // both shuffle paths: identical records and identical totals on
-    // every footprint channel
-    assert_eq!(outputs[0], outputs[1]);
-    for ch in CHANNELS {
-        assert_eq!(
-            footprints[0].get(ch),
-            footprints[1].get(ch),
-            "{} must match across shuffle paths",
-            ch.name()
-        );
+    // every (shuffle path, parallel_sort_threads) combination: identical
+    // records and identical totals on every footprint channel
+    for i in 1..outputs.len() {
+        assert_eq!(outputs[0], outputs[i], "output diverged in combination {i}");
+        for ch in CHANNELS {
+            assert_eq!(
+                footprints[0].get(ch),
+                footprints[i].get(ch),
+                "{} must match across shuffle paths and sort threads (combination {i})",
+                ch.name()
+            );
+        }
     }
 }
 
@@ -135,9 +143,16 @@ fn input_beyond_buffer_budgets_stays_under_budget() {
         task_parallelism: 2,
         ..JobConf::default()
     };
-    for fixed in [false, true] {
-        let (job, input) =
-            sort_job(20_000, 2, JobConf { fixed_width: fixed, ..conf.clone() }, 7);
+    // parallel_sort_threads = 4 rides along: at these tiny buffer sizes
+    // the parallel paths degrade to the sequential code by design, so
+    // the budget bound must hold exactly as at threads = 1
+    for (fixed, sort_threads) in [(false, 1), (true, 1), (true, 4)] {
+        let (job, input) = sort_job(
+            20_000,
+            2,
+            JobConf { fixed_width: fixed, parallel_sort_threads: sort_threads, ..conf.clone() },
+            7,
+        );
         let wire = input[0].wire_bytes(); // 24 B, uniform
 
         // record-count budgets implied by the byte knobs (+ slack for

@@ -27,6 +27,7 @@ fn scheme_once(
     fixed: bool,
     io_sort: u64,
     n_reducers: usize,
+    sort_threads: usize,
 ) -> (Vec<i64>, Vec<Record>, Footprint) {
     let store = SharedStore::new(3);
     let s = store.clone();
@@ -38,11 +39,13 @@ fn scheme_once(
             io_sort_bytes: io_sort,
             reducer_heap_bytes: 48 << 10, // tight: reduce-side spills too
             io_sort_factor: 3,
+            parallel_sort_threads: sort_threads,
             ..JobConf::default()
         },
         group_threshold: 600,
         samples_per_reducer: 200,
         fixed_shuffle: fixed,
+        parallel_sort_threads: sort_threads,
         ..Default::default()
     };
     let ledger = Ledger::new();
@@ -69,8 +72,8 @@ fn fixed_shuffle_matches_generic_across_spills_and_reducers() {
     });
     for &n_reducers in &REDUCER_COUNTS {
         for &(io_sort, label) in &SPILL_THRESHOLDS {
-            let (order_g, out_g, fp_g) = scheme_once(&reads, false, io_sort, n_reducers);
-            let (order_f, out_f, fp_f) = scheme_once(&reads, true, io_sort, n_reducers);
+            let (order_g, out_g, fp_g) = scheme_once(&reads, false, io_sort, n_reducers, 1);
+            let (order_f, out_f, fp_f) = scheme_once(&reads, true, io_sort, n_reducers, 1);
             assert_eq!(
                 order_f, order_g,
                 "suffix order must match ({label} spills, {n_reducers} reducers)"
@@ -94,6 +97,48 @@ fn fixed_shuffle_matches_generic_across_spills_and_reducers() {
                 assert!(
                     fp_f.get(Channel::MapLocalRead) > 0,
                     "tiny spill threshold must force map-side merge rounds"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_sort_threads_leave_order_output_and_ledger_identical() {
+    // parallel_sort_threads {1, 4} × shuffle paths × spill thresholds:
+    // the threads=1 run IS the literal sequential code, so equality here
+    // proves the parallel in-node sorting changes nothing but CPU time —
+    // including on the out-of-core (tiny-spill, multi-merge-round) path.
+    let reads = synth_corpus(&CorpusSpec {
+        n_reads: 90,
+        read_len: 40,
+        len_jitter: 5,
+        genome_len: 2048,
+        seed: 2025,
+        ..Default::default()
+    });
+    for fixed in [false, true] {
+        for &(io_sort, label) in &SPILL_THRESHOLDS {
+            let (order_1, out_1, fp_1) = scheme_once(&reads, fixed, io_sort, 3, 1);
+            let (order_4, out_4, fp_4) = scheme_once(&reads, fixed, io_sort, 3, 4);
+            assert_eq!(
+                order_4, order_1,
+                "suffix order must match (fixed={fixed}, {label} spills)"
+            );
+            assert_eq!(out_4, out_1, "records must match (fixed={fixed}, {label} spills)");
+            for ch in CHANNELS {
+                assert_eq!(
+                    fp_4.get(ch),
+                    fp_1.get(ch),
+                    "{} bytes must match (fixed={fixed}, {label} spills)",
+                    ch.name()
+                );
+            }
+            validate_order(&reads, &order_4).expect("order invalid");
+            if label == "tiny" {
+                assert!(
+                    fp_4.get(Channel::MapLocalRead) > 0,
+                    "tiny spill threshold must force the out-of-core merge path"
                 );
             }
         }

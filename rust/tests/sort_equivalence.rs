@@ -1,0 +1,274 @@
+//! Deterministic-equivalence oracle for the parallel in-node sorting
+//! paths: the parallel stable LSD radix sort and the range-partitioned
+//! parallel merges must produce output byte-identical to their
+//! sequential counterparts on every input — including adversarial ones
+//! (all-equal keys, already-sorted, reverse-sorted, below the engage
+//! threshold, empty runs, duplicate-heavy) — at every thread count, and
+//! a whole job run repeatedly with threads=8 must be bit-identical
+//! across runs (catching scheduling-order nondeterminism that a single
+//! comparison would miss).
+
+use std::sync::Arc;
+
+use samr::footprint::{Footprint, Ledger, CHANNELS};
+use samr::kvstore::shard::{SharedStore, SuffixStore};
+use samr::mapreduce::merge::{
+    kway_merge_fixed, kway_merge_pairs, kway_merge_pairs_threads, merge_fixed_segments_threads,
+    FixedRun,
+};
+use samr::mapreduce::record::FixedRec;
+use samr::mapreduce::JobConf;
+use samr::scheme::{self, SchemeConfig, StoreFactory};
+use samr::suffix::reads::{synth_corpus, CorpusSpec};
+use samr::util::radix::{sort_pairs, sort_pairs_threads, sort_spill, sort_spill_threads};
+use samr::util::rng::Rng;
+
+/// Matches `util::radix::PAR_MIN_PER_CHUNK` / the merges'
+/// `PAR_MERGE_MIN_PER_PART`: inputs must exceed 2× this for the
+/// parallel code to actually engage (below it the call intentionally
+/// degrades to the sequential path — also covered here).
+const ENGAGE: usize = 1 << 13;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+// ---------------- radix: spill buffers ----------------
+
+/// Adversarial spill buffers; every record's `value` tags its input
+/// position, so stability (equal (partition, key) keep input order) is
+/// byte-checkable through the plain equality assertion.
+fn spill_cases() -> Vec<(&'static str, Vec<FixedRec>)> {
+    let big = 3 * ENGAGE + 41; // engages the parallel scatter
+    let mut rng = Rng::new(2026);
+    let mk = |n: usize, mut f: Box<dyn FnMut(usize) -> (u32, u64)>| -> Vec<FixedRec> {
+        (0..n)
+            .map(|i| {
+                let (partition, key) = f(i);
+                FixedRec { partition, key, value: i as u64 }
+            })
+            .collect()
+    };
+    let mut random_key = {
+        let mut r = Rng::new(7);
+        move |_: usize| (0u32, r.next_u64())
+    };
+    vec![
+        ("all-equal", mk(big, Box::new(|_| (3, 42)))),
+        ("already-sorted", mk(big, Box::new(|i| (0, i as u64)))),
+        ("reverse-sorted", mk(big, Box::new(move |i| (0, (big - i) as u64)))),
+        ("single-chunk", mk(ENGAGE / 2, Box::new(move |_| (rng.below(4) as u32, rng.below(100))))),
+        ("duplicate-heavy", {
+            let mut r = Rng::new(5);
+            mk(big, Box::new(move |_| (r.below(3) as u32, r.below(17))))
+        }),
+        ("random-wide", mk(big, Box::new(move |i| random_key(i)))),
+    ]
+}
+
+#[test]
+fn parallel_spill_sort_is_byte_identical_and_stable() {
+    for (name, base) in spill_cases() {
+        let mut scratch = Vec::new();
+        let mut want = base.clone();
+        sort_spill(&mut want, &mut scratch);
+        // stability oracle on the sequential output itself
+        for w in want.windows(2) {
+            if (w[0].partition, w[0].key) == (w[1].partition, w[1].key) {
+                assert!(w[0].value < w[1].value, "{name}: sequential sort unstable");
+            }
+        }
+        for threads in THREADS {
+            let mut got = base.clone();
+            sort_spill_threads(&mut got, &mut scratch, threads);
+            assert_eq!(got, want, "{name}: threads={threads} diverged from sequential");
+        }
+    }
+}
+
+// ---------------- radix: (key, index) pair sort ----------------
+
+#[test]
+fn parallel_pair_sort_is_byte_identical() {
+    let n = 2 * ENGAGE + 9;
+    let cases: Vec<(&str, Vec<i64>)> = vec![
+        ("all-equal", vec![5i64; n]),
+        ("already-sorted", (0..n as i64).collect()),
+        ("reverse-sorted", (0..n as i64).rev().collect()),
+        ("duplicate-heavy", {
+            let mut r = Rng::new(31);
+            (0..n).map(|_| r.below(23) as i64 - 11).collect()
+        }),
+        ("negative-heavy", {
+            let mut r = Rng::new(32);
+            (0..n).map(|_| r.next_u64() as i64).collect()
+        }),
+    ];
+    let mut rng = Rng::new(33);
+    let idxs0: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64).collect();
+    for (name, keys0) in cases {
+        let (mut k_seq, mut i_seq) = (keys0.clone(), idxs0.clone());
+        sort_pairs(&mut k_seq, &mut i_seq);
+        for threads in THREADS {
+            let (mut k, mut i) = (keys0.clone(), idxs0.clone());
+            sort_pairs_threads(&mut k, &mut i, threads);
+            assert_eq!(k, k_seq, "{name}: keys diverged at threads={threads}");
+            assert_eq!(i, i_seq, "{name}: indexes diverged at threads={threads}");
+        }
+    }
+}
+
+// ---------------- merges ----------------
+
+/// Sorted (keys, indexes) runs with globally unique indexes (the
+/// scheme's regime) plus adversarial shapes: empty runs interleaved,
+/// all-equal keys, one giant run among dwarfs.
+fn pair_run_cases() -> Vec<(&'static str, Vec<(Vec<i64>, Vec<i64>)>)> {
+    let mut next_index = 0i64;
+    let mut run = |n: usize, key_space: u64, seed: u64| -> (Vec<i64>, Vec<i64>) {
+        let mut r = Rng::new(seed);
+        let mut pairs: Vec<(i64, i64)> = (0..n)
+            .map(|_| {
+                next_index += 1;
+                (r.below(key_space.max(1)) as i64, next_index)
+            })
+            .collect();
+        pairs.sort_unstable();
+        (pairs.iter().map(|p| p.0).collect(), pairs.iter().map(|p| p.1).collect())
+    };
+    vec![
+        ("empty-runs-mixed", vec![
+            (Vec::new(), Vec::new()),
+            run(3 * ENGAGE, 50, 1),
+            (Vec::new(), Vec::new()),
+            run(2 * ENGAGE, 50, 2),
+        ]),
+        ("all-equal-keys", vec![run(2 * ENGAGE, 1, 3), run(2 * ENGAGE, 1, 4)]),
+        ("one-giant-run", vec![run(64, 9, 5), run(5 * ENGAGE, 9, 6), run(64, 9, 7)]),
+        ("duplicate-heavy", (0..6).map(|s| run(ENGAGE, 13, 10 + s)).collect()),
+        ("below-threshold", vec![run(100, 7, 20), run(100, 7, 21)]),
+        ("single-run", vec![run(2 * ENGAGE, 40, 22)]),
+        ("no-runs", Vec::new()),
+    ]
+}
+
+#[test]
+fn parallel_pair_merge_is_byte_identical() {
+    for (name, runs) in pair_run_cases() {
+        let mut want = Vec::new();
+        kway_merge_pairs(&runs, |k, v| want.push((k, v)));
+        for threads in THREADS {
+            let mut got = Vec::new();
+            kway_merge_pairs_threads(&runs, threads, |k, v| got.push((k, v)));
+            assert_eq!(got, want, "{name}: threads={threads} diverged from sequential");
+        }
+    }
+}
+
+#[test]
+fn parallel_fixed_segment_merge_is_byte_identical_and_tie_stable() {
+    // segments sorted by key only; values tag (segment, position) so the
+    // (key, segment-index) tie-break is byte-checkable
+    let seg = |n: usize, key_space: u64, tag: u64, seed: u64| -> Vec<(u64, u64)> {
+        let mut r = Rng::new(seed);
+        let mut s: Vec<(u64, u64)> =
+            (0..n).map(|i| (r.below(key_space.max(1)), tag * 1_000_000 + i as u64)).collect();
+        s.sort_by_key(|p| p.0); // stable: positions survive within a key
+        s
+    };
+    let cases: Vec<(&'static str, Vec<Vec<(u64, u64)>>)> = vec![
+        ("all-equal-keys", (0..4).map(|t| seg(ENGAGE, 1, t, 40 + t)).collect()),
+        ("duplicate-heavy", (0..5).map(|t| seg(ENGAGE, 11, t, 50 + t)).collect()),
+        (
+            "empty-segments-mixed",
+            vec![Vec::new(), seg(3 * ENGAGE, 100, 1, 60), Vec::new(), seg(ENGAGE, 100, 2, 61)],
+        ),
+        ("below-threshold", vec![seg(50, 5, 1, 70), seg(50, 5, 2, 71)]),
+    ];
+    for (name, segments) in cases {
+        let mut want = Vec::new();
+        kway_merge_fixed(
+            segments.iter().cloned().map(FixedRun::from_vec).collect(),
+            |k, v| {
+                want.push((k, v));
+                Ok(())
+            },
+        )
+        .unwrap();
+        for threads in THREADS {
+            let mut got = Vec::new();
+            merge_fixed_segments_threads(segments.clone(), threads, |k, v| {
+                got.push((k, v));
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(got, want, "{name}: threads={threads} diverged from sequential");
+        }
+    }
+}
+
+// ---------------- whole-job repeated-run determinism ----------------
+
+/// One scheme run; returns the raw output-file bytes per reducer and the
+/// full ledger snapshot. Knobs sized so the spill radix sort and the
+/// sorting-group pair sort both cross the parallel engage threshold.
+fn scheme_run_raw(threads: usize) -> (Vec<Vec<u8>>, Footprint) {
+    let reads = synth_corpus(&CorpusSpec {
+        n_reads: 400,
+        read_len: 60,
+        len_jitter: 5,
+        genome_len: 4096, // repetitive enough to force tie-break groups
+        seed: 4242,
+        ..Default::default()
+    });
+    let store = SharedStore::new(3);
+    let s = store.clone();
+    let factory: StoreFactory = Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>);
+    let cfg = SchemeConfig {
+        conf: JobConf {
+            n_reducers: 2,
+            split_bytes: 64 << 10,
+            io_sort_bytes: 1 << 20, // one big spill: > 2^14 records, radix engages
+            io_sort_factor: 3,
+            parallel_sort_threads: threads,
+            ..JobConf::default()
+        },
+        group_threshold: 30_000, // one big flush: pair sort engages
+        samples_per_reducer: 200,
+        parallel_sort_threads: threads,
+        ..Default::default()
+    };
+    let ledger = Ledger::new();
+    let res = scheme::run(&reads, &cfg, factory, &ledger).expect("scheme run");
+    let raw: Vec<Vec<u8>> = res
+        .job
+        .output
+        .iter()
+        .map(|f| std::fs::read(&f.path).expect("read output file"))
+        .collect();
+    (raw, ledger.snapshot())
+}
+
+#[test]
+fn repeated_parallel_runs_are_bit_identical_and_match_sequential() {
+    let (raw_seq, fp_seq) = scheme_run_raw(1);
+    let mut runs = Vec::new();
+    for _ in 0..3 {
+        runs.push(scheme_run_raw(8));
+    }
+    for (i, (raw, fp)) in runs.iter().enumerate() {
+        assert_eq!(
+            raw, &raw_seq,
+            "run {i}: threads=8 output files differ from the sequential baseline"
+        );
+        for ch in CHANNELS {
+            assert_eq!(
+                fp.get(ch),
+                fp_seq.get(ch),
+                "run {i}: {} differs from the sequential baseline",
+                ch.name()
+            );
+        }
+    }
+    // and the three parallel runs agree with each other bit-for-bit
+    assert_eq!(runs[0].0, runs[1].0);
+    assert_eq!(runs[1].0, runs[2].0);
+}
