@@ -1,0 +1,344 @@
+//! Deterministic fault injection — the harness behind `tests/fault_tolerance.rs`.
+//!
+//! A [`FaultPlan`] is an inert description of failures to inject into one
+//! job run: task-attempt panics/errors keyed by `(phase, task, attempt)`,
+//! a shard kill/revive schedule keyed by request count, and an optional
+//! per-reply delay. It is threaded behind zero-cost hooks: the engine
+//! checks `JobConf::faults` (default `None`, so the hot path pays one
+//! `Option` test per attempt), and the KV server consults the plan only
+//! when started with one. Everything is counter-triggered — nothing
+//! depends on wall-clock timing — so a given plan produces the same
+//! injected failures on every run.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Job phase a task fault targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Map tasks.
+    Map,
+    /// Reduce tasks.
+    Reduce,
+}
+
+impl Phase {
+    /// Lower-case name matching the engine's error strings ("map"/"reduce").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Map => "map",
+            Phase::Reduce => "reduce",
+        }
+    }
+}
+
+/// How an injected task failure surfaces inside the attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskFaultKind {
+    /// `panic!` from inside the task closure — exercises the engine's
+    /// `catch_unwind` conversion plus retry.
+    Panic,
+    /// A plain `io::Error` returned by the attempt.
+    Error,
+}
+
+/// Where within the attempt the fault fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Before the task body runs — a cheap failure, nothing charged yet.
+    Start,
+    /// After the task body completed — the expensive case: a full
+    /// attempt's ledger charges and scratch files must be rolled back.
+    Finish,
+}
+
+/// One injected task-attempt failure.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskFaultSpec {
+    /// Phase of the targeted task.
+    pub phase: Phase,
+    /// Task id within the phase.
+    pub task: usize,
+    /// Zero-based attempt number the fault fires on.
+    pub attempt: usize,
+    /// Panic or error.
+    pub kind: TaskFaultKind,
+    /// Fire before or after the task body.
+    pub point: FaultPoint,
+}
+
+/// Counter-triggered shard kill/revive schedule, consulted by the KV
+/// server started with this plan.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardFault {
+    /// Index of the shard (server) the schedule applies to.
+    pub shard: usize,
+    /// The Nth command processed by that shard trips the kill: the
+    /// connection drops mid-pipeline and the shard refuses new work.
+    pub kill_at_request: u64,
+    /// While down, this many fresh connections are accepted and
+    /// immediately dropped before the shard revives — forcing the
+    /// client through multiple reconnect/backoff cycles.
+    pub refuse_connects: u64,
+}
+
+/// A seeded, deterministic set of faults for one job run, plus the shared
+/// counters that drive the shard kill/revive state machine and the
+/// observability tallies.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Task-attempt failures to inject. Each `(phase, task, attempt)`
+    /// runs at most once per job, so a spec fires at most once.
+    pub task_faults: Vec<TaskFaultSpec>,
+    /// Optional shard kill/revive schedule.
+    pub shard: Option<ShardFault>,
+    /// Optional delay applied by the server before processing each
+    /// command (never while holding the store lock). With a short client
+    /// read timeout this exercises the timeout→replay path; output and
+    /// ledger totals are identical whether or not the timeout fires.
+    pub reply_delay: Option<Duration>,
+    // ---- runtime state (shared via Arc) ----
+    requests: AtomicU64,
+    down: AtomicBool,
+    rejected: AtomicU64,
+    // ---- observability ----
+    task_faults_fired: AtomicUsize,
+    shard_kills: AtomicUsize,
+}
+
+impl FaultPlan {
+    /// Plan with explicit task faults and no shard schedule.
+    pub fn with_task_faults(task_faults: Vec<TaskFaultSpec>) -> FaultPlan {
+        FaultPlan {
+            task_faults,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Plan with only a shard kill/revive schedule.
+    pub fn with_shard_fault(shard: ShardFault) -> FaultPlan {
+        FaultPlan {
+            shard: Some(shard),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Deterministically derive a plan from a seed: one seed-chosen map
+    /// task and one reduce task each get a *failure chain* — faults on
+    /// attempts `0..=depth` with `depth < max_attempts - 1`, each with a
+    /// seed-chosen kind and point. Chains matter: an attempt `k` only
+    /// runs after attempts `0..k` failed, so a lone fault at attempt 1
+    /// would never fire. Every spec in a seeded plan is reachable, and
+    /// the retry budget always absorbs the whole chain.
+    pub fn seeded(seed: u64, n_maps: usize, n_reduces: usize, max_attempts: usize) -> FaultPlan {
+        assert!(max_attempts >= 2, "a seeded plan needs at least one retry");
+        let mut rng = Rng::new(seed);
+        let mut faults = Vec::new();
+        let mut chain = |phase: Phase, n_tasks: usize, rng: &mut Rng| {
+            let task = rng.below(n_tasks.max(1) as u64) as usize;
+            let depth = rng.below((max_attempts - 1) as u64) as usize;
+            for attempt in 0..=depth {
+                faults.push(TaskFaultSpec {
+                    phase,
+                    task,
+                    attempt,
+                    kind: if rng.below(2) == 0 {
+                        TaskFaultKind::Panic
+                    } else {
+                        TaskFaultKind::Error
+                    },
+                    point: if rng.below(2) == 0 {
+                        FaultPoint::Start
+                    } else {
+                        FaultPoint::Finish
+                    },
+                });
+            }
+        };
+        chain(Phase::Map, n_maps, &mut rng);
+        chain(Phase::Reduce, n_reduces, &mut rng);
+        FaultPlan::with_task_faults(faults)
+    }
+
+    /// Seed for seeded plans: `SAMR_FAULT_SEED` if set (CI pins it),
+    /// otherwise `default`. Sweep seeds locally with e.g.
+    /// `for s in $(seq 0 31); do SAMR_FAULT_SEED=$s cargo test --test fault_tolerance; done`.
+    pub fn env_seed(default: u64) -> u64 {
+        std::env::var("SAMR_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Engine hook: fail the current attempt if a spec matches. Panics
+    /// for [`TaskFaultKind::Panic`], returns `Err` for
+    /// [`TaskFaultKind::Error`]; `Ok(())` when nothing matches.
+    pub fn maybe_fail(
+        &self,
+        phase: Phase,
+        task: usize,
+        attempt: usize,
+        point: FaultPoint,
+    ) -> std::io::Result<()> {
+        for f in &self.task_faults {
+            if f.phase == phase && f.task == task && f.attempt == attempt && f.point == point {
+                self.task_faults_fired.fetch_add(1, Ordering::Relaxed);
+                let msg = format!(
+                    "injected {:?} fault: {} task {task} attempt {attempt} at {point:?}",
+                    f.kind,
+                    phase.name(),
+                );
+                match f.kind {
+                    TaskFaultKind::Panic => panic!("{msg}"),
+                    TaskFaultKind::Error => return Err(std::io::Error::other(msg)),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Server hook, called once per command processed by shard `shard`.
+    /// Returns `true` when the connection must drop *now* — either the
+    /// request counter just hit the kill trigger, or the shard is down.
+    pub fn on_request(&self, shard: usize) -> bool {
+        let Some(sf) = self.shard else { return false };
+        if sf.shard != shard {
+            return false;
+        }
+        let n = self.requests.fetch_add(1, Ordering::Relaxed);
+        if n == sf.kill_at_request {
+            self.down.store(true, Ordering::SeqCst);
+            self.shard_kills.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        self.down.load(Ordering::SeqCst)
+    }
+
+    /// Server hook, called for each freshly accepted connection on shard
+    /// `shard`. Returns `true` when the connection must be refused (the
+    /// shard is down). Each refusal counts toward the revive trigger;
+    /// once `refuse_connects` connections have been turned away the
+    /// shard comes back up.
+    pub fn on_connect(&self, shard: usize) -> bool {
+        let Some(sf) = self.shard else { return false };
+        if sf.shard != shard || !self.down.load(Ordering::SeqCst) {
+            return false;
+        }
+        let r = self.rejected.fetch_add(1, Ordering::SeqCst);
+        if r + 1 >= sf.refuse_connects {
+            self.down.store(false, Ordering::SeqCst);
+        }
+        true
+    }
+
+    /// How many task-attempt faults have fired so far.
+    pub fn task_faults_fired(&self) -> usize {
+        self.task_faults_fired.load(Ordering::Relaxed)
+    }
+
+    /// How many shard kills have fired so far.
+    pub fn shard_kills(&self) -> usize {
+        self.shard_kills.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_fault_fires_on_exact_coordinates_only() {
+        let plan = FaultPlan::with_task_faults(vec![TaskFaultSpec {
+            phase: Phase::Map,
+            task: 2,
+            attempt: 0,
+            kind: TaskFaultKind::Error,
+            point: FaultPoint::Start,
+        }]);
+        assert!(plan.maybe_fail(Phase::Map, 1, 0, FaultPoint::Start).is_ok());
+        assert!(plan.maybe_fail(Phase::Map, 2, 1, FaultPoint::Start).is_ok());
+        assert!(plan.maybe_fail(Phase::Reduce, 2, 0, FaultPoint::Start).is_ok());
+        assert!(plan.maybe_fail(Phase::Map, 2, 0, FaultPoint::Finish).is_ok());
+        let err = plan
+            .maybe_fail(Phase::Map, 2, 0, FaultPoint::Start)
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("injected"), "{msg}");
+        assert!(msg.contains("map task 2"), "{msg}");
+        assert_eq!(plan.task_faults_fired(), 1);
+    }
+
+    #[test]
+    fn panic_kind_panics() {
+        let plan = FaultPlan::with_task_faults(vec![TaskFaultSpec {
+            phase: Phase::Reduce,
+            task: 0,
+            attempt: 1,
+            kind: TaskFaultKind::Panic,
+            point: FaultPoint::Finish,
+        }]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.maybe_fail(Phase::Reduce, 0, 1, FaultPoint::Finish)
+        }));
+        assert!(r.is_err());
+        assert_eq!(plan.task_faults_fired(), 1);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_retryable() {
+        let a = FaultPlan::seeded(42, 4, 2, 3);
+        let b = FaultPlan::seeded(42, 4, 2, 3);
+        assert_eq!(a.task_faults.len(), b.task_faults.len());
+        for (x, y) in a.task_faults.iter().zip(&b.task_faults) {
+            assert_eq!(x.phase, y.phase);
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.attempt, y.attempt);
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.point, y.point);
+        }
+        for seed in 0..64 {
+            let p = FaultPlan::seeded(seed, 4, 2, 3);
+            // one chain per phase, each 1..=max_attempts-1 faults long
+            assert!((2..=4).contains(&p.task_faults.len()), "seed {seed}");
+            for phase in [Phase::Map, Phase::Reduce] {
+                let chain: Vec<_> =
+                    p.task_faults.iter().filter(|f| f.phase == phase).collect();
+                assert!(!chain.is_empty(), "seed {seed}: no {} chain", phase.name());
+                for (i, f) in chain.iter().enumerate() {
+                    // contiguous from attempt 0: every spec is reachable
+                    // (attempt k runs only after 0..k all failed), and the
+                    // last failing attempt leaves budget for a clean one
+                    assert_eq!(f.attempt, i, "seed {seed}");
+                    assert_eq!(f.task, chain[0].task, "seed {seed}: one task per chain");
+                    assert!(f.attempt < 2, "seed {seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_state_machine_kills_then_revives() {
+        let plan = FaultPlan::with_shard_fault(ShardFault {
+            shard: 1,
+            kill_at_request: 3,
+            refuse_connects: 2,
+        });
+        // Other shards never trip.
+        assert!(!plan.on_request(0));
+        assert!(!plan.on_connect(0));
+        // Requests 0..3 pass, request 3 kills.
+        for _ in 0..3 {
+            assert!(!plan.on_request(1));
+        }
+        assert!(plan.on_request(1));
+        assert_eq!(plan.shard_kills(), 1);
+        // Down: requests on stale connections drop, connects refused.
+        assert!(plan.on_request(1));
+        assert!(plan.on_connect(1));
+        assert!(plan.on_connect(1)); // second refusal revives
+        assert!(!plan.on_connect(1));
+        assert!(!plan.on_request(1));
+    }
+}

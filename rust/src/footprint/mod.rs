@@ -9,6 +9,7 @@
 
 pub mod model;
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -66,13 +67,69 @@ pub struct Ledger {
     bytes: [AtomicU64; 9],
 }
 
+thread_local! {
+    /// Per-thread ledger redirection: charges aimed at the ledger whose
+    /// address matches `.0` land on `.1` instead. Installed by
+    /// [`Ledger::redirect_for_attempt`] for the duration of one task
+    /// attempt, so the attempt's charges can be kept or discarded
+    /// atomically without changing any task/factory signature.
+    static REDIRECT: RefCell<Option<(usize, Arc<Ledger>)>> = const { RefCell::new(None) };
+}
+
+/// RAII guard for a task-attempt ledger redirection; restores the
+/// previous redirection (normally none) on drop — including during an
+/// unwind, so a panicking attempt cannot leak its redirection onto the
+/// pool thread.
+pub struct AttemptScope {
+    prev: Option<(usize, Arc<Ledger>)>,
+}
+
+impl Drop for AttemptScope {
+    fn drop(&mut self) {
+        REDIRECT.with(|r| *r.borrow_mut() = self.prev.take());
+    }
+}
+
 impl Ledger {
     pub fn new() -> Arc<Ledger> {
         Arc::new(Ledger::default())
     }
 
+    /// Redirect this thread's charges on `job` to `attempt` until the
+    /// returned guard drops. Only charges addressed at `job` *by
+    /// pointer identity* are redirected — charges on any other ledger
+    /// (including `attempt` itself) pass through untouched. Sound for
+    /// task attempts because every charge of an attempt happens on the
+    /// task's own thread (the prefetch thread never touches the ledger;
+    /// fetch traffic is charged by `account_fetch` on the task thread).
+    pub fn redirect_for_attempt(job: &Arc<Ledger>, attempt: &Arc<Ledger>) -> AttemptScope {
+        let key = Arc::as_ptr(job) as usize;
+        let prev = REDIRECT.with(|r| r.borrow_mut().replace((key, attempt.clone())));
+        AttemptScope { prev }
+    }
+
+    fn redirect_target(&self) -> Option<Arc<Ledger>> {
+        REDIRECT.with(|r| {
+            r.borrow().as_ref().and_then(|(from, to)| {
+                (*from == self as *const Ledger as usize).then(|| to.clone())
+            })
+        })
+    }
+
     pub fn add(&self, ch: Channel, bytes: u64) {
+        if let Some(target) = self.redirect_target() {
+            target.bytes[ch.slot()].fetch_add(bytes, Ordering::Relaxed);
+            return;
+        }
         self.bytes[ch.slot()].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Fold a snapshot's totals into this ledger (bypassing any
+    /// redirection — used to merge a *finished* attempt into the job).
+    pub fn add_footprint(&self, fp: &Footprint) {
+        for ch in CHANNELS {
+            self.bytes[ch.slot()].fetch_add(fp.get(ch), Ordering::Relaxed);
+        }
     }
 
     pub fn get(&self, ch: Channel) -> u64 {
@@ -206,6 +263,65 @@ mod tests {
         let m = a.merged(&b);
         assert_eq!(m.get(Channel::HdfsRead), 11);
         assert_eq!(m.get(Channel::HdfsWrite), 1);
+    }
+
+    #[test]
+    fn redirect_scopes_charges_to_the_attempt_ledger() {
+        let job = Ledger::new();
+        let attempt = Ledger::new();
+        let other = Ledger::new();
+        {
+            let _scope = Ledger::redirect_for_attempt(&job, &attempt);
+            job.add(Channel::HdfsRead, 10); // redirected
+            other.add(Channel::HdfsRead, 3); // different ledger: untouched
+            attempt.add(Channel::Shuffle, 5); // direct on the attempt
+        }
+        assert_eq!(job.get(Channel::HdfsRead), 0);
+        assert_eq!(attempt.get(Channel::HdfsRead), 10);
+        assert_eq!(attempt.get(Channel::Shuffle), 5);
+        assert_eq!(other.get(Channel::HdfsRead), 3);
+        // Guard dropped: charges land on the job ledger again.
+        job.add(Channel::HdfsRead, 7);
+        assert_eq!(job.get(Channel::HdfsRead), 7);
+    }
+
+    #[test]
+    fn redirect_is_per_thread_and_unwind_safe() {
+        let job = Ledger::new();
+        let attempt = Ledger::new();
+        let _scope = Ledger::redirect_for_attempt(&job, &attempt);
+        // Another thread's charges on the job ledger are not redirected.
+        let j = job.clone();
+        std::thread::spawn(move || j.add(Channel::Shuffle, 9))
+            .join()
+            .unwrap();
+        assert_eq!(job.get(Channel::Shuffle), 9);
+        // A panic inside a scope still restores the thread's state.
+        let job2 = Ledger::new();
+        let att2 = Ledger::new();
+        let j2 = job2.clone();
+        let a2 = att2.clone();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _s = Ledger::redirect_for_attempt(&j2, &a2);
+            j2.add(Channel::KvPut, 1);
+            panic!("boom");
+        }));
+        assert!(r.is_err());
+        job2.add(Channel::KvPut, 2);
+        assert_eq!(job2.get(Channel::KvPut), 2);
+        assert_eq!(att2.get(Channel::KvPut), 1);
+    }
+
+    #[test]
+    fn add_footprint_merges_totals() {
+        let l = Ledger::new();
+        let mut fp = Footprint::default();
+        fp.set(Channel::HdfsRead, 4);
+        fp.set(Channel::KvFetch, 6);
+        l.add(Channel::HdfsRead, 1);
+        l.add_footprint(&fp);
+        assert_eq!(l.get(Channel::HdfsRead), 5);
+        assert_eq!(l.get(Channel::KvFetch), 6);
     }
 
     #[test]

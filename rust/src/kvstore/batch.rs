@@ -174,6 +174,27 @@ impl SuffixBatch {
     pub fn iter(&self) -> impl Iterator<Item = Option<&[u8]>> + '_ {
         (0..self.len()).map(|i| self.get(i))
     }
+
+    /// Snapshot `(entries, arena_bytes)` for [`SuffixBatch::truncate`] —
+    /// taken by the pipelined client before decoding each reply chunk so
+    /// a chunk that dies mid-decode (shard failover) can be rolled back
+    /// and replayed without duplicating entries or arena bytes.
+    pub fn checkpoint(&self) -> (usize, usize) {
+        (self.spans.len(), self.data.len())
+    }
+
+    /// Roll the batch back to a [`SuffixBatch::checkpoint`]: drop every
+    /// entry and arena byte appended since. Panics if the mark is ahead
+    /// of the current state (it must come from this batch's past).
+    pub fn truncate(&mut self, mark: (usize, usize)) {
+        let (entries, arena_bytes) = mark;
+        assert!(
+            entries <= self.spans.len() && arena_bytes <= self.data.len(),
+            "truncate mark ahead of batch state"
+        );
+        self.spans.truncate(entries);
+        self.data.truncate(arena_bytes);
+    }
 }
 
 /// Logical equality: same entries in the same order, regardless of how
@@ -280,6 +301,23 @@ mod tests {
         assert_eq!(a, b);
         b.push_missing();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn checkpoint_truncate_rolls_back_partial_decode() {
+        let mut b = SuffixBatch::new();
+        b.push(b"kept");
+        let mark = b.checkpoint();
+        // a partially-decoded reply chunk: raw bytes + some sealed entries
+        b.push(b"doomed");
+        b.append_raw(b"half-an-ent");
+        b.truncate(mark);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.slice(0), b"kept");
+        assert_eq!(b.arena_len(), 4);
+        // replay lands identically
+        b.push(b"doomed");
+        assert_eq!(b.slice(1), b"doomed");
     }
 
     #[test]

@@ -9,21 +9,93 @@
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
 
 use crate::kvstore::batch::SuffixBatch;
 use crate::kvstore::resp::{self, Value};
 use crate::util::bytes::{dec_len, fmt_dec};
 
+/// Connect/read/write deadlines and retry/backoff policy for one shard
+/// connection. A dead or wedged shard surfaces as a bounded sequence of
+/// reconnect attempts with deterministic capped exponential backoff —
+/// never an unbounded hang on a socket read.
+#[derive(Clone, Copy, Debug)]
+pub struct FailoverConfig {
+    /// Deadline per TCP connect attempt.
+    pub connect_timeout: Duration,
+    /// Connect attempts per (re)connection, backoff-spaced.
+    pub connect_attempts: u32,
+    /// First backoff delay; doubles per retry (deterministic, no jitter
+    /// — reproducibility outranks thundering-herd avoidance here).
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Socket read deadline (`None` = block forever).
+    pub read_timeout: Option<Duration>,
+    /// Socket write deadline (`None` = block forever).
+    pub write_timeout: Option<Duration>,
+    /// Reconnect-and-replay cycles per operation before giving up.
+    pub failover_attempts: u32,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(2),
+            connect_attempts: 5,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(200),
+            read_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(30)),
+            failover_attempts: 8,
+        }
+    }
+}
+
+impl FailoverConfig {
+    /// Delay before retry `n` (0-based): `backoff_base * 2^n`, capped.
+    pub fn backoff_delay(&self, n: u32) -> Duration {
+        self.backoff_base
+            .checked_mul(1u32 << n.min(16))
+            .map(|d| d.min(self.backoff_cap))
+            .unwrap_or(self.backoff_cap)
+    }
+}
+
 /// Connection to one KV instance (reader/writer halves of one socket).
+///
+/// The connection self-heals: a transport error inside an idempotent
+/// operation (every command here is idempotent — `MSET` re-puts
+/// identical pairs, `MGETSUFFIX` re-reads) triggers reconnect-and-replay
+/// of the in-flight pipeline window, bounded by
+/// [`FailoverConfig::failover_attempts`]. Accounting stays *logical*:
+/// `bytes_sent`/`bytes_received` count each command and each complete
+/// reply exactly once, so ledger totals are byte-identical to a
+/// fault-free run; re-sent wire bytes are tallied in `wasted_sent`.
+/// (There is no `wasted_received`: replay never re-requests a chunk
+/// whose reply was completely received, and partial replies are never
+/// charged.)
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Shard address, kept for reconnects and error context.
+    addr: SocketAddr,
+    /// Failover policy for this connection.
+    cfg: FailoverConfig,
+    /// True while re-sending already-charged commands after a reconnect;
+    /// routes wire charges to `wasted_sent` instead of `bytes_sent`.
+    replaying: bool,
     /// Reused RESP line scratch for the streaming (arena) reply path.
     scratch: Vec<u8>,
-    /// Request wire bytes written so far (footprint ledger input).
+    /// Logical request wire bytes (footprint ledger input): each command
+    /// charged exactly once, on first send.
     pub bytes_sent: u64,
-    /// Reply wire bytes read so far (footprint ledger input).
+    /// Logical reply wire bytes (footprint ledger input): each reply
+    /// charged exactly once, on complete receipt.
     pub bytes_received: u64,
+    /// Wire bytes re-sent during failover replay — observability only,
+    /// never part of the ledger.
+    pub wasted_sent: u64,
 }
 
 /// Client-side KV error: transport, server-reported, or protocol.
@@ -77,6 +149,21 @@ impl From<KvError> for std::io::Error {
 /// Client-side KV result.
 pub type Result<T> = std::result::Result<T, KvError>;
 
+/// Attach shard address + command context to an error, so a multi-shard
+/// failure names its source ("shard 127.0.0.1:6399: MGETSUFFIX: ...").
+/// Transport errors keep their `ErrorKind`; server errors keep their
+/// text; protocol-shape errors already carry the offending value.
+fn ctx(addr: SocketAddr, cmd: &str, e: KvError) -> KvError {
+    match e {
+        KvError::Io(io) => KvError::Io(std::io::Error::new(
+            io.kind(),
+            format!("shard {addr}: {cmd}: {io}"),
+        )),
+        KvError::Server(s) => KvError::Server(format!("shard {addr}: {cmd}: {s}")),
+        other => other,
+    }
+}
+
 /// Batched commands kept in flight per connection. Keep a few chunks
 /// moving so request serialization overlaps server work, but bounded —
 /// sending everything before reading anything fills both directions'
@@ -85,21 +172,82 @@ pub type Result<T> = std::result::Result<T, KvError>;
 pub const PIPELINE_WINDOW: usize = 3;
 
 impl Client {
-    /// Connect to a KV instance (TCP_NODELAY, split buffered halves).
+    /// Connect to a KV instance with default failover policy
+    /// (TCP_NODELAY, split buffered halves).
     pub fn connect(addr: SocketAddr) -> Result<Client> {
-        let conn = TcpStream::connect(addr)?;
-        conn.set_nodelay(true).ok();
+        Self::connect_with(addr, FailoverConfig::default())
+    }
+
+    /// Connect with an explicit failover policy.
+    pub fn connect_with(addr: SocketAddr, cfg: FailoverConfig) -> Result<Client> {
+        let conn = Self::open_socket(addr, &cfg)?;
         Ok(Client {
-            reader: BufReader::new(conn.try_clone()?),
+            reader: BufReader::new(conn.try_clone().map_err(|e| ctx(addr, "connect", e.into()))?),
             writer: BufWriter::new(conn),
+            addr,
+            cfg,
+            replaying: false,
             scratch: Vec::with_capacity(32),
             bytes_sent: 0,
             bytes_received: 0,
+            wasted_sent: 0,
         })
     }
 
+    /// Open a socket to `addr` under `cfg`: per-attempt connect
+    /// deadline, bounded attempts, capped exponential backoff between
+    /// them, and read/write deadlines installed on success.
+    fn open_socket(addr: SocketAddr, cfg: &FailoverConfig) -> Result<TcpStream> {
+        let attempts = cfg.connect_attempts.max(1);
+        let mut last: Option<std::io::Error> = None;
+        for n in 0..attempts {
+            if n > 0 {
+                std::thread::sleep(cfg.backoff_delay(n - 1));
+            }
+            match TcpStream::connect_timeout(&addr, cfg.connect_timeout) {
+                Ok(conn) => {
+                    conn.set_nodelay(true).ok();
+                    conn.set_read_timeout(cfg.read_timeout).ok();
+                    conn.set_write_timeout(cfg.write_timeout).ok();
+                    return Ok(conn);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        let e = last.expect("at least one connect attempt");
+        Err(ctx(
+            addr,
+            "connect",
+            KvError::Io(std::io::Error::new(
+                e.kind(),
+                format!("{e} (after {attempts} attempts)"),
+            )),
+        ))
+    }
+
+    /// Tear down the broken halves and dial the shard again. The old
+    /// `BufWriter`'s unflushed bytes are deliberately discarded — the
+    /// caller replays its in-flight window on the fresh connection.
+    fn reconnect(&mut self) -> Result<()> {
+        let conn = Self::open_socket(self.addr, &self.cfg)?;
+        self.reader = BufReader::new(conn.try_clone().map_err(|e| ctx(self.addr, "connect", e.into()))?);
+        self.writer = BufWriter::new(conn);
+        Ok(())
+    }
+
+    /// Charge `wire` request bytes: logical on first send, wasted on a
+    /// failover replay — so `bytes_sent` stays byte-identical to a
+    /// fault-free run.
+    fn charge_sent(&mut self, wire: u64) {
+        if self.replaying {
+            self.wasted_sent += wire;
+        } else {
+            self.bytes_sent += wire;
+        }
+    }
+
     fn send(&mut self, args: &[&[u8]]) -> Result<()> {
-        self.bytes_sent += resp::command_wire_len(args);
+        self.charge_sent(resp::command_wire_len(args));
         resp::write_command(&mut self.writer, args)?;
         Ok(())
     }
@@ -113,30 +261,86 @@ impl Client {
         Ok(v)
     }
 
+    /// One command, one reply — with bounded reconnect-and-retry on
+    /// transport failure (every command this client speaks is
+    /// idempotent). The command is charged to `bytes_sent` once;
+    /// retried sends charge `wasted_sent`.
     fn call(&mut self, args: &[&[u8]]) -> Result<Value> {
-        self.send(args)?;
-        self.writer.flush()?;
-        self.recv()
+        let cmd = String::from_utf8_lossy(args[0]).into_owned();
+        self.replaying = false;
+        let mut tries = 0u32;
+        loop {
+            let r = (|| {
+                self.send(args)?;
+                self.replaying = false;
+                self.writer.flush()?;
+                self.recv()
+            })();
+            match r {
+                Err(KvError::Io(_)) if tries + 1 < self.cfg.failover_attempts.max(1) => {
+                    tries += 1;
+                    std::thread::sleep(self.cfg.backoff_delay(tries - 1));
+                    self.reconnect()?;
+                    // replay: the command was already charged as logical
+                    self.replaying = true;
+                }
+                other => {
+                    self.replaying = false;
+                    return other.map_err(|e| ctx(self.addr, &cmd, e));
+                }
+            }
+        }
     }
 
     /// Issue `n_cmds` commands through the bounded pipeline window and
     /// collect their replies in order. `send_cmd(client, i)` serializes
     /// the i-th command; steady state tops the window up by one command
     /// per reply received, so the link stays busy in both directions.
+    ///
+    /// On a transport failure the client reconnects (bounded, backed
+    /// off) and replays the idempotent in-flight window — commands sent
+    /// but not yet answered — instead of wedging the caller. Completed
+    /// replies are never re-requested; replayed sends charge
+    /// `wasted_sent`, so logical accounting matches a fault-free run.
     fn pipelined(
         &mut self,
         n_cmds: usize,
         mut send_cmd: impl FnMut(&mut Client, usize) -> Result<()>,
     ) -> Result<Vec<Value>> {
         let mut out = Vec::with_capacity(n_cmds);
-        let mut sent = 0;
+        self.replaying = false;
+        let mut sent = 0usize;
+        // commands charged as logical so far: anything below this mark
+        // is a replay when sent again
+        let mut charged = 0usize;
+        let mut tries = 0u32;
         while out.len() < n_cmds {
-            while sent < n_cmds && sent - out.len() < PIPELINE_WINDOW {
-                send_cmd(self, sent)?;
-                sent += 1;
+            let step = 'step: {
+                while sent < n_cmds && sent - out.len() < PIPELINE_WINDOW {
+                    self.replaying = sent < charged;
+                    charged = charged.max(sent + 1);
+                    let r = send_cmd(self, sent);
+                    self.replaying = false;
+                    if let Err(e) = r {
+                        break 'step Err(e);
+                    }
+                    sent += 1;
+                }
+                if let Err(e) = self.writer.flush() {
+                    break 'step Err(e.into());
+                }
+                self.recv()
+            };
+            match step {
+                Ok(v) => out.push(v),
+                Err(KvError::Io(_)) if tries + 1 < self.cfg.failover_attempts.max(1) => {
+                    tries += 1;
+                    std::thread::sleep(self.cfg.backoff_delay(tries - 1));
+                    self.reconnect()?;
+                    sent = out.len(); // replay the unanswered window
+                }
+                Err(e) => return Err(e),
             }
-            self.writer.flush()?;
-            out.push(self.recv()?);
         }
         Ok(out)
     }
@@ -198,16 +402,18 @@ impl Client {
             return Ok(());
         }
         let chunks: Vec<&[(Vec<u8>, Vec<u8>)]> = pairs.chunks(chunk_pairs.max(1)).collect();
-        let replies = self.pipelined(chunks.len(), |c, i| {
-            let chunk = chunks[i];
-            let mut args: Vec<&[u8]> = Vec::with_capacity(1 + chunk.len() * 2);
-            args.push(b"MSET");
-            for (k, v) in chunk {
-                args.push(k);
-                args.push(v);
-            }
-            c.send(&args)
-        })?;
+        let replies = self
+            .pipelined(chunks.len(), |c, i| {
+                let chunk = chunks[i];
+                let mut args: Vec<&[u8]> = Vec::with_capacity(1 + chunk.len() * 2);
+                args.push(b"MSET");
+                for (k, v) in chunk {
+                    args.push(k);
+                    args.push(v);
+                }
+                c.send(&args)
+            })
+            .map_err(|e| ctx(self.addr, "MSET", e))?;
         for v in replies {
             match v {
                 Value::Simple(s) if s == "OK" => {}
@@ -229,18 +435,20 @@ impl Client {
             return Ok(Vec::new());
         }
         let chunks: Vec<&[(Vec<u8>, usize)]> = reqs.chunks(chunk_pairs.max(1)).collect();
-        let replies = self.pipelined(chunks.len(), |c, i| {
-            let chunk = chunks[i];
-            let offs: Vec<Vec<u8>> =
-                chunk.iter().map(|(_, o)| o.to_string().into_bytes()).collect();
-            let mut args: Vec<&[u8]> = Vec::with_capacity(1 + chunk.len() * 2);
-            args.push(b"MGETSUFFIX");
-            for ((k, _), o) in chunk.iter().zip(&offs) {
-                args.push(k);
-                args.push(o);
-            }
-            c.send(&args)
-        })?;
+        let replies = self
+            .pipelined(chunks.len(), |c, i| {
+                let chunk = chunks[i];
+                let offs: Vec<Vec<u8>> =
+                    chunk.iter().map(|(_, o)| o.to_string().into_bytes()).collect();
+                let mut args: Vec<&[u8]> = Vec::with_capacity(1 + chunk.len() * 2);
+                args.push(b"MGETSUFFIX");
+                for ((k, _), o) in chunk.iter().zip(&offs) {
+                    args.push(k);
+                    args.push(o);
+                }
+                c.send(&args)
+            })
+            .map_err(|e| ctx(self.addr, "MGETSUFFIX", e))?;
         let mut out = Vec::with_capacity(reqs.len());
         for reply in replies {
             match reply {
@@ -282,7 +490,7 @@ impl Client {
             self.writer.write_all(off)?;
             self.writer.write_all(b"\r\n")?;
         }
-        self.bytes_sent += wire;
+        self.charge_sent(wire);
         Ok(())
     }
 
@@ -294,8 +502,13 @@ impl Client {
     /// the same requests — only the reply's destination changes: socket
     /// buffer → arena in one append per suffix, zero per-suffix `Vec`s.
     ///
-    /// On error, entries already appended to `out` are unspecified;
-    /// callers discard the batch.
+    /// On a transport failure the connection is re-established and the
+    /// unanswered window replayed (fetches are idempotent); entries a
+    /// dying chunk half-decoded into `out` are rolled back to the last
+    /// completed chunk's [`SuffixBatch::checkpoint`] first, so replay
+    /// cannot duplicate entries or arena bytes. On a final error,
+    /// entries already appended to `out` are unspecified; callers
+    /// discard the batch.
     pub fn mgetsuffix_pipelined_into(
         &mut self,
         reqs: &[(u64, usize)],
@@ -305,38 +518,69 @@ impl Client {
         if reqs.is_empty() {
             return Ok(());
         }
+        self.replaying = false;
         let chunk = chunk_pairs.max(1);
         let n_chunks = reqs.len().div_ceil(chunk);
         let bounds = |i: usize| (i * chunk, ((i + 1) * chunk).min(reqs.len()));
-        let mut sent = 0;
-        let mut done = 0;
+        let mut sent = 0usize;
+        let mut done = 0usize;
+        let mut charged = 0usize;
+        let mut tries = 0u32;
+        // rollback point: batch state as of the last completed chunk
+        let mut mark = out.checkpoint();
         while done < n_chunks {
-            while sent < n_chunks && sent - done < PIPELINE_WINDOW {
-                let (lo, hi) = bounds(sent);
-                self.send_mgetsuffix(&reqs[lo..hi])?;
-                sent += 1;
-            }
-            self.writer.flush()?;
-            let (lo, hi) = bounds(done);
-            match resp::read_bulk_array_into(&mut self.reader, &mut self.scratch, out)? {
-                resp::ArrayReply::Appended { n, wire_len } => {
-                    self.bytes_received += wire_len;
-                    if n != hi - lo {
-                        return Err(KvError::Server(format!(
-                            "MGETSUFFIX replied {n} elements for {} requests",
-                            hi - lo
-                        )));
+            let step = 'step: {
+                while sent < n_chunks && sent - done < PIPELINE_WINDOW {
+                    let (lo, hi) = bounds(sent);
+                    self.replaying = sent < charged;
+                    charged = charged.max(sent + 1);
+                    let r = self.send_mgetsuffix(&reqs[lo..hi]);
+                    self.replaying = false;
+                    if let Err(e) = r {
+                        break 'step Err(e);
                     }
+                    sent += 1;
                 }
-                resp::ArrayReply::Other(v) => {
-                    self.bytes_received += v.wire_len();
-                    if let Value::Error(e) = v {
-                        return Err(KvError::Server(e));
+                if let Err(e) = self.writer.flush() {
+                    break 'step Err(e.into());
+                }
+                let (lo, hi) = bounds(done);
+                match resp::read_bulk_array_into(&mut self.reader, &mut self.scratch, out) {
+                    Ok(resp::ArrayReply::Appended { n, wire_len }) => {
+                        self.bytes_received += wire_len;
+                        if n != hi - lo {
+                            break 'step Err(KvError::Server(format!(
+                                "MGETSUFFIX replied {n} elements for {} requests",
+                                hi - lo
+                            )));
+                        }
+                        Ok(())
                     }
-                    return Err(KvError::Unexpected(v));
+                    Ok(resp::ArrayReply::Other(v)) => {
+                        self.bytes_received += v.wire_len();
+                        if let Value::Error(e) = v {
+                            break 'step Err(KvError::Server(e));
+                        }
+                        break 'step Err(KvError::Unexpected(v));
+                    }
+                    Err(e) => Err(e.into()),
                 }
+            };
+            match step {
+                Ok(()) => {
+                    done += 1;
+                    mark = out.checkpoint();
+                }
+                Err(KvError::Io(_)) if tries + 1 < self.cfg.failover_attempts.max(1) => {
+                    tries += 1;
+                    std::thread::sleep(self.cfg.backoff_delay(tries - 1));
+                    out.truncate(mark); // drop the half-decoded chunk
+                    self.reconnect()
+                        .map_err(|e| ctx(self.addr, "MGETSUFFIX", e))?;
+                    sent = done; // replay the unanswered window
+                }
+                Err(e) => return Err(ctx(self.addr, "MGETSUFFIX", e)),
             }
-            done += 1;
         }
         Ok(())
     }

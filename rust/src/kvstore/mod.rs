@@ -28,8 +28,18 @@ pub struct LocalKvCluster {
 impl LocalKvCluster {
     /// Start `n_instances` servers on ephemeral loopback ports.
     pub fn start(n_instances: usize) -> std::io::Result<Self> {
+        Self::start_with_faults(n_instances, None)
+    }
+
+    /// [`LocalKvCluster::start`] under a fault-injection plan: server `i`
+    /// serves as shard `i` of the plan, so its kill/revive schedule and
+    /// reply delay apply to exactly the shard the plan names.
+    pub fn start_with_faults(
+        n_instances: usize,
+        faults: Option<std::sync::Arc<crate::faults::FaultPlan>>,
+    ) -> std::io::Result<Self> {
         let servers = (0..n_instances)
-            .map(|_| Server::start(0))
+            .map(|i| Server::start_with_faults(0, i, faults.clone()))
             .collect::<std::io::Result<Vec<_>>>()?;
         Ok(Self { servers })
     }

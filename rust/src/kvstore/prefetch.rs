@@ -20,6 +20,15 @@
 //! never *what* is fetched — so the footprint ledger sees exactly the
 //! same wire totals with or without it (property-tested in
 //! `tests/fetch_equivalence.rs`).
+//!
+//! Fault tolerance needs no code here: shard failover lives inside
+//! [`Client`](crate::kvstore::client::Client), below the [`SuffixStore`]
+//! handle this worker drives, so an in-flight prefetch rides out a shard
+//! kill by transparent reconnect-and-replay on the fetch thread. The
+//! worker never charges the footprint ledger (its traffic is returned to
+//! — and charged by — the reducer task thread), which is what lets the
+//! engine attribute every charge of a retried attempt to that attempt's
+//! ledger via thread-local redirection (`tests/fault_tolerance.rs`).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;

@@ -15,6 +15,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::faults::FaultPlan;
 use crate::kvstore::resp::{self, Value};
 use crate::kvstore::store::{parse_offset, Reply, Store};
 use crate::util::bytes::dec_len;
@@ -32,25 +33,54 @@ pub struct Server {
     /// Connection handles still tracked by the accept loop (live
     /// connections plus at most the finished ones not yet reaped).
     tracked: Arc<AtomicUsize>,
+    /// Fault-injection plan consulted per connection/request (tests
+    /// only; `None` = zero hooks on the serving path).
+    faults: Option<Arc<FaultPlan>>,
+    /// This server's shard index within the fault plan.
+    shard: usize,
 }
 
 impl Server {
     /// Bind and serve on `127.0.0.1:port` (port 0 = ephemeral).
     pub fn start(port: u16) -> std::io::Result<Server> {
+        Self::start_with_faults(port, 0, None)
+    }
+
+    /// [`Server::start`] with a fault-injection plan: this instance is
+    /// shard `shard` of the plan, and consults its kill/revive schedule
+    /// and reply delay while serving.
+    pub fn start_with_faults(
+        port: u16,
+        shard: usize,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
-        let store = Arc::new(Mutex::new(Store::new()));
-        let stop = Arc::new(AtomicBool::new(false));
-        let bytes_in = Arc::new(AtomicU64::new(0));
-        let bytes_out = Arc::new(AtomicU64::new(0));
+        let mut server = Server {
+            addr,
+            store: Arc::new(Mutex::new(Store::new())),
+            stop: Arc::new(AtomicBool::new(false)),
+            accept_thread: None,
+            bytes_in: Arc::new(AtomicU64::new(0)),
+            bytes_out: Arc::new(AtomicU64::new(0)),
+            tracked: Arc::new(AtomicUsize::new(0)),
+            faults,
+            shard,
+        };
+        server.accept_thread = Some(server.spawn_accept(listener));
+        Ok(server)
+    }
 
-        let t_store = store.clone();
-        let t_stop = stop.clone();
-        let t_in = bytes_in.clone();
-        let t_out = bytes_out.clone();
-        let tracked = Arc::new(AtomicUsize::new(0));
-        let t_tracked = tracked.clone();
-        let accept_thread = std::thread::spawn(move || {
+    /// Spawn the accept loop over an already-bound listener.
+    fn spawn_accept(&self, listener: TcpListener) -> JoinHandle<()> {
+        let t_store = self.store.clone();
+        let t_stop = self.stop.clone();
+        let t_in = self.bytes_in.clone();
+        let t_out = self.bytes_out.clone();
+        let t_tracked = self.tracked.clone();
+        let t_faults = self.faults.clone();
+        let shard = self.shard;
+        std::thread::spawn(move || {
             let mut workers: Vec<JoinHandle<()>> = Vec::new();
             for conn in listener.incoming() {
                 // reap handles of connections that have since closed —
@@ -70,12 +100,23 @@ impl Server {
                     break;
                 }
                 let Ok(conn) = conn else { break };
+                if let Some(plan) = &t_faults {
+                    if plan.on_connect(shard) {
+                        // shard is down: accept then drop — the client
+                        // sees EOF on first use and runs another
+                        // reconnect/backoff cycle; each refusal counts
+                        // toward the plan's revive trigger
+                        drop(conn);
+                        continue;
+                    }
+                }
                 let store = t_store.clone();
                 let stop = t_stop.clone();
                 let bin = t_in.clone();
                 let bout = t_out.clone();
+                let faults = t_faults.clone();
                 workers.push(std::thread::spawn(move || {
-                    let _ = serve_conn(conn, store, stop, bin, bout);
+                    let _ = serve_conn(conn, store, stop, bin, bout, faults, shard);
                 }));
                 t_tracked.store(workers.len(), Ordering::SeqCst);
             }
@@ -83,17 +124,22 @@ impl Server {
                 let _ = w.join();
             }
             t_tracked.store(0, Ordering::SeqCst);
-        });
-
-        Ok(Server {
-            addr,
-            store,
-            stop,
-            accept_thread: Some(accept_thread),
-            bytes_in,
-            bytes_out,
-            tracked,
         })
+    }
+
+    /// Revive a shut-down shard: bind the same address again over the
+    /// *same* store — the in-memory store is the availability layer
+    /// (§"Implementing Suffix Array ... Big Table" leans on exactly
+    /// this), so a revived shard serves byte-identical data. A no-op on
+    /// a server that is still running.
+    pub fn restart(&mut self) -> std::io::Result<()> {
+        if self.accept_thread.is_some() {
+            return Ok(());
+        }
+        self.stop.store(false, Ordering::SeqCst);
+        let listener = TcpListener::bind(self.addr)?;
+        self.accept_thread = Some(self.spawn_accept(listener));
+        Ok(())
     }
 
     /// The bound listen address.
@@ -161,6 +207,8 @@ fn serve_conn(
     stop: Arc<AtomicBool>,
     bytes_in: Arc<AtomicU64>,
     bytes_out: Arc<AtomicU64>,
+    faults: Option<Arc<FaultPlan>>,
+    shard: usize,
 ) -> std::io::Result<()> {
     conn.set_nodelay(true).ok();
     let mut reader = BufReader::new(conn.try_clone()?);
@@ -173,6 +221,19 @@ fn serve_conn(
         let Some(args) = resp::read_command(&mut reader)? else {
             break; // client closed
         };
+        if let Some(plan) = &faults {
+            // delay before touching the store — never while holding its
+            // lock, so a slow shard stalls only its own replies
+            if let Some(d) = plan.reply_delay {
+                std::thread::sleep(d);
+            }
+            if plan.on_request(shard) {
+                // shard dies mid-pipeline: drop the connection without
+                // answering — the client sees EOF on a request it
+                // already charged, and must replay it after failover
+                break;
+            }
+        }
         // arithmetic wire length — no clones on the request path
         let mut in_len: u64 = 1 + dec_len(args.len() as u64) as u64 + 2;
         for a in &args {
@@ -322,6 +383,57 @@ mod tests {
             "server bytes_out must equal client bytes_received"
         );
         assert_eq!(server.bytes_in.load(Ordering::Relaxed), c.bytes_sent);
+    }
+
+    #[test]
+    fn restart_revives_the_shard_with_its_data() {
+        let mut server = Server::start(0).expect("bind");
+        let addr = server.addr();
+        {
+            let mut c = Client::connect(addr).expect("connect");
+            c.set(b"9", b"MISSISSIPPI").expect("set");
+        }
+        server.shutdown();
+        assert!(
+            TcpStream::connect(addr).is_err(),
+            "a shut-down shard must refuse connections"
+        );
+        server.restart().expect("restart");
+        server.restart().expect("restart while running is a no-op");
+        let mut c = Client::connect(addr).expect("reconnect after restart");
+        let out = c.mgetsuffix(&[(b"9".to_vec(), 7)]).expect("fetch");
+        // the revived shard serves the same store: data written before
+        // the outage is still there
+        assert_eq!(out, vec![Some(b"IPPI".to_vec())]);
+    }
+
+    #[test]
+    fn killed_shard_drops_connections_until_the_plan_revives_it() {
+        use crate::faults::{FaultPlan, ShardFault};
+        let mut plan = FaultPlan::with_shard_fault(ShardFault {
+            shard: 0,
+            kill_at_request: 1,
+            refuse_connects: 2,
+        });
+        // cover the delay hook too: every command sleeps briefly first
+        plan.reply_delay = Some(std::time::Duration::from_millis(2));
+        let plan = Arc::new(plan);
+        let server = Server::start_with_faults(0, 0, Some(plan.clone())).expect("bind");
+        let mut c = Client::connect(server.addr()).expect("connect");
+        c.set(b"1", b"GATTACA").expect("set"); // request 0: passes
+        // request 1 trips the kill: the connection drops mid-pipeline,
+        // the next two reconnects are accepted-then-dropped, the third
+        // revives the shard, and the client's replay completes — all
+        // invisible to the caller
+        let out = c
+            .mgetsuffix(&[(b"1".to_vec(), 2)])
+            .expect("client failover must ride out the kill");
+        assert_eq!(out, vec![Some(b"TTACA".to_vec())]);
+        assert_eq!(plan.shard_kills(), 1);
+        assert!(
+            c.wasted_sent > 0,
+            "replayed request bytes must be charged as waste, not logical traffic"
+        );
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use std::net::SocketAddr;
 
 use crate::kvstore::batch::SuffixBatch;
-use crate::kvstore::client::{Client, KvError, Result};
+use crate::kvstore::client::{Client, FailoverConfig, KvError, Result};
 use crate::kvstore::resp::{self, Value};
 use crate::kvstore::store::Store;
 use crate::suffix::encode::unpack_index;
@@ -170,14 +170,29 @@ struct ShardPlan {
 }
 
 impl ShardedClient {
-    /// Connect one client per instance address.
+    /// Connect one client per instance address with the default
+    /// failover policy.
     pub fn connect(addrs: &[SocketAddr]) -> Result<Self> {
+        Self::connect_with(addrs, FailoverConfig::default())
+    }
+
+    /// Connect one client per instance address, all sharing one explicit
+    /// failover policy (timeouts, reconnect budget, backoff).
+    pub fn connect_with(addrs: &[SocketAddr], cfg: FailoverConfig) -> Result<Self> {
         let clients = addrs
             .iter()
-            .map(|&a| Client::connect(a))
+            .map(|&a| Client::connect_with(a, cfg))
             .collect::<Result<Vec<_>>>()?;
         let plan = (0..clients.len()).map(|_| ShardPlan::default()).collect();
         Ok(Self { clients, put_batch: BATCH_PAIRS, plan })
+    }
+
+    /// Wire bytes re-sent during failover replay, summed over all
+    /// shards — observability only, never charged to the ledger (which
+    /// is what keeps a faulted run's footprint byte-identical to a
+    /// fault-free one).
+    pub fn wasted_sent(&self) -> u64 {
+        self.clients.iter().map(|c| c.wasted_sent).sum()
     }
 
     fn shard_of(&self, seq: u64) -> usize {

@@ -11,6 +11,8 @@
 pub mod bench_support;
 pub mod cli;
 pub mod cluster;
+#[warn(missing_docs)]
+pub mod faults;
 pub mod footprint;
 #[warn(missing_docs)]
 pub mod kvstore;

@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use crate::mapreduce::pool::WorkerPool;
 
+use crate::faults::{FaultPoint, Phase};
 use crate::footprint::{Channel, Footprint, Ledger};
 use crate::mapreduce::io::{FileSink, InputSplit, OutputFile, RecordReader};
 use crate::mapreduce::job::JobConf;
@@ -51,6 +52,12 @@ pub struct JobResult {
     /// Keeps the output files on disk for exactly this result's lifetime.
     _out_dir: Arc<ScratchDir>,
     pub footprint: Footprint,
+    /// Bytes charged by *abandoned* task attempts (failed or panicked,
+    /// then retried). Kept out of `footprint` — the footprint is the
+    /// paper's invariant-under-failures instrument, so a retried run's
+    /// nine channels stay byte-identical to a clean run's — but tallied
+    /// here for observability. All-zero on a fault-free run.
+    pub wasted: Footprint,
     pub map_stats: Vec<MapTaskStats>,
     pub reduce_stats: Vec<ReduceTaskStats>,
     pub wall: Duration,
@@ -157,6 +164,82 @@ fn task_panic_error(
     io::Error::other(format!("{phase} task {id} of job {job:?} panicked: {msg}"))
 }
 
+/// Run one task attempt-by-attempt up to `JobConf::max_task_attempts`.
+///
+/// The default configuration (`max_task_attempts == 1`, no fault plan)
+/// dispatches the literal pre-existing single-attempt path: the attempt
+/// charges the job ledger directly and spills into the shared scratch
+/// directory, exactly as before this function existed.
+///
+/// With retries enabled, each attempt gets a fresh scratch subdirectory
+/// (`{phase}-{id}-a{attempt}`) and a fresh private ledger that the task
+/// thread's charges are redirected into ([`Ledger::redirect_for_attempt`]
+/// — sound because every charge of an attempt happens on the task's own
+/// thread). A successful attempt's totals merge into the job ledger — so
+/// the job footprint equals a clean run's; a failed attempt's totals fold
+/// into `wasted`, its scratch subdirectory is removed, and `cleanup` runs
+/// to delete any phase-specific output (the reduce sink). Only after
+/// every attempt fails does the task surface an error naming the phase,
+/// task, job, and attempt count.
+#[allow(clippy::too_many_arguments)]
+fn run_with_retries<T>(
+    phase: Phase,
+    id: usize,
+    name: &str,
+    conf: &JobConf,
+    ledger: &Arc<Ledger>,
+    wasted: &Arc<Ledger>,
+    scratch: &ScratchDir,
+    attempt: impl Fn(&std::path::Path, usize) -> io::Result<T>,
+    cleanup: impl Fn(usize),
+) -> io::Result<T> {
+    let max = conf.max_task_attempts.max(1);
+    if max == 1 && conf.faults.is_none() {
+        return catch_unwind(AssertUnwindSafe(|| attempt(&scratch.path, 0)))
+            .unwrap_or_else(|p| Err(task_panic_error(phase.name(), id, name, p)));
+    }
+    let mut last_err = None;
+    for a in 0..max {
+        let attempt_dir = scratch.path.join(format!("{}-{id}-a{a}", phase.name()));
+        if let Err(e) = std::fs::create_dir_all(&attempt_dir) {
+            last_err = Some(e);
+            continue;
+        }
+        let attempt_ledger = Ledger::new();
+        let result = {
+            let _scope = Ledger::redirect_for_attempt(ledger, &attempt_ledger);
+            catch_unwind(AssertUnwindSafe(|| -> io::Result<T> {
+                if let Some(plan) = conf.faults.as_deref() {
+                    plan.maybe_fail(phase, id, a, FaultPoint::Start)?;
+                }
+                let v = attempt(&attempt_dir, a)?;
+                if let Some(plan) = conf.faults.as_deref() {
+                    plan.maybe_fail(phase, id, a, FaultPoint::Finish)?;
+                }
+                Ok(v)
+            }))
+            .unwrap_or_else(|p| Err(task_panic_error(phase.name(), id, name, p)))
+        };
+        match result {
+            Ok(v) => {
+                ledger.add_footprint(&attempt_ledger.snapshot());
+                return Ok(v);
+            }
+            Err(e) => {
+                wasted.add_footprint(&attempt_ledger.snapshot());
+                let _ = std::fs::remove_dir_all(&attempt_dir);
+                cleanup(a);
+                last_err = Some(e);
+            }
+        }
+    }
+    let last = last_err.expect("at least one attempt ran");
+    Err(io::Error::other(format!(
+        "{} task {id} of job {name:?} failed after {max} attempts: {last}",
+        phase.name()
+    )))
+}
+
 /// Run a job over disk-backed input splits. The ledger accumulates the
 /// footprint (callers pass a fresh one per experiment, or share across
 /// stages). The split spool files must outlive this call.
@@ -188,6 +271,8 @@ pub fn run_job(
     let n_reds = job.conf.n_reducers;
     let threads = job.conf.task_parallelism.max(1);
     let pool = WorkerPool::global();
+    // abandoned-attempt charges land here, never in the job ledger
+    let wasted = Ledger::new();
 
     // ---------------- map phase ----------------
     type MapSlot = Option<io::Result<(SpillFile, MapTaskStats)>>;
@@ -206,8 +291,9 @@ pub fn run_job(
             let factory = job.map_factory.clone();
             let name = job.name.clone();
             let out = map_outputs.clone();
+            let wasted = wasted.clone();
             let task = Box::new(move || {
-                let attempt = || -> io::Result<(SpillFile, MapTaskStats)> {
+                let attempt = |dir: &std::path::Path, _a: usize| -> io::Result<(SpillFile, MapTaskStats)> {
                     let split = &splits[i];
                     let mut reader = split.open()?;
                     // reading the split IS the HDFS read of this task
@@ -216,18 +302,19 @@ pub fn run_job(
                     // both paths produce byte-identical spill files and
                     // ledger charges; fixed_width only changes CPU cost
                     let run = if conf.fixed_width { run_map_task_fixed } else { run_map_task };
-                    run(
-                        i,
-                        &mut reader,
-                        task.as_mut(),
-                        &conf,
-                        &*partitioner,
-                        &ledger,
-                        &scratch.path,
-                    )
+                    run(i, &mut reader, task.as_mut(), &conf, &*partitioner, &ledger, dir)
                 };
-                let res = catch_unwind(AssertUnwindSafe(attempt))
-                    .unwrap_or_else(|p| Err(task_panic_error("map", i, &name, p)));
+                let res = run_with_retries(
+                    Phase::Map,
+                    i,
+                    &name,
+                    &conf,
+                    &ledger,
+                    &wasted,
+                    &scratch,
+                    attempt,
+                    |_a| {}, // a map attempt leaves nothing outside its scratch dir
+                );
                 out.lock().unwrap()[i] = Some(res);
             }) as Box<dyn FnOnce() + Send>;
             (weight, task)
@@ -262,10 +349,12 @@ pub fn run_job(
             let name = job.name.clone();
             let outputs = outputs.clone();
             let out = red_results.clone();
+            let wasted = wasted.clone();
             let task = Box::new(move || {
-                let attempt = || -> io::Result<(OutputFile, ReduceTaskStats)> {
+                let sink_path = out_dir.path.join(format!("part-{r:05}"));
+                let attempt = |dir: &std::path::Path, _a: usize| -> io::Result<(OutputFile, ReduceTaskStats)> {
                     let mut task = factory(r);
-                    let mut sink = FileSink::create(out_dir.path.join(format!("part-{r:05}")))?;
+                    let mut sink = FileSink::create(sink_path.clone())?;
                     let run =
                         if conf.fixed_width { run_reduce_task_fixed } else { run_reduce_task };
                     let stats = run(
@@ -276,7 +365,7 @@ pub fn run_job(
                         &mut sink,
                         &conf,
                         &ledger,
-                        &scratch.path,
+                        dir,
                     )?;
                     let file = sink.finish()?;
                     // write output to "HDFS": charged as the file seals,
@@ -284,8 +373,22 @@ pub fn run_job(
                     ledger.add(Channel::HdfsWrite, file.bytes);
                     Ok((file, stats))
                 };
-                let res = catch_unwind(AssertUnwindSafe(attempt))
-                    .unwrap_or_else(|p| Err(task_panic_error("reduce", r, &name, p)));
+                // an abandoned attempt's partial sink must not leak —
+                // attempts are sequential, so the retry recreates it
+                let sink_cleanup = |_a: usize| {
+                    let _ = std::fs::remove_file(out_dir.path.join(format!("part-{r:05}")));
+                };
+                let res = run_with_retries(
+                    Phase::Reduce,
+                    r,
+                    &name,
+                    &conf,
+                    &ledger,
+                    &wasted,
+                    &scratch,
+                    attempt,
+                    sink_cleanup,
+                );
                 out.lock().unwrap()[r] = Some(res);
             }) as Box<dyn FnOnce() + Send>;
             (weight, task)
@@ -309,6 +412,7 @@ pub fn run_job(
         output,
         _out_dir: out_dir,
         footprint: ledger.snapshot(),
+        wasted: wasted.snapshot(),
         map_stats,
         reduce_stats,
         wall: start.elapsed(),
@@ -485,6 +589,150 @@ mod tests {
         let (job2, input2) = sort_job(2, JobConf::default());
         let (_spool2, splits2) = spool(&input2, 16 << 10);
         run_job(&job2, splits2, &Ledger::new()).unwrap();
+    }
+
+    #[test]
+    fn retried_run_matches_clean_run_byte_for_byte() {
+        use crate::faults::{FaultPlan, FaultPoint, Phase, TaskFaultKind, TaskFaultSpec};
+        let conf = JobConf { split_bytes: 16 << 10, ..JobConf::default() };
+        // fault-free baseline
+        let (job, input) = sort_job(2, conf.clone());
+        let (_spool, splits) = spool(&input, job.conf.split_bytes);
+        let base = run_job(&job, splits, &Ledger::new()).unwrap();
+        assert_eq!(base.wasted, Footprint::default());
+
+        // same job, one map panic at Start + one reduce error at Finish,
+        // both absorbed by the retry budget
+        let plan = Arc::new(FaultPlan::with_task_faults(vec![
+            TaskFaultSpec {
+                phase: Phase::Map,
+                task: 1,
+                attempt: 0,
+                kind: TaskFaultKind::Panic,
+                point: FaultPoint::Start,
+            },
+            TaskFaultSpec {
+                phase: Phase::Reduce,
+                task: 0,
+                attempt: 0,
+                kind: TaskFaultKind::Error,
+                point: FaultPoint::Finish,
+            },
+        ]));
+        let (job2, input2) = sort_job(
+            2,
+            JobConf { max_task_attempts: 3, faults: Some(plan.clone()), ..conf },
+        );
+        assert_eq!(input, input2);
+        let (_spool2, splits2) = spool(&input2, job2.conf.split_bytes);
+        let res = run_job(&job2, splits2, &Ledger::new()).unwrap();
+        assert_eq!(plan.task_faults_fired(), 2);
+        // output records and every logical ledger channel are identical
+        assert_eq!(res.collect_output().unwrap(), base.collect_output().unwrap());
+        assert_eq!(res.footprint, base.footprint);
+        // the reduce Finish fault threw away a full attempt: its shuffle
+        // reads are visible in the wasted tally, not the footprint
+        assert_ne!(res.wasted, Footprint::default());
+        assert!(res.wasted.get(Channel::Shuffle) > 0);
+    }
+
+    #[test]
+    fn retry_exhaustion_names_task_and_attempts_and_leaks_nothing() {
+        use crate::faults::{FaultPlan, FaultPoint, Phase, TaskFaultKind, TaskFaultSpec};
+        let spill_root = ScratchDir::new(None, "exhaust-test").unwrap();
+        // map task 0 fails on every attempt of a 2-attempt budget
+        let plan = Arc::new(FaultPlan::with_task_faults(
+            (0..2)
+                .map(|a| TaskFaultSpec {
+                    phase: Phase::Map,
+                    task: 0,
+                    attempt: a,
+                    kind: if a == 0 { TaskFaultKind::Panic } else { TaskFaultKind::Error },
+                    point: FaultPoint::Start,
+                })
+                .collect(),
+        ));
+        let (job, input) = sort_job(
+            2,
+            JobConf {
+                split_bytes: 16 << 10,
+                max_task_attempts: 2,
+                faults: Some(plan),
+                spill_dir: Some(spill_root.path.clone()),
+                ..JobConf::default()
+            },
+        );
+        let (_spool, splits) = spool(&input, job.conf.split_bytes);
+        let err = run_job(&job, splits, &Ledger::new()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("map task 0"), "{msg}");
+        assert!(msg.contains("minisort"), "{msg}");
+        assert!(msg.contains("after 2 attempts"), "{msg}");
+        // no partial output or scratch leaks past the failed run: both
+        // job dirs under our private spill root are gone
+        let leftovers: Vec<_> = std::fs::read_dir(&spill_root.path)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert!(leftovers.is_empty(), "leaked: {leftovers:?}");
+    }
+
+    #[test]
+    fn abandoned_attempt_scratch_is_cleaned_while_winner_survives() {
+        use crate::faults::{FaultPlan, FaultPoint, Phase, TaskFaultKind, TaskFaultSpec};
+        let spill_root = ScratchDir::new(None, "attempt-dirs-test").unwrap();
+        // map task 0 attempt 0 dies *after* doing its work (Finish), so
+        // a populated attempt-0 scratch dir must be torn down while
+        // attempt 1's spill survives for the reduce phase to read
+        let plan = Arc::new(FaultPlan::with_task_faults(vec![TaskFaultSpec {
+            phase: Phase::Map,
+            task: 0,
+            attempt: 0,
+            kind: TaskFaultKind::Error,
+            point: FaultPoint::Finish,
+        }]));
+        let (job, input) = sort_job(
+            2,
+            JobConf {
+                split_bytes: 16 << 10,
+                max_task_attempts: 2,
+                faults: Some(plan),
+                spill_dir: Some(spill_root.path.clone()),
+                ..JobConf::default()
+            },
+        );
+        // observe attempt dirs from inside the reduce phase — after the
+        // map phase settled, before the job's scratch dir is dropped
+        let seen: Arc<Mutex<Option<(bool, bool)>>> = Arc::new(Mutex::new(None));
+        let seen2 = seen.clone();
+        let root = spill_root.path.clone();
+        let inner_reduce = job.reduce_factory.clone();
+        let job = Job {
+            reduce_factory: Arc::new(move |r| {
+                let scratch_dir = std::fs::read_dir(&root)
+                    .unwrap()
+                    .map(|e| e.unwrap().path())
+                    .find(|p| {
+                        let n = p.file_name().unwrap().to_string_lossy().into_owned();
+                        n.starts_with("samr-minisort-") && !n.contains("-out")
+                    })
+                    .expect("job scratch dir exists during reduce");
+                let a0 = scratch_dir.join("map-0-a0").exists();
+                let a1_spill = scratch_dir.join("map-0-a1").join("map0_out").exists()
+                    || std::fs::read_dir(scratch_dir.join("map-0-a1"))
+                        .map(|mut d| d.next().is_some())
+                        .unwrap_or(false);
+                *seen2.lock().unwrap() = Some((a0, a1_spill));
+                inner_reduce(r)
+            }),
+            ..job
+        };
+        let (_spool, splits) = spool(&input, job.conf.split_bytes);
+        let res = run_job(&job, splits, &Ledger::new()).unwrap();
+        let (a0, a1_spill) = seen.lock().unwrap().expect("reducer ran");
+        assert!(!a0, "abandoned attempt 0 dir must be cleaned before job end");
+        assert!(a1_spill, "winning attempt 1 spill must survive until job end");
+        assert!(res.wasted.get(Channel::MapLocalWrite) > 0 || res.wasted.get(Channel::HdfsRead) > 0);
     }
 
     #[test]

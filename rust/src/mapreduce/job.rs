@@ -45,6 +45,19 @@ pub struct JobConf {
     /// wire bytes and every ledger total are identical to the generic
     /// path — only CPU time and allocations change.
     pub fixed_width: bool,
+    /// Maximum attempts per map/reduce task before the job fails
+    /// (Hadoop: `mapreduce.map|reduce.maxattempts`, default 4). The
+    /// default here is 1, which — with `faults` unset — dispatches the
+    /// literal pre-existing single-attempt path: same ledger, same
+    /// scratch layout, same sink names. Retried attempts get fresh
+    /// scratch subdirectories and their abandoned ledger charges are
+    /// folded into a `wasted` tally instead of the job footprint, so a
+    /// retried run's nine-channel footprint is byte-identical to a
+    /// clean run's.
+    pub max_task_attempts: usize,
+    /// Deterministic fault-injection plan (tests only; `None` = no
+    /// hooks active). See [`crate::faults::FaultPlan`].
+    pub faults: Option<std::sync::Arc<crate::faults::FaultPlan>>,
 }
 
 impl Default for JobConf {
@@ -65,6 +78,8 @@ impl Default for JobConf {
             parallel_sort_threads: 1,
             spill_dir: None,
             fixed_width: false,
+            max_task_attempts: 1,
+            faults: None,
         }
     }
 }

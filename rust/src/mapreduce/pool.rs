@@ -31,26 +31,48 @@ impl WorkerPool {
                     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
                 })
                 .max(1);
-            let (tx, rx) = channel::<Task>();
-            let rx = Arc::new(Mutex::new(rx));
-            for i in 0..size {
-                let rx = rx.clone();
-                std::thread::Builder::new()
-                    .name(format!("samr-worker-{i}"))
-                    .spawn(move || loop {
-                        let task = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match task {
-                            Ok(t) => t(),
-                            Err(_) => break, // pool dropped (process exit)
-                        }
-                    })
-                    .expect("spawn pool worker");
-            }
-            WorkerPool { tx, size }
+            WorkerPool::new(size)
         })
+    }
+
+    /// A dedicated pool with `size` workers. Production code shares
+    /// [`WorkerPool::global`]; a private pool exists for tests that must
+    /// own their workers (e.g. proving liveness after a leaked panic
+    /// without deadlocking against concurrently running tests). Workers
+    /// exit when the pool (its `Sender`) is dropped.
+    pub fn new(size: usize) -> WorkerPool {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..size {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("samr-worker-{i}"))
+                .spawn(move || loop {
+                    let task = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match task {
+                        // catch_unwind here is the pool's last line of
+                        // defense: run_all catches task panics itself,
+                        // but a panic that escapes any other submitted
+                        // closure must not silently kill this worker and
+                        // shrink the process-wide pool forever
+                        Ok(t) => {
+                            if catch_unwind(AssertUnwindSafe(t)).is_err() {
+                                eprintln!(
+                                    "samr: panic escaped a pool task on {}; worker continues",
+                                    std::thread::current().name().unwrap_or("?")
+                                );
+                            }
+                        }
+                        Err(_) => break, // pool dropped (process exit)
+                    }
+                })
+                .expect("spawn pool worker");
+        }
+        WorkerPool { tx, size }
     }
 
     pub fn size(&self) -> usize {
@@ -172,6 +194,53 @@ mod tests {
             WorkerPool::global().run_all_weighted(tasks, 1);
         }
         assert_eq!(*order.lock().unwrap(), vec![9, 7, 5, 3, 1, 9, 7, 5, 3, 1]);
+    }
+
+    #[test]
+    fn pool_survives_leaked_panics() {
+        // a dedicated pool: the liveness proof below needs to own all of
+        // its workers, which the shared global pool cannot guarantee
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.size(), 3);
+        // leak panics straight into the worker loop, bypassing
+        // run_all's own per-task catch_unwind
+        for _ in 0..3 {
+            pool.tx
+                .send(Box::new(|| panic!("leaked panic")))
+                .unwrap();
+        }
+        // all 3 workers must still be alive: 3 tasks rendezvous, which
+        // completes only if 3 distinct workers serve them concurrently
+        let state = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let ok = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Task> = (0..3)
+            .map(|_| {
+                let state = state.clone();
+                let ok = ok.clone();
+                Box::new(move || {
+                    let (lock, cvar) = &*state;
+                    let mut n = lock.lock().unwrap();
+                    *n += 1;
+                    cvar.notify_all();
+                    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+                    while *n < 3 {
+                        let left = deadline.saturating_duration_since(std::time::Instant::now());
+                        if left.is_zero() {
+                            return; // a worker died; bail out instead of hanging
+                        }
+                        let (g, _) = cvar.wait_timeout(n, left).unwrap();
+                        n = g;
+                    }
+                    ok.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        pool.run_all(tasks, 3);
+        assert_eq!(
+            ok.load(Ordering::Relaxed),
+            3,
+            "a leaked panic killed a pool worker"
+        );
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Chaos matrix for fault-tolerant execution: inject deterministic task
+//! failures (panics and errors, per attempt, per point) and shard
+//! outages (kill mid-pipeline, refuse reconnects, revive) into full
+//! scheme runs, and assert the *strongest* recovery property the design
+//! claims — not merely that the job finishes, but that its output bytes
+//! and every one of the nine footprint-ledger channels are byte-identical
+//! to a fault-free run. Retries charge their abandoned attempts to a
+//! separate `wasted` tally; shard failover replays re-sends into
+//! `wasted_sent`; neither may move a single accounted byte.
+//!
+//! Fault plans are seeded (`SAMR_FAULT_SEED`, CI pins it): sweep locally
+//! with `for s in $(seq 0 31); do SAMR_FAULT_SEED=$s cargo test --test
+//! fault_tolerance; done`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use samr::faults::{FaultPlan, FaultPoint, ShardFault};
+use samr::footprint::{Footprint, Ledger, CHANNELS};
+use samr::kvstore::client::FailoverConfig;
+use samr::kvstore::shard::{ShardedClient, SharedStore, SuffixStore};
+use samr::kvstore::LocalKvCluster;
+use samr::mapreduce::JobConf;
+use samr::scheme::{self, SchemeConfig, StoreFactory};
+use samr::suffix::reads::{synth_corpus, CorpusSpec, Read};
+use samr::suffix::validate::validate_order;
+
+fn corpus(seed: u64) -> Vec<Read> {
+    synth_corpus(&CorpusSpec {
+        n_reads: 60,
+        read_len: 30,
+        genome_len: 2048, // repetitive: forces incomplete-group ties
+        seed,
+        ..Default::default()
+    })
+}
+
+fn scheme_cfg(
+    fixed_shuffle: bool,
+    prefetch: bool,
+    max_attempts: usize,
+    faults: Option<Arc<FaultPlan>>,
+) -> SchemeConfig {
+    let mut cfg = SchemeConfig {
+        conf: JobConf {
+            n_reducers: 3,
+            split_bytes: 1 << 10, // several map tasks over this corpus
+            io_sort_bytes: 8 << 10,
+            reducer_heap_bytes: 64 << 10,
+            ..JobConf::default()
+        },
+        group_threshold: 500,
+        samples_per_reducer: 200,
+        prefetch,
+        fixed_shuffle,
+        ..Default::default()
+    };
+    cfg.conf.max_task_attempts = max_attempts;
+    cfg.conf.faults = faults;
+    cfg
+}
+
+/// Everything one run produces that equivalence can be asserted over.
+struct RunOut {
+    order: Vec<i64>,
+    fp: Footprint,
+    out: Vec<(Vec<u8>, Vec<u8>)>,
+    wasted: Footprint,
+    n_maps: usize,
+    n_reduces: usize,
+}
+
+fn run_once(reads: &[Read], factory: StoreFactory, cfg: &SchemeConfig) -> RunOut {
+    let ledger = Ledger::new();
+    let res = scheme::run(reads, cfg, factory, &ledger).expect("scheme run");
+    let mut out = Vec::new();
+    res.job
+        .for_each_output(|r| {
+            out.push((r.key, r.value));
+            Ok(())
+        })
+        .expect("stream output");
+    RunOut {
+        order: res.order,
+        fp: ledger.snapshot(),
+        out,
+        wasted: res.job.wasted,
+        n_maps: res.job.map_stats.len(),
+        n_reduces: res.job.reduce_stats.len(),
+    }
+}
+
+fn inproc_factory(shards: usize) -> StoreFactory {
+    let store = SharedStore::new(shards);
+    Arc::new(move || Box::new(store.clone()) as Box<dyn SuffixStore>)
+}
+
+/// A client failover policy tight enough for tests: real deadlines,
+/// fast deterministic backoff.
+fn test_failover() -> FailoverConfig {
+    FailoverConfig {
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(10),
+        ..FailoverConfig::default()
+    }
+}
+
+#[test]
+fn chaos_task_faults_leave_output_and_footprint_byte_identical() {
+    let reads = corpus(11);
+    let seed = FaultPlan::env_seed(7);
+    for shards in [1usize, 3] {
+        for fixed_shuffle in [true, false] {
+            for prefetch in [true, false] {
+                let label =
+                    format!("shards={shards} fixed={fixed_shuffle} prefetch={prefetch} seed={seed}");
+                // fault-free baseline on the literal single-attempt path
+                let base = run_once(
+                    &reads,
+                    inproc_factory(shards),
+                    &scheme_cfg(fixed_shuffle, prefetch, 1, None),
+                );
+                assert_eq!(
+                    base.wasted,
+                    Footprint::default(),
+                    "a clean run wastes nothing ({label})"
+                );
+                // seed a failure chain per phase against the REAL task
+                // counts, so every spec is reachable and fires
+                let plan = Arc::new(FaultPlan::seeded(seed, base.n_maps, base.n_reduces, 3));
+                let n_specs = plan.task_faults.len();
+                let faulted = run_once(
+                    &reads,
+                    inproc_factory(shards),
+                    &scheme_cfg(fixed_shuffle, prefetch, 3, Some(plan.clone())),
+                );
+                validate_order(&reads, &faulted.order).expect("faulted order invalid");
+                assert_eq!(faulted.order, base.order, "suffix order ({label})");
+                assert_eq!(faulted.out, base.out, "output records ({label})");
+                for ch in CHANNELS {
+                    assert_eq!(
+                        faulted.fp.get(ch),
+                        base.fp.get(ch),
+                        "{} bytes ({label})",
+                        ch.name()
+                    );
+                }
+                assert_eq!(
+                    plan.task_faults_fired(),
+                    n_specs,
+                    "every injected fault must fire ({label})"
+                );
+                // a fault AFTER the task body ran abandons a fully-charged
+                // attempt; one BEFORE it abandons an empty one
+                if plan.task_faults.iter().any(|f| f.point == FaultPoint::Finish) {
+                    assert_ne!(
+                        faulted.wasted,
+                        Footprint::default(),
+                        "abandoned attempts must tally as waste ({label})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_shard_kill_and_revival_over_tcp() {
+    let reads = corpus(23);
+    for shards in [1usize, 3] {
+        let fo = test_failover();
+        let base = {
+            let kv = LocalKvCluster::start(shards).expect("kv cluster");
+            let addrs = kv.addrs();
+            let factory: StoreFactory = Arc::new(move || {
+                Box::new(ShardedClient::connect_with(&addrs, fo).expect("connect"))
+                    as Box<dyn SuffixStore>
+            });
+            run_once(&reads, factory, &scheme_cfg(true, true, 1, None))
+        };
+        // kill the last shard mid-run: its connections drop mid-pipeline,
+        // two reconnects are accepted-then-dropped, the third revives it;
+        // every reply is also slightly delayed
+        let mut plan = FaultPlan::with_shard_fault(ShardFault {
+            shard: shards - 1,
+            kill_at_request: 5,
+            refuse_connects: 2,
+        });
+        plan.reply_delay = Some(Duration::from_micros(200));
+        let plan = Arc::new(plan);
+        let faulted = {
+            let kv =
+                LocalKvCluster::start_with_faults(shards, Some(plan.clone())).expect("kv cluster");
+            let addrs = kv.addrs();
+            let factory: StoreFactory = Arc::new(move || {
+                Box::new(ShardedClient::connect_with(&addrs, fo).expect("connect"))
+                    as Box<dyn SuffixStore>
+            });
+            // max_task_attempts stays 1: the outage is absorbed a layer
+            // below the engine, by client reconnect-and-replay alone
+            run_once(&reads, factory, &scheme_cfg(true, true, 1, None))
+        };
+        assert_eq!(plan.shard_kills(), 1, "the kill must fire (shards={shards})");
+        validate_order(&reads, &faulted.order).expect("faulted order invalid");
+        assert_eq!(faulted.order, base.order, "suffix order (shards={shards})");
+        assert_eq!(faulted.out, base.out, "output records (shards={shards})");
+        for ch in CHANNELS {
+            assert_eq!(
+                faulted.fp.get(ch),
+                base.fp.get(ch),
+                "{} bytes (shards={shards}): replayed wire bytes must never \
+                 reach the ledger",
+                ch.name()
+            );
+        }
+        assert_eq!(
+            faulted.wasted,
+            Footprint::default(),
+            "client-level failover never abandons a task attempt (shards={shards})"
+        );
+    }
+}
+
+#[test]
+fn chaos_combined_task_and_shard_faults_over_tcp() {
+    // everything at once: task failure chains absorbed by engine retry,
+    // a shard kill/revive absorbed by client failover, delayed replies —
+    // one plan describes the whole storm, and the run still matches the
+    // fault-free baseline byte for byte
+    let reads = corpus(31);
+    let shards = 3;
+    let seed = FaultPlan::env_seed(13);
+    let fo = test_failover();
+    let base = {
+        let kv = LocalKvCluster::start(shards).expect("kv cluster");
+        let addrs = kv.addrs();
+        let factory: StoreFactory = Arc::new(move || {
+            Box::new(ShardedClient::connect_with(&addrs, fo).expect("connect"))
+                as Box<dyn SuffixStore>
+        });
+        run_once(&reads, factory, &scheme_cfg(true, true, 1, None))
+    };
+    let mut plan = FaultPlan::seeded(seed, base.n_maps, base.n_reduces, 3);
+    plan.shard = Some(ShardFault { shard: 0, kill_at_request: 4, refuse_connects: 2 });
+    plan.reply_delay = Some(Duration::from_micros(200));
+    let plan = Arc::new(plan);
+    let n_specs = plan.task_faults.len();
+    let faulted = {
+        let kv = LocalKvCluster::start_with_faults(shards, Some(plan.clone())).expect("kv cluster");
+        let addrs = kv.addrs();
+        let factory: StoreFactory = Arc::new(move || {
+            Box::new(ShardedClient::connect_with(&addrs, fo).expect("connect"))
+                as Box<dyn SuffixStore>
+        });
+        run_once(&reads, factory, &scheme_cfg(true, true, 3, Some(plan.clone())))
+    };
+    assert_eq!(plan.task_faults_fired(), n_specs, "every task fault fired (seed={seed})");
+    assert_eq!(plan.shard_kills(), 1, "the shard kill fired (seed={seed})");
+    validate_order(&reads, &faulted.order).expect("faulted order invalid");
+    assert_eq!(faulted.order, base.order, "suffix order (seed={seed})");
+    assert_eq!(faulted.out, base.out, "output records (seed={seed})");
+    for ch in CHANNELS {
+        assert_eq!(
+            faulted.fp.get(ch),
+            base.fp.get(ch),
+            "{} bytes (seed={seed})",
+            ch.name()
+        );
+    }
+}
