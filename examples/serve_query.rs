@@ -1,0 +1,100 @@
+//! The serving tier end to end: construct a pair-end corpus, seal the
+//! output into the versioned on-disk artifact, serve it over TCP, and
+//! answer a pair-end seed query from a pipelined RESP client — the full
+//! build → seal → serve → query lifecycle in one process.
+//!
+//!     cargo run --release --example serve_query [n_pairs]
+
+use std::sync::Arc;
+
+use samr::footprint::Ledger;
+use samr::kvstore::query::{QueryClient, QueryServer};
+use samr::kvstore::shard::{SharedStore, SuffixStore};
+use samr::mapreduce::JobConf;
+use samr::runtime;
+use samr::scheme::{self, SchemeConfig};
+use samr::suffix::reads::{synth_paired_corpus, CorpusSpec};
+use samr::suffix::sealed::SealedIndex;
+use samr::util::bytes::human;
+
+fn main() {
+    let n_pairs: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1_000);
+    runtime::init(Some(&runtime::default_artifacts_dir()));
+
+    // construct: two files over the same fragments (paper Case 6)
+    let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+        n_reads: n_pairs,
+        read_len: 100,
+        len_jitter: 4,
+        genome_len: 1 << 18,
+        seed: 0x5EA1,
+        ..Default::default()
+    });
+    let store = SharedStore::new(4);
+    let s = store.clone();
+    let ledger = Ledger::new();
+    let path = std::env::temp_dir().join(format!("samr-example-{}.samr", std::process::id()));
+    let res = scheme::run_files_sealed(
+        &[&fwd, &rev],
+        &SchemeConfig {
+            conf: JobConf {
+                n_reducers: 4,
+                io_sort_bytes: 256 << 10,
+                split_bytes: 256 << 10,
+                reducer_heap_bytes: 8 << 20,
+                ..JobConf::default()
+            },
+            group_threshold: 100_000,
+            samples_per_reducer: 2_000,
+            ..Default::default()
+        },
+        Arc::new(move || Box::new(s.clone()) as Box<dyn SuffixStore>),
+        &ledger,
+        &path,
+    )
+    .expect("sealed construction");
+    let artifact = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "sealed {} suffixes ({} reads × 2 files) into {} ({})",
+        res.n_sealed,
+        n_pairs,
+        path.display(),
+        human(artifact)
+    );
+
+    // serve: the artifact loads with zero parse work and is shared
+    // read-only across every connection — no lock on the query path
+    let index = Arc::new(SealedIndex::open(&path).expect("open sealed index"));
+    let mut server = QueryServer::start(0, index).expect("query server");
+    println!("serving on {}", server.addr());
+
+    // query: a fragment's own seeds must join back to that fragment
+    let probe = n_pairs / 2;
+    let seed_fwd = ascii_of(&fwd[probe].codes[..16]);
+    let seed_rev = ascii_of(&rev[probe].codes[..16]);
+    let mut client = QueryClient::connect(server.addr()).expect("connect");
+    let st = client.stat().expect("STAT");
+    println!(
+        "STAT: {} suffixes, {} reads, {} files, corpus {}",
+        st.n_suffixes,
+        st.n_reads,
+        st.n_files,
+        human(st.corpus_bytes)
+    );
+    let hits = client.pairs(&seed_fwd, &seed_rev, 4 * 100).expect("PAIRS");
+    assert!(
+        hits.iter().any(|h| h.fragment == probe as u64),
+        "planted fragment not recovered over TCP"
+    );
+    println!("PAIRS: {} joined mate pairing(s) for fragment {probe}'s seeds ✓", hits.len());
+    let (sent, recvd) = client.traffic();
+    println!("client wire traffic: {} out / {} in", human(sent), human(recvd));
+
+    server.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Codes back to the ASCII the query dialect speaks.
+fn ascii_of(codes: &[u8]) -> Vec<u8> {
+    codes.iter().map(|&c| b"$ACGT"[c as usize]).collect()
+}

@@ -1,0 +1,133 @@
+//! `cargo bench --bench serve` — the serving tier under multi-client
+//! load: seal a synthetic pair-end corpus, start one `QueryServer` over
+//! the artifact, and drive it with {1, 2, 4, 8} concurrent clients
+//! issuing a deterministic SEARCH/PAIRS mix. Reports per-query latency
+//! (mean and p99) and aggregate throughput per client count, and
+//! snapshots the series to `BENCH_serve.json` at the repo root
+//! (override the path with SAMR_BENCH_JSON, or set it empty to skip).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use samr::bench_support::section;
+use samr::kvstore::query::{QueryClient, QueryServer};
+use samr::suffix::reads::{synth_paired_corpus, CorpusSpec};
+use samr::suffix::sealed::{self, SealedIndex};
+use samr::suffix::validate::reference_order;
+
+const PATTERNS: &[&[u8]] = &[b"ACG", b"T", b"GGC", b"ACGT", b"CATT", b"AA"];
+
+/// One client-count's aggregate numbers.
+struct Load {
+    clients: usize,
+    queries: usize,
+    mean_us: f64,
+    p99_us: f64,
+    qps: f64,
+}
+
+fn drive(addr: std::net::SocketAddr, clients: usize, per_client: usize) -> Load {
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|w| {
+            std::thread::spawn(move || {
+                let mut c = QueryClient::connect(addr).expect("connect");
+                let mut lat = Vec::with_capacity(per_client);
+                for q in 0..per_client {
+                    let i = (w + q) % PATTERNS.len();
+                    let t = Instant::now();
+                    // 1-in-8 queries is the heavier pair-end join
+                    if q % 8 == 0 {
+                        c.pairs(PATTERNS[i], PATTERNS[(i + 1) % PATTERNS.len()], 500)
+                            .expect("PAIRS");
+                    } else {
+                        c.search(PATTERNS[i]).expect("SEARCH");
+                    }
+                    lat.push(t.elapsed().as_secs_f64() * 1e6);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = Vec::with_capacity(clients * per_client);
+    for w in workers {
+        lat.extend(w.join().expect("worker"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let mean_us = lat.iter().sum::<f64>() / lat.len() as f64;
+    let p99_us = lat[(lat.len() * 99 / 100).min(lat.len() - 1)];
+    Load { clients, queries: lat.len(), mean_us, p99_us, qps: lat.len() as f64 / wall }
+}
+
+fn main() {
+    let per_client: usize = std::env::var("SAMR_SERVE_QUERIES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+
+    // seal a corpus with enough repetition that SEARCH hits are non-empty
+    let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+        n_reads: 400,
+        read_len: 60,
+        len_jitter: 0,
+        genome_len: 1 << 13,
+        seed: 0xBE7C,
+        ..Default::default()
+    });
+    let mut all = fwd.clone();
+    all.extend(rev.iter().cloned());
+    let order = reference_order(&all);
+    let path = std::env::temp_dir().join(format!("samr-bench-serve-{}.samr", std::process::id()));
+    sealed::seal(&path, &[&fwd, &rev], &order).expect("seal");
+    let idx = Arc::new(SealedIndex::open(&path).expect("open"));
+    let st = idx.stats();
+
+    let mut server = QueryServer::start(0, idx).expect("query server");
+    section(&format!(
+        "query serving: {} suffixes, {} reads, {per_client} queries/client",
+        st.n_suffixes, st.n_reads
+    ));
+
+    let mut series = Vec::new();
+    for &clients in &[1usize, 2, 4, 8] {
+        let l = drive(server.addr(), clients, per_client);
+        let label = format!("clients={clients}");
+        println!(
+            "{label:<28} {:>10.1} µs mean {:>10.1} µs p99 {:>12.0} q/s  ({} queries)",
+            l.mean_us, l.p99_us, l.qps, l.queries
+        );
+        series.push(l);
+    }
+    server.shutdown();
+    let _ = std::fs::remove_file(&path);
+    write_snapshot(st.n_suffixes, &series);
+}
+
+/// Spool the load series to `BENCH_serve.json` (the trajectory file at
+/// the repo root; override the path with SAMR_BENCH_JSON, or set it
+/// empty to skip). Hand-rolled JSON — the offline vendor set has no
+/// serde — with fixed ASCII keys, so no escaping is needed.
+fn write_snapshot(n_suffixes: u64, series: &[Load]) {
+    let path = match std::env::var("SAMR_BENCH_JSON") {
+        Ok(p) if p.is_empty() => return,
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::path::PathBuf::from("../BENCH_serve.json"),
+    };
+    let mut rows = Vec::new();
+    for l in series {
+        rows.push(format!(
+            "    {{\"clients\": {}, \"queries\": {}, \"mean_us\": {:.1}, \
+             \"p99_us\": {:.1}, \"qps\": {:.0}}}",
+            l.clients, l.queries, l.mean_us, l.p99_us, l.qps
+        ));
+    }
+    let doc = format!(
+        "{{\n  \"schema\": \"samr-bench-serve-v1\",\n  \"suffixes\": {n_suffixes},\n  \"series\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write(&path, doc) {
+        Ok(()) => println!("\nwrote serving-load snapshot to {}", path.display()),
+        Err(e) => println!("\ncould not write {}: {e}", path.display()),
+    }
+}

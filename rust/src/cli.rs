@@ -47,6 +47,13 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// A flag the subcommand cannot run without; the `Err` is a
+    /// ready-to-print usage message naming the flag.
+    pub fn require(&self, key: &str) -> Result<&str, String> {
+        self.get(key)
+            .ok_or_else(|| format!("{}: missing required flag --{key}", self.command))
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -74,6 +81,14 @@ mod tests {
         assert!(a.has("verbose"));
         assert!(!a.has("quiet"));
         assert_eq!(a.positional_parse::<u32>(0), Some(3));
+    }
+
+    #[test]
+    fn require_names_the_missing_flag() {
+        let a = parse("serve --port 7000");
+        assert_eq!(a.require("port"), Ok("7000"));
+        let err = a.require("index").unwrap_err();
+        assert!(err.contains("--index") && err.contains("serve"), "{err}");
     }
 
     #[test]

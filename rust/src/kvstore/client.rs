@@ -246,7 +246,7 @@ impl Client {
         }
     }
 
-    fn send(&mut self, args: &[&[u8]]) -> Result<()> {
+    pub(crate) fn send(&mut self, args: &[&[u8]]) -> Result<()> {
         self.charge_sent(resp::command_wire_len(args));
         resp::write_command(&mut self.writer, args)?;
         Ok(())
@@ -265,7 +265,7 @@ impl Client {
     /// transport failure (every command this client speaks is
     /// idempotent). The command is charged to `bytes_sent` once;
     /// retried sends charge `wasted_sent`.
-    fn call(&mut self, args: &[&[u8]]) -> Result<Value> {
+    pub(crate) fn call(&mut self, args: &[&[u8]]) -> Result<Value> {
         let cmd = String::from_utf8_lossy(args[0]).into_owned();
         self.replaying = false;
         let mut tries = 0u32;
@@ -302,7 +302,7 @@ impl Client {
     /// but not yet answered — instead of wedging the caller. Completed
     /// replies are never re-requested; replayed sends charge
     /// `wasted_sent`, so logical accounting matches a fault-free run.
-    fn pipelined(
+    pub(crate) fn pipelined(
         &mut self,
         n_cmds: usize,
         mut send_cmd: impl FnMut(&mut Client, usize) -> Result<()>,

@@ -1,14 +1,17 @@
 //! The distributed in-memory data store system (the Redis role in the
 //! paper): RESP protocol, store with memory accounting and `MGETSUFFIX`,
-//! threaded TCP server, pipelined client, mod-N sharding, the flat
-//! [`batch::SuffixBatch`] arenas the zero-copy fetch path runs on, and
-//! the reducer-side suffix prefetcher.
+//! the reusable RESP service layer and the threaded TCP servers built on
+//! it (the KV store and the sealed-index query tier), pipelined client,
+//! mod-N sharding, the flat [`batch::SuffixBatch`] arenas the zero-copy
+//! fetch path runs on, and the reducer-side suffix prefetcher.
 
 pub mod batch;
 pub mod client;
 pub mod prefetch;
+pub mod query;
 pub mod resp;
 pub mod server;
+pub mod service;
 pub mod shard;
 pub mod store;
 

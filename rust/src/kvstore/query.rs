@@ -1,0 +1,337 @@
+//! The serving tier: `SEARCH`/`PAIRS`/`STAT` over a sealed index.
+//!
+//! A [`QueryServer`] is the second dialect plugged into the reusable
+//! RESP service layer (`crate::kvstore::service`) — it shares the KV
+//! server's accept loop, pipelining-aware flush policy, wire
+//! accounting, fault-injection hooks, and shutdown/restart machinery,
+//! but serves a different resource: one immutable, checksum-verified
+//! [`SealedIndex`] shared by every connection. Because the artifact is
+//! read-only, the query path takes **no lock at all** — handlers read
+//! the shared `Arc` directly, so concurrent clients scale without the
+//! store-mutex serialization the construction-side KV server needs.
+//!
+//! The wire dialect (all arguments ASCII):
+//!
+//! * `SEARCH <pattern>` → flat array of integers, `(seq, offset)` per
+//!   hit, sorted — `IndexView::find` over the wire.
+//! * `PAIRS <fwd> <rev> <max_insert>` → flat array of integers,
+//!   `(fragment, fwd_seq, fwd_off, rev_seq, rev_off)` per joined hit —
+//!   `IndexView::find_pairs` over the wire.
+//! * `STAT` → `[n_suffixes, n_reads, n_files, corpus_bytes]`.
+//! * `PING` → `PONG` (health check, same as the KV dialect).
+//!
+//! Replies carry only integers, so a TCP answer is convertible back to
+//! exactly the in-memory answer — the serving equivalence tests assert
+//! byte-identical results between the two paths.
+
+use std::io;
+use std::net::SocketAddr;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+use crate::faults::FaultPlan;
+use crate::kvstore::client::{Client, FailoverConfig, KvError, Result};
+use crate::kvstore::resp::{self, Value};
+use crate::kvstore::service::{RespHandler, RespServer, RespService};
+use crate::suffix::encode::strict_code_of;
+use crate::suffix::sealed::SealedIndex;
+use crate::suffix::search::{IndexView, PairHit};
+
+/// TCP server answering suffix-array queries over one shared read-only
+/// [`SealedIndex`].
+pub struct QueryServer {
+    inner: RespServer,
+    index: Arc<SealedIndex>,
+    /// Total request wire bytes received (network-footprint accounting).
+    pub bytes_in: Arc<AtomicU64>,
+    /// Total reply wire bytes sent (network-footprint accounting).
+    pub bytes_out: Arc<AtomicU64>,
+}
+
+struct QueryService {
+    index: Arc<SealedIndex>,
+}
+
+impl RespService for QueryService {
+    fn handler(&self) -> Box<dyn RespHandler> {
+        Box::new(QueryHandler { index: self.index.clone() })
+    }
+}
+
+struct QueryHandler {
+    index: Arc<SealedIndex>,
+}
+
+/// Decode an ASCII pattern argument into base codes, or a RESP error
+/// naming the offending byte. Strict: `N` and anything outside `$ACGT`
+/// is rejected, not masked — a query must not silently match the wrong
+/// bases.
+fn parse_pattern(arg: &[u8]) -> std::result::Result<Vec<u8>, Value> {
+    let mut codes = Vec::with_capacity(arg.len());
+    for &c in arg {
+        match strict_code_of(c) {
+            Some(code) => codes.push(code),
+            None => {
+                return Err(Value::Error(format!(
+                    "ERR pattern byte {:?} is not a base (expected one of $ACGT)",
+                    c as char
+                )))
+            }
+        }
+    }
+    Ok(codes)
+}
+
+impl QueryHandler {
+    fn dispatch(&self, args: &[Vec<u8>]) -> Value {
+        let cmd = &args[0];
+        if cmd.eq_ignore_ascii_case(b"SEARCH") {
+            if args.len() != 2 {
+                return Value::Error("ERR SEARCH takes exactly one pattern".into());
+            }
+            let codes = match parse_pattern(&args[1]) {
+                Ok(c) => c,
+                Err(e) => return e,
+            };
+            let hits = self.index.find(&codes);
+            let mut out = Vec::with_capacity(hits.len() * 2);
+            for (seq, off) in hits {
+                out.push(Value::Int(seq as i64));
+                out.push(Value::Int(off as i64));
+            }
+            Value::Array(out)
+        } else if cmd.eq_ignore_ascii_case(b"PAIRS") {
+            if args.len() != 4 {
+                return Value::Error("ERR PAIRS takes <fwd> <rev> <max_insert>".into());
+            }
+            let (fwd, rev) = match (parse_pattern(&args[1]), parse_pattern(&args[2])) {
+                (Ok(f), Ok(r)) => (f, r),
+                (Err(e), _) | (_, Err(e)) => return e,
+            };
+            let Some(max_insert) = std::str::from_utf8(&args[3])
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+            else {
+                return Value::Error("ERR bad max-insert (expected a decimal length)".into());
+            };
+            let hits = self.index.find_pairs(&fwd, &rev, max_insert);
+            let mut out = Vec::with_capacity(hits.len() * 5);
+            for h in hits {
+                out.push(Value::Int(h.fragment as i64));
+                out.push(Value::Int(h.forward.0 as i64));
+                out.push(Value::Int(h.forward.1 as i64));
+                out.push(Value::Int(h.reverse.0 as i64));
+                out.push(Value::Int(h.reverse.1 as i64));
+            }
+            Value::Array(out)
+        } else if cmd.eq_ignore_ascii_case(b"STAT") {
+            let st = self.index.stats();
+            Value::Array(vec![
+                Value::Int(st.n_suffixes as i64),
+                Value::Int(st.n_reads as i64),
+                Value::Int(st.n_files as i64),
+                Value::Int(st.corpus_bytes as i64),
+            ])
+        } else if cmd.eq_ignore_ascii_case(b"PING") {
+            Value::Bulk(b"PONG".to_vec())
+        } else {
+            Value::Error(format!(
+                "ERR unknown query command {:?}",
+                String::from_utf8_lossy(cmd)
+            ))
+        }
+    }
+}
+
+impl RespHandler for QueryHandler {
+    fn handle(&mut self, args: &[Vec<u8>], reply: &mut Vec<u8>) -> io::Result<u64> {
+        let v = self.dispatch(args);
+        resp::write_value(reply, &v)?;
+        Ok(v.wire_len())
+    }
+}
+
+impl QueryServer {
+    /// Bind `127.0.0.1:port` (port 0 = ephemeral) and serve queries over
+    /// `index`.
+    pub fn start(port: u16, index: Arc<SealedIndex>) -> io::Result<QueryServer> {
+        Self::start_with_faults(port, 0, None, index)
+    }
+
+    /// [`QueryServer::start`] with a fault-injection plan: this instance
+    /// is shard `shard` of the plan — the same kill/revive schedule and
+    /// reply-delay hooks the KV server honors.
+    pub fn start_with_faults(
+        port: u16,
+        shard: usize,
+        faults: Option<Arc<FaultPlan>>,
+        index: Arc<SealedIndex>,
+    ) -> io::Result<QueryServer> {
+        let inner = RespServer::start(
+            port,
+            shard,
+            faults,
+            Arc::new(QueryService { index: index.clone() }),
+        )?;
+        Ok(QueryServer {
+            bytes_in: inner.bytes_in.clone(),
+            bytes_out: inner.bytes_out.clone(),
+            index,
+            inner,
+        })
+    }
+
+    /// Revive a shut-down query server on the same address over the same
+    /// sealed index. A no-op while running.
+    pub fn restart(&mut self) -> io::Result<()> {
+        self.inner.restart()
+    }
+
+    /// The bound listen address.
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr()
+    }
+
+    /// The served artifact (shared, immutable).
+    pub fn index(&self) -> &Arc<SealedIndex> {
+        &self.index
+    }
+
+    /// Connection handles the accept loop currently tracks.
+    pub fn tracked_connections(&self) -> usize {
+        self.inner.tracked_connections()
+    }
+
+    /// Stop accepting connections and join the accept thread.
+    pub fn shutdown(&mut self) {
+        self.inner.shutdown()
+    }
+}
+
+/// Headline counts of a served index, as answered by `STAT`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueryStat {
+    /// Suffix-array entries served.
+    pub n_suffixes: u64,
+    /// Reads in the served corpus.
+    pub n_reads: u64,
+    /// Input files the construction consumed.
+    pub n_files: u64,
+    /// Corpus payload bytes.
+    pub corpus_bytes: u64,
+}
+
+/// Client for the query dialect: the KV [`Client`]'s transport
+/// (pipelining, bounded reconnect/backoff failover, wire accounting)
+/// speaking `SEARCH`/`PAIRS`/`STAT`. Queries are read-only and therefore
+/// idempotent, so the inherited replay-on-reconnect failover is sound
+/// here too.
+pub struct QueryClient {
+    c: Client,
+}
+
+fn expect_int(v: Value) -> Result<i64> {
+    match v {
+        Value::Int(i) => Ok(i),
+        v => Err(KvError::Unexpected(v)),
+    }
+}
+
+impl QueryClient {
+    /// Connect with default failover policy.
+    pub fn connect(addr: SocketAddr) -> Result<QueryClient> {
+        Ok(QueryClient { c: Client::connect(addr)? })
+    }
+
+    /// Connect with an explicit failover policy.
+    pub fn connect_with(addr: SocketAddr, cfg: FailoverConfig) -> Result<QueryClient> {
+        Ok(QueryClient { c: Client::connect_with(addr, cfg)? })
+    }
+
+    /// Health check.
+    pub fn ping(&mut self) -> Result<()> {
+        self.c.ping()
+    }
+
+    /// Logical wire traffic so far: (sent, received) bytes.
+    pub fn traffic(&self) -> (u64, u64) {
+        (self.c.bytes_sent, self.c.bytes_received)
+    }
+
+    /// All occurrences of the ASCII `pattern`, as sorted `(seq, offset)`
+    /// pairs — the TCP twin of `IndexView::find`.
+    pub fn search(&mut self, pattern: &[u8]) -> Result<Vec<(u64, usize)>> {
+        match self.c.call(&[b"SEARCH", pattern])? {
+            Value::Array(vs) => {
+                if vs.len() % 2 != 0 {
+                    return Err(KvError::Server(format!(
+                        "SEARCH replied {} integers; (seq, offset) pairs expected",
+                        vs.len()
+                    )));
+                }
+                let mut out = Vec::with_capacity(vs.len() / 2);
+                let mut it = vs.into_iter();
+                while let (Some(seq), Some(off)) = (it.next(), it.next()) {
+                    out.push((expect_int(seq)? as u64, expect_int(off)? as usize));
+                }
+                Ok(out)
+            }
+            v => Err(KvError::Unexpected(v)),
+        }
+    }
+
+    /// Pair-end seed query over the wire — the TCP twin of
+    /// `IndexView::find_pairs`. Seeds are ASCII; `seed_rev` is in the
+    /// reverse read's coordinates, as in the in-memory query.
+    pub fn pairs(
+        &mut self,
+        seed_fwd: &[u8],
+        seed_rev: &[u8],
+        max_insert: usize,
+    ) -> Result<Vec<PairHit>> {
+        let mi = max_insert.to_string();
+        match self.c.call(&[b"PAIRS", seed_fwd, seed_rev, mi.as_bytes()])? {
+            Value::Array(vs) => {
+                if vs.len() % 5 != 0 {
+                    return Err(KvError::Server(format!(
+                        "PAIRS replied {} integers; 5-tuples expected",
+                        vs.len()
+                    )));
+                }
+                let mut out = Vec::with_capacity(vs.len() / 5);
+                let mut it = vs.into_iter();
+                while let Some(fragment) = it.next() {
+                    let (Some(fs), Some(fo), Some(rs), Some(ro)) =
+                        (it.next(), it.next(), it.next(), it.next())
+                    else {
+                        unreachable!("length checked to be a multiple of 5");
+                    };
+                    out.push(PairHit {
+                        fragment: expect_int(fragment)? as u64,
+                        forward: (expect_int(fs)? as u64, expect_int(fo)? as usize),
+                        reverse: (expect_int(rs)? as u64, expect_int(ro)? as usize),
+                    });
+                }
+                Ok(out)
+            }
+            v => Err(KvError::Unexpected(v)),
+        }
+    }
+
+    /// Headline counts of the served index.
+    pub fn stat(&mut self) -> Result<QueryStat> {
+        match self.c.call(&[b"STAT"])? {
+            Value::Array(vs) if vs.len() == 4 => {
+                let mut it = vs.into_iter();
+                let mut next = || expect_int(it.next().expect("4 elements")).map(|i| i as u64);
+                Ok(QueryStat {
+                    n_suffixes: next()?,
+                    n_reads: next()?,
+                    n_files: next()?,
+                    corpus_bytes: next()?,
+                })
+            }
+            v => Err(KvError::Unexpected(v)),
+        }
+    }
+}

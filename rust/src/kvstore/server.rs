@@ -1,43 +1,71 @@
-//! Threaded TCP server for one KV instance (the Redis role). One instance
-//! per simulated node; the store is a mutex-guarded [`Store`] — Redis
-//! itself is single-threaded, so serializing commands is faithful.
-//!
-//! Pipelined clients send several commands before reading any reply, so
-//! the connection loop interleaves: it keeps dispatching as long as more
-//! request bytes are already buffered and only flushes the reply stream
-//! when the input runs dry. A burst of N pipelined commands then costs
-//! one reply flush instead of N, and command processing overlaps the
-//! client's request serialization.
+//! The KV instance's TCP server (the Redis role): the store's command
+//! dialect plugged into the reusable RESP service layer
+//! ([`crate::kvstore::service::RespServer`]), which owns the accept
+//! loop, pipelining-aware flush policy, wire accounting, and fault
+//! hooks. One instance per simulated node; the store is a mutex-guarded
+//! [`Store`] — Redis itself is single-threaded, so serializing commands
+//! is faithful.
 
-use std::io::{BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::io::Write;
+use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 
 use crate::faults::FaultPlan;
 use crate::kvstore::resp::{self, Value};
+use crate::kvstore::service::{RespHandler, RespServer, RespService};
 use crate::kvstore::store::{parse_offset, Reply, Store};
-use crate::util::bytes::dec_len;
 
-/// Shared handle to a running server.
+/// Shared handle to a running KV server.
 pub struct Server {
-    addr: std::net::SocketAddr,
+    inner: RespServer,
     store: Arc<Mutex<Store>>,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
     /// Total request wire bytes received (network-footprint accounting).
     pub bytes_in: Arc<AtomicU64>,
     /// Total reply wire bytes sent (network-footprint accounting).
     pub bytes_out: Arc<AtomicU64>,
-    /// Connection handles still tracked by the accept loop (live
-    /// connections plus at most the finished ones not yet reaped).
-    tracked: Arc<AtomicUsize>,
-    /// Fault-injection plan consulted per connection/request (tests
-    /// only; `None` = zero hooks on the serving path).
-    faults: Option<Arc<FaultPlan>>,
-    /// This server's shard index within the fault plan.
-    shard: usize,
+}
+
+/// The KV command dialect: each connection's handler dispatches into the
+/// shared mutex-guarded store.
+struct KvService {
+    store: Arc<Mutex<Store>>,
+}
+
+impl RespService for KvService {
+    fn handler(&self) -> Box<dyn RespHandler> {
+        Box::new(KvHandler {
+            store: self.store.clone(),
+            offsets: Vec::new(),
+        })
+    }
+}
+
+/// Per-connection KV dispatcher with reused `MGETSUFFIX` offset scratch.
+struct KvHandler {
+    store: Arc<Mutex<Store>>,
+    offsets: Vec<usize>,
+}
+
+impl RespHandler for KvHandler {
+    fn handle(&mut self, args: &[Vec<u8>], reply: &mut Vec<u8>) -> std::io::Result<u64> {
+        if is_mgetsuffix(args) {
+            // hot path: serialize the reply straight from the store's
+            // value slices — no Reply::Multi, no Vec per suffix. Staged
+            // into the reusable reply buffer (infallible writes) so the
+            // store lock is released BEFORE the blocking socket write:
+            // a slow peer must never stall other connections at
+            // store.lock().
+            write_mgetsuffix_reply(args, &self.store, reply, &mut self.offsets)
+        } else {
+            let r = {
+                let mut s = self.store.lock().unwrap();
+                s.dispatch(args)
+            };
+            let v = reply_to_value(r);
+            resp::write_value(reply, &v)?;
+            Ok(v.wire_len())
+        }
+    }
 }
 
 impl Server {
@@ -54,76 +82,18 @@ impl Server {
         shard: usize,
         faults: Option<Arc<FaultPlan>>,
     ) -> std::io::Result<Server> {
-        let listener = TcpListener::bind(("127.0.0.1", port))?;
-        let addr = listener.local_addr()?;
-        let mut server = Server {
-            addr,
-            store: Arc::new(Mutex::new(Store::new())),
-            stop: Arc::new(AtomicBool::new(false)),
-            accept_thread: None,
-            bytes_in: Arc::new(AtomicU64::new(0)),
-            bytes_out: Arc::new(AtomicU64::new(0)),
-            tracked: Arc::new(AtomicUsize::new(0)),
-            faults,
+        let store = Arc::new(Mutex::new(Store::new()));
+        let inner = RespServer::start(
+            port,
             shard,
-        };
-        server.accept_thread = Some(server.spawn_accept(listener));
-        Ok(server)
-    }
-
-    /// Spawn the accept loop over an already-bound listener.
-    fn spawn_accept(&self, listener: TcpListener) -> JoinHandle<()> {
-        let t_store = self.store.clone();
-        let t_stop = self.stop.clone();
-        let t_in = self.bytes_in.clone();
-        let t_out = self.bytes_out.clone();
-        let t_tracked = self.tracked.clone();
-        let t_faults = self.faults.clone();
-        let shard = self.shard;
-        std::thread::spawn(move || {
-            let mut workers: Vec<JoinHandle<()>> = Vec::new();
-            for conn in listener.incoming() {
-                // reap handles of connections that have since closed —
-                // a long-lived server would otherwise accumulate one
-                // JoinHandle (thread stack bookkeeping included) per
-                // completed connection, forever
-                let mut i = 0;
-                while i < workers.len() {
-                    if workers[i].is_finished() {
-                        // finished: join() returns without blocking
-                        let _ = workers.swap_remove(i).join();
-                    } else {
-                        i += 1;
-                    }
-                }
-                if t_stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(conn) = conn else { break };
-                if let Some(plan) = &t_faults {
-                    if plan.on_connect(shard) {
-                        // shard is down: accept then drop — the client
-                        // sees EOF on first use and runs another
-                        // reconnect/backoff cycle; each refusal counts
-                        // toward the plan's revive trigger
-                        drop(conn);
-                        continue;
-                    }
-                }
-                let store = t_store.clone();
-                let stop = t_stop.clone();
-                let bin = t_in.clone();
-                let bout = t_out.clone();
-                let faults = t_faults.clone();
-                workers.push(std::thread::spawn(move || {
-                    let _ = serve_conn(conn, store, stop, bin, bout, faults, shard);
-                }));
-                t_tracked.store(workers.len(), Ordering::SeqCst);
-            }
-            for w in workers {
-                let _ = w.join();
-            }
-            t_tracked.store(0, Ordering::SeqCst);
+            faults,
+            Arc::new(KvService { store: store.clone() }),
+        )?;
+        Ok(Server {
+            bytes_in: inner.bytes_in.clone(),
+            bytes_out: inner.bytes_out.clone(),
+            store,
+            inner,
         })
     }
 
@@ -133,18 +103,12 @@ impl Server {
     /// this), so a revived shard serves byte-identical data. A no-op on
     /// a server that is still running.
     pub fn restart(&mut self) -> std::io::Result<()> {
-        if self.accept_thread.is_some() {
-            return Ok(());
-        }
-        self.stop.store(false, Ordering::SeqCst);
-        let listener = TcpListener::bind(self.addr)?;
-        self.accept_thread = Some(self.spawn_accept(listener));
-        Ok(())
+        self.inner.restart()
     }
 
     /// The bound listen address.
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
+        self.inner.addr()
     }
 
     /// Direct (in-process) access to the store — used by the simulator and
@@ -163,26 +127,12 @@ impl Server {
     /// concurrently live connections — completed ones are reaped, not
     /// accumulated.
     pub fn tracked_connections(&self) -> usize {
-        self.tracked.load(Ordering::SeqCst)
+        self.inner.tracked_connections()
     }
 
     /// Stop accepting connections and join the accept thread.
     pub fn shutdown(&mut self) {
-        if self.accept_thread.is_none() {
-            return;
-        }
-        self.stop.store(true, Ordering::SeqCst);
-        // wake the accept loop
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.shutdown();
+        self.inner.shutdown()
     }
 }
 
@@ -199,77 +149,6 @@ fn reply_to_value(r: Reply) -> Value {
         ),
         Reply::Err(e) => Value::Error(e),
     }
-}
-
-fn serve_conn(
-    conn: TcpStream,
-    store: Arc<Mutex<Store>>,
-    stop: Arc<AtomicBool>,
-    bytes_in: Arc<AtomicU64>,
-    bytes_out: Arc<AtomicU64>,
-    faults: Option<Arc<FaultPlan>>,
-    shard: usize,
-) -> std::io::Result<()> {
-    conn.set_nodelay(true).ok();
-    let mut reader = BufReader::new(conn.try_clone()?);
-    let mut writer = BufWriter::new(conn);
-    // reused MGETSUFFIX scratch (offsets + staged reply bytes) — no
-    // per-command allocation in steady state
-    let mut offsets: Vec<usize> = Vec::new();
-    let mut reply_buf: Vec<u8> = Vec::new();
-    while !stop.load(Ordering::SeqCst) {
-        let Some(args) = resp::read_command(&mut reader)? else {
-            break; // client closed
-        };
-        if let Some(plan) = &faults {
-            // delay before touching the store — never while holding its
-            // lock, so a slow shard stalls only its own replies
-            if let Some(d) = plan.reply_delay {
-                std::thread::sleep(d);
-            }
-            if plan.on_request(shard) {
-                // shard dies mid-pipeline: drop the connection without
-                // answering — the client sees EOF on a request it
-                // already charged, and must replay it after failover
-                break;
-            }
-        }
-        // arithmetic wire length — no clones on the request path
-        let mut in_len: u64 = 1 + dec_len(args.len() as u64) as u64 + 2;
-        for a in &args {
-            in_len += resp::bulk_wire_len(a.len());
-        }
-        bytes_in.fetch_add(in_len, Ordering::Relaxed);
-        let out_len = if is_mgetsuffix(&args) {
-            // hot path: serialize the reply straight from the store's
-            // value slices — no Reply::Multi, no Vec per suffix. It is
-            // staged in the reused `reply_buf` (infallible writes) so
-            // the store lock is released BEFORE the blocking socket
-            // write: a slow peer must never stall other connections
-            // at store.lock().
-            reply_buf.clear();
-            let n = write_mgetsuffix_reply(&args, &store, &mut reply_buf, &mut offsets)?;
-            writer.write_all(&reply_buf)?;
-            n
-        } else {
-            let reply = {
-                let mut s = store.lock().unwrap();
-                s.dispatch(&args)
-            };
-            let v = reply_to_value(reply);
-            resp::write_value(&mut writer, &v)?;
-            v.wire_len()
-        };
-        bytes_out.fetch_add(out_len, Ordering::Relaxed);
-        // Flush only when no further pipelined request bytes are already
-        // buffered: anything still in `reader`'s buffer was fully sent by
-        // the client before it started waiting, so delaying the flush
-        // cannot deadlock and batches replies for the whole burst.
-        if reader.buffer().is_empty() {
-            writer.flush()?;
-        }
-    }
-    Ok(())
 }
 
 /// Is this a well-formed `MGETSUFFIX key off [key off ...]` command (the
@@ -333,6 +212,8 @@ fn write_mgetsuffix_reply(
 mod tests {
     use super::*;
     use crate::kvstore::client::Client;
+    use std::net::TcpStream;
+    use std::sync::atomic::Ordering;
 
     #[test]
     fn streamed_mgetsuffix_reply_matches_dispatch_bytes() {

@@ -1,0 +1,264 @@
+//! Reusable RESP service layer: the connection/pipeline/staging
+//! machinery of a threaded TCP server, independent of what the commands
+//! *mean*.
+//!
+//! [`RespServer`] owns everything protocol- and transport-shaped —
+//! accept loop with worker reaping, per-connection read/dispatch/write
+//! loop, pipelining-aware flush policy, arithmetic wire accounting, and
+//! the fault-injection hooks — while a [`RespService`] plugs in the
+//! command semantics. The KV store (`crate::kvstore::server::Server`)
+//! and the sealed-index query tier (`crate::kvstore::query::QueryServer`)
+//! are both thin services over this one server; a fault plan or a
+//! pipelined client exercised against one is exercising the identical
+//! machinery of the other.
+//!
+//! Replies are staged into a reused in-memory buffer before the socket
+//! write. That is not an extra copy for safety's sake — it is the lock
+//! discipline: a handler may hold a shared resource (the KV store's
+//! mutex) while serializing, and staging guarantees the resource is
+//! released before the potentially blocking socket write, so one stalled
+//! peer can never wedge the rest of the server.
+
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::faults::FaultPlan;
+use crate::kvstore::resp;
+use crate::util::bytes::dec_len;
+
+/// Per-connection command processor. One handler is created per accepted
+/// connection (so it can own reusable scratch buffers) and called once
+/// per command, in order.
+pub trait RespHandler: Send {
+    /// Serialize the RESP reply to `args` into `reply` (appending;
+    /// `reply` is a staging buffer the server writes to the socket after
+    /// this returns) and return the reply's wire length in bytes.
+    ///
+    /// Infallible in steady state — an `Err` drops the connection, which
+    /// is the RESP-appropriate response to a reply that cannot be
+    /// serialized at all (malformed *commands* should instead stage a
+    /// RESP `Error` reply).
+    fn handle(&mut self, args: &[Vec<u8>], reply: &mut Vec<u8>) -> io::Result<u64>;
+}
+
+/// A command dialect served over RESP: a factory of per-connection
+/// [`RespHandler`]s sharing whatever state the dialect needs (a store
+/// mutex, an immutable index, ...).
+pub trait RespService: Send + Sync + 'static {
+    /// Create the handler for one newly accepted connection.
+    fn handler(&self) -> Box<dyn RespHandler>;
+}
+
+/// Threaded TCP server speaking RESP for one [`RespService`]. One
+/// worker thread per live connection; the accept loop reaps finished
+/// workers so long-lived servers stay bounded.
+///
+/// Pipelined clients send several commands before reading any reply, so
+/// the connection loop interleaves: it keeps dispatching as long as more
+/// request bytes are already buffered and only flushes the reply stream
+/// when the input runs dry. A burst of N pipelined commands then costs
+/// one reply flush instead of N, and command processing overlaps the
+/// client's request serialization.
+pub struct RespServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    /// Total request wire bytes received (network-footprint accounting).
+    pub bytes_in: Arc<AtomicU64>,
+    /// Total reply wire bytes sent (network-footprint accounting).
+    pub bytes_out: Arc<AtomicU64>,
+    /// Connection handles still tracked by the accept loop (live
+    /// connections plus at most the finished ones not yet reaped).
+    tracked: Arc<AtomicUsize>,
+    /// Fault-injection plan consulted per connection/request (tests
+    /// only; `None` = zero hooks on the serving path).
+    faults: Option<Arc<FaultPlan>>,
+    /// This server's shard index within the fault plan.
+    shard: usize,
+    service: Arc<dyn RespService>,
+}
+
+impl RespServer {
+    /// Bind `127.0.0.1:port` (port 0 = ephemeral) and serve `service`,
+    /// optionally under a fault plan as the plan's shard `shard`.
+    pub fn start(
+        port: u16,
+        shard: usize,
+        faults: Option<Arc<FaultPlan>>,
+        service: Arc<dyn RespService>,
+    ) -> io::Result<RespServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let mut server = RespServer {
+            addr,
+            stop: Arc::new(AtomicBool::new(false)),
+            accept_thread: None,
+            bytes_in: Arc::new(AtomicU64::new(0)),
+            bytes_out: Arc::new(AtomicU64::new(0)),
+            tracked: Arc::new(AtomicUsize::new(0)),
+            faults,
+            shard,
+            service,
+        };
+        server.accept_thread = Some(server.spawn_accept(listener));
+        Ok(server)
+    }
+
+    /// Spawn the accept loop over an already-bound listener.
+    fn spawn_accept(&self, listener: TcpListener) -> JoinHandle<()> {
+        let t_stop = self.stop.clone();
+        let t_in = self.bytes_in.clone();
+        let t_out = self.bytes_out.clone();
+        let t_tracked = self.tracked.clone();
+        let t_faults = self.faults.clone();
+        let t_service = self.service.clone();
+        let shard = self.shard;
+        std::thread::spawn(move || {
+            let mut workers: Vec<JoinHandle<()>> = Vec::new();
+            for conn in listener.incoming() {
+                // reap handles of connections that have since closed —
+                // a long-lived server would otherwise accumulate one
+                // JoinHandle (thread stack bookkeeping included) per
+                // completed connection, forever
+                let mut i = 0;
+                while i < workers.len() {
+                    if workers[i].is_finished() {
+                        // finished: join() returns without blocking
+                        let _ = workers.swap_remove(i).join();
+                    } else {
+                        i += 1;
+                    }
+                }
+                if t_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(conn) = conn else { break };
+                if let Some(plan) = &t_faults {
+                    if plan.on_connect(shard) {
+                        // shard is down: accept then drop — the client
+                        // sees EOF on first use and runs another
+                        // reconnect/backoff cycle; each refusal counts
+                        // toward the plan's revive trigger
+                        drop(conn);
+                        continue;
+                    }
+                }
+                let stop = t_stop.clone();
+                let bin = t_in.clone();
+                let bout = t_out.clone();
+                let faults = t_faults.clone();
+                let handler = t_service.handler();
+                workers.push(std::thread::spawn(move || {
+                    let _ = serve_conn(conn, handler, stop, bin, bout, faults, shard);
+                }));
+                t_tracked.store(workers.len(), Ordering::SeqCst);
+            }
+            for w in workers {
+                let _ = w.join();
+            }
+            t_tracked.store(0, Ordering::SeqCst);
+        })
+    }
+
+    /// Revive a shut-down server: bind the same address again over the
+    /// *same* service state (whatever the service shares across
+    /// handlers is the availability layer — a revived shard serves
+    /// byte-identical data). A no-op on a server that is still running.
+    pub fn restart(&mut self) -> io::Result<()> {
+        if self.accept_thread.is_some() {
+            return Ok(());
+        }
+        self.stop.store(false, Ordering::SeqCst);
+        let listener = TcpListener::bind(self.addr)?;
+        self.accept_thread = Some(self.spawn_accept(listener));
+        Ok(())
+    }
+
+    /// The bound listen address.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Connection handles the accept loop currently tracks (as of the
+    /// last accepted connection). Stays bounded by the number of
+    /// concurrently live connections — completed ones are reaped, not
+    /// accumulated.
+    pub fn tracked_connections(&self) -> usize {
+        self.tracked.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting connections and join the accept thread.
+    pub fn shutdown(&mut self) {
+        if self.accept_thread.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RespServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(
+    conn: TcpStream,
+    mut handler: Box<dyn RespHandler>,
+    stop: Arc<AtomicBool>,
+    bytes_in: Arc<AtomicU64>,
+    bytes_out: Arc<AtomicU64>,
+    faults: Option<Arc<FaultPlan>>,
+    shard: usize,
+) -> io::Result<()> {
+    conn.set_nodelay(true).ok();
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut writer = BufWriter::new(conn);
+    // reused reply staging buffer — no per-command allocation in steady
+    // state, and the handler's locks are released before the socket write
+    let mut reply_buf: Vec<u8> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        let Some(args) = resp::read_command(&mut reader)? else {
+            break; // client closed
+        };
+        if let Some(plan) = &faults {
+            // delay before dispatch — never while the handler holds its
+            // locks, so a slow shard stalls only its own replies
+            if let Some(d) = plan.reply_delay {
+                std::thread::sleep(d);
+            }
+            if plan.on_request(shard) {
+                // shard dies mid-pipeline: drop the connection without
+                // answering — the client sees EOF on a request it
+                // already charged, and must replay it after failover
+                break;
+            }
+        }
+        // arithmetic wire length — no clones on the request path
+        let mut in_len: u64 = 1 + dec_len(args.len() as u64) as u64 + 2;
+        for a in &args {
+            in_len += resp::bulk_wire_len(a.len());
+        }
+        bytes_in.fetch_add(in_len, Ordering::Relaxed);
+        reply_buf.clear();
+        let out_len = handler.handle(&args, &mut reply_buf)?;
+        writer.write_all(&reply_buf)?;
+        bytes_out.fetch_add(out_len, Ordering::Relaxed);
+        // Flush only when no further pipelined request bytes are already
+        // buffered: anything still in `reader`'s buffer was fully sent by
+        // the client before it started waiting, so delaying the flush
+        // cannot deadlock and batches replies for the whole burst.
+        if reader.buffer().is_empty() {
+            writer.flush()?;
+        }
+    }
+    Ok(())
+}

@@ -6,6 +6,10 @@
 //!   figure <3|4|5|7|8>                 regenerate a paper figure
 //!   terasort [--reads N --len L ...]   run the baseline on a synthetic corpus
 //!   scheme   [--reads N --tcp ...]     run the scheme (in-proc or TCP KV)
+//!   build    --out PATH [...]          construct AND seal a synthetic corpus
+//!   seal     <fa> [mates.fa] --out P   construct + seal FASTA input file(s)
+//!   serve    --index PATH [--port P]   serve a sealed index (SEARCH/PAIRS/STAT)
+//!   query    <op> [...] --addr|--index query a server or a local artifact
 //!   kv-server [--port P]               run one KV instance (RESP + MGETSUFFIX)
 //!   stats                              §IV-D headline comparison block
 //!   all                                every table and figure
@@ -14,16 +18,24 @@
 //! --trials N (simulated repetitions), --artifacts DIR (PJRT kernels;
 //! "none" forces the native fallback), --reducers N, --seed S.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use samr::cli::Args;
 use samr::footprint::{Channel, Ledger};
-use samr::kvstore::shard::{SharedStore, SuffixStore};
+use samr::kvstore::query::{QueryClient, QueryServer};
+use samr::kvstore::shard::{ShardedClient, SharedStore, SuffixStore};
 use samr::kvstore::{server::Server, LocalKvCluster};
 use samr::report::experiments::{example_corpus, ScaledEnv};
 use samr::report::Reporter;
 use samr::runtime;
 use samr::scheme::{self, SchemeConfig};
+use samr::suffix::encode::strict_code_of;
+use samr::suffix::reads::{
+    parse_fasta, parse_paired_files, synth_paired_corpus, CorpusSpec, ParsePolicy, Read,
+};
+use samr::suffix::sealed::SealedIndex;
+use samr::suffix::search::{IndexView, PairHit};
 use samr::suffix::validate::validate_order;
 use samr::terasort::{self, TeraSortConfig};
 use samr::util::bytes::human;
@@ -49,6 +61,10 @@ fn main() {
         "figure" => figure(&args, &reporter),
         "terasort" => run_terasort(&args),
         "scheme" => run_scheme(&args),
+        "build" => build(&args),
+        "seal" => seal(&args),
+        "serve" => serve(&args),
+        "query" => query(&args),
         "kv-server" => kv_server(&args),
         "stats" => {
             print!("{}", reporter.scheme_stats().expect("stats"));
@@ -71,6 +87,12 @@ const HELP: &str = "samr — suffix array construction with MapReduce + in-memor
   samr quickstart | stats | all
   samr table <1..8>   samr figure <3|4|5|7|8>
   samr terasort|scheme [--reads N --len L --reducers R --tcp]
+  samr build --out index.samr [--reads N --len L --paired --tcp --instances K]
+  samr seal reads.fa [mates.fa] --out index.samr [--strict --instances K]
+  samr serve --index index.samr [--port P]
+  samr query search <PATTERN> --addr H:P | --index index.samr
+  samr query pairs <FWD> <REV> [--max-insert N] --addr H:P | --index index.samr
+  samr query stat --addr H:P | --index index.samr
   samr kv-server [--port P]
   global: --thrift F --trials N --artifacts DIR|none --seed S";
 
@@ -281,6 +303,293 @@ fn run_scheme(args: &Args) -> i32 {
         samr::mapreduce::resident::peak()
     );
     0
+}
+
+/// Scheme config for the sealing subcommands (`build`/`seal`).
+fn sealed_cfg(args: &Args) -> SchemeConfig {
+    SchemeConfig {
+        conf: conf_from(args),
+        group_threshold: args.get_parse("threshold", 100_000),
+        samples_per_reducer: 1000,
+        ..Default::default()
+    }
+}
+
+/// Run the sealing construction over `files` with the store backend the
+/// flags select (in-proc shards by default, real TCP KV under `--tcp`),
+/// then report the artifact.
+fn seal_files(args: &Args, files: &[&[Read]], out: &Path) -> i32 {
+    let cfg = sealed_cfg(args);
+    let ledger = Ledger::new();
+    let n_instances = args.get_parse("instances", 4usize);
+    let t0 = std::time::Instant::now();
+    let res = if args.has("tcp") {
+        let kv = LocalKvCluster::start(n_instances).expect("kv cluster");
+        let addrs = kv.addrs();
+        let factory: scheme::StoreFactory = Arc::new(move || {
+            Box::new(ShardedClient::connect(&addrs).expect("connect")) as Box<dyn SuffixStore>
+        });
+        scheme::run_files_sealed(files, &cfg, factory, &ledger, out)
+    } else {
+        let store = SharedStore::new(n_instances);
+        let factory: scheme::StoreFactory =
+            Arc::new(move || Box::new(store.clone()) as Box<dyn SuffixStore>);
+        scheme::run_files_sealed(files, &cfg, factory, &ledger, out)
+    };
+    let res = match res {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("seal failed: {e}");
+            return 1;
+        }
+    };
+    let artifact_bytes = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
+    let n_reads: usize = files.iter().map(|f| f.len()).sum();
+    println!(
+        "sealed {} suffixes ({} reads, {} files) to {} in {:?}",
+        res.n_sealed,
+        n_reads,
+        files.len(),
+        out.display(),
+        t0.elapsed()
+    );
+    println!(
+        "artifact {}; shuffle {}; KV memory {}",
+        human(artifact_bytes),
+        human(ledger.get(Channel::Shuffle)),
+        human(res.kv_memory)
+    );
+    0
+}
+
+fn build(args: &Args) -> i32 {
+    let out = match args.require("out") {
+        Ok(p) => PathBuf::from(p),
+        Err(e) => {
+            eprintln!("{e}\n{HELP}");
+            return 2;
+        }
+    };
+    if args.has("paired") {
+        let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+            n_reads: args.get_parse("reads", 2000),
+            read_len: args.get_parse("len", 100),
+            seed: args.get_parse("seed", 42),
+            ..Default::default()
+        });
+        seal_files(args, &[&fwd, &rev], &out)
+    } else {
+        let reads = corpus_from(args);
+        seal_files(args, &[&reads], &out)
+    }
+}
+
+fn seal(args: &Args) -> i32 {
+    let out = match args.require("out") {
+        Ok(p) => PathBuf::from(p),
+        Err(e) => {
+            eprintln!("{e}\n{HELP}");
+            return 2;
+        }
+    };
+    let policy = if args.has("strict") { ParsePolicy::Strict } else { ParsePolicy::MaskN };
+    let read_file = |p: &str| match std::fs::read(p) {
+        Ok(d) => Ok(d),
+        Err(e) => Err(format!("seal: {p}: {e}")),
+    };
+    match args.positional.as_slice() {
+        [single] => {
+            let data = match read_file(single) {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            match parse_fasta(&data, 0, policy) {
+                Ok(reads) => seal_files(args, &[&reads], &out),
+                Err(e) => {
+                    eprintln!("seal: {single}: {e}");
+                    1
+                }
+            }
+        }
+        [fwd_path, rev_path] => {
+            let (fwd_data, rev_data) = match (read_file(fwd_path), read_file(rev_path)) {
+                (Ok(f), Ok(r)) => (f, r),
+                (Err(e), _) | (_, Err(e)) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            match parse_paired_files(&fwd_data, &rev_data, policy) {
+                Ok((fwd, rev)) => seal_files(args, &[&fwd, &rev], &out),
+                Err(e) => {
+                    eprintln!("seal: {e}");
+                    1
+                }
+            }
+        }
+        _ => {
+            eprintln!("seal takes one FASTA file (or two for pair-end)\n{HELP}");
+            2
+        }
+    }
+}
+
+fn serve(args: &Args) -> i32 {
+    let path = match args.require("index") {
+        Ok(p) => PathBuf::from(p),
+        Err(e) => {
+            eprintln!("{e}\n{HELP}");
+            return 2;
+        }
+    };
+    let index = match SealedIndex::open(&path) {
+        Ok(i) => Arc::new(i),
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 1;
+        }
+    };
+    let port = args.get_parse("port", 6380u16);
+    let mut server = QueryServer::start(port, index).expect("bind");
+    let st = server.index().stats();
+    println!(
+        "samr-query serving {} on {} ({} suffixes, {} reads, {} files, corpus {})",
+        path.display(),
+        server.addr(),
+        st.n_suffixes,
+        st.n_reads,
+        st.n_files,
+        human(st.corpus_bytes)
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+        let _ = &mut server;
+    }
+}
+
+/// Strict ASCII → codes for CLI query patterns; mirrors the server's
+/// rejection so local and TCP queries fail identically.
+fn query_codes(pattern: &str) -> Result<Vec<u8>, String> {
+    pattern
+        .bytes()
+        .map(|c| {
+            strict_code_of(c).ok_or_else(|| {
+                format!("pattern byte {:?} is not a base (expected one of $ACGT)", c as char)
+            })
+        })
+        .collect()
+}
+
+fn print_search_hits(hits: &[(u64, usize)]) {
+    for (seq, off) in hits {
+        println!("{seq}\t{off}");
+    }
+    println!("{} hits", hits.len());
+}
+
+fn print_pair_hits(hits: &[PairHit]) {
+    for h in hits {
+        println!(
+            "{}\t{}\t{}\t{}\t{}",
+            h.fragment, h.forward.0, h.forward.1, h.reverse.0, h.reverse.1
+        );
+    }
+    println!("{} pairs", hits.len());
+}
+
+fn print_stat(n_suffixes: u64, n_reads: u64, n_files: u64, corpus_bytes: u64) {
+    println!(
+        "suffixes {n_suffixes} / reads {n_reads} / files {n_files} / corpus {}",
+        human(corpus_bytes)
+    );
+}
+
+fn query(args: &Args) -> i32 {
+    let op = args.positional.first().map(String::as_str).unwrap_or("");
+    let max_insert = args.get_parse("max-insert", 1000usize);
+    // the two backends produce the same value shapes, so the printed
+    // output is identical whichever path answered
+    if let Some(addr) = args.get("addr") {
+        let addr: std::net::SocketAddr = match addr.parse() {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("query: bad --addr {addr:?}: {e}");
+                return 2;
+            }
+        };
+        let mut c = match QueryClient::connect(addr) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("query: {e}");
+                return 1;
+            }
+        };
+        let r = match (op, args.positional.get(1), args.positional.get(2)) {
+            ("search", Some(p), _) => c.search(p.as_bytes()).map(|h| print_search_hits(&h)),
+            ("pairs", Some(f), Some(r)) => {
+                c.pairs(f.as_bytes(), r.as_bytes(), max_insert).map(|h| print_pair_hits(&h))
+            }
+            ("stat", _, _) => c
+                .stat()
+                .map(|s| print_stat(s.n_suffixes, s.n_reads, s.n_files, s.corpus_bytes)),
+            _ => {
+                eprintln!("query: expected search <P> | pairs <F> <R> | stat\n{HELP}");
+                return 2;
+            }
+        };
+        match r {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("query: {e}");
+                1
+            }
+        }
+    } else if let Some(path) = args.get("index") {
+        let index = match SealedIndex::open(Path::new(path)) {
+            Ok(i) => i,
+            Err(e) => {
+                eprintln!("query: {e}");
+                return 1;
+            }
+        };
+        match (op, args.positional.get(1), args.positional.get(2)) {
+            ("search", Some(p), _) => match query_codes(p) {
+                Ok(pat) => {
+                    print_search_hits(&index.find(&pat));
+                    0
+                }
+                Err(e) => {
+                    eprintln!("query: {e}");
+                    2
+                }
+            },
+            ("pairs", Some(f), Some(r)) => match (query_codes(f), query_codes(r)) {
+                (Ok(fc), Ok(rc)) => {
+                    print_pair_hits(&index.find_pairs(&fc, &rc, max_insert));
+                    0
+                }
+                (Err(e), _) | (_, Err(e)) => {
+                    eprintln!("query: {e}");
+                    2
+                }
+            },
+            ("stat", _, _) => {
+                let st = index.stats();
+                print_stat(st.n_suffixes, st.n_reads, st.n_files, st.corpus_bytes);
+                0
+            }
+            _ => {
+                eprintln!("query: expected search <P> | pairs <F> <R> | stat\n{HELP}");
+                2
+            }
+        }
+    } else {
+        eprintln!("query needs --addr HOST:PORT or --index PATH\n{HELP}");
+        2
+    }
 }
 
 fn kv_server(args: &Args) -> i32 {

@@ -8,7 +8,10 @@
 //!
 //! [`run`] builds over one input file; [`run_files`] over several — the
 //! paper's pair-end Case 6, where two mate files feed one shared store
-//! and one joint shuffled index stream.
+//! and one joint shuffled index stream. [`run_files_sealed`] is the
+//! serving ending: instead of materializing the order in memory, it
+//! streams the reducer output into a sealed on-disk index artifact
+//! (`crate::suffix::sealed`) that the query tier loads and serves.
 
 pub mod gc_model;
 pub mod sampler;
@@ -31,6 +34,7 @@ use crate::mapreduce::record::{decode_i64_key, encode_i64_key, Record};
 use crate::runtime::{self, native};
 use crate::suffix::encode::DEFAULT_PREFIX_LEN;
 use crate::suffix::reads::{spool_read_records, Read};
+use crate::suffix::sealed::SealWriter;
 use sorting_group::{key_groups, key_is_complete, tie_break_positions, SortingGroupBuffer};
 
 /// Scheme configuration (paper defaults, scaled knobs in `JobConf`).
@@ -130,6 +134,23 @@ pub struct SchemeResult {
     pub time_split: Arc<TimeSplit>,
     /// Partition boundaries used.
     pub boundaries: Vec<i64>,
+}
+
+/// Everything a [`run_files_sealed`] run produces. The suffix order
+/// itself is NOT here — it lives in the sealed artifact on disk, which
+/// is the point: the construction ends in a servable file, not a
+/// process-resident `Vec`.
+pub struct SealedSchemeResult {
+    /// The underlying MapReduce job result (output, footprint, stats).
+    pub job: JobResult,
+    /// Memory used by the KV instances after loading (paper's 1.5×).
+    pub kv_memory: u64,
+    /// Reducer time split.
+    pub time_split: Arc<TimeSplit>,
+    /// Partition boundaries used.
+    pub boundaries: Vec<i64>,
+    /// Suffix-array entries streamed into the artifact.
+    pub n_sealed: u64,
 }
 
 // ---------------- mapper ----------------
@@ -619,6 +640,97 @@ pub fn run_files(
     store_factory: StoreFactory,
     ledger: &Arc<Ledger>,
 ) -> std::io::Result<SchemeResult> {
+    let core = run_files_core(files, cfg, &store_factory, ledger)?;
+    // stream the order straight out of the per-reducer output sinks —
+    // one record resident at a time, not the whole output
+    let order = core.job.collect_i64_values()?;
+    let kv_memory = probe_kv_memory(&core.parked, &store_factory);
+    Ok(SchemeResult {
+        job: core.job,
+        order,
+        kv_memory,
+        time_split: core.times,
+        boundaries: core.boundaries,
+    })
+}
+
+/// [`run_files`] with the serving ending: the reducer output streams
+/// into a sealed index artifact at `out` (corpus + SA + read metadata,
+/// checksummed — see `crate::suffix::sealed`) instead of materializing
+/// the order as a `Vec<i64>`. One SA entry is resident at a time on the
+/// sealing path, so the artifact scales with disk, not heap; the
+/// `SealWriter`'s finish-time invariants (SA count vs corpus suffix
+/// count) turn any wiring bug into a clean error rather than a
+/// plausible-looking artifact.
+pub fn run_files_sealed(
+    files: &[&[Read]],
+    cfg: &SchemeConfig,
+    store_factory: StoreFactory,
+    ledger: &Arc<Ledger>,
+    out: &std::path::Path,
+) -> std::io::Result<SealedSchemeResult> {
+    let mut writer = SealWriter::create(out)?;
+    for file in files {
+        writer.add_file(file)?;
+    }
+    let core = run_files_core(files, cfg, &store_factory, ledger)?;
+    let mut n_sealed = 0u64;
+    core.job.for_each_output(|rec| {
+        if rec.value.len() < 8 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "output value is {} bytes; an 8-byte i64 prefix is required",
+                    rec.value.len()
+                ),
+            ));
+        }
+        let idx = i64::from_be_bytes(rec.value[..8].try_into().expect("checked length"));
+        writer.push_index(idx)?;
+        n_sealed += 1;
+        Ok(())
+    })?;
+    writer.finish()?;
+    let kv_memory = probe_kv_memory(&core.parked, &store_factory);
+    Ok(SealedSchemeResult {
+        job: core.job,
+        kv_memory,
+        time_split: core.times,
+        boundaries: core.boundaries,
+        n_sealed,
+    })
+}
+
+/// What [`run_files_core`] hands back to an ending: the finished job
+/// plus the handles the endings need (memory probe, time split,
+/// boundaries).
+struct CoreRun {
+    job: JobResult,
+    parked: StoreSlot,
+    times: Arc<TimeSplit>,
+    boundaries: Vec<i64>,
+}
+
+/// Memory probe on a handle a map task already opened (parked in
+/// `put_reads`); only an empty job falls back to a fresh connection.
+fn probe_kv_memory(parked: &StoreSlot, store_factory: &StoreFactory) -> u64 {
+    match parked.lock().unwrap().take() {
+        Some(mut store) => store.used_memory(),
+        None => store_factory().used_memory(),
+    }
+}
+
+/// The shared body of every scheme run: validate the inputs, sample the
+/// boundaries, build and run the MapReduce job. The *ending* — what
+/// becomes of the reducer output stream — is the caller's: [`run_files`]
+/// collects it in memory, [`run_files_sealed`] streams it into the
+/// sealed artifact.
+fn run_files_core(
+    files: &[&[Read]],
+    cfg: &SchemeConfig,
+    store_factory: &StoreFactory,
+    ledger: &Arc<Ledger>,
+) -> std::io::Result<CoreRun> {
     // collision-free numbering is a precondition of the shared store
     let total: usize = files.iter().map(|f| f.len()).sum();
     let mut seqs: Vec<u64> = files.iter().flat_map(|f| f.iter().map(|r| r.seq)).collect();
@@ -725,24 +837,7 @@ pub fn run_files(
     let result = run_job(&job, splits, ledger)?;
     drop(spool); // input consumed; release the spool files
 
-    // stream the order straight out of the per-reducer output sinks —
-    // one record resident at a time, not the whole output
-    let order = result.collect_i64_values()?;
-
-    // memory probe on a handle a map task already opened (parked in
-    // put_reads); only an empty job falls back to a fresh connection
-    let kv_memory = match parked.lock().unwrap().take() {
-        Some(mut store) => store.used_memory(),
-        None => store_factory().used_memory(),
-    };
-
-    Ok(SchemeResult {
-        job: result,
-        order,
-        kv_memory,
-        time_split: times,
-        boundaries,
-    })
+    Ok(CoreRun { job: result, parked, times, boundaries })
 }
 
 #[cfg(test)]
@@ -860,6 +955,38 @@ mod tests {
         let ledger2 = Ledger::new();
         let single = run(&reads, &small_cfg(2, 400), factory2, &ledger2).unwrap();
         assert_eq!(res.order, single.order);
+    }
+
+    #[test]
+    fn sealed_run_streams_the_same_order_to_disk() {
+        use crate::suffix::sealed::SealedIndex;
+        let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+            n_reads: 20,
+            read_len: 16,
+            len_jitter: 0,
+            genome_len: 2048,
+            ..Default::default()
+        });
+        let (f1, _s1) = inproc_factory(2);
+        let ledger1 = Ledger::new();
+        let mem = run_files(&[&fwd, &rev], &small_cfg(2, 300), f1, &ledger1).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("samr-scheme-seal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("case6.samr");
+        let (f2, _s2) = inproc_factory(2);
+        let ledger2 = Ledger::new();
+        let sealed =
+            run_files_sealed(&[&fwd, &rev], &small_cfg(2, 300), f2, &ledger2, &path).unwrap();
+        assert_eq!(sealed.n_sealed as usize, mem.order.len());
+        assert!(sealed.kv_memory > 0);
+
+        let idx = SealedIndex::open(&path).unwrap();
+        let on_disk: Vec<i64> = (0..mem.order.len()).map(|r| idx.sa_at(r)).collect();
+        assert_eq!(on_disk, mem.order, "sealed SA must equal the in-memory order");
+        let st = idx.stats();
+        assert_eq!(st.n_files, 2);
+        assert_eq!(st.n_reads as usize, fwd.len() + rev.len());
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Suffix-array domain: encoding, read corpora, construction algorithms,
-//! BWT, and output validation.
+//! BWT, the sealed on-disk index artifact, query views, and output
+//! validation.
 
 pub mod bwt;
 pub mod encode;
 pub mod lcp;
 pub mod reads;
 pub mod sa;
+pub mod sealed;
 pub mod search;
 pub mod validate;

@@ -1,0 +1,669 @@
+//! The sealed index artifact: construction output as a servable file.
+//!
+//! The paper stops at *constructing* the suffix array; serving it means
+//! the construction output must outlive the job as a first-class
+//! artifact. This module defines that artifact — a versioned,
+//! checksummed, section-offset binary container (byte-level spec in
+//! `docs/INDEX_FORMAT.md`) holding everything a query needs: the packed
+//! read corpus, the suffix array of packed indexes, and per-input-file
+//! read metadata for pair-end joins.
+//!
+//! Two halves:
+//!
+//! * [`SealWriter`] streams the artifact out during construction —
+//!   `scheme::run_files_sealed` feeds it each input file's reads and
+//!   then the reducer output stream, one index at a time, so sealing
+//!   never materializes the order in memory.
+//! * [`SealedIndex`] loads the artifact with zero parse work: one
+//!   sequential read, one checksum pass, and a fixed-size footer that
+//!   resolves every section by offset. No per-record decoding, no
+//!   allocation per read or suffix — suffix bytes are served as slices
+//!   into the single file buffer.
+//!
+//! Corruption is rejected at [`SealedIndex::open`] with descriptive
+//! `io::Error`s — truncation, bad magic, unsupported version, checksum
+//! mismatch, and section-table inconsistencies all fail the open, never
+//! a later query.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::suffix::encode::unpack_index;
+use crate::suffix::reads::Read;
+use crate::suffix::search::IndexView;
+
+/// File magic: the first eight bytes of every sealed index.
+pub const MAGIC: [u8; 8] = *b"SAMRIDX1";
+/// Container version this build writes and reads.
+pub const VERSION: u32 = 1;
+/// Fixed preamble length: magic + version + reserved word.
+pub const PREAMBLE_LEN: usize = 16;
+/// Fixed footer length: counts + section table + reserved word.
+pub const FOOTER_LEN: usize = 96;
+/// Trailing checksum length (FNV-1a 64 over everything before it).
+pub const CHECKSUM_LEN: usize = 8;
+/// Bytes per read-table entry: seq (8) + corpus offset (8) + length (4).
+pub const READ_ENTRY_LEN: usize = 20;
+/// Bytes per file-metadata entry: read count + min seq + max seq.
+pub const FILE_ENTRY_LEN: usize = 24;
+/// The smallest well-formed artifact (empty sections).
+pub const MIN_FILE_LEN: usize = PREAMBLE_LEN + FOOTER_LEN + CHECKSUM_LEN;
+
+/// FNV-1a 64 over `bytes` — the artifact's integrity checksum. Exposed
+/// so tests and tools can re-stamp a patched file.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = fnv_step(h, b);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+#[inline]
+fn fnv_step(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+/// Headline counts of a sealed artifact (the `STAT` reply's source).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SealedStats {
+    /// Reads stored in the corpus section.
+    pub n_reads: u64,
+    /// Suffix-array entries (packed indexes).
+    pub n_suffixes: u64,
+    /// Input files the construction consumed.
+    pub n_files: u64,
+    /// Total corpus payload bytes (base codes).
+    pub corpus_bytes: u64,
+}
+
+/// Per-input-file read metadata, kept so a served artifact still knows
+/// its pair-end shape (two mate files → pair-numbered seq ranges).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FileMeta {
+    /// Reads this input file contributed.
+    pub n_reads: u64,
+    /// Smallest sequence number in the file (0 when empty).
+    pub min_seq: u64,
+    /// Largest sequence number in the file (0 when empty).
+    pub max_seq: u64,
+}
+
+// ---------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------
+
+/// Streaming writer for one sealed index artifact.
+///
+/// Usage order is fixed and enforced: [`SealWriter::add_file`] once per
+/// input file (streams the corpus section), then
+/// [`SealWriter::push_index`] once per suffix in final order (streams
+/// the SA section), then [`SealWriter::finish`] (writes the read table,
+/// file metadata, footer, and checksum). The checksum is folded over
+/// every byte as it is written, so sealing costs one pass and no
+/// re-read.
+pub struct SealWriter {
+    w: BufWriter<File>,
+    path: PathBuf,
+    hash: u64,
+    pos: u64,
+    /// (seq, corpus-relative offset, length) per read; sorted at finish.
+    entries: Vec<(u64, u64, u32)>,
+    files: Vec<FileMeta>,
+    /// End of the corpus section; `None` until the first index arrives.
+    corpus_end: Option<u64>,
+    n_suffixes: u64,
+}
+
+impl SealWriter {
+    /// Create the artifact at `path` and write the preamble.
+    pub fn create(path: &Path) -> io::Result<SealWriter> {
+        let file = File::create(path).map_err(|e| {
+            io::Error::new(e.kind(), format!("seal {}: {e}", path.display()))
+        })?;
+        let mut w = SealWriter {
+            w: BufWriter::new(file),
+            path: path.to_path_buf(),
+            hash: FNV_OFFSET,
+            pos: 0,
+            entries: Vec::new(),
+            files: Vec::new(),
+            corpus_end: None,
+            n_suffixes: 0,
+        };
+        w.put(&MAGIC)?;
+        w.put(&VERSION.to_le_bytes())?;
+        w.put(&0u32.to_le_bytes())?;
+        Ok(w)
+    }
+
+    /// Write `bytes`, folding them into the running checksum.
+    fn put(&mut self, bytes: &[u8]) -> io::Result<()> {
+        for &b in bytes {
+            self.hash = fnv_step(self.hash, b);
+        }
+        self.w.write_all(bytes)?;
+        self.pos += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Stream one input file's reads into the corpus section and record
+    /// its metadata. Must precede the first [`SealWriter::push_index`].
+    pub fn add_file(&mut self, reads: &[Read]) -> io::Result<()> {
+        if self.corpus_end.is_some() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "seal {}: add_file after the SA stream began — input files \
+                     must all be added before the first index",
+                    self.path.display()
+                ),
+            ));
+        }
+        let mut meta = FileMeta { n_reads: reads.len() as u64, min_seq: 0, max_seq: 0 };
+        for (i, r) in reads.iter().enumerate() {
+            if i == 0 {
+                meta.min_seq = r.seq;
+                meta.max_seq = r.seq;
+            } else {
+                meta.min_seq = meta.min_seq.min(r.seq);
+                meta.max_seq = meta.max_seq.max(r.seq);
+            }
+            let off = self.pos - PREAMBLE_LEN as u64;
+            self.entries.push((r.seq, off, r.codes.len() as u32));
+            self.put_read(r)?;
+        }
+        self.files.push(meta);
+        Ok(())
+    }
+
+    fn put_read(&mut self, r: &Read) -> io::Result<()> {
+        // borrow dance: fold + write without cloning the codes
+        for &b in &r.codes {
+            self.hash = fnv_step(self.hash, b);
+        }
+        self.w.write_all(&r.codes)?;
+        self.pos += r.codes.len() as u64;
+        Ok(())
+    }
+
+    /// Append one packed suffix index to the SA section, in final order.
+    pub fn push_index(&mut self, index: i64) -> io::Result<()> {
+        if self.corpus_end.is_none() {
+            self.corpus_end = Some(self.pos);
+        }
+        self.n_suffixes += 1;
+        self.put(&index.to_le_bytes())
+    }
+
+    /// Write the read table, file metadata, footer, and checksum, then
+    /// flush. Fails if the SA stream disagrees with the corpus (a wiring
+    /// bug upstream must not produce a plausible-looking artifact).
+    pub fn finish(mut self) -> io::Result<()> {
+        let corpus_end = self.corpus_end.unwrap_or(self.pos);
+        let expect_suffixes: u64 =
+            self.entries.iter().map(|&(_, _, len)| len as u64 + 1).sum();
+        if self.n_suffixes != expect_suffixes {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "seal {}: {} indexes streamed but the corpus holds {} suffixes \
+                     ({} reads)",
+                    self.path.display(),
+                    self.n_suffixes,
+                    expect_suffixes,
+                    self.entries.len()
+                ),
+            ));
+        }
+        let mut entries = std::mem::take(&mut self.entries);
+        entries.sort_unstable_by_key(|&(seq, _, _)| seq);
+        if entries.windows(2).any(|w| w[0].0 == w[1].0) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "seal {}: duplicate sequence numbers across input files",
+                    self.path.display()
+                ),
+            ));
+        }
+
+        let table_off = self.pos;
+        for &(seq, off, len) in &entries {
+            self.put(&seq.to_le_bytes())?;
+            self.put(&off.to_le_bytes())?;
+            self.put(&len.to_le_bytes())?;
+        }
+        let meta_off = self.pos;
+        let files = std::mem::take(&mut self.files);
+        for m in &files {
+            self.put(&m.n_reads.to_le_bytes())?;
+            self.put(&m.min_seq.to_le_bytes())?;
+            self.put(&m.max_seq.to_le_bytes())?;
+        }
+
+        // footer: counts, then (offset, length) per section, then a
+        // reserved word — fixed FOOTER_LEN bytes, parsed from the tail
+        let sections: [(u64, u64); 4] = [
+            (PREAMBLE_LEN as u64, corpus_end - PREAMBLE_LEN as u64),
+            (corpus_end, table_off - corpus_end),
+            (table_off, meta_off - table_off),
+            (meta_off, self.pos - meta_off),
+        ];
+        let footer_start = self.pos;
+        self.put(&(entries.len() as u64).to_le_bytes())?;
+        self.put(&self.n_suffixes.to_le_bytes())?;
+        self.put(&(files.len() as u64).to_le_bytes())?;
+        for &(off, len) in &sections {
+            self.put(&off.to_le_bytes())?;
+            self.put(&len.to_le_bytes())?;
+        }
+        self.put(&0u64.to_le_bytes())?;
+        debug_assert_eq!(self.pos - footer_start, FOOTER_LEN as u64);
+
+        // trailing checksum covers every byte before it
+        let h = self.hash;
+        self.w.write_all(&h.to_le_bytes())?;
+        self.w.flush()
+    }
+}
+
+/// Seal an already-materialized construction result in one call: the
+/// input files plus their final suffix order. The streaming path for
+/// pipelines is `scheme::run_files_sealed`; this convenience exists for
+/// tests, tools, and small corpora.
+pub fn seal(path: &Path, files: &[&[Read]], order: &[i64]) -> io::Result<()> {
+    let mut w = SealWriter::create(path)?;
+    for f in files {
+        w.add_file(f)?;
+    }
+    for &idx in order {
+        w.push_index(idx)?;
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------------
+// loader
+// ---------------------------------------------------------------------
+
+/// A loaded, integrity-checked sealed index. Read-only and `Sync`: one
+/// instance is shared across every server connection with no lock — the
+/// serving tier's whole concurrency model is "immutable artifact, any
+/// number of readers".
+///
+/// Loading is one sequential file read plus one checksum pass; sections
+/// are resolved by offset from the fixed-size footer with zero parse
+/// work (no per-record decode, no allocation per read or suffix).
+pub struct SealedIndex {
+    data: Vec<u8>,
+    corpus: (usize, usize),
+    sa: (usize, usize),
+    table: (usize, usize),
+    meta: (usize, usize),
+    n_reads: usize,
+    n_sa: usize,
+    n_files: usize,
+}
+
+fn bad(path: &Path, msg: String) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::InvalidData,
+        format!("sealed index {}: {msg}", path.display()),
+    )
+}
+
+#[inline]
+fn le_u64(data: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(data[off..off + 8].try_into().expect("8-byte field"))
+}
+
+impl SealedIndex {
+    /// Load and verify the artifact at `path`. Every corruption mode —
+    /// truncation, wrong magic, unsupported version, checksum mismatch,
+    /// inconsistent section table — is a descriptive `io::Error`, never
+    /// a panic and never a silently wrong answer later.
+    pub fn open(path: &Path) -> io::Result<SealedIndex> {
+        let data = std::fs::read(path).map_err(|e| {
+            io::Error::new(e.kind(), format!("sealed index {}: {e}", path.display()))
+        })?;
+        if data.len() < MIN_FILE_LEN {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!(
+                    "sealed index {}: {} bytes is shorter than the minimal \
+                     container ({MIN_FILE_LEN} bytes) — truncated or not a \
+                     sealed index",
+                    path.display(),
+                    data.len()
+                ),
+            ));
+        }
+        if data[..8] != MAGIC {
+            return Err(bad(
+                path,
+                format!("bad magic {:?} (expected {:?})", &data[..8], &MAGIC[..]),
+            ));
+        }
+        let version = u32::from_le_bytes(data[8..12].try_into().expect("4-byte version"));
+        if version != VERSION {
+            return Err(bad(
+                path,
+                format!("unsupported version {version} (this build reads version {VERSION})"),
+            ));
+        }
+        let body_len = data.len() - CHECKSUM_LEN;
+        let stored = le_u64(&data, body_len);
+        let computed = checksum(&data[..body_len]);
+        if stored != computed {
+            return Err(bad(
+                path,
+                format!(
+                    "checksum mismatch (stored {stored:#018x}, computed \
+                     {computed:#018x}) — the artifact is corrupted or truncated"
+                ),
+            ));
+        }
+
+        // footer: counts + section table, all offsets absolute
+        let f = body_len - FOOTER_LEN;
+        let n_reads = le_u64(&data, f) as usize;
+        let n_sa = le_u64(&data, f + 8) as usize;
+        let n_files = le_u64(&data, f + 16) as usize;
+        let section = |i: usize| -> (u64, u64) {
+            (le_u64(&data, f + 24 + i * 16), le_u64(&data, f + 32 + i * 16))
+        };
+        let names = ["corpus", "SA", "read-table", "file-metadata"];
+        let mut resolved = [(0usize, 0usize); 4];
+        for i in 0..4 {
+            let (off, len) = section(i);
+            let end = off.checked_add(len).ok_or_else(|| {
+                bad(path, format!("{} section offset overflows", names[i]))
+            })?;
+            if off < PREAMBLE_LEN as u64 || end > f as u64 {
+                return Err(bad(
+                    path,
+                    format!(
+                        "{} section [{off}, {end}) falls outside the file body \
+                         [{PREAMBLE_LEN}, {f})",
+                        names[i]
+                    ),
+                ));
+            }
+            resolved[i] = (off as usize, len as usize);
+        }
+        let [corpus, sa, table, meta] = resolved;
+        let declared = |what: &str, len: usize, count: usize, each: usize| -> io::Result<()> {
+            if len != count * each {
+                return Err(bad(
+                    path,
+                    format!(
+                        "{what} section is {len} bytes but the footer declares \
+                         {count} entries ({} bytes expected)",
+                        count * each
+                    ),
+                ));
+            }
+            Ok(())
+        };
+        declared("SA", sa.1, n_sa, 8)?;
+        declared("read-table", table.1, n_reads, READ_ENTRY_LEN)?;
+        declared("file-metadata", meta.1, n_files, FILE_ENTRY_LEN)?;
+
+        let idx = SealedIndex {
+            data,
+            corpus,
+            sa,
+            table,
+            meta,
+            n_reads,
+            n_sa,
+            n_files,
+        };
+        // read-table scan: strictly increasing seqs, in-bounds corpus
+        // ranges, and totals consistent with the corpus and SA sections.
+        // O(n_reads) over fixed-width entries — metadata validation, not
+        // record parsing: nothing is decoded, copied, or allocated.
+        let mut corpus_used = 0u64;
+        let mut suffix_total = 0u64;
+        let mut prev: Option<u64> = None;
+        for i in 0..idx.n_reads {
+            let (seq, off, len) = idx.table_entry(i);
+            if prev.is_some_and(|p| p >= seq) {
+                return Err(bad(
+                    path,
+                    format!("read table not strictly seq-sorted at entry {i} (seq {seq})"),
+                ));
+            }
+            prev = Some(seq);
+            if off as usize + len as usize > idx.corpus.1 {
+                return Err(bad(
+                    path,
+                    format!(
+                        "read {seq} spans corpus bytes [{off}, {}) but the corpus \
+                         section holds {}",
+                        off + len as u64,
+                        idx.corpus.1
+                    ),
+                ));
+            }
+            corpus_used += len as u64;
+            suffix_total += len as u64 + 1;
+        }
+        if corpus_used != idx.corpus.1 as u64 {
+            return Err(bad(
+                path,
+                format!(
+                    "read table covers {corpus_used} corpus bytes but the corpus \
+                     section holds {}",
+                    idx.corpus.1
+                ),
+            ));
+        }
+        if suffix_total != idx.n_sa as u64 {
+            return Err(bad(
+                path,
+                format!(
+                    "corpus holds {suffix_total} suffixes but the SA section \
+                     declares {}",
+                    idx.n_sa
+                ),
+            ));
+        }
+        Ok(idx)
+    }
+
+    /// Headline counts.
+    pub fn stats(&self) -> SealedStats {
+        SealedStats {
+            n_reads: self.n_reads as u64,
+            n_suffixes: self.n_sa as u64,
+            n_files: self.n_files as u64,
+            corpus_bytes: self.corpus.1 as u64,
+        }
+    }
+
+    /// Metadata of input file `i` (in construction order).
+    pub fn file_meta(&self, i: usize) -> FileMeta {
+        assert!(i < self.n_files, "file {i} of {}", self.n_files);
+        let off = self.meta.0 + i * FILE_ENTRY_LEN;
+        FileMeta {
+            n_reads: le_u64(&self.data, off),
+            min_seq: le_u64(&self.data, off + 8),
+            max_seq: le_u64(&self.data, off + 16),
+        }
+    }
+
+    #[inline]
+    fn table_entry(&self, i: usize) -> (u64, u64, u32) {
+        let off = self.table.0 + i * READ_ENTRY_LEN;
+        (
+            le_u64(&self.data, off),
+            le_u64(&self.data, off + 8),
+            u32::from_le_bytes(
+                self.data[off + 16..off + 20].try_into().expect("4-byte len"),
+            ),
+        )
+    }
+
+    /// The SA entry at `rank` (packed suffix index).
+    #[inline]
+    pub fn sa_at(&self, rank: usize) -> i64 {
+        assert!(rank < self.n_sa, "SA rank {rank} of {}", self.n_sa);
+        i64::from_le_bytes(
+            self.data[self.sa.0 + rank * 8..self.sa.0 + rank * 8 + 8]
+                .try_into()
+                .expect("8-byte SA entry"),
+        )
+    }
+
+    /// The stored read with sequence number `seq`, as a slice into the
+    /// file buffer (no copy).
+    pub fn read_of(&self, seq: u64) -> Option<&[u8]> {
+        let mut lo = 0usize;
+        let mut hi = self.n_reads;
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let (s, off, len) = self.table_entry(mid);
+            match s.cmp(&seq) {
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+                std::cmp::Ordering::Equal => {
+                    let start = self.corpus.0 + off as usize;
+                    return Some(&self.data[start..start + len as usize]);
+                }
+            }
+        }
+        None
+    }
+
+    /// The suffix a packed index denotes, as a slice into the file
+    /// buffer — same offset clamping as the in-memory corpus search.
+    pub fn suffix(&self, index: i64) -> Option<&[u8]> {
+        if index < 0 {
+            return None;
+        }
+        let (seq, off) = unpack_index(index);
+        let r = self.read_of(seq)?;
+        Some(&r[off.min(r.len())..])
+    }
+}
+
+impl IndexView for SealedIndex {
+    fn n_suffixes(&self) -> usize {
+        self.n_sa
+    }
+
+    fn suffix_at(&self, rank: usize) -> &[u8] {
+        self.suffix(self.sa_at(rank))
+            .expect("sealed SA entry resolves to a stored read (checksum-verified artifact)")
+    }
+
+    fn index_at(&self, rank: usize) -> i64 {
+        self.sa_at(rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suffix::encode::codes_of;
+    use crate::suffix::validate::{read_map, reference_order};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("samr-sealed-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn corpus() -> Vec<Read> {
+        vec![
+            Read::from_ascii(0, b"ACGTACGT"),
+            Read::from_ascii(1, b"TTACGTT"),
+            Read::from_ascii(5, b"GGGG"),
+        ]
+    }
+
+    #[test]
+    fn roundtrips_reads_order_and_metadata() {
+        let reads = corpus();
+        let order = reference_order(&reads);
+        let path = tmp("roundtrip.samr");
+        seal(&path, &[&reads], &order).unwrap();
+
+        let idx = SealedIndex::open(&path).unwrap();
+        let st = idx.stats();
+        assert_eq!(st.n_reads, 3);
+        assert_eq!(st.n_suffixes, order.len() as u64);
+        assert_eq!(st.n_files, 1);
+        assert_eq!(st.corpus_bytes, 8 + 7 + 4);
+        assert_eq!(
+            idx.file_meta(0),
+            FileMeta { n_reads: 3, min_seq: 0, max_seq: 5 }
+        );
+        for (rank, &want) in order.iter().enumerate() {
+            assert_eq!(idx.sa_at(rank), want);
+        }
+        for r in &reads {
+            assert_eq!(idx.read_of(r.seq), Some(&r.codes[..]));
+        }
+        assert_eq!(idx.read_of(2), None);
+        assert_eq!(idx.suffix(5), Some(&codes_of(b"CGT")[..])); // seq 0, offset 5
+        assert_eq!(idx.suffix(-3), None);
+    }
+
+    #[test]
+    fn sealed_view_answers_match_in_memory_view() {
+        let reads = corpus();
+        let order = reference_order(&reads);
+        let map = read_map(&reads);
+        let path = tmp("equiv.samr");
+        seal(&path, &[&reads], &order).unwrap();
+        let idx = SealedIndex::open(&path).unwrap();
+        let mem = crate::suffix::search::CorpusIndex::new(&order, &map);
+        for pat in [&b"ACGT"[..], b"T", b"GGGG", b"AAAA", b""] {
+            let codes = codes_of(pat);
+            assert_eq!(idx.find(&codes), mem.find(&codes), "pattern {pat:?}");
+            assert_eq!(idx.sa_range(&codes), mem.sa_range(&codes));
+        }
+    }
+
+    #[test]
+    fn writer_rejects_misuse() {
+        let reads = corpus();
+        let path = tmp("misuse.samr");
+        // add_file after the SA stream began
+        let mut w = SealWriter::create(&path).unwrap();
+        w.add_file(&reads).unwrap();
+        w.push_index(0).unwrap();
+        let err = w.add_file(&reads).unwrap_err();
+        assert!(err.to_string().contains("add_file"), "{err}");
+        // suffix-count mismatch at finish
+        let mut w = SealWriter::create(&path).unwrap();
+        w.add_file(&reads).unwrap();
+        w.push_index(0).unwrap();
+        let err = w.finish().unwrap_err();
+        assert!(err.to_string().contains("suffixes"), "{err}");
+        // duplicate seqs across files
+        let mut w = SealWriter::create(&path).unwrap();
+        w.add_file(&reads).unwrap();
+        w.add_file(&reads).unwrap();
+        for _ in 0..2 * reads.iter().map(Read::suffix_count).sum::<usize>() {
+            w.push_index(0).unwrap();
+        }
+        let err = w.finish().unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn empty_artifact_is_well_formed() {
+        let path = tmp("empty.samr");
+        seal(&path, &[], &[]).unwrap();
+        let idx = SealedIndex::open(&path).unwrap();
+        assert_eq!(idx.stats().n_suffixes, 0);
+        assert!(idx.find(&codes_of(b"ACGT")).is_empty());
+    }
+}

@@ -2,37 +2,230 @@
 //! introduction motivates (sequence alignment seeds, plagiarism
 //! detection, compression all reduce to "find every occurrence of P").
 //!
-//! Classic Manber–Myers binary search: O(|P| log n) per query over the
-//! SA of a single text, plus a corpus-level variant over the pipeline's
-//! packed-index output.
+//! Classic Manber–Myers binary search: O(|P| log n) per query. All
+//! queries run through one abstraction, [`IndexView`] — a sorted suffix
+//! array addressed by rank — implemented by the single-text view
+//! ([`TextIndex`]), the in-memory construction result ([`CorpusIndex`]),
+//! and the on-disk artifact (`crate::suffix::sealed::SealedIndex`).
+//! Because every backend shares the same default [`IndexView::sa_range`]
+//! / [`IndexView::find`] / [`IndexView::find_pairs`] implementations,
+//! sealed-vs-in-memory equivalence holds by construction: the only code
+//! that differs per backend is "fetch the suffix at rank r".
 
 use std::collections::HashMap;
+use std::ops::Range;
 
 use crate::suffix::encode::unpack_index;
-use crate::suffix::reads::{fragment_of, Mate};
+use crate::suffix::reads::{fragment_of, pair_seq, Mate};
 use crate::suffix::sa;
+
+/// Compare a suffix against a query pattern, looking at no more than
+/// `|pattern|` bytes: `Equal` means "the pattern is a prefix of this
+/// suffix". A suffix shorter than the pattern sorts before it, matching
+/// SA order.
+#[inline]
+fn suffix_cmp(suffix: &[u8], pattern: &[u8]) -> std::cmp::Ordering {
+    let k = suffix.len().min(pattern.len());
+    suffix[..k].cmp(&pattern[..k]).then(
+        // suffix shorter than pattern sorts before it
+        if suffix.len() < pattern.len() {
+            std::cmp::Ordering::Less
+        } else {
+            std::cmp::Ordering::Equal
+        },
+    )
+}
+
+/// First rank in `[lo, hi)` where `pred` turns false (`pred` must be
+/// monotone true-then-false over the range) — the one binary-search
+/// primitive both query bounds are built from.
+fn partition(mut lo: usize, mut hi: usize, mut pred: impl FnMut(usize) -> bool) -> usize {
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pred(mid) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// A queryable suffix-array index: suffixes in sorted order, addressed
+/// by rank. Implementors provide the three rank accessors; every search
+/// (`sa_range`, `find`, `find_pairs`) is a provided method on top, so
+/// all backends answer queries through exactly one code path.
+pub trait IndexView {
+    /// Number of suffixes (SA entries) in the index.
+    fn n_suffixes(&self) -> usize;
+
+    /// The suffix at sorted rank `rank`.
+    fn suffix_at(&self, rank: usize) -> &[u8];
+
+    /// The packed index (`crate::suffix::encode::pack_index`) at sorted
+    /// rank `rank`.
+    fn index_at(&self, rank: usize) -> i64;
+
+    /// The contiguous SA rank range whose suffixes start with `pattern`
+    /// — the deduplicated bounds primitive every query calls. Empty
+    /// patterns match nothing.
+    fn sa_range(&self, pattern: &[u8]) -> Range<usize> {
+        if pattern.is_empty() {
+            return 0..0;
+        }
+        let n = self.n_suffixes();
+        let lo = partition(0, n, |r| {
+            suffix_cmp(self.suffix_at(r), pattern) == std::cmp::Ordering::Less
+        });
+        let hi = partition(lo, n, |r| {
+            suffix_cmp(self.suffix_at(r), pattern) != std::cmp::Ordering::Greater
+        });
+        lo..hi
+    }
+
+    /// All occurrences of `pattern`, as sorted `(seq, offset)` pairs.
+    /// The pattern must not span reads — reads are independent strings,
+    /// exactly like alignment seeds.
+    fn find(&self, pattern: &[u8]) -> Vec<(u64, usize)> {
+        let mut out: Vec<(u64, usize)> = self
+            .sa_range(pattern)
+            .map(|r| unpack_index(self.index_at(r)))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Pair-end seed alignment over the joint suffix array of a two-file
+    /// pair-end construction — the query half of the paper's Case 6
+    /// claim ("complete the pair-end sequencing and alignment with two
+    /// input files").
+    ///
+    /// `seed_fwd` is searched among forward mates and `seed_rev` (already
+    /// in the reverse read's coordinates, i.e. the reverse complement of
+    /// the fragment-strand seed) among reverse mates; hits are joined by
+    /// the fragment id recovered from the pair-numbered sequence
+    /// (`crate::suffix::reads::fragment_of`), and a joined pair survives
+    /// only if it is compatible with a sequencing insert of at most
+    /// `max_insert` bases. Geometry: a forward seed at offset `of`
+    /// occupies fragment positions `[of, of + |seed_fwd|)` from the
+    /// fragment's start; a reverse seed at offset `or` occupies the
+    /// `|seed_rev|` bases ending `or` before the fragment's END. The
+    /// smallest fragment consistent with both is therefore
+    /// `max(of + |seed_fwd|, or + |seed_rev|)` — mates of short
+    /// fragments may overlap (see
+    /// `crate::suffix::reads::paired_reads_from_fragment`), so the two
+    /// seed intervals are allowed to cover the same bases.
+    ///
+    /// Both seed lookups are `O(|seed| log n)` binary searches on the
+    /// joint SA; the join is hash-by-fragment. Results are sorted by
+    /// (fragment, forward offset, reverse offset).
+    fn find_pairs(&self, seed_fwd: &[u8], seed_rev: &[u8], max_insert: usize) -> Vec<PairHit> {
+        if seed_fwd.is_empty() || seed_rev.is_empty() {
+            return Vec::new();
+        }
+        // hits on the correct mate only: a forward seed found in a
+        // reverse read (or vice versa) is not a mate pairing
+        let mate_hits = |seed: &[u8], want: Mate| -> HashMap<u64, Vec<usize>> {
+            let mut by_fragment: HashMap<u64, Vec<usize>> = HashMap::new();
+            for (seq, off) in self.find(seed) {
+                let (fragment, mate) = fragment_of(seq);
+                if mate == want {
+                    by_fragment.entry(fragment).or_default().push(off);
+                }
+            }
+            by_fragment
+        };
+        let fwd_hits = mate_hits(seed_fwd, Mate::Forward);
+        let rev_hits = mate_hits(seed_rev, Mate::Reverse);
+
+        let mut out = Vec::new();
+        for (&fragment, f_offs) in &fwd_hits {
+            let Some(r_offs) = rev_hits.get(&fragment) else { continue };
+            for &of in f_offs {
+                for &or in r_offs {
+                    let min_fragment = (of + seed_fwd.len()).max(or + seed_rev.len());
+                    if min_fragment <= max_insert {
+                        out.push(PairHit {
+                            fragment,
+                            forward: (pair_seq(fragment, Mate::Forward), of),
+                            reverse: (pair_seq(fragment, Mate::Reverse), or),
+                        });
+                    }
+                }
+            }
+        }
+        out.sort_by_key(|h| (h.fragment, h.forward.1, h.reverse.1));
+        out
+    }
+}
+
+/// [`IndexView`] over a single text and its suffix array — the classic
+/// Manber–Myers setting. Packed indexes are plain text positions (seq 0
+/// is implied, so `index_at` returns the raw position).
+pub struct TextIndex<'a> {
+    text: &'a [u8],
+    sa: &'a [u32],
+}
+
+impl<'a> TextIndex<'a> {
+    /// View `text` through its suffix array `sa`.
+    pub fn new(text: &'a [u8], sa: &'a [u32]) -> Self {
+        TextIndex { text, sa }
+    }
+}
+
+impl IndexView for TextIndex<'_> {
+    fn n_suffixes(&self) -> usize {
+        self.sa.len()
+    }
+
+    fn suffix_at(&self, rank: usize) -> &[u8] {
+        &self.text[self.sa[rank] as usize..]
+    }
+
+    fn index_at(&self, rank: usize) -> i64 {
+        self.sa[rank] as i64
+    }
+}
+
+/// [`IndexView`] over the *pipeline's* in-memory output: the globally
+/// sorted packed suffix indexes plus the read map. The construction-side
+/// twin of `crate::suffix::sealed::SealedIndex` — both answer every
+/// query through the same provided methods.
+pub struct CorpusIndex<'a> {
+    order: &'a [i64],
+    reads: &'a HashMap<u64, Vec<u8>>,
+}
+
+impl<'a> CorpusIndex<'a> {
+    /// View a construction result: `order` is the globally sorted packed
+    /// indexes, `reads` maps each sequence number to its codes.
+    pub fn new(order: &'a [i64], reads: &'a HashMap<u64, Vec<u8>>) -> Self {
+        CorpusIndex { order, reads }
+    }
+}
+
+impl IndexView for CorpusIndex<'_> {
+    fn n_suffixes(&self) -> usize {
+        self.order.len()
+    }
+
+    fn suffix_at(&self, rank: usize) -> &[u8] {
+        let (seq, off) = unpack_index(self.order[rank]);
+        let r = &self.reads[&seq];
+        &r[off.min(r.len())..]
+    }
+
+    fn index_at(&self, rank: usize) -> i64 {
+        self.order[rank]
+    }
+}
 
 /// All occurrences (start positions) of `pattern` in `text`, via binary
 /// search on the suffix array. Positions are returned sorted.
 pub fn find_all(text: &[u8], sa: &[u32], pattern: &[u8]) -> Vec<u32> {
-    if pattern.is_empty() || pattern.len() > text.len() {
-        return Vec::new();
-    }
-    let cmp = |p: u32| -> std::cmp::Ordering {
-        let suffix = &text[p as usize..];
-        let k = suffix.len().min(pattern.len());
-        suffix[..k].cmp(&pattern[..k]).then(
-            // suffix shorter than pattern sorts before it
-            if suffix.len() < pattern.len() {
-                std::cmp::Ordering::Less
-            } else {
-                std::cmp::Ordering::Equal
-            },
-        )
-    };
-    let lo = sa.partition_point(|&p| cmp(p) == std::cmp::Ordering::Less);
-    let hi = lo + sa[lo..].partition_point(|&p| cmp(p) == std::cmp::Ordering::Equal);
-    let mut out: Vec<u32> = sa[lo..hi].to_vec();
+    let view = TextIndex::new(text, sa);
+    let mut out: Vec<u32> = view.sa_range(pattern).map(|r| sa[r]).collect();
     out.sort_unstable();
     out
 }
@@ -43,37 +236,14 @@ pub fn occurrences(text: &[u8], pattern: &[u8]) -> Vec<u32> {
     find_all(text, &sa, pattern)
 }
 
-/// Search the *pipeline's* output: the globally sorted packed suffix
-/// indexes plus the read map. Returns `(seq, offset)` pairs where the
-/// pattern occurs (pattern must not span reads — reads are independent
-/// strings, exactly like alignment seeds).
+/// Search the pipeline's in-memory output. Thin wrapper over
+/// [`CorpusIndex`] + [`IndexView::find`].
 pub fn find_in_corpus(
     order: &[i64],
     reads: &HashMap<u64, Vec<u8>>,
     pattern: &[u8],
 ) -> Vec<(u64, usize)> {
-    if pattern.is_empty() {
-        return Vec::new();
-    }
-    let suffix_of = |idx: i64| -> &[u8] {
-        let (seq, off) = unpack_index(idx);
-        let r = &reads[&seq];
-        &r[off.min(r.len())..]
-    };
-    let cmp = |idx: i64| -> std::cmp::Ordering {
-        let suffix = suffix_of(idx);
-        let k = suffix.len().min(pattern.len());
-        suffix[..k].cmp(&pattern[..k]).then(if suffix.len() < pattern.len() {
-            std::cmp::Ordering::Less
-        } else {
-            std::cmp::Ordering::Equal
-        })
-    };
-    let lo = order.partition_point(|&i| cmp(i) == std::cmp::Ordering::Less);
-    let hi = lo + order[lo..].partition_point(|&i| cmp(i) == std::cmp::Ordering::Equal);
-    let mut out: Vec<(u64, usize)> = order[lo..hi].iter().map(|&i| unpack_index(i)).collect();
-    out.sort_unstable();
-    out
+    CorpusIndex::new(order, reads).find(pattern)
 }
 
 /// One joined pair-end seed hit: both mates of a fragment carry their
@@ -88,29 +258,9 @@ pub struct PairHit {
     pub reverse: (u64, usize),
 }
 
-/// Pair-end seed alignment over the joint suffix array of a two-file
-/// pair-end construction — the query half of the paper's Case 6 claim
-/// ("complete the pair-end sequencing and alignment with two input
-/// files").
-///
-/// `seed_fwd` is searched among forward mates and `seed_rev` (already in
-/// the reverse read's coordinates, i.e. the reverse complement of the
-/// fragment-strand seed) among reverse mates; hits are joined by the
-/// fragment id recovered from the pair-numbered sequence
-/// (`crate::suffix::reads::fragment_of`), and a joined pair survives only
-/// if it is compatible with a sequencing insert of at most `max_insert`
-/// bases. Geometry: a forward seed at offset `of` occupies fragment
-/// positions `[of, of + |seed_fwd|)` from the fragment's start; a
-/// reverse seed at offset `or` occupies the `|seed_rev|` bases ending
-/// `or` before the fragment's END. The smallest fragment consistent with
-/// both is therefore `max(of + |seed_fwd|, or + |seed_rev|)` — mates of
-/// short fragments may overlap (see
-/// `crate::suffix::reads::paired_reads_from_fragment`), so the two seed
-/// intervals are allowed to cover the same bases.
-///
-/// Both seed lookups are `O(|seed| log n)` binary searches on the joint
-/// SA; the join is hash-by-fragment. Results are sorted by
-/// (fragment, forward offset, reverse offset).
+/// Pair-end seed alignment over the pipeline's in-memory output. Thin
+/// wrapper over [`CorpusIndex`] + [`IndexView::find_pairs`]; see the
+/// trait method for the geometry.
 pub fn find_pairs(
     order: &[i64],
     reads: &HashMap<u64, Vec<u8>>,
@@ -118,42 +268,7 @@ pub fn find_pairs(
     seed_rev: &[u8],
     max_insert: usize,
 ) -> Vec<PairHit> {
-    if seed_fwd.is_empty() || seed_rev.is_empty() {
-        return Vec::new();
-    }
-    // hits on the correct mate only: a forward seed found in a reverse
-    // read (or vice versa) is not a mate pairing
-    let mate_hits = |seed: &[u8], want: Mate| -> HashMap<u64, Vec<usize>> {
-        let mut by_fragment: HashMap<u64, Vec<usize>> = HashMap::new();
-        for (seq, off) in find_in_corpus(order, reads, seed) {
-            let (fragment, mate) = fragment_of(seq);
-            if mate == want {
-                by_fragment.entry(fragment).or_default().push(off);
-            }
-        }
-        by_fragment
-    };
-    let fwd_hits = mate_hits(seed_fwd, Mate::Forward);
-    let rev_hits = mate_hits(seed_rev, Mate::Reverse);
-
-    let mut out = Vec::new();
-    for (&fragment, f_offs) in &fwd_hits {
-        let Some(r_offs) = rev_hits.get(&fragment) else { continue };
-        for &of in f_offs {
-            for &or in r_offs {
-                let min_fragment = (of + seed_fwd.len()).max(or + seed_rev.len());
-                if min_fragment <= max_insert {
-                    out.push(PairHit {
-                        fragment,
-                        forward: (crate::suffix::reads::pair_seq(fragment, Mate::Forward), of),
-                        reverse: (crate::suffix::reads::pair_seq(fragment, Mate::Reverse), or),
-                    });
-                }
-            }
-        }
-    }
-    out.sort_by_key(|h| (h.fragment, h.forward.1, h.reverse.1));
-    out
+    CorpusIndex::new(order, reads).find_pairs(seed_fwd, seed_rev, max_insert)
 }
 
 #[cfg(test)]
@@ -192,6 +307,27 @@ mod tests {
                 assert_eq!(got, want, "plen={plen}");
             }
         }
+    }
+
+    #[test]
+    fn sa_range_brackets_exactly_the_matching_suffixes() {
+        let reads = vec![
+            Read::from_ascii(0, b"ACGTACGT"),
+            Read::from_ascii(1, b"TTACGTT"),
+        ];
+        let order = reference_order(&reads);
+        let map = read_map(&reads);
+        let view = CorpusIndex::new(&order, &map);
+        let pat = codes_of(b"ACGT");
+        let range = view.sa_range(&pat);
+        assert_eq!(range.len(), 3);
+        for r in range.clone() {
+            assert!(view.suffix_at(r).starts_with(&pat), "rank {r} inside range");
+        }
+        for r in (0..view.n_suffixes()).filter(|r| !range.contains(r)) {
+            assert!(!view.suffix_at(r).starts_with(&pat), "rank {r} outside range");
+        }
+        assert_eq!(view.sa_range(&[]), 0..0);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Sealed-artifact robustness: every corruption mode must yield a
+//! descriptive `io::Error` from `SealedIndex::open` — never a panic and
+//! never a silently wrong index. Each case patches real bytes in a real
+//! sealed file; cases that target checks *behind* the checksum re-stamp
+//! the trailing FNV so the patched field is actually reached.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+
+use samr::suffix::reads::{synth_paired_corpus, CorpusSpec};
+use samr::suffix::sealed::{self, SealedIndex, CHECKSUM_LEN, FOOTER_LEN, MIN_FILE_LEN};
+use samr::suffix::validate::reference_order;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("samr-sealed-fmt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(name)
+}
+
+/// Seal a small two-file pair-end corpus and return the artifact bytes.
+fn sealed_bytes(name: &str) -> (PathBuf, Vec<u8>) {
+    let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+        n_reads: 12,
+        read_len: 18,
+        len_jitter: 0,
+        genome_len: 1024,
+        seed: 0xFEED,
+        ..Default::default()
+    });
+    let mut all = fwd.clone();
+    all.extend(rev.iter().cloned());
+    let order = reference_order(&all);
+    let path = tmp(name);
+    sealed::seal(&path, &[&fwd, &rev], &order).expect("seal");
+    let bytes = std::fs::read(&path).expect("read artifact");
+    (path, bytes)
+}
+
+/// Write `bytes` to a fresh file and open it, converting any panic into
+/// a test failure distinct from the expected clean `Err`.
+fn open_patched(name: &str, bytes: &[u8]) -> std::io::Result<SealedIndex> {
+    let path = tmp(name);
+    std::fs::write(&path, bytes).expect("write patched artifact");
+    catch_unwind(AssertUnwindSafe(|| SealedIndex::open(&path)))
+        .unwrap_or_else(|_| panic!("SealedIndex::open panicked on {name}"))
+}
+
+/// Re-stamp the trailing checksum so patches to fields *behind* the
+/// checksum gate are reached by open's later validation stages.
+fn restamp(bytes: &mut [u8]) {
+    let body = bytes.len() - CHECKSUM_LEN;
+    let sum = sealed::checksum(&bytes[..body]);
+    bytes[body..].copy_from_slice(&sum.to_le_bytes());
+}
+
+fn expect_err(name: &str, bytes: &[u8], needle: &str) {
+    let err = match open_patched(name, bytes) {
+        Err(e) => e,
+        Ok(_) => panic!("{name}: corrupted artifact opened successfully"),
+    };
+    let msg = err.to_string();
+    assert!(
+        msg.contains(needle),
+        "{name}: error {msg:?} does not mention {needle:?}"
+    );
+}
+
+#[test]
+fn pristine_artifact_opens() {
+    let (path, bytes) = sealed_bytes("pristine.samr");
+    let idx = SealedIndex::open(&path).expect("open pristine");
+    assert!(idx.stats().n_suffixes > 0);
+    assert!(bytes.len() >= MIN_FILE_LEN);
+}
+
+#[test]
+fn truncation_below_the_minimal_container_is_rejected() {
+    let (_, bytes) = sealed_bytes("tiny.samr");
+    expect_err("tiny-cut.samr", &bytes[..MIN_FILE_LEN - 1], "shorter");
+    expect_err("empty.samr", &[], "shorter");
+}
+
+#[test]
+fn truncation_mid_file_is_rejected() {
+    let (_, bytes) = sealed_bytes("midcut.samr");
+    // cut inside the section payload: footer/checksum now read section
+    // bytes, so either the checksum or the section table must trip
+    let cut = &bytes[..bytes.len() - bytes.len() / 3];
+    assert!(cut.len() >= MIN_FILE_LEN, "corpus too small for a mid-file cut");
+    let err = match open_patched("midcut-cut.samr", cut) {
+        Err(e) => e,
+        Ok(_) => panic!("mid-file truncation opened successfully"),
+    };
+    assert!(!err.to_string().is_empty());
+}
+
+#[test]
+fn flipped_checksum_byte_is_rejected() {
+    let (_, mut bytes) = sealed_bytes("cksum.samr");
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    expect_err("cksum-flip.samr", &bytes, "checksum mismatch");
+}
+
+#[test]
+fn flipped_payload_byte_is_rejected() {
+    let (_, mut bytes) = sealed_bytes("payload.samr");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    expect_err("payload-flip.samr", &bytes, "checksum mismatch");
+}
+
+#[test]
+fn wrong_version_is_rejected() {
+    let (_, mut bytes) = sealed_bytes("version.samr");
+    // version u32 LE at offset 8, just after the magic
+    bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+    restamp(&mut bytes);
+    expect_err("version-patch.samr", &bytes, "unsupported version 99");
+}
+
+#[test]
+fn bad_magic_is_rejected() {
+    let (_, mut bytes) = sealed_bytes("magic.samr");
+    bytes[0..8].copy_from_slice(b"NOTANIDX");
+    expect_err("magic-patch.samr", &bytes, "bad magic");
+}
+
+#[test]
+fn zero_length_sa_section_is_rejected() {
+    let (_, mut bytes) = sealed_bytes("zerosa.samr");
+    // footer layout: counts (24) + 4 section (off, len) pairs; the SA
+    // length is the second pair's len, at footer_start + 24 + 16 + 8
+    let footer_start = bytes.len() - CHECKSUM_LEN - FOOTER_LEN;
+    let sa_len_at = footer_start + 48;
+    bytes[sa_len_at..sa_len_at + 8].copy_from_slice(&0u64.to_le_bytes());
+    restamp(&mut bytes);
+    expect_err("zerosa-patch.samr", &bytes, "SA");
+}

@@ -1,0 +1,188 @@
+//! Serving-tier equivalence: one query path from construction output to
+//! concurrent RESP clients. The matrix seals the two-file pair-end
+//! construction under shards {1,3} × prefetch {on,off} and asserts that
+//! SEARCH/PAIRS/STAT answers over TCP are byte-identical to the
+//! in-memory `IndexView` answers over the same corpus — then hammers one
+//! server with N concurrent clients to prove the lock-free read path
+//! holds up.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use samr::footprint::Ledger;
+use samr::kvstore::query::{QueryClient, QueryServer};
+use samr::kvstore::shard::{SharedStore, SuffixStore};
+use samr::mapreduce::JobConf;
+use samr::runtime;
+use samr::scheme::{self, SchemeConfig};
+use samr::suffix::encode::codes_of;
+use samr::suffix::reads::{synth_paired_corpus, CorpusSpec, Read};
+use samr::suffix::sealed::SealedIndex;
+use samr::suffix::search::{CorpusIndex, IndexView};
+use samr::suffix::validate::{read_map, reference_order};
+
+fn init_runtime() {
+    let dir = runtime::default_artifacts_dir();
+    let dir = if dir.is_relative() {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(dir)
+    } else {
+        dir
+    };
+    runtime::init(Some(&dir));
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("samr-serving-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(name)
+}
+
+fn corpus() -> (Vec<Read>, Vec<Read>) {
+    synth_paired_corpus(&CorpusSpec {
+        n_reads: 30,
+        read_len: 20,
+        len_jitter: 0,
+        genome_len: 2048,
+        seed: 0xCAFE,
+        ..Default::default()
+    })
+}
+
+/// Construct + seal the two-file pair-end corpus with `shards` in-proc
+/// store shards and the given prefetch mode; return the opened artifact.
+fn seal_with(shards: usize, prefetch: bool, name: &str) -> (Vec<Read>, SealedIndex) {
+    let (fwd, rev) = corpus();
+    let cfg = SchemeConfig {
+        conf: JobConf {
+            n_reducers: 3,
+            io_sort_bytes: 16 << 10,
+            split_bytes: 8 << 10,
+            reducer_heap_bytes: 256 << 10,
+            ..JobConf::default()
+        },
+        group_threshold: 500,
+        samples_per_reducer: 100,
+        prefetch,
+        ..Default::default()
+    };
+    let store = SharedStore::new(shards);
+    let factory: scheme::StoreFactory =
+        Arc::new(move || Box::new(store.clone()) as Box<dyn SuffixStore>);
+    let ledger = Ledger::new();
+    let path = tmp(name);
+    scheme::run_files_sealed(&[&fwd, &rev], &cfg, factory, &ledger, &path).expect("sealed run");
+    let idx = SealedIndex::open(&path).expect("open sealed");
+    let mut all = fwd;
+    all.extend(rev);
+    (all, idx)
+}
+
+const PATTERNS: &[&[u8]] = &[b"A", b"T", b"ACGT", b"GG", b"CGTA", b"AAAAA", b"TTTT"];
+const PAIR_SEEDS: &[(&[u8], &[u8], usize)] =
+    &[(b"AC", b"GT", 500), (b"ACG", b"CGT", 200), (b"T", b"A", 1000)];
+
+#[test]
+fn sealed_answers_match_in_memory_across_the_matrix() {
+    init_runtime();
+    for &shards in &[1usize, 3] {
+        for &prefetch in &[false, true] {
+            let name = format!("matrix-s{shards}-p{prefetch}.samr");
+            let (reads, idx) = seal_with(shards, prefetch, &name);
+            let tag = format!("shards={shards} prefetch={prefetch}");
+
+            // the sealed SA is the reference order, entry for entry
+            let order = reference_order(&reads);
+            assert_eq!(idx.stats().n_suffixes as usize, order.len(), "{tag}: SA length");
+            for (rank, &want) in order.iter().enumerate() {
+                assert_eq!(idx.index_at(rank), want, "{tag}: SA rank {rank}");
+            }
+
+            // every query answers identically on both views
+            let map = read_map(&reads);
+            let mem = CorpusIndex::new(&order, &map);
+            for &p in PATTERNS {
+                let codes = codes_of(p);
+                assert_eq!(mem.find(&codes), idx.find(&codes), "{tag}: SEARCH {p:?}");
+            }
+            for &(f, r, max_insert) in PAIR_SEEDS {
+                assert_eq!(
+                    mem.find_pairs(&codes_of(f), &codes_of(r), max_insert),
+                    idx.find_pairs(&codes_of(f), &codes_of(r), max_insert),
+                    "{tag}: PAIRS {f:?}/{r:?}"
+                );
+            }
+
+            // ... and over TCP, byte-identical to the in-memory answers
+            let mut server = QueryServer::start(0, Arc::new(idx)).expect("query server");
+            let mut c = QueryClient::connect(server.addr()).expect("connect");
+            c.ping().expect("ping");
+            for &p in PATTERNS {
+                assert_eq!(c.search(p).expect("SEARCH"), mem.find(&codes_of(p)), "{tag}: TCP SEARCH {p:?}");
+            }
+            for &(f, r, max_insert) in PAIR_SEEDS {
+                assert_eq!(
+                    c.pairs(f, r, max_insert).expect("PAIRS"),
+                    mem.find_pairs(&codes_of(f), &codes_of(r), max_insert),
+                    "{tag}: TCP PAIRS {f:?}/{r:?}"
+                );
+            }
+            let st = c.stat().expect("STAT");
+            let local = server.index().stats();
+            assert_eq!(st.n_suffixes, local.n_suffixes, "{tag}: STAT suffixes");
+            assert_eq!(st.n_reads, local.n_reads, "{tag}: STAT reads");
+            assert_eq!(st.n_files, 2, "{tag}: STAT files");
+            assert_eq!(st.corpus_bytes, local.corpus_bytes, "{tag}: STAT corpus");
+            let (sent, recvd) = c.traffic();
+            assert!(sent > 0 && recvd > 0, "{tag}: wire accounting");
+            server.shutdown();
+        }
+    }
+}
+
+#[test]
+fn malformed_queries_get_resp_errors_not_disconnects() {
+    init_runtime();
+    let (_, idx) = seal_with(2, false, "errors.samr");
+    let mut server = QueryServer::start(0, Arc::new(idx)).expect("query server");
+    let mut c = QueryClient::connect(server.addr()).expect("connect");
+    // a bad pattern byte is a server-side error, not a dropped connection
+    assert!(c.search(b"ACGN").is_err(), "N must be rejected, not masked");
+    assert!(c.search(b"acxt").is_err(), "x is not a base");
+    // the connection survives the error reply
+    c.ping().expect("ping after error");
+    assert!(c.search(b"ACGT").is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_share_one_server() {
+    init_runtime();
+    let (reads, idx) = seal_with(3, true, "concurrent.samr");
+    let order = reference_order(&reads);
+    let map = read_map(&reads);
+    let mem = CorpusIndex::new(&order, &map);
+    let expected: Vec<Vec<(u64, usize)>> =
+        PATTERNS.iter().map(|p| mem.find(&codes_of(p))).collect();
+
+    let server = QueryServer::start(0, Arc::new(idx)).expect("query server");
+    let addr = server.addr();
+    let expected = Arc::new(expected);
+    let workers: Vec<_> = (0..8)
+        .map(|w| {
+            let expected = expected.clone();
+            std::thread::spawn(move || {
+                let mut c = QueryClient::connect(addr).expect("connect");
+                for round in 0..20 {
+                    let i = (w + round) % PATTERNS.len();
+                    let hits = c.search(PATTERNS[i]).expect("SEARCH");
+                    assert_eq!(hits, expected[i], "worker {w} round {round}");
+                }
+                let st = c.stat().expect("STAT");
+                assert!(st.n_suffixes > 0);
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("worker panicked");
+    }
+}
