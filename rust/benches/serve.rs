@@ -1,11 +1,18 @@
 //! `cargo bench --bench serve` — the serving tier under multi-client
-//! load: seal a synthetic pair-end corpus, start one `QueryServer` over
-//! the artifact, and drive it with {1, 2, 4, 8} concurrent clients
-//! issuing a deterministic SEARCH/PAIRS mix. Reports per-query latency
-//! (mean and p99) and aggregate throughput per client count, and
-//! snapshots the series to `BENCH_serve.json` at the repo root
-//! (override the path with SAMR_BENCH_JSON, or set it empty to skip).
+//! load, plus the two v2-artifact serving levers: seal a synthetic
+//! pair-end corpus, start one `QueryServer` over the artifact, and
+//! drive it with {1, 2, 4, 8} concurrent clients issuing a
+//! deterministic SEARCH/PAIRS mix. Then, on a long-read corpus, compare
+//! the plain O(|P| log n) SEARCH bounds against the LCP-accelerated
+//! O(|P| + log n) bounds at pattern lengths {8, 64, 512}, and time the
+//! cold artifact open on the heap backend vs the zero-copy mmap backend
+//! (the latter only when built with `--features mmap`). Reports
+//! per-query latency (mean and p99), aggregate throughput, bound
+//! latencies with byte-comparison counts, and open times; snapshots
+//! everything to `BENCH_serve.json` at the repo root (override the path
+//! with SAMR_BENCH_JSON, or set it empty to skip).
 
+use std::hint::black_box;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -13,6 +20,7 @@ use samr::bench_support::section;
 use samr::kvstore::query::{QueryClient, QueryServer};
 use samr::suffix::reads::{synth_paired_corpus, CorpusSpec};
 use samr::suffix::sealed::{self, SealedIndex};
+use samr::suffix::search::IndexView;
 use samr::suffix::validate::reference_order;
 
 const PATTERNS: &[&[u8]] = &[b"ACG", b"T", b"GGC", b"ACGT", b"CATT", b"AA"];
@@ -101,14 +109,120 @@ fn main() {
     }
     server.shutdown();
     let _ = std::fs::remove_file(&path);
-    write_snapshot(st.n_suffixes, &series);
+
+    let (bounds, open) = bench_bounds_and_open();
+    write_snapshot(st.n_suffixes, &series, &bounds, &open);
 }
 
-/// Spool the load series to `BENCH_serve.json` (the trajectory file at
-/// the repo root; override the path with SAMR_BENCH_JSON, or set it
-/// empty to skip). Hand-rolled JSON — the offline vendor set has no
-/// serde — with fixed ASCII keys, so no escaping is needed.
-fn write_snapshot(n_suffixes: u64, series: &[Load]) {
+/// One pattern length's plain-vs-accelerated numbers.
+struct BoundRow {
+    plen: usize,
+    accel_us: f64,
+    plain_us: f64,
+    accel_cmp: u64,
+    plain_cmp: u64,
+}
+
+/// Cold-open timings; `mmap_ms` is `None` without the `mmap` feature.
+struct OpenRow {
+    reps: usize,
+    heap_ms: f64,
+    mmap_ms: Option<f64>,
+}
+
+/// Mean microseconds per call of `f` over `iters` calls.
+fn time_us(iters: usize, mut f: impl FnMut() -> usize) -> f64 {
+    let t = Instant::now();
+    let mut sink = 0usize;
+    for _ in 0..iters {
+        sink += f();
+    }
+    black_box(sink);
+    t.elapsed().as_secs_f64() * 1e6 / iters as f64
+}
+
+/// Seal a long-read corpus (600 bp reads, so 512 bp patterns are real
+/// planted queries, not automatic misses) and measure (a) the plain vs
+/// LCP-accelerated SEARCH bounds at pattern lengths {8, 64, 512} and
+/// (b) the cold artifact open on each backend.
+fn bench_bounds_and_open() -> (Vec<BoundRow>, OpenRow) {
+    let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+        n_reads: 150,
+        read_len: 600,
+        len_jitter: 0,
+        genome_len: 1 << 13,
+        seed: 0x5EED,
+        ..Default::default()
+    });
+    let mut all = fwd.clone();
+    all.extend(rev.iter().cloned());
+    let order = reference_order(&all);
+    let path =
+        std::env::temp_dir().join(format!("samr-bench-bounds-{}.samr", std::process::id()));
+    sealed::seal(&path, &[&fwd, &rev], &order).expect("seal long-read corpus");
+    let idx = SealedIndex::open(&path).expect("open");
+    assert!(idx.stats().has_tree, "bounds bench needs the v2 tree section");
+
+    section(&format!(
+        "SEARCH bounds: plain O(|P| log n) vs accelerated O(|P| + log n), {} suffixes",
+        idx.stats().n_suffixes
+    ));
+    let iters = 2000;
+    let mut bounds = Vec::new();
+    for &plen in &[8usize, 64, 512] {
+        // planted: a prefix of a real read, so the range is non-empty
+        let pattern = fwd[plen % fwd.len()].codes[..plen].to_vec();
+        let (r_accel, accel_cmp) = idx.sa_range_counted(&pattern);
+        let (r_plain, plain_cmp) = idx.sa_range_plain_counted(&pattern);
+        assert_eq!(r_accel, r_plain, "bounds disagree at |P|={plen}");
+        assert!(!r_accel.is_empty(), "planted pattern absent at |P|={plen}");
+        let accel_us = time_us(iters, || idx.sa_range(&pattern).len());
+        let plain_us = time_us(iters, || idx.sa_range_plain(&pattern).len());
+        println!(
+            "|P|={plen:<6} accel {accel_us:>8.2} µs ({accel_cmp:>6} cmp)   \
+             plain {plain_us:>8.2} µs ({plain_cmp:>6} cmp)   speedup {:>5.1}x",
+            plain_us / accel_us.max(1e-9)
+        );
+        bounds.push(BoundRow { plen, accel_us, plain_us, accel_cmp, plain_cmp });
+    }
+
+    section("cold open: heap backend vs zero-copy mmap backend");
+    let reps = 20;
+    let t = Instant::now();
+    for _ in 0..reps {
+        black_box(SealedIndex::open(&path).expect("heap open").stats().n_suffixes);
+    }
+    let heap_ms = t.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    println!("heap open (read + checksum)   {heap_ms:>8.3} ms");
+    #[cfg(feature = "mmap")]
+    let mmap_ms = {
+        use samr::suffix::sealed::{Backend, OpenOptions};
+        // deferred validation: the zero-copy point is NOT touching every
+        // page at open; the structural preflight still runs
+        let opts = OpenOptions { backend: Backend::Mmap, verify_checksum: false };
+        let t = Instant::now();
+        for _ in 0..reps {
+            black_box(SealedIndex::open_with(&path, opts).expect("mmap open").stats().n_suffixes);
+        }
+        let ms = t.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!("mmap open (deferred verify)   {ms:>8.3} ms");
+        Some(ms)
+    };
+    #[cfg(not(feature = "mmap"))]
+    let mmap_ms = {
+        println!("mmap open                     not compiled in (--features mmap)");
+        None
+    };
+    let _ = std::fs::remove_file(&path);
+    (bounds, OpenRow { reps, heap_ms, mmap_ms })
+}
+
+/// Spool the load series, the bound comparison, and the cold-open
+/// timings to `BENCH_serve.json` (the trajectory file at the repo root;
+/// override the path with SAMR_BENCH_JSON, or set it empty to skip).
+/// Hand-rolled JSON — the offline vendor set has no serde — with fixed
+/// ASCII keys, so no escaping is needed.
+fn write_snapshot(n_suffixes: u64, series: &[Load], bounds: &[BoundRow], open: &OpenRow) {
     let path = match std::env::var("SAMR_BENCH_JSON") {
         Ok(p) if p.is_empty() => return,
         Ok(p) => std::path::PathBuf::from(p),
@@ -122,9 +236,25 @@ fn write_snapshot(n_suffixes: u64, series: &[Load]) {
             l.clients, l.queries, l.mean_us, l.p99_us, l.qps
         ));
     }
+    let mut bound_rows = Vec::new();
+    for b in bounds {
+        bound_rows.push(format!(
+            "    {{\"pattern_len\": {}, \"accel_us\": {:.2}, \"plain_us\": {:.2}, \
+             \"accel_cmp\": {}, \"plain_cmp\": {}}}",
+            b.plen, b.accel_us, b.plain_us, b.accel_cmp, b.plain_cmp
+        ));
+    }
+    let mmap_json =
+        open.mmap_ms.map(|ms| format!("{ms:.3}")).unwrap_or_else(|| "null".into());
     let doc = format!(
-        "{{\n  \"schema\": \"samr-bench-serve-v1\",\n  \"suffixes\": {n_suffixes},\n  \"series\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n")
+        "{{\n  \"schema\": \"samr-bench-serve-v2\",\n  \"suffixes\": {n_suffixes},\n  \
+         \"series\": [\n{}\n  ],\n  \"bounds\": [\n{}\n  ],\n  \
+         \"cold_open\": {{\"reps\": {}, \"heap_ms\": {:.3}, \"mmap_ms\": {}}}\n}}\n",
+        rows.join(",\n"),
+        bound_rows.join(",\n"),
+        open.reps,
+        open.heap_ms,
+        mmap_json
     );
     match std::fs::write(&path, doc) {
         Ok(()) => println!("\nwrote serving-load snapshot to {}", path.display()),

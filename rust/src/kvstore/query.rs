@@ -17,7 +17,9 @@
 //! * `PAIRS <fwd> <rev> <max_insert>` → flat array of integers,
 //!   `(fragment, fwd_seq, fwd_off, rev_seq, rev_off)` per joined hit —
 //!   `IndexView::find_pairs` over the wire.
-//! * `STAT` → `[n_suffixes, n_reads, n_files, corpus_bytes]`.
+//! * `STAT` → `[n_suffixes, n_reads, n_files, corpus_bytes, file_bytes,
+//!   has_lcp, has_tree, has_bwt]` — counts, the artifact's on-disk size,
+//!   and the presence (0/1) of the v2 acceleration sections.
 //! * `PING` → `PONG` (health check, same as the KV dialect).
 //!
 //! Replies carry only integers, so a TCP answer is convertible back to
@@ -131,6 +133,10 @@ impl QueryHandler {
                 Value::Int(st.n_reads as i64),
                 Value::Int(st.n_files as i64),
                 Value::Int(st.corpus_bytes as i64),
+                Value::Int(st.file_bytes as i64),
+                Value::Int(st.has_lcp as i64),
+                Value::Int(st.has_tree as i64),
+                Value::Int(st.has_bwt as i64),
             ])
         } else if cmd.eq_ignore_ascii_case(b"PING") {
             Value::Bulk(b"PONG".to_vec())
@@ -219,6 +225,15 @@ pub struct QueryStat {
     pub n_files: u64,
     /// Corpus payload bytes.
     pub corpus_bytes: u64,
+    /// On-disk size of the whole sealed artifact.
+    pub file_bytes: u64,
+    /// Whether the artifact carries an LCP section.
+    pub has_lcp: bool,
+    /// Whether the artifact carries a midpoint-tree section
+    /// (accelerated `SEARCH` in effect).
+    pub has_tree: bool,
+    /// Whether the artifact carries a BWT section.
+    pub has_bwt: bool,
 }
 
 /// Client for the query dialect: the KV [`Client`]'s transport
@@ -321,14 +336,18 @@ impl QueryClient {
     /// Headline counts of the served index.
     pub fn stat(&mut self) -> Result<QueryStat> {
         match self.c.call(&[b"STAT"])? {
-            Value::Array(vs) if vs.len() == 4 => {
+            Value::Array(vs) if vs.len() == 8 => {
                 let mut it = vs.into_iter();
-                let mut next = || expect_int(it.next().expect("4 elements")).map(|i| i as u64);
+                let mut next = || expect_int(it.next().expect("8 elements")).map(|i| i as u64);
                 Ok(QueryStat {
                     n_suffixes: next()?,
                     n_reads: next()?,
                     n_files: next()?,
                     corpus_bytes: next()?,
+                    file_bytes: next()?,
+                    has_lcp: next()? != 0,
+                    has_tree: next()? != 0,
+                    has_bwt: next()? != 0,
                 })
             }
             v => Err(KvError::Unexpected(v)),

@@ -87,8 +87,8 @@ const HELP: &str = "samr — suffix array construction with MapReduce + in-memor
   samr quickstart | stats | all
   samr table <1..8>   samr figure <3|4|5|7|8>
   samr terasort|scheme [--reads N --len L --reducers R --tcp]
-  samr build --out index.samr [--reads N --len L --paired --tcp --instances K]
-  samr seal reads.fa [mates.fa] --out index.samr [--strict --instances K]
+  samr build --out index.samr [--reads N --len L --paired --tcp --instances K --no-lcp]
+  samr seal reads.fa [mates.fa] --out index.samr [--strict --instances K --no-lcp]
   samr serve --index index.samr [--port P]
   samr query search <PATTERN> --addr H:P | --index index.samr
   samr query pairs <FWD> <REV> [--max-insert N] --addr H:P | --index index.samr
@@ -306,11 +306,14 @@ fn run_scheme(args: &Args) -> i32 {
 }
 
 /// Scheme config for the sealing subcommands (`build`/`seal`).
+/// `--no-lcp` turns off inline LCP/BWT emission and seals a plain
+/// (v1-equivalent search behavior) artifact.
 fn sealed_cfg(args: &Args) -> SchemeConfig {
     SchemeConfig {
         conf: conf_from(args),
         group_threshold: args.get_parse("threshold", 100_000),
         samples_per_reducer: 1000,
+        emit_lcp: !args.has("no-lcp"),
         ..Default::default()
     }
 }
@@ -354,8 +357,9 @@ fn seal_files(args: &Args, files: &[&[Read]], out: &Path) -> i32 {
         t0.elapsed()
     );
     println!(
-        "artifact {}; shuffle {}; KV memory {}",
+        "artifact {} ({}); shuffle {}; KV memory {}",
         human(artifact_bytes),
+        if cfg.emit_lcp { "lcp+tree+bwt sections" } else { "plain" },
         human(ledger.get(Channel::Shuffle)),
         human(res.kv_memory)
     );
@@ -456,13 +460,15 @@ fn serve(args: &Args) -> i32 {
     let mut server = QueryServer::start(port, index).expect("bind");
     let st = server.index().stats();
     println!(
-        "samr-query serving {} on {} ({} suffixes, {} reads, {} files, corpus {})",
+        "samr-query serving {} on {} ({} suffixes, {} reads, {} files, corpus {}, artifact {}, {} SEARCH)",
         path.display(),
         server.addr(),
         st.n_suffixes,
         st.n_reads,
         st.n_files,
-        human(st.corpus_bytes)
+        human(st.corpus_bytes),
+        human(st.file_bytes),
+        if st.has_tree { "accelerated" } else { "plain" }
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -500,10 +506,29 @@ fn print_pair_hits(hits: &[PairHit]) {
     println!("{} pairs", hits.len());
 }
 
-fn print_stat(n_suffixes: u64, n_reads: u64, n_files: u64, corpus_bytes: u64) {
+#[allow(clippy::too_many_arguments)]
+fn print_stat(
+    n_suffixes: u64,
+    n_reads: u64,
+    n_files: u64,
+    corpus_bytes: u64,
+    file_bytes: u64,
+    has_lcp: bool,
+    has_tree: bool,
+    has_bwt: bool,
+) {
     println!(
-        "suffixes {n_suffixes} / reads {n_reads} / files {n_files} / corpus {}",
-        human(corpus_bytes)
+        "suffixes {n_suffixes} / reads {n_reads} / files {n_files} / corpus {} / artifact {}",
+        human(corpus_bytes),
+        human(file_bytes)
+    );
+    let yn = |b: bool| if b { "yes" } else { "no" };
+    println!(
+        "sections: lcp {} / tree {} / bwt {} ({} SEARCH)",
+        yn(has_lcp),
+        yn(has_tree),
+        yn(has_bwt),
+        if has_tree { "accelerated" } else { "plain" }
     );
 }
 
@@ -532,9 +557,18 @@ fn query(args: &Args) -> i32 {
             ("pairs", Some(f), Some(r)) => {
                 c.pairs(f.as_bytes(), r.as_bytes(), max_insert).map(|h| print_pair_hits(&h))
             }
-            ("stat", _, _) => c
-                .stat()
-                .map(|s| print_stat(s.n_suffixes, s.n_reads, s.n_files, s.corpus_bytes)),
+            ("stat", _, _) => c.stat().map(|s| {
+                print_stat(
+                    s.n_suffixes,
+                    s.n_reads,
+                    s.n_files,
+                    s.corpus_bytes,
+                    s.file_bytes,
+                    s.has_lcp,
+                    s.has_tree,
+                    s.has_bwt,
+                )
+            }),
             _ => {
                 eprintln!("query: expected search <P> | pairs <F> <R> | stat\n{HELP}");
                 return 2;
@@ -578,7 +612,16 @@ fn query(args: &Args) -> i32 {
             },
             ("stat", _, _) => {
                 let st = index.stats();
-                print_stat(st.n_suffixes, st.n_reads, st.n_files, st.corpus_bytes);
+                print_stat(
+                    st.n_suffixes,
+                    st.n_reads,
+                    st.n_files,
+                    st.corpus_bytes,
+                    st.file_bytes,
+                    st.has_lcp,
+                    st.has_tree,
+                    st.has_bwt,
+                );
                 0
             }
             _ => {

@@ -17,6 +17,10 @@ pub mod gc_model;
 pub mod sampler;
 pub mod sorting_group;
 
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -32,10 +36,12 @@ use crate::mapreduce::merge::{kway_merge_pairs, kway_merge_pairs_threads};
 use crate::mapreduce::partitioner::SAMPLES_PER_REDUCER;
 use crate::mapreduce::record::{decode_i64_key, encode_i64_key, Record};
 use crate::runtime::{self, native};
-use crate::suffix::encode::DEFAULT_PREFIX_LEN;
+use crate::suffix::encode::{key_common_prefix, unpack_index, DEFAULT_PREFIX_LEN};
 use crate::suffix::reads::{spool_read_records, Read};
-use crate::suffix::sealed::SealWriter;
-use sorting_group::{key_groups, key_is_complete, tie_break_positions, SortingGroupBuffer};
+use crate::suffix::sealed::{SealWriter, BWT_TERMINATOR};
+use sorting_group::{
+    complete_key_len, key_groups, key_is_complete, tie_break_positions, SortingGroupBuffer,
+};
 
 /// Scheme configuration (paper defaults, scaled knobs in `JobConf`).
 #[derive(Clone, Debug)]
@@ -73,6 +79,15 @@ pub struct SchemeConfig {
     /// baseline; any value leaves output order and every footprint
     /// channel byte-identical (`tests/sort_equivalence.rs`).
     pub parallel_sort_threads: usize,
+    /// Compute each emitted suffix's LCP with its predecessor inline at
+    /// reduce-emit time (the texts are already in the reducer's arena,
+    /// so the LCP is nearly free there) and spool it to an *uncharged*
+    /// per-task sidecar file a sealed run stitches into the artifact's
+    /// LCP/tree sections. Output records, output order, and every
+    /// footprint-ledger channel are byte-identical either way
+    /// (`tests/lcp_oracle.rs`); non-sealed runs simply discard the
+    /// sidecars. `false` seals a plain-search (no-aux) artifact.
+    pub emit_lcp: bool,
     /// RNG seed for boundary sampling (§IV-A).
     pub seed: u64,
 }
@@ -89,6 +104,7 @@ impl Default for SchemeConfig {
             prefetch: true,
             fixed_shuffle: true,
             parallel_sort_threads: 1,
+            emit_lcp: true,
             seed: 1,
         }
     }
@@ -300,6 +316,102 @@ struct PendingBatch {
     requested: bool,
 }
 
+/// Trailer length of an LCP sidecar file: entry count (u64), first key
+/// (i64), last key (i64).
+const LCP_SIDECAR_TRAILER: usize = 24;
+
+/// Sidecar file name for reduce task `r` inside the LCP scratch dir.
+fn lcp_sidecar_name(r: usize) -> String {
+    format!("lcp-{r:05}")
+}
+
+/// Streaming writer for one reduce task's LCP sidecar: one u32 LE per
+/// emitted suffix (the LCP with its predecessor *within this task*;
+/// entry 0 is a placeholder the seal-time stitch replaces), then a
+/// 24-byte trailer (count, first key, last key) for the cross-reducer
+/// stitch. A *sidecar* — not part of the task's output records — so the
+/// nine footprint-ledger channels are byte-identical with emission on
+/// or off; like spill files, local scratch I/O is uncharged.
+///
+/// The file is created lazily on the first entry: an empty partition
+/// writes nothing (seal treats a missing sidecar as zero records), and
+/// a retried task attempt re-creates (truncates) the file and — the
+/// input being deterministic — rewrites it identically.
+struct LcpSidecar {
+    path: PathBuf,
+    w: Option<BufWriter<File>>,
+    n: u64,
+    first_key: i64,
+    last_key: i64,
+}
+
+impl LcpSidecar {
+    fn new(path: PathBuf) -> LcpSidecar {
+        LcpSidecar { path, w: None, n: 0, first_key: 0, last_key: 0 }
+    }
+
+    /// Append one suffix's LCP (and remember its key for the trailer).
+    fn push(&mut self, lcp: u32, key: i64) -> std::io::Result<()> {
+        if self.w.is_none() {
+            self.w = Some(BufWriter::new(File::create(&self.path)?));
+            self.first_key = key;
+        }
+        self.last_key = key;
+        self.n += 1;
+        self.w.as_mut().expect("created above").write_all(&lcp.to_le_bytes())
+    }
+
+    /// Write the trailer and flush. No-op when no entry arrived (the
+    /// file was never created).
+    fn finish(&mut self) -> std::io::Result<()> {
+        let Some(w) = self.w.as_mut() else { return Ok(()) };
+        w.write_all(&self.n.to_le_bytes())?;
+        w.write_all(&self.first_key.to_le_bytes())?;
+        w.write_all(&self.last_key.to_le_bytes())?;
+        w.flush()
+    }
+}
+
+/// One reducer sidecar, parsed back at seal time.
+struct SidecarData {
+    lcp: Vec<u32>,
+    first_key: i64,
+    last_key: i64,
+}
+
+/// Read reduce task `r`'s sidecar; `None` when the task emitted nothing
+/// (no file).
+fn read_lcp_sidecar(dir: &std::path::Path, r: usize) -> std::io::Result<Option<SidecarData>> {
+    let path = dir.join(lcp_sidecar_name(r));
+    let bytes = match std::fs::read(&path) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        other => other?,
+    };
+    let bad = |msg: String| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("LCP sidecar {}: {msg}", path.display()),
+        )
+    };
+    if bytes.len() < LCP_SIDECAR_TRAILER {
+        return Err(bad(format!("{} bytes is shorter than the trailer", bytes.len())));
+    }
+    let t = bytes.len() - LCP_SIDECAR_TRAILER;
+    let n = u64::from_le_bytes(bytes[t..t + 8].try_into().expect("8-byte count")) as usize;
+    if t != n * 4 {
+        return Err(bad(format!("{n} entries declared but {t} payload bytes present")));
+    }
+    let lcp = bytes[..t]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().expect("4-byte LCP")))
+        .collect();
+    Ok(Some(SidecarData {
+        lcp,
+        first_key: i64::from_le_bytes(bytes[t + 8..t + 16].try_into().expect("8-byte key")),
+        last_key: i64::from_le_bytes(bytes[t + 16..t + 24].try_into().expect("8-byte key")),
+    }))
+}
+
 struct SchemeReducer {
     cfg: SchemeConfig,
     /// Fetch handle for the blocking path (`cfg.prefetch == false`).
@@ -316,6 +428,12 @@ struct SchemeReducer {
     /// prefetching path two (one in flight, one being consumed) — steady
     /// state allocates no arena.
     spares: Vec<SuffixBatch>,
+    /// LCP sidecar writer (`cfg.emit_lcp` runs only).
+    lcp: Option<LcpSidecar>,
+    /// Key of the last emitted suffix, for LCPs across batch boundaries
+    /// (batches end on key-group boundaries, so the keys always differ
+    /// and the key digits determine the LCP exactly).
+    prev_key: Option<i64>,
 }
 
 impl SchemeReducer {
@@ -411,7 +529,7 @@ impl SchemeReducer {
                     store.fetch_suffixes_into(&idxs, &mut arena).map(|t| ((), t))
                 })?;
             }
-            self.finish_batch(batch, &arena, out);
+            self.finish_batch(batch, &arena, out)?;
             self.recycle(arena);
             Ok(())
         }
@@ -432,7 +550,7 @@ impl SchemeReducer {
         } else {
             self.spare_arena() // empty: nothing was requested
         };
-        self.finish_batch(prev, &arena, out);
+        self.finish_batch(prev, &arena, out)?;
         self.recycle(arena);
         Ok(())
     }
@@ -442,12 +560,27 @@ impl SchemeReducer {
     /// and permutes only the (index, arena-entry) table — suffix bytes
     /// never move or copy until the one unavoidable copy into the emitted
     /// `Record` (which must own its key).
+    ///
+    /// With `emit_lcp` this is also where each suffix's LCP with its
+    /// predecessor is computed — at emit time the answer is nearly free:
+    /// * **different keys** — adjacent sorted suffixes whose prefix keys
+    ///   differ have byte LCP = shared leading key digits
+    ///   ([`key_common_prefix`]'s exactness argument), no texts needed;
+    /// * **equal complete keys** — identical suffixes (a complete key
+    ///   *is* the whole suffix), LCP = the suffix length from the key;
+    /// * **equal incomplete keys** — both positions sit in the same
+    ///   multi-member incomplete group, which is exactly what the
+    ///   tie-break plan fetched, so both texts are in the arena and one
+    ///   zip counts the LCP.
+    /// Batches end on key-group boundaries (`push_group` admits whole
+    /// groups), so a batch's first suffix never shares a key with
+    /// `prev_key` and the cross-batch case is always the key-digit one.
     fn finish_batch(
         &mut self,
         batch: PendingBatch,
         texts: &SuffixBatch,
         out: &mut dyn FnMut(Record),
-    ) {
+    ) -> std::io::Result<()> {
         let PendingBatch { keys, mut indexes, want, .. } = batch;
         // position -> arena entry (NO_TEXT where no text was fetched)
         const NO_TEXT: usize = usize::MAX;
@@ -488,6 +621,26 @@ impl SchemeReducer {
         //    the two Vecs it is made of — nothing else is allocated.
         let t_emit = Instant::now();
         for i in 0..keys.len() {
+            if self.lcp.is_some() {
+                let lcp: u32 = if i == 0 {
+                    match self.prev_key {
+                        // task's first suffix: placeholder; the seal-time
+                        // stitch supplies the cross-reducer LCP
+                        None => 0,
+                        Some(pk) => key_common_prefix(pk, keys[0], self.cfg.prefix_len) as u32,
+                    }
+                } else if keys[i] != keys[i - 1] {
+                    key_common_prefix(keys[i - 1], keys[i], self.cfg.prefix_len) as u32
+                } else if let Some(len) = complete_key_len(keys[i], self.cfg.prefix_len) {
+                    len as u32
+                } else {
+                    let a = texts.slice(entry_at[i - 1]);
+                    let b = texts.slice(entry_at[i]);
+                    a.iter().zip(b).take_while(|(x, y)| x == y).count() as u32
+                };
+                self.lcp.as_mut().expect("checked above").push(lcp, keys[i])?;
+                self.prev_key = Some(keys[i]);
+            }
             let value = indexes[i].to_be_bytes();
             let rec = if self.cfg.write_suffixes {
                 // entry_at[i] is always a fetched entry in write mode
@@ -502,6 +655,7 @@ impl SchemeReducer {
         self.times
             .other_ns
             .fetch_add(t_emit.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(())
     }
 }
 
@@ -602,7 +756,11 @@ impl crate::mapreduce::reducer::ReduceTask for SchemeReducer {
         // drain the double buffer: the last batch's fetch is still in
         // flight when the input runs out
         let prev = self.pending.take();
-        self.complete(prev, out)
+        self.complete(prev, out)?;
+        if let Some(sc) = self.lcp.as_mut() {
+            sc.finish()?;
+        }
+        Ok(())
     }
 }
 
@@ -662,6 +820,17 @@ pub fn run_files(
 /// `SealWriter`'s finish-time invariants (SA count vs corpus suffix
 /// count) turn any wiring bug into a clean error rather than a
 /// plausible-looking artifact.
+///
+/// With `cfg.emit_lcp` (the default) the artifact also gets the v2
+/// LCP / midpoint-tree / BWT sections: each reducer's sidecar supplies
+/// the within-task LCPs the emit loop already computed, and this stitch
+/// fills in the one value a reducer cannot know — its first suffix's LCP
+/// with the *previous reducer's* last suffix. Range partitioning puts
+/// different keys on either side of every reducer boundary, so that LCP
+/// is exactly the shared key digits ([`key_common_prefix`]). The BWT
+/// character (the byte preceding each suffix; [`BWT_TERMINATOR`] at
+/// offset 0) is read here from the in-memory input reads — the emitting
+/// reducer may not hold the read, but the sealer does.
 pub fn run_files_sealed(
     files: &[&[Read]],
     cfg: &SchemeConfig,
@@ -669,27 +838,88 @@ pub fn run_files_sealed(
     ledger: &Arc<Ledger>,
     out: &std::path::Path,
 ) -> std::io::Result<SealedSchemeResult> {
-    let mut writer = SealWriter::create(out)?;
+    let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+    let parse_index = |rec: &Record| -> std::io::Result<i64> {
+        if rec.value.len() < 8 {
+            return Err(bad(format!(
+                "output value is {} bytes; an 8-byte i64 prefix is required",
+                rec.value.len()
+            )));
+        }
+        Ok(i64::from_be_bytes(rec.value[..8].try_into().expect("checked length")))
+    };
+    let mut writer = if cfg.emit_lcp {
+        SealWriter::create_with_aux(out)?
+    } else {
+        SealWriter::create(out)?
+    };
     for file in files {
         writer.add_file(file)?;
     }
     let core = run_files_core(files, cfg, &store_factory, ledger)?;
     let mut n_sealed = 0u64;
-    core.job.for_each_output(|rec| {
-        if rec.value.len() < 8 {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!(
-                    "output value is {} bytes; an 8-byte i64 prefix is required",
-                    rec.value.len()
-                ),
-            ));
+    if cfg.emit_lcp {
+        let dir = &core.lcp_dir.as_ref().expect("emit_lcp runs hold the sidecar dir").path;
+        // the BWT needs each suffix's *preceding* character, which lives
+        // with the read, not the emitting reducer — index the in-memory
+        // inputs by sequence number
+        let reads_by_seq: HashMap<u64, &[u8]> = files
+            .iter()
+            .flat_map(|f| f.iter().map(|rd| (rd.seq, rd.codes.as_slice())))
+            .collect();
+        let mut prev_last_key: Option<i64> = None;
+        for r in 0..core.job.output.len() {
+            let side = read_lcp_sidecar(dir, r)?;
+            let mut reader = core.job.output_reader(r)?;
+            let mut i = 0usize;
+            while let Some(rec) = reader.next_record()? {
+                let idx = parse_index(&rec)?;
+                let side = side
+                    .as_ref()
+                    .ok_or_else(|| bad(format!("reduce task {r} emitted records but no LCP sidecar")))?;
+                let lcp = if i == 0 {
+                    match prev_last_key {
+                        None => 0,
+                        Some(pk) => key_common_prefix(pk, side.first_key, cfg.prefix_len) as u32,
+                    }
+                } else {
+                    *side.lcp.get(i).ok_or_else(|| {
+                        bad(format!(
+                            "reduce task {r}: more output records than the {} sidecar entries",
+                            side.lcp.len()
+                        ))
+                    })?
+                };
+                let (seq, off) = unpack_index(idx);
+                let bwt = if off == 0 {
+                    BWT_TERMINATOR
+                } else {
+                    let codes = reads_by_seq
+                        .get(&seq)
+                        .ok_or_else(|| bad(format!("output index {idx} names unknown seq {seq}")))?;
+                    codes[off - 1]
+                };
+                writer.push_entry(idx, lcp, bwt)?;
+                n_sealed += 1;
+                i += 1;
+            }
+            if let Some(s) = side.as_ref() {
+                if s.lcp.len() != i {
+                    return Err(bad(format!(
+                        "reduce task {r}: {} sidecar entries for {i} output records",
+                        s.lcp.len()
+                    )));
+                }
+                prev_last_key = Some(s.last_key);
+            }
         }
-        let idx = i64::from_be_bytes(rec.value[..8].try_into().expect("checked length"));
-        writer.push_index(idx)?;
-        n_sealed += 1;
-        Ok(())
-    })?;
+    } else {
+        core.job.for_each_output(|rec| {
+            writer.push_index(parse_index(&rec)?)?;
+            n_sealed += 1;
+            Ok(())
+        })?;
+    }
     writer.finish()?;
     let kv_memory = probe_kv_memory(&core.parked, &store_factory);
     Ok(SealedSchemeResult {
@@ -709,6 +939,10 @@ struct CoreRun {
     parked: StoreSlot,
     times: Arc<TimeSplit>,
     boundaries: Vec<i64>,
+    /// Scratch dir holding the reducers' LCP sidecars (`emit_lcp` runs);
+    /// kept alive so a sealing ending can stitch them before the files
+    /// are reclaimed. Non-sealing endings just drop it.
+    lcp_dir: Option<ScratchDir>,
 }
 
 /// Memory probe on a handle a map task already opened (parked in
@@ -760,6 +994,14 @@ fn run_files_core(
 
     let times = Arc::new(TimeSplit::default());
     let parked: StoreSlot = Arc::new(Mutex::new(None));
+    // sidecar scratch space for inline LCP emission; uncharged local
+    // scratch, exactly like the shuffle's spill files
+    let lcp_dir = if cfg.emit_lcp {
+        Some(ScratchDir::new(cfg.conf.spill_dir.as_deref(), "scheme-lcp")?)
+    } else {
+        None
+    };
+    let lcp_path: Option<PathBuf> = lcp_dir.as_ref().map(|d| d.path.clone());
     let map_bounds = boundaries.clone();
     let map_cfg = cfg.clone();
     let map_store = store_factory.clone();
@@ -793,7 +1035,7 @@ fn run_files_core(
                 all_reads: Vec::new(),
             })
         }),
-        reduce_factory: Arc::new(move |_| {
+        reduce_factory: Arc::new(move |r| {
             let _ = &red_bounds;
             // in prefetch mode the store handle moves onto the fetch
             // worker; the blocking path keeps it inline
@@ -812,6 +1054,10 @@ fn run_files_core(
                 buf: SortingGroupBuffer::new(),
                 pending: None,
                 spares: Vec::new(),
+                lcp: lcp_path
+                    .as_ref()
+                    .map(|d| LcpSidecar::new(d.join(lcp_sidecar_name(r)))),
+                prev_key: None,
             })
         }),
         partitioner: Arc::new(move |key: &[u8]| {
@@ -837,7 +1083,7 @@ fn run_files_core(
     let result = run_job(&job, splits, ledger)?;
     drop(spool); // input consumed; release the spool files
 
-    Ok(CoreRun { job: result, parked, times, boundaries })
+    Ok(CoreRun { job: result, parked, times, boundaries, lcp_dir })
 }
 
 #[cfg(test)]
@@ -987,6 +1233,29 @@ mod tests {
         let st = idx.stats();
         assert_eq!(st.n_files, 2);
         assert_eq!(st.n_reads as usize, fwd.len() + rev.len());
+
+        // the default-emit_lcp pipeline seals the v2 aux sections, and
+        // the stitched LCPs equal a naive recompute over the final order
+        assert!(st.has_lcp && st.has_tree && st.has_bwt);
+        assert_eq!(idx.lcp_at(0), 0);
+        for r in 1..mem.order.len() {
+            let (a, b) = (idx.suffix(on_disk[r - 1]), idx.suffix(on_disk[r]));
+            let want = a.iter().zip(b).take_while(|(x, y)| x == y).count() as u32;
+            assert_eq!(idx.lcp_at(r), want, "stitched LCP at rank {r}");
+        }
+
+        // emit_lcp = false seals a plain (no-aux) v2 artifact with the
+        // identical SA
+        let plain_path = dir.join("case6-plain.samr");
+        let (f3, _s3) = inproc_factory(2);
+        let ledger3 = Ledger::new();
+        let cfg_plain = SchemeConfig { emit_lcp: false, ..small_cfg(2, 300) };
+        run_files_sealed(&[&fwd, &rev], &cfg_plain, f3, &ledger3, &plain_path).unwrap();
+        let plain = SealedIndex::open(&plain_path).unwrap();
+        let pst = plain.stats();
+        assert!(!pst.has_lcp && !pst.has_tree && !pst.has_bwt);
+        let plain_sa: Vec<i64> = (0..mem.order.len()).map(|r| plain.sa_at(r)).collect();
+        assert_eq!(plain_sa, mem.order);
     }
 
     #[test]

@@ -112,6 +112,36 @@ pub fn unpack_index(index: i64) -> (u64, usize) {
     ((index / OFFSET_RADIX) as u64, (index % OFFSET_RADIX) as usize)
 }
 
+/// Number of leading base-5 digits two prefix keys share.
+///
+/// For *adjacent* suffixes in sorted order whose keys differ, this is
+/// exactly their byte LCP: before the first differing digit position no
+/// digit pair can be (0, 0) — both suffixes ending at or before that
+/// position would zero-pad every later digit identically, contradicting
+/// the keys differing — and no pair can be (0, x≠0), which would itself
+/// be the first difference. So every shared leading digit is a shared
+/// real base, and the first differing digit is either a real-base
+/// mismatch or one suffix's terminator, both of which end the byte LCP
+/// there. (Keys equal means the suffixes agree across the whole window;
+/// that case is handled from the texts, not from the keys.)
+#[inline]
+pub fn key_common_prefix(a: i64, b: i64, prefix_len: usize) -> usize {
+    debug_assert!(prefix_len <= I64_PREFIX_LEN);
+    if prefix_len == 0 {
+        return 0;
+    }
+    let mut place = BASE.pow(prefix_len as u32 - 1);
+    let mut common = 0;
+    while place > 0 {
+        if (a / place) % BASE != (b / place) % BASE {
+            break;
+        }
+        common += 1;
+        place /= BASE;
+    }
+    common
+}
+
 /// Decode a base-5 key back into `prefix_len` codes (reports, debugging).
 pub fn decode_key(key: i64, prefix_len: usize) -> Vec<u8> {
     let mut out = vec![0u8; prefix_len];
@@ -168,6 +198,27 @@ mod tests {
         let mut by_str: Vec<_> = reads.iter().map(|r| codes_of(r)).collect();
         by_str.sort();
         assert_eq!(by_key, by_str);
+    }
+
+    #[test]
+    fn key_common_prefix_counts_shared_digits() {
+        let p = 8;
+        let k = |s: &[u8]| encode_prefix(&codes_of(s), p);
+        assert_eq!(key_common_prefix(k(b"ACGTACGT"), k(b"ACGTTTTT"), p), 4);
+        assert_eq!(key_common_prefix(k(b"ACGT"), k(b"ACGTA"), p), 4); // terminator vs A
+        assert_eq!(key_common_prefix(k(b"GATTACA"), k(b"TATTACA"), p), 0);
+        assert_eq!(key_common_prefix(k(b"AAAA"), k(b"AAAA"), p), p);
+        assert_eq!(key_common_prefix(0, 0, p), p); // two lone-$ suffixes
+        // matches the byte LCP of the $-padded decoded prefixes
+        for (a, b) in [(b"ACGTACGT" as &[u8], b"ACGGACGT" as &[u8]), (b"T", b"TT")] {
+            let (ka, kb) = (k(a), k(b));
+            let want = decode_key(ka, p)
+                .iter()
+                .zip(decode_key(kb, p))
+                .take_while(|(&x, y)| x == *y)
+                .count();
+            assert_eq!(key_common_prefix(ka, kb, p), want, "{a:?} vs {b:?}");
+        }
     }
 
     #[test]

@@ -13,41 +13,65 @@
 //! * [`SealWriter`] streams the artifact out during construction —
 //!   `scheme::run_files_sealed` feeds it each input file's reads and
 //!   then the reducer output stream, one index at a time, so sealing
-//!   never materializes the order in memory.
-//! * [`SealedIndex`] loads the artifact with zero parse work: one
-//!   sequential read, one checksum pass, and a fixed-size footer that
-//!   resolves every section by offset. No per-record decoding, no
-//!   allocation per read or suffix — suffix bytes are served as slices
-//!   into the single file buffer.
+//!   never materializes the order in memory. (The v2 auxiliary
+//!   sections — LCP, midpoint tree, BWT — are buffered until `finish`
+//!   because they live *after* the SA on disk and the checksum is
+//!   folded in one pass; that costs ~13 bytes per suffix, a fraction of
+//!   the 8-byte SA entries the writer deliberately does *not* buffer.)
+//! * [`SealedIndex`] loads the artifact with zero parse work: a
+//!   footer-first preflight (preamble + tail only, so corrupt or
+//!   wrong-format multi-GB files fail before any bulk I/O), then the
+//!   body through a pluggable backend — default heap read, optional
+//!   zero-copy `mmap` (feature-gated) — one checksum pass, and a
+//!   fixed-size footer that resolves every section by offset. No
+//!   per-record decoding, no allocation per read or suffix — suffix
+//!   bytes are served as slices into the single file buffer.
 //!
-//! Corruption is rejected at [`SealedIndex::open`] with descriptive
-//! `io::Error`s — truncation, bad magic, unsupported version, checksum
-//! mismatch, and section-table inconsistencies all fail the open, never
-//! a later query.
+//! Version 2 appends three optional sections (adjacent-pair LCP,
+//! (llcp, rlcp) midpoint tree, BWT) addressed by an extension footer;
+//! version 1 artifacts still open and serve through the plain search
+//! path. Corruption is rejected at [`SealedIndex::open`] with
+//! descriptive `io::Error`s — truncation, bad magic, unsupported
+//! version, checksum mismatch, and section-table inconsistencies all
+//! fail the open, never a later query.
 
 use std::fs::File;
-use std::io::{self, BufWriter, Write};
+use std::io::{self, BufWriter, Read as _, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 use crate::suffix::encode::unpack_index;
+use crate::suffix::lcp::{build_midpoint_tree, MidpointTree, TREE_ENTRY_LEN};
 use crate::suffix::reads::Read;
 use crate::suffix::search::IndexView;
 
-/// File magic: the first eight bytes of every sealed index.
+/// File magic: the first eight bytes of every sealed index (all
+/// versions — the version word, not the magic, distinguishes them).
 pub const MAGIC: [u8; 8] = *b"SAMRIDX1";
-/// Container version this build writes and reads.
-pub const VERSION: u32 = 1;
+/// Container version this build writes. Reads this and [`VERSION_V1`].
+pub const VERSION: u32 = 2;
+/// The original container version (no auxiliary sections).
+pub const VERSION_V1: u32 = 1;
 /// Fixed preamble length: magic + version + reserved word.
 pub const PREAMBLE_LEN: usize = 16;
 /// Fixed footer length: counts + section table + reserved word.
 pub const FOOTER_LEN: usize = 96;
+/// v2 extension footer length: (offset, length) for LCP, TREE, BWT.
+pub const EXT_LEN: usize = 48;
 /// Trailing checksum length (FNV-1a 64 over everything before it).
 pub const CHECKSUM_LEN: usize = 8;
 /// Bytes per read-table entry: seq (8) + corpus offset (8) + length (4).
 pub const READ_ENTRY_LEN: usize = 20;
 /// Bytes per file-metadata entry: read count + min seq + max seq.
 pub const FILE_ENTRY_LEN: usize = 24;
-/// The smallest well-formed artifact (empty sections).
+/// Bytes per LCP-section entry (u32 LE).
+pub const LCP_ENTRY_LEN: usize = 4;
+/// BWT code for "suffix starts at offset 0": the preceding character is
+/// the *previous* read's terminator, which belongs to no read — one
+/// past the largest real code (`$ACGT` = 0..=4).
+pub const BWT_TERMINATOR: u8 = 5;
+/// The smallest well-formed v1 artifact (empty sections); v2 adds
+/// [`EXT_LEN`]. Anything shorter cannot hold a preamble + footer and is
+/// rejected before any body I/O.
 pub const MIN_FILE_LEN: usize = PREAMBLE_LEN + FOOTER_LEN + CHECKSUM_LEN;
 
 /// FNV-1a 64 over `bytes` — the artifact's integrity checksum. Exposed
@@ -78,6 +102,15 @@ pub struct SealedStats {
     pub n_files: u64,
     /// Total corpus payload bytes (base codes).
     pub corpus_bytes: u64,
+    /// Whole artifact size on disk, checksum included.
+    pub file_bytes: u64,
+    /// True when the artifact carries a (non-empty) LCP section.
+    pub has_lcp: bool,
+    /// True when the artifact carries the midpoint tree (and therefore
+    /// serves O(|P| + log n) accelerated queries).
+    pub has_tree: bool,
+    /// True when the artifact carries a BWT section.
+    pub has_bwt: bool,
 }
 
 /// Per-input-file read metadata, kept so a served artifact still knows
@@ -96,18 +129,29 @@ pub struct FileMeta {
 // writer
 // ---------------------------------------------------------------------
 
+/// The v2 auxiliary payload, accumulated per suffix and written as the
+/// LCP / TREE / BWT sections at finish.
+struct AuxBuf {
+    lcp: Vec<u32>,
+    bwt: Vec<u8>,
+}
+
 /// Streaming writer for one sealed index artifact.
 ///
 /// Usage order is fixed and enforced: [`SealWriter::add_file`] once per
 /// input file (streams the corpus section), then
-/// [`SealWriter::push_index`] once per suffix in final order (streams
-/// the SA section), then [`SealWriter::finish`] (writes the read table,
+/// [`SealWriter::push_index`] (plain) *or* [`SealWriter::push_entry`]
+/// (with per-suffix LCP + BWT, [`SealWriter::create_with_aux`] only)
+/// once per suffix in final order (streams the SA section), then
+/// [`SealWriter::finish`] (writes the auxiliary sections, read table,
 /// file metadata, footer, and checksum). The checksum is folded over
 /// every byte as it is written, so sealing costs one pass and no
-/// re-read.
+/// re-read. The SA section is never buffered; the auxiliary payload is
+/// (~13 B/suffix) because it lands after the SA in the one-pass layout.
 pub struct SealWriter {
     w: BufWriter<File>,
     path: PathBuf,
+    version: u32,
     hash: u64,
     pos: u64,
     /// (seq, corpus-relative offset, length) per read; sorted at finish.
@@ -116,26 +160,48 @@ pub struct SealWriter {
     /// End of the corpus section; `None` until the first index arrives.
     corpus_end: Option<u64>,
     n_suffixes: u64,
+    aux: Option<AuxBuf>,
 }
 
 impl SealWriter {
-    /// Create the artifact at `path` and write the preamble.
+    /// Create a v2 artifact at `path` *without* auxiliary sections
+    /// (zero-length LCP/TREE/BWT — queries take the plain path). Feed
+    /// the SA with [`SealWriter::push_index`].
     pub fn create(path: &Path) -> io::Result<SealWriter> {
+        SealWriter::create_impl(path, VERSION, None)
+    }
+
+    /// Create a v2 artifact at `path` with LCP, midpoint-tree, and BWT
+    /// sections. Feed the SA with [`SealWriter::push_entry`].
+    pub fn create_with_aux(path: &Path) -> io::Result<SealWriter> {
+        SealWriter::create_impl(path, VERSION, Some(AuxBuf { lcp: Vec::new(), bwt: Vec::new() }))
+    }
+
+    /// Create a version-1 artifact (no extension footer, no auxiliary
+    /// sections). Kept as a *writer* so back-compat coverage needs no
+    /// committed binary fixture; production sealing is v2.
+    pub fn create_v1(path: &Path) -> io::Result<SealWriter> {
+        SealWriter::create_impl(path, VERSION_V1, None)
+    }
+
+    fn create_impl(path: &Path, version: u32, aux: Option<AuxBuf>) -> io::Result<SealWriter> {
         let file = File::create(path).map_err(|e| {
             io::Error::new(e.kind(), format!("seal {}: {e}", path.display()))
         })?;
         let mut w = SealWriter {
             w: BufWriter::new(file),
             path: path.to_path_buf(),
+            version,
             hash: FNV_OFFSET,
             pos: 0,
             entries: Vec::new(),
             files: Vec::new(),
             corpus_end: None,
             n_suffixes: 0,
+            aux,
         };
         w.put(&MAGIC)?;
-        w.put(&VERSION.to_le_bytes())?;
+        w.put(&version.to_le_bytes())?;
         w.put(&0u32.to_le_bytes())?;
         Ok(w)
     }
@@ -191,7 +257,65 @@ impl SealWriter {
     }
 
     /// Append one packed suffix index to the SA section, in final order.
+    /// Plain writers only — an aux writer must not silently drop its
+    /// per-suffix payload.
     pub fn push_index(&mut self, index: i64) -> io::Result<()> {
+        if self.aux.is_some() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "seal {}: push_index on a writer created with aux sections — \
+                     use push_entry(index, lcp, bwt)",
+                    self.path.display()
+                ),
+            ));
+        }
+        self.push_index_raw(index)
+    }
+
+    /// Append one suffix with its auxiliary payload: `lcp` = common
+    /// prefix bytes with the *previous* suffix in order (0 for the
+    /// first), `bwt` = code of the character preceding the suffix in
+    /// its read ([`BWT_TERMINATOR`] for offset-0 suffixes). Aux writers
+    /// ([`SealWriter::create_with_aux`]) only.
+    pub fn push_entry(&mut self, index: i64, lcp: u32, bwt: u8) -> io::Result<()> {
+        if self.aux.is_none() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "seal {}: push_entry on a writer without aux sections — \
+                     use create_with_aux, or push_index",
+                    self.path.display()
+                ),
+            ));
+        }
+        if self.n_suffixes == 0 && lcp != 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "seal {}: first suffix carries lcp {lcp}, must be 0 — \
+                     upstream boundary stitching is wired wrong",
+                    self.path.display()
+                ),
+            ));
+        }
+        if bwt > BWT_TERMINATOR {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "seal {}: BWT code {bwt} out of range (max {BWT_TERMINATOR})",
+                    self.path.display()
+                ),
+            ));
+        }
+        self.push_index_raw(index)?;
+        let aux = self.aux.as_mut().expect("checked above");
+        aux.lcp.push(lcp);
+        aux.bwt.push(bwt);
+        Ok(())
+    }
+
+    fn push_index_raw(&mut self, index: i64) -> io::Result<()> {
         if self.corpus_end.is_none() {
             self.corpus_end = Some(self.pos);
         }
@@ -244,14 +368,51 @@ impl SealWriter {
             self.put(&m.min_seq.to_le_bytes())?;
             self.put(&m.max_seq.to_le_bytes())?;
         }
+        let meta_end = self.pos;
 
-        // footer: counts, then (offset, length) per section, then a
-        // reserved word — fixed FOOTER_LEN bytes, parsed from the tail
+        // v2: the auxiliary sections, then the extension footer that
+        // addresses them (zero lengths when the writer carried no aux)
+        if self.version >= VERSION {
+            let aux = self.aux.take();
+            let lcp_off = self.pos;
+            if let Some(a) = &aux {
+                debug_assert_eq!(a.lcp.len() as u64, self.n_suffixes);
+                for &v in &a.lcp {
+                    self.put(&v.to_le_bytes())?;
+                }
+            }
+            let tree_off = self.pos;
+            if let Some(a) = &aux {
+                self.put(&build_midpoint_tree(&a.lcp))?;
+            }
+            let bwt_off = self.pos;
+            if let Some(a) = &aux {
+                debug_assert_eq!(a.bwt.len() as u64, self.n_suffixes);
+                self.put(&a.bwt)?;
+            }
+            let ext_start = self.pos;
+            let ext: [(u64, u64); 3] = [
+                (lcp_off, tree_off - lcp_off),
+                (tree_off, bwt_off - tree_off),
+                (bwt_off, ext_start - bwt_off),
+            ];
+            for &(off, len) in &ext {
+                self.put(&off.to_le_bytes())?;
+                self.put(&len.to_le_bytes())?;
+            }
+            debug_assert_eq!(self.pos - ext_start, EXT_LEN as u64);
+        }
+
+        // main footer: counts, then (offset, length) per core section,
+        // then the reserved word — fixed FOOTER_LEN bytes, parsed from
+        // the tail. The reserved word is the extension-footer length
+        // (0 for v1, EXT_LEN for v2), which is how the loader finds the
+        // extension without guessing.
         let sections: [(u64, u64); 4] = [
             (PREAMBLE_LEN as u64, corpus_end - PREAMBLE_LEN as u64),
             (corpus_end, table_off - corpus_end),
             (table_off, meta_off - table_off),
-            (meta_off, self.pos - meta_off),
+            (meta_off, meta_end - meta_off),
         ];
         let footer_start = self.pos;
         self.put(&(entries.len() as u64).to_le_bytes())?;
@@ -261,7 +422,8 @@ impl SealWriter {
             self.put(&off.to_le_bytes())?;
             self.put(&len.to_le_bytes())?;
         }
-        self.put(&0u64.to_le_bytes())?;
+        let reserved = if self.version >= VERSION { EXT_LEN as u64 } else { 0 };
+        self.put(&reserved.to_le_bytes())?;
         debug_assert_eq!(self.pos - footer_start, FOOTER_LEN as u64);
 
         // trailing checksum covers every byte before it
@@ -271,12 +433,65 @@ impl SealWriter {
     }
 }
 
+/// Resolve a packed index to its suffix slice over `files`' reads.
+fn suffix_in<'a>(
+    reads: &std::collections::HashMap<u64, &'a [u8]>,
+    index: i64,
+) -> &'a [u8] {
+    let (seq, off) = unpack_index(index);
+    let r = reads.get(&seq).expect("order references a stored read");
+    &r[off.min(r.len())..]
+}
+
 /// Seal an already-materialized construction result in one call: the
-/// input files plus their final suffix order. The streaming path for
-/// pipelines is `scheme::run_files_sealed`; this convenience exists for
-/// tests, tools, and small corpora.
+/// input files plus their final suffix order, with the v2 auxiliary
+/// sections computed naively (adjacent-pair LCP scan + preceding-char
+/// BWT). The streaming path for pipelines is
+/// `scheme::run_files_sealed`, which gets the LCPs from the reducers;
+/// this convenience exists for tests, tools, and small corpora.
 pub fn seal(path: &Path, files: &[&[Read]], order: &[i64]) -> io::Result<()> {
+    let mut reads = std::collections::HashMap::new();
+    for f in files {
+        for r in *f {
+            reads.insert(r.seq, &r.codes[..]);
+        }
+    }
+    let mut w = SealWriter::create_with_aux(path)?;
+    for f in files {
+        w.add_file(f)?;
+    }
+    for (i, &idx) in order.iter().enumerate() {
+        let lcp = if i == 0 {
+            0
+        } else {
+            let (a, b) = (suffix_in(&reads, order[i - 1]), suffix_in(&reads, idx));
+            a.iter().zip(b).take_while(|(x, y)| x == y).count() as u32
+        };
+        let (seq, off) = unpack_index(idx);
+        let bwt = if off == 0 { BWT_TERMINATOR } else { reads[&seq][off - 1] };
+        w.push_entry(idx, lcp, bwt)?;
+    }
+    w.finish()
+}
+
+/// [`seal`] without the auxiliary sections: a v2 artifact whose
+/// LCP/TREE/BWT lengths are zero, serving through the plain search
+/// path. Exercises the degrade case the format promises.
+pub fn seal_plain(path: &Path, files: &[&[Read]], order: &[i64]) -> io::Result<()> {
     let mut w = SealWriter::create(path)?;
+    for f in files {
+        w.add_file(f)?;
+    }
+    for &idx in order {
+        w.push_index(idx)?;
+    }
+    w.finish()
+}
+
+/// [`seal`] as a version-1 artifact — the back-compat writer that keeps
+/// old-format coverage alive without a committed binary fixture.
+pub fn seal_v1(path: &Path, files: &[&[Read]], order: &[i64]) -> io::Result<()> {
+    let mut w = SealWriter::create_v1(path)?;
     for f in files {
         w.add_file(f)?;
     }
@@ -290,20 +505,146 @@ pub fn seal(path: &Path, files: &[&[Read]], order: &[i64]) -> io::Result<()> {
 // loader
 // ---------------------------------------------------------------------
 
+/// How [`SealedIndex::open_with`] gets the artifact body into memory.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// One sequential read into a heap buffer (the default — works
+    /// everywhere, pays O(file) copy at open).
+    #[default]
+    Heap,
+    /// Zero-copy `mmap(2)` of the artifact: open cost stops being
+    /// O(file) heap traffic; pages fault in as queries touch them.
+    /// Requires the `mmap` cargo feature.
+    #[cfg(feature = "mmap")]
+    Mmap,
+}
+
+/// Knobs for [`SealedIndex::open_with`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpenOptions {
+    /// Body backend; [`Backend::Heap`] by default.
+    pub backend: Backend,
+    /// Verify the trailing FNV-1a 64 checksum (default `true`). Opting
+    /// out trades integrity for a truly O(1)-touch mmap open; the
+    /// structural preflight and section validation still run.
+    pub verify_checksum: bool,
+}
+
+impl Default for OpenOptions {
+    fn default() -> Self {
+        OpenOptions { backend: Backend::Heap, verify_checksum: true }
+    }
+}
+
+/// The loaded artifact body behind either backend.
+enum IndexData {
+    Heap(Vec<u8>),
+    #[cfg(feature = "mmap")]
+    Mapped(mmap_backend::Mapping),
+}
+
+impl IndexData {
+    #[inline]
+    fn bytes(&self) -> &[u8] {
+        match self {
+            IndexData::Heap(v) => v,
+            #[cfg(feature = "mmap")]
+            IndexData::Mapped(m) => m.bytes(),
+        }
+    }
+}
+
+/// Minimal read-only `mmap(2)` binding. Hand-rolled because this crate
+/// is dependency-free by policy (no `memmap2` in the build image);
+/// gated behind the `mmap` feature so default builds stay pure safe
+/// Rust.
+#[cfg(feature = "mmap")]
+mod mmap_backend {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    /// A private read-only mapping of a whole file, unmapped on drop.
+    pub struct Mapping {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // The mapping is immutable (PROT_READ, private) and owned: sharing
+    // &Mapping across threads is sharing &[u8].
+    unsafe impl Send for Mapping {}
+    unsafe impl Sync for Mapping {}
+
+    impl Mapping {
+        /// Map `len` bytes of `file` from offset 0. `len` must be the
+        /// file's length and non-zero (the artifact minimum guarantees
+        /// it).
+        pub fn map(file: &File, len: usize) -> io::Result<Mapping> {
+            assert!(len > 0, "cannot map an empty file");
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Mapping { ptr, len })
+        }
+
+        /// The mapped bytes.
+        #[inline]
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
 /// A loaded, integrity-checked sealed index. Read-only and `Sync`: one
 /// instance is shared across every server connection with no lock — the
 /// serving tier's whole concurrency model is "immutable artifact, any
 /// number of readers".
 ///
-/// Loading is one sequential file read plus one checksum pass; sections
-/// are resolved by offset from the fixed-size footer with zero parse
-/// work (no per-record decode, no allocation per read or suffix).
+/// Opening is footer-first: a fixed-size preflight (preamble + tail)
+/// validates magic, version, and all section arithmetic *before* any
+/// bulk I/O, so a corrupt or wrong-format multi-GB file is rejected in
+/// O(1) reads. The body then loads through the chosen [`Backend`];
+/// sections are resolved by offset with zero parse work (no per-record
+/// decode, no allocation per read or suffix).
 pub struct SealedIndex {
-    data: Vec<u8>,
+    data: IndexData,
+    version: u32,
+    file_len: u64,
     corpus: (usize, usize),
     sa: (usize, usize),
     table: (usize, usize),
     meta: (usize, usize),
+    /// v2 auxiliary sections; zero-length when absent (or v1).
+    lcp: (usize, usize),
+    tree: (usize, usize),
+    bwt: (usize, usize),
     n_reads: usize,
     n_sa: usize,
     n_files: usize,
@@ -321,107 +662,227 @@ fn le_u64(data: &[u8], off: usize) -> u64 {
     u64::from_le_bytes(data[off..off + 8].try_into().expect("8-byte field"))
 }
 
+/// Everything the footer-first preflight resolves without touching the
+/// artifact body.
+struct Preflight {
+    version: u32,
+    file_len: u64,
+    n_reads: usize,
+    n_sa: usize,
+    n_files: usize,
+    /// corpus, SA, read-table, file-metadata.
+    core: [(usize, usize); 4],
+    /// LCP, TREE, BWT — all zero for v1.
+    aux: [(usize, usize); 3],
+}
+
+/// Validate preamble + footer (+ v2 extension footer) from fixed-size
+/// reads at the file's ends: magic, version, reserved word, counts, and
+/// every section's offset arithmetic. O(1) I/O regardless of artifact
+/// size — a corrupt or wrong-format multi-GB file fails here, before
+/// the body is read or mapped.
+fn preflight(path: &Path, file: &mut File) -> io::Result<Preflight> {
+    let file_len = file.metadata().map_err(|e| {
+        io::Error::new(e.kind(), format!("sealed index {}: {e}", path.display()))
+    })?.len();
+    if (file_len as usize) < MIN_FILE_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            format!(
+                "sealed index {}: {file_len} bytes is shorter than the minimal \
+                 container ({MIN_FILE_LEN} bytes) — truncated or not a \
+                 sealed index",
+                path.display(),
+            ),
+        ));
+    }
+    let mut preamble = [0u8; PREAMBLE_LEN];
+    file.read_exact(&mut preamble)?;
+    if preamble[..8] != MAGIC {
+        return Err(bad(
+            path,
+            format!("bad magic {:?} (expected {:?})", &preamble[..8], &MAGIC[..]),
+        ));
+    }
+    let version = u32::from_le_bytes(preamble[8..12].try_into().expect("4-byte version"));
+    if version != VERSION && version != VERSION_V1 {
+        return Err(bad(
+            path,
+            format!(
+                "unsupported version {version} (this build reads versions \
+                 {VERSION_V1} and {VERSION})"
+            ),
+        ));
+    }
+
+    // one tail read covers checksum + footer + (v2) extension footer
+    let tail_len = (file_len as usize).min(FOOTER_LEN + CHECKSUM_LEN + EXT_LEN);
+    let mut tail = vec![0u8; tail_len];
+    file.seek(SeekFrom::End(-(tail_len as i64)))?;
+    file.read_exact(&mut tail)?;
+    let f = file_len as usize - FOOTER_LEN - CHECKSUM_LEN; // footer offset in file
+    let ft = tail_len - FOOTER_LEN - CHECKSUM_LEN; // footer offset in tail
+
+    let n_reads = le_u64(&tail, ft) as usize;
+    let n_sa = le_u64(&tail, ft + 8) as usize;
+    let n_files = le_u64(&tail, ft + 16) as usize;
+    let reserved = le_u64(&tail, ft + 88);
+    let want_ext = if version >= VERSION { EXT_LEN as u64 } else { 0 };
+    if reserved != want_ext {
+        return Err(bad(
+            path,
+            format!(
+                "version {version} artifact declares a {reserved}-byte extension \
+                 footer (expected {want_ext})"
+            ),
+        ));
+    }
+    if version >= VERSION && (file_len as usize) < MIN_FILE_LEN + EXT_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            format!(
+                "sealed index {}: {file_len} bytes cannot hold a version \
+                 {version} container ({} bytes minimum)",
+                path.display(),
+                MIN_FILE_LEN + EXT_LEN
+            ),
+        ));
+    }
+    // sections must land before the extension footer (v2) / footer (v1)
+    let limit = f - want_ext as usize;
+
+    let resolve = |name: &str, off: u64, len: u64| -> io::Result<(usize, usize)> {
+        let end = off
+            .checked_add(len)
+            .ok_or_else(|| bad(path, format!("{name} section offset overflows")))?;
+        if off < PREAMBLE_LEN as u64 || end > limit as u64 {
+            return Err(bad(
+                path,
+                format!(
+                    "{name} section [{off}, {end}) falls outside the file body \
+                     [{PREAMBLE_LEN}, {limit})"
+                ),
+            ));
+        }
+        Ok((off as usize, len as usize))
+    };
+    let declared = |what: &str, len: usize, count: usize, each: usize| -> io::Result<()> {
+        if len != count * each {
+            return Err(bad(
+                path,
+                format!(
+                    "{what} section is {len} bytes but the footer declares \
+                     {count} entries ({} bytes expected)",
+                    count * each
+                ),
+            ));
+        }
+        Ok(())
+    };
+
+    let names = ["corpus", "SA", "read-table", "file-metadata"];
+    let mut core = [(0usize, 0usize); 4];
+    for (i, name) in names.iter().enumerate() {
+        let (off, len) = (le_u64(&tail, ft + 24 + i * 16), le_u64(&tail, ft + 32 + i * 16));
+        core[i] = resolve(name, off, len)?;
+    }
+    declared("SA", core[1].1, n_sa, 8)?;
+    declared("read-table", core[2].1, n_reads, READ_ENTRY_LEN)?;
+    declared("file-metadata", core[3].1, n_files, FILE_ENTRY_LEN)?;
+
+    // v2 extension footer: LCP / TREE / BWT, each present in full
+    // (n_sa entries) or absent (zero length) — nothing in between
+    let mut aux = [(0usize, 0usize); 3];
+    if version >= VERSION {
+        let et = ft - EXT_LEN; // extension-footer offset in tail
+        let aux_names = ["LCP", "midpoint-tree", "BWT"];
+        let each = [LCP_ENTRY_LEN, TREE_ENTRY_LEN, 1];
+        for (i, name) in aux_names.iter().enumerate() {
+            let (off, len) = (le_u64(&tail, et + i * 16), le_u64(&tail, et + 8 + i * 16));
+            if len == 0 {
+                continue; // absent: plain-search degrade
+            }
+            aux[i] = resolve(name, off, len)?;
+            declared(name, aux[i].1, n_sa, each[i])?;
+        }
+    }
+    Ok(Preflight { version, file_len, n_reads, n_sa, n_files, core, aux })
+}
+
 impl SealedIndex {
-    /// Load and verify the artifact at `path`. Every corruption mode —
+    /// Load and verify the artifact at `path` with default options
+    /// (heap backend, checksum verified). Every corruption mode —
     /// truncation, wrong magic, unsupported version, checksum mismatch,
     /// inconsistent section table — is a descriptive `io::Error`, never
     /// a panic and never a silently wrong answer later.
     pub fn open(path: &Path) -> io::Result<SealedIndex> {
-        let data = std::fs::read(path).map_err(|e| {
+        SealedIndex::open_with(path, OpenOptions::default())
+    }
+
+    /// [`SealedIndex::open`] with an explicit body [`Backend`] and
+    /// checksum policy. The footer-first preflight always runs.
+    pub fn open_with(path: &Path, opts: OpenOptions) -> io::Result<SealedIndex> {
+        let mut file = File::open(path).map_err(|e| {
             io::Error::new(e.kind(), format!("sealed index {}: {e}", path.display()))
         })?;
-        if data.len() < MIN_FILE_LEN {
-            return Err(io::Error::new(
-                io::ErrorKind::UnexpectedEof,
-                format!(
-                    "sealed index {}: {} bytes is shorter than the minimal \
-                     container ({MIN_FILE_LEN} bytes) — truncated or not a \
-                     sealed index",
-                    path.display(),
-                    data.len()
-                ),
-            ));
-        }
-        if data[..8] != MAGIC {
-            return Err(bad(
-                path,
-                format!("bad magic {:?} (expected {:?})", &data[..8], &MAGIC[..]),
-            ));
-        }
-        let version = u32::from_le_bytes(data[8..12].try_into().expect("4-byte version"));
-        if version != VERSION {
-            return Err(bad(
-                path,
-                format!("unsupported version {version} (this build reads version {VERSION})"),
-            ));
-        }
-        let body_len = data.len() - CHECKSUM_LEN;
-        let stored = le_u64(&data, body_len);
-        let computed = checksum(&data[..body_len]);
-        if stored != computed {
-            return Err(bad(
-                path,
-                format!(
-                    "checksum mismatch (stored {stored:#018x}, computed \
-                     {computed:#018x}) — the artifact is corrupted or truncated"
-                ),
-            ));
-        }
+        let pre = preflight(path, &mut file)?;
 
-        // footer: counts + section table, all offsets absolute
-        let f = body_len - FOOTER_LEN;
-        let n_reads = le_u64(&data, f) as usize;
-        let n_sa = le_u64(&data, f + 8) as usize;
-        let n_files = le_u64(&data, f + 16) as usize;
-        let section = |i: usize| -> (u64, u64) {
-            (le_u64(&data, f + 24 + i * 16), le_u64(&data, f + 32 + i * 16))
+        let data = match opts.backend {
+            Backend::Heap => {
+                file.seek(SeekFrom::Start(0))?;
+                let mut buf = Vec::with_capacity(pre.file_len as usize);
+                file.read_to_end(&mut buf)?;
+                if buf.len() as u64 != pre.file_len {
+                    return Err(bad(
+                        path,
+                        format!(
+                            "file changed while opening ({} bytes read, {} expected)",
+                            buf.len(),
+                            pre.file_len
+                        ),
+                    ));
+                }
+                IndexData::Heap(buf)
+            }
+            #[cfg(feature = "mmap")]
+            Backend::Mmap => IndexData::Mapped(mmap_backend::Mapping::map(
+                &file,
+                pre.file_len as usize,
+            )?),
         };
-        let names = ["corpus", "SA", "read-table", "file-metadata"];
-        let mut resolved = [(0usize, 0usize); 4];
-        for i in 0..4 {
-            let (off, len) = section(i);
-            let end = off.checked_add(len).ok_or_else(|| {
-                bad(path, format!("{} section offset overflows", names[i]))
-            })?;
-            if off < PREAMBLE_LEN as u64 || end > f as u64 {
+
+        if opts.verify_checksum {
+            let bytes = data.bytes();
+            let body_len = bytes.len() - CHECKSUM_LEN;
+            let stored = le_u64(bytes, body_len);
+            let computed = checksum(&bytes[..body_len]);
+            if stored != computed {
                 return Err(bad(
                     path,
                     format!(
-                        "{} section [{off}, {end}) falls outside the file body \
-                         [{PREAMBLE_LEN}, {f})",
-                        names[i]
+                        "checksum mismatch (stored {stored:#018x}, computed \
+                         {computed:#018x}) — the artifact is corrupted or truncated"
                     ),
                 ));
             }
-            resolved[i] = (off as usize, len as usize);
         }
-        let [corpus, sa, table, meta] = resolved;
-        let declared = |what: &str, len: usize, count: usize, each: usize| -> io::Result<()> {
-            if len != count * each {
-                return Err(bad(
-                    path,
-                    format!(
-                        "{what} section is {len} bytes but the footer declares \
-                         {count} entries ({} bytes expected)",
-                        count * each
-                    ),
-                ));
-            }
-            Ok(())
-        };
-        declared("SA", sa.1, n_sa, 8)?;
-        declared("read-table", table.1, n_reads, READ_ENTRY_LEN)?;
-        declared("file-metadata", meta.1, n_files, FILE_ENTRY_LEN)?;
 
+        let [corpus, sa, table, meta] = pre.core;
+        let [lcp, tree, bwt] = pre.aux;
         let idx = SealedIndex {
             data,
+            version: pre.version,
+            file_len: pre.file_len,
             corpus,
             sa,
             table,
             meta,
-            n_reads,
-            n_sa,
-            n_files,
+            lcp,
+            tree,
+            bwt,
+            n_reads: pre.n_reads,
+            n_sa: pre.n_sa,
+            n_files: pre.n_files,
         };
         // read-table scan: strictly increasing seqs, in-bounds corpus
         // ranges, and totals consistent with the corpus and SA sections.
@@ -476,6 +937,38 @@ impl SealedIndex {
         Ok(idx)
     }
 
+    /// The whole artifact, whichever backend holds it.
+    #[inline]
+    fn bytes(&self) -> &[u8] {
+        self.data.bytes()
+    }
+
+    /// Container version of the opened artifact (1 or 2).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Artifact size on disk, checksum included.
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+
+    /// True when the artifact carries a non-empty LCP section.
+    pub fn has_lcp(&self) -> bool {
+        self.lcp.1 > 0
+    }
+
+    /// True when the artifact carries a non-empty midpoint-tree section
+    /// (queries take the accelerated path).
+    pub fn has_tree(&self) -> bool {
+        self.tree.1 > 0
+    }
+
+    /// True when the artifact carries a non-empty BWT section.
+    pub fn has_bwt(&self) -> bool {
+        self.bwt.1 > 0
+    }
+
     /// Headline counts.
     pub fn stats(&self) -> SealedStats {
         SealedStats {
@@ -483,6 +976,10 @@ impl SealedIndex {
             n_suffixes: self.n_sa as u64,
             n_files: self.n_files as u64,
             corpus_bytes: self.corpus.1 as u64,
+            file_bytes: self.file_len,
+            has_lcp: self.has_lcp(),
+            has_tree: self.has_tree(),
+            has_bwt: self.has_bwt(),
         }
     }
 
@@ -491,21 +988,20 @@ impl SealedIndex {
         assert!(i < self.n_files, "file {i} of {}", self.n_files);
         let off = self.meta.0 + i * FILE_ENTRY_LEN;
         FileMeta {
-            n_reads: le_u64(&self.data, off),
-            min_seq: le_u64(&self.data, off + 8),
-            max_seq: le_u64(&self.data, off + 16),
+            n_reads: le_u64(self.bytes(), off),
+            min_seq: le_u64(self.bytes(), off + 8),
+            max_seq: le_u64(self.bytes(), off + 16),
         }
     }
 
     #[inline]
     fn table_entry(&self, i: usize) -> (u64, u64, u32) {
         let off = self.table.0 + i * READ_ENTRY_LEN;
+        let data = self.bytes();
         (
-            le_u64(&self.data, off),
-            le_u64(&self.data, off + 8),
-            u32::from_le_bytes(
-                self.data[off + 16..off + 20].try_into().expect("4-byte len"),
-            ),
+            le_u64(data, off),
+            le_u64(data, off + 8),
+            u32::from_le_bytes(data[off + 16..off + 20].try_into().expect("4-byte len")),
         )
     }
 
@@ -514,10 +1010,29 @@ impl SealedIndex {
     pub fn sa_at(&self, rank: usize) -> i64 {
         assert!(rank < self.n_sa, "SA rank {rank} of {}", self.n_sa);
         i64::from_le_bytes(
-            self.data[self.sa.0 + rank * 8..self.sa.0 + rank * 8 + 8]
+            self.bytes()[self.sa.0 + rank * 8..self.sa.0 + rank * 8 + 8]
                 .try_into()
                 .expect("8-byte SA entry"),
         )
+    }
+
+    /// The stored LCP of ranks `rank-1` and `rank` (`lcp[0] = 0`).
+    /// Requires [`SealedIndex::has_lcp`].
+    #[inline]
+    pub fn lcp_at(&self, rank: usize) -> u32 {
+        assert!(self.has_lcp(), "artifact has no LCP section");
+        assert!(rank < self.n_sa, "LCP rank {rank} of {}", self.n_sa);
+        let off = self.lcp.0 + rank * LCP_ENTRY_LEN;
+        u32::from_le_bytes(self.bytes()[off..off + 4].try_into().expect("4-byte LCP"))
+    }
+
+    /// The BWT character code at `rank` ([`BWT_TERMINATOR`] for
+    /// offset-0 suffixes). Requires [`SealedIndex::has_bwt`].
+    #[inline]
+    pub fn bwt_at(&self, rank: usize) -> u8 {
+        assert!(self.has_bwt(), "artifact has no BWT section");
+        assert!(rank < self.n_sa, "BWT rank {rank} of {}", self.n_sa);
+        self.bytes()[self.bwt.0 + rank]
     }
 
     /// The stored read with sequence number `seq`, as a slice into the
@@ -533,7 +1048,7 @@ impl SealedIndex {
                 std::cmp::Ordering::Greater => hi = mid,
                 std::cmp::Ordering::Equal => {
                     let start = self.corpus.0 + off as usize;
-                    return Some(&self.data[start..start + len as usize]);
+                    return Some(&self.bytes()[start..start + len as usize]);
                 }
             }
         }
@@ -564,6 +1079,14 @@ impl IndexView for SealedIndex {
 
     fn index_at(&self, rank: usize) -> i64 {
         self.sa_at(rank)
+    }
+
+    fn midpoint_tree(&self) -> Option<MidpointTree<'_>> {
+        if self.has_tree() {
+            Some(MidpointTree::new(&self.bytes()[self.tree.0..self.tree.0 + self.tree.1]))
+        } else {
+            None
+        }
     }
 }
 
@@ -600,6 +1123,9 @@ mod tests {
         assert_eq!(st.n_suffixes, order.len() as u64);
         assert_eq!(st.n_files, 1);
         assert_eq!(st.corpus_bytes, 8 + 7 + 4);
+        assert_eq!(st.file_bytes, std::fs::metadata(&path).unwrap().len());
+        assert!(st.has_lcp && st.has_tree && st.has_bwt);
+        assert_eq!(idx.version(), VERSION);
         assert_eq!(
             idx.file_meta(0),
             FileMeta { n_reads: 3, min_seq: 0, max_seq: 5 }
@@ -613,6 +1139,52 @@ mod tests {
         assert_eq!(idx.read_of(2), None);
         assert_eq!(idx.suffix(5), Some(&codes_of(b"CGT")[..])); // seq 0, offset 5
         assert_eq!(idx.suffix(-3), None);
+    }
+
+    #[test]
+    fn sealed_aux_sections_match_naive_recompute() {
+        let reads = corpus();
+        let order = reference_order(&reads);
+        let path = tmp("aux.samr");
+        seal(&path, &[&reads], &order).unwrap();
+        let idx = SealedIndex::open(&path).unwrap();
+        assert!(idx.midpoint_tree().is_some());
+        assert_eq!(idx.lcp_at(0), 0);
+        for rank in 0..order.len() {
+            let (seq, off) = unpack_index(idx.sa_at(rank));
+            let r = idx.read_of(seq).unwrap();
+            let want_bwt = if off == 0 { BWT_TERMINATOR } else { r[off - 1] };
+            assert_eq!(idx.bwt_at(rank), want_bwt, "rank {rank}");
+            if rank > 0 {
+                let (a, b) = (idx.suffix_at(rank - 1), idx.suffix_at(rank));
+                let want = a.iter().zip(b).take_while(|(x, y)| x == y).count() as u32;
+                assert_eq!(idx.lcp_at(rank), want, "rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn v1_and_plain_v2_artifacts_serve_without_aux() {
+        let reads = corpus();
+        let order = reference_order(&reads);
+        for (name, sealer) in [
+            ("old.samr", seal_v1 as fn(&Path, &[&[Read]], &[i64]) -> io::Result<()>),
+            ("plain.samr", seal_plain),
+        ] {
+            let path = tmp(name);
+            sealer(&path, &[&reads], &order).unwrap();
+            let idx = SealedIndex::open(&path).unwrap();
+            let st = idx.stats();
+            assert!(!st.has_lcp && !st.has_tree && !st.has_bwt, "{name}");
+            assert!(idx.midpoint_tree().is_none(), "{name}");
+            for (rank, &want) in order.iter().enumerate() {
+                assert_eq!(idx.sa_at(rank), want, "{name}");
+            }
+            let pat = codes_of(b"ACGT");
+            assert_eq!(idx.find(&pat), vec![(0, 0), (0, 4), (1, 2)], "{name}");
+        }
+        let v1 = tmp("old.samr");
+        assert_eq!(SealedIndex::open(&v1).unwrap().version(), VERSION_V1);
     }
 
     #[test]
@@ -656,6 +1228,49 @@ mod tests {
         }
         let err = w.finish().unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err}");
+        // push_index on an aux writer, and vice versa
+        let mut w = SealWriter::create_with_aux(&path).unwrap();
+        w.add_file(&reads).unwrap();
+        let err = w.push_index(0).unwrap_err();
+        assert!(err.to_string().contains("push_entry"), "{err}");
+        let mut w = SealWriter::create(&path).unwrap();
+        w.add_file(&reads).unwrap();
+        let err = w.push_entry(0, 0, 1).unwrap_err();
+        assert!(err.to_string().contains("create_with_aux"), "{err}");
+        // first-lcp and bwt-range wiring guards
+        let mut w = SealWriter::create_with_aux(&path).unwrap();
+        w.add_file(&reads).unwrap();
+        let err = w.push_entry(0, 3, 1).unwrap_err();
+        assert!(err.to_string().contains("first suffix"), "{err}");
+        let mut w = SealWriter::create_with_aux(&path).unwrap();
+        w.add_file(&reads).unwrap();
+        let err = w.push_entry(0, 0, 6).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    #[cfg(feature = "mmap")]
+    fn mmap_backend_serves_identically_to_heap() {
+        let reads = corpus();
+        let order = reference_order(&reads);
+        let path = tmp("mapped.samr");
+        seal(&path, &[&reads], &order).unwrap();
+        let heap = SealedIndex::open(&path).unwrap();
+        let mapped = SealedIndex::open_with(
+            &path,
+            OpenOptions { backend: Backend::Mmap, verify_checksum: true },
+        )
+        .unwrap();
+        assert_eq!(heap.stats(), mapped.stats());
+        for pat in [&b"ACGT"[..], b"T", b"GGGG", b"AAAA", b""] {
+            let codes = codes_of(pat);
+            assert_eq!(heap.find(&codes), mapped.find(&codes), "pattern {pat:?}");
+        }
+        for rank in 0..order.len() {
+            assert_eq!(heap.sa_at(rank), mapped.sa_at(rank));
+            assert_eq!(heap.lcp_at(rank), mapped.lcp_at(rank));
+            assert_eq!(heap.bwt_at(rank), mapped.bwt_at(rank));
+        }
     }
 
     #[test]

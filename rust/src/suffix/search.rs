@@ -2,43 +2,86 @@
 //! introduction motivates (sequence alignment seeds, plagiarism
 //! detection, compression all reduce to "find every occurrence of P").
 //!
-//! Classic Manber–Myers binary search: O(|P| log n) per query. All
-//! queries run through one abstraction, [`IndexView`] — a sorted suffix
-//! array addressed by rank — implemented by the single-text view
+//! Two bound algorithms behind one entry point: the classic Manber–Myers
+//! binary search (O(|P| log n) byte comparisons) and its LCP-accelerated
+//! variant (O(|P| + log n)) that resumes each midpoint comparison at the
+//! common-prefix depth the (llcp, rlcp) midpoint tree
+//! ([`crate::suffix::lcp::MidpointTree`]) already proves. All queries
+//! run through one abstraction, [`IndexView`] — a sorted suffix array
+//! addressed by rank — implemented by the single-text view
 //! ([`TextIndex`]), the in-memory construction result ([`CorpusIndex`]),
 //! and the on-disk artifact (`crate::suffix::sealed::SealedIndex`).
 //! Because every backend shares the same default [`IndexView::sa_range`]
 //! / [`IndexView::find`] / [`IndexView::find_pairs`] implementations,
 //! sealed-vs-in-memory equivalence holds by construction: the only code
-//! that differs per backend is "fetch the suffix at rank r".
+//! that differs per backend is "fetch the suffix at rank r" and whether
+//! [`IndexView::midpoint_tree`] offers the acceleration structure.
 
+use std::cmp::Ordering;
 use std::collections::HashMap;
 use std::ops::Range;
 
 use crate::suffix::encode::unpack_index;
+use crate::suffix::lcp::{build_midpoint_tree, MidpointTree};
 use crate::suffix::reads::{fragment_of, pair_seq, Mate};
 use crate::suffix::sa;
 
-/// Compare a suffix against a query pattern, looking at no more than
+/// Observer of the byte comparisons a search bound performs — how the
+/// complexity tests *prove* the O(|P| + log n) claim instead of assuming
+/// it. Monomorphized away for production queries ([`NoProbe`]).
+pub trait CompareProbe {
+    /// Record `n` byte comparisons.
+    fn add(&mut self, n: u64);
+}
+
+/// The free probe: every `add` compiles to nothing.
+pub struct NoProbe;
+
+impl CompareProbe for NoProbe {
+    #[inline]
+    fn add(&mut self, _: u64) {}
+}
+
+/// Counting probe for the complexity tests and benches.
+#[derive(Default)]
+pub struct CountProbe(pub u64);
+
+impl CompareProbe for CountProbe {
+    #[inline]
+    fn add(&mut self, n: u64) {
+        self.0 += n;
+    }
+}
+
+/// Compare a suffix against a query pattern, resuming at byte `from`
+/// (both sides already proven equal before it). Looks at no more than
 /// `|pattern|` bytes: `Equal` means "the pattern is a prefix of this
-/// suffix". A suffix shorter than the pattern sorts before it, matching
-/// SA order.
+/// suffix"; a suffix shorter than the pattern sorts before it, matching
+/// SA order. Returns the ordering plus the new pattern LCP (bytes of the
+/// pattern matched, capped at `|pattern|`).
 #[inline]
-fn suffix_cmp(suffix: &[u8], pattern: &[u8]) -> std::cmp::Ordering {
+fn cmp_from(
+    suffix: &[u8],
+    pattern: &[u8],
+    from: usize,
+    probe: &mut impl CompareProbe,
+) -> (Ordering, usize) {
     let k = suffix.len().min(pattern.len());
-    suffix[..k].cmp(&pattern[..k]).then(
-        // suffix shorter than pattern sorts before it
-        if suffix.len() < pattern.len() {
-            std::cmp::Ordering::Less
-        } else {
-            std::cmp::Ordering::Equal
-        },
-    )
+    let mut i = from;
+    while i < k {
+        probe.add(1);
+        if suffix[i] != pattern[i] {
+            return (suffix[i].cmp(&pattern[i]), i);
+        }
+        i += 1;
+    }
+    let ord = if suffix.len() < pattern.len() { Ordering::Less } else { Ordering::Equal };
+    (ord, i)
 }
 
 /// First rank in `[lo, hi)` where `pred` turns false (`pred` must be
-/// monotone true-then-false over the range) — the one binary-search
-/// primitive both query bounds are built from.
+/// monotone true-then-false over the range) — the binary-search
+/// primitive the plain query bounds are built from.
 fn partition(mut lo: usize, mut hi: usize, mut pred: impl FnMut(usize) -> bool) -> usize {
     while lo < hi {
         let mid = lo + (hi - lo) / 2;
@@ -49,6 +92,120 @@ fn partition(mut lo: usize, mut hi: usize, mut pred: impl FnMut(usize) -> bool) 
         }
     }
     lo
+}
+
+/// Classic Manber–Myers bounds: every midpoint comparison restarts at
+/// byte 0, so a query costs O(|P| log n) byte comparisons.
+fn plain_range<V: IndexView + ?Sized>(
+    view: &V,
+    pattern: &[u8],
+    probe: &mut impl CompareProbe,
+) -> Range<usize> {
+    if pattern.is_empty() {
+        return 0..0;
+    }
+    let n = view.n_suffixes();
+    let lo = partition(0, n, |r| {
+        cmp_from(view.suffix_at(r), pattern, 0, probe).0 == Ordering::Less
+    });
+    let hi = partition(lo, n, |r| {
+        cmp_from(view.suffix_at(r), pattern, 0, probe).0 != Ordering::Greater
+    });
+    lo..hi
+}
+
+/// One LCP-accelerated Manber–Myers bound over the interval `(-1, n)`
+/// (virtual sentinel ranks compare Less/Greater than everything and
+/// share 0 bytes with the pattern). Returns the first rank whose suffix
+/// is `>= pattern` (`upper = false`) or `> pattern` (`upper = true`).
+///
+/// Invariant: `lo` always satisfies the bound predicate ("before"), `hi`
+/// never does; `l_lcp`/`r_lcp` are the pattern LCPs at the bounds,
+/// capped at `|pattern|`. Each step resolves the midpoint `m` from the
+/// stored `llcp[m]`/`rlcp[m]` (the tree was built over the *same*
+/// `m = lo + (hi - lo) / 2` descent, so the stored entry is exactly this
+/// interval's) — only the `== max(l_lcp, r_lcp)` case touches text, and
+/// then resumes at that shared depth. Every byte compared raises
+/// `max(l_lcp, r_lcp)`, which never decreases, so total byte comparisons
+/// telescope to O(|P| + log n).
+fn mm_bound<V: IndexView + ?Sized>(
+    view: &V,
+    tree: &MidpointTree<'_>,
+    pattern: &[u8],
+    upper: bool,
+    probe: &mut impl CompareProbe,
+) -> usize {
+    let n = view.n_suffixes() as i64;
+    debug_assert_eq!(tree.len() as i64, n, "midpoint tree must cover every rank");
+    let before =
+        |c: Ordering| if upper { c != Ordering::Greater } else { c == Ordering::Less };
+    let (mut lo, mut hi) = (-1i64, n);
+    let (mut l_lcp, mut r_lcp) = (0usize, 0usize);
+    while hi - lo > 1 {
+        let m = lo + (hi - lo) / 2;
+        let mu = m as usize;
+        // Resolve cmp(suffix[m], pattern) from the bound LCPs when the
+        // stored tree entry differs from the larger of them; fall back
+        // to a text comparison resuming at the proven shared depth.
+        // (Case analysis in docs/ARCHITECTURE.md, "LCP-accelerated
+        // serving".)
+        let decided = if l_lcp >= r_lcp {
+            let t = tree.llcp(mu) as usize;
+            if t > l_lcp {
+                // suffix[m] diverges from the pattern exactly where
+                // suffix[lo] does, in the same direction
+                Some((true, l_lcp))
+            } else if t < l_lcp {
+                // suffix[m][t] > suffix[lo][t] = pattern[t]
+                Some((false, t))
+            } else {
+                None
+            }
+        } else {
+            let t = tree.rlcp(mu) as usize;
+            if t > r_lcp {
+                // suffix[m] diverges from the pattern exactly where
+                // suffix[hi] does, in the same direction
+                Some((false, r_lcp))
+            } else if t < r_lcp {
+                // suffix[m][t] < suffix[hi][t] = pattern[t]
+                Some((true, t))
+            } else {
+                None
+            }
+        };
+        let (is_before, m_lcp) = match decided {
+            Some(d) => d,
+            None => {
+                let depth = l_lcp.max(r_lcp);
+                let (ord, lcp) = cmp_from(view.suffix_at(mu), pattern, depth, probe);
+                (before(ord), lcp)
+            }
+        };
+        if is_before {
+            lo = m;
+            l_lcp = m_lcp;
+        } else {
+            hi = m;
+            r_lcp = m_lcp;
+        }
+    }
+    hi as usize
+}
+
+/// LCP-accelerated bounds: O(|P| + log n) byte comparisons per query.
+fn mm_range<V: IndexView + ?Sized>(
+    view: &V,
+    tree: &MidpointTree<'_>,
+    pattern: &[u8],
+    probe: &mut impl CompareProbe,
+) -> Range<usize> {
+    if pattern.is_empty() {
+        return 0..0;
+    }
+    let lo = mm_bound(view, tree, pattern, false, probe);
+    let hi = mm_bound(view, tree, pattern, true, probe);
+    lo..hi
 }
 
 /// A queryable suffix-array index: suffixes in sorted order, addressed
@@ -66,21 +223,49 @@ pub trait IndexView {
     /// rank `rank`.
     fn index_at(&self, rank: usize) -> i64;
 
+    /// The Manber–Myers acceleration structure, when this backend
+    /// carries one (a sealed-v2 TREE section, or [`EnhancedIndex`]).
+    /// `None` — the default — routes queries to the plain bounds.
+    fn midpoint_tree(&self) -> Option<MidpointTree<'_>> {
+        None
+    }
+
     /// The contiguous SA rank range whose suffixes start with `pattern`
     /// — the deduplicated bounds primitive every query calls. Empty
-    /// patterns match nothing.
+    /// patterns match nothing. Uses the LCP-accelerated O(|P| + log n)
+    /// bounds when [`IndexView::midpoint_tree`] offers the structure,
+    /// the classic O(|P| log n) bounds otherwise; both return identical
+    /// ranges (`tests/lcp_oracle.rs` proves it on fuzzed patterns).
     fn sa_range(&self, pattern: &[u8]) -> Range<usize> {
-        if pattern.is_empty() {
-            return 0..0;
+        match self.midpoint_tree() {
+            Some(tree) => mm_range(self, &tree, pattern, &mut NoProbe),
+            None => plain_range(self, pattern, &mut NoProbe),
         }
-        let n = self.n_suffixes();
-        let lo = partition(0, n, |r| {
-            suffix_cmp(self.suffix_at(r), pattern) == std::cmp::Ordering::Less
-        });
-        let hi = partition(lo, n, |r| {
-            suffix_cmp(self.suffix_at(r), pattern) != std::cmp::Ordering::Greater
-        });
-        lo..hi
+    }
+
+    /// [`IndexView::sa_range`] forced onto the classic bounds, ignoring
+    /// any acceleration structure — the comparison baseline for the
+    /// equivalence oracle and the serve bench.
+    fn sa_range_plain(&self, pattern: &[u8]) -> Range<usize> {
+        plain_range(self, pattern, &mut NoProbe)
+    }
+
+    /// [`IndexView::sa_range`] plus the number of byte comparisons it
+    /// performed — the instrumented path the complexity test asserts on.
+    fn sa_range_counted(&self, pattern: &[u8]) -> (Range<usize>, u64) {
+        let mut probe = CountProbe::default();
+        let range = match self.midpoint_tree() {
+            Some(tree) => mm_range(self, &tree, pattern, &mut probe),
+            None => plain_range(self, pattern, &mut probe),
+        };
+        (range, probe.0)
+    }
+
+    /// [`IndexView::sa_range_plain`] plus its byte-comparison count.
+    fn sa_range_plain_counted(&self, pattern: &[u8]) -> (Range<usize>, u64) {
+        let mut probe = CountProbe::default();
+        let range = plain_range(self, pattern, &mut probe);
+        (range, probe.0)
     }
 
     /// All occurrences of `pattern`, as sorted `(seq, offset)` pairs.
@@ -218,6 +403,53 @@ impl IndexView for CorpusIndex<'_> {
 
     fn index_at(&self, rank: usize) -> i64 {
         self.order[rank]
+    }
+}
+
+/// Any [`IndexView`] upgraded with a freshly built midpoint tree, so
+/// in-memory backends get the same O(|P| + log n) bounds a sealed-v2
+/// artifact serves from disk. Construction is O(n · avg-lcp) — it reads
+/// each adjacent suffix pair once — so build it when a view will answer
+/// many queries, not one.
+pub struct EnhancedIndex<V> {
+    inner: V,
+    tree: Vec<u8>,
+}
+
+impl<V: IndexView> EnhancedIndex<V> {
+    /// Wrap `inner`, computing its adjacent-pair LCPs and midpoint tree.
+    pub fn new(inner: V) -> Self {
+        let n = inner.n_suffixes();
+        let mut lcp = vec![0u32; n];
+        for i in 1..n {
+            let (a, b) = (inner.suffix_at(i - 1), inner.suffix_at(i));
+            lcp[i] = a.iter().zip(b).take_while(|(x, y)| x == y).count() as u32;
+        }
+        let tree = build_midpoint_tree(&lcp);
+        EnhancedIndex { inner, tree }
+    }
+
+    /// The wrapped view.
+    pub fn inner(&self) -> &V {
+        &self.inner
+    }
+}
+
+impl<V: IndexView> IndexView for EnhancedIndex<V> {
+    fn n_suffixes(&self) -> usize {
+        self.inner.n_suffixes()
+    }
+
+    fn suffix_at(&self, rank: usize) -> &[u8] {
+        self.inner.suffix_at(rank)
+    }
+
+    fn index_at(&self, rank: usize) -> i64 {
+        self.inner.index_at(rank)
+    }
+
+    fn midpoint_tree(&self) -> Option<MidpointTree<'_>> {
+        Some(MidpointTree::new(&self.tree))
     }
 }
 
@@ -410,5 +642,97 @@ mod tests {
         let hits = find_in_corpus(&order, &map, &pat);
         assert_eq!(hits, vec![(0, 0), (0, 4), (1, 2)]);
         assert!(find_in_corpus(&order, &map, &codes_of(b"AAAA")).is_empty());
+    }
+
+    #[test]
+    fn enhanced_index_matches_plain_bounds_on_fuzzed_patterns() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xACCE1);
+        let mut reads = Vec::new();
+        for seq in 0..40u64 {
+            let len = 20 + rng.below(60) as usize;
+            let codes: Vec<u8> = (0..len).map(|_| 1 + rng.below(4) as u8).collect();
+            reads.push(Read::new(seq, codes));
+        }
+        let order = reference_order(&reads);
+        let map = read_map(&reads);
+        let view = EnhancedIndex::new(CorpusIndex::new(&order, &map));
+        assert!(view.midpoint_tree().is_some());
+        for trial in 0..200 {
+            let plen = rng.below(16) as usize; // 0 = empty pattern
+            let pattern: Vec<u8> = if trial % 3 == 0 {
+                // planted: slice of a real read, so non-trivial ranges occur
+                let r = &reads[rng.below(reads.len() as u64) as usize].codes;
+                let plen = plen.min(r.len() - 1);
+                let at = rng.below((r.len() - plen) as u64) as usize;
+                r[at..at + plen].to_vec()
+            } else {
+                (0..plen).map(|_| 1 + rng.below(4) as u8).collect()
+            };
+            let accel = view.sa_range(&pattern);
+            let plain = view.sa_range_plain(&pattern);
+            assert_eq!(accel, plain, "trial {trial} pattern {pattern:?}");
+            for r in accel {
+                assert!(view.suffix_at(r).starts_with(&pattern));
+            }
+        }
+    }
+
+    #[test]
+    fn enhanced_index_on_degenerate_corpora() {
+        // all-identical reads and single-suffix corpora stress the
+        // sentinel bounds and the equal-key tie-break ordering
+        for texts in [vec![b"AAAA".to_vec(); 5], vec![b"A".to_vec()], vec![b"".to_vec()]] {
+            let reads: Vec<Read> = texts
+                .iter()
+                .enumerate()
+                .map(|(i, t)| Read::from_ascii(i as u64, t))
+                .collect();
+            let order = reference_order(&reads);
+            let map = read_map(&reads);
+            let view = EnhancedIndex::new(CorpusIndex::new(&order, &map));
+            for pat in [&b"A"[..], b"AA", b"AAAAA", b"T", b""] {
+                let pat = codes_of(pat);
+                assert_eq!(view.sa_range(&pat), view.sa_range_plain(&pat), "{texts:?} {pat:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn accelerated_bounds_compare_fewer_bytes_on_repetitive_text() {
+        // A corpus of reads sharing a long common prefix forces the
+        // plain bounds to re-walk that prefix at every midpoint: cost
+        // ~|P| log n. The accelerated bounds resume at the proven depth:
+        // cost ≤ |P| + iterations. This is the unit-level smoke check;
+        // the calibrated bound lives in tests/lcp_oracle.rs.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        let stem: Vec<u8> = (0..120).map(|_| 1 + rng.below(4) as u8).collect();
+        let reads: Vec<Read> = (0..64u64)
+            .map(|seq| {
+                let mut codes = stem.clone();
+                codes.extend((0..40).map(|_| 1 + rng.below(4) as u8));
+                Read::new(seq, codes)
+            })
+            .collect();
+        let order = reference_order(&reads);
+        let map = read_map(&reads);
+        let view = EnhancedIndex::new(CorpusIndex::new(&order, &map));
+        let pattern = &stem[..100];
+        let (accel_range, accel_n) = view.sa_range_counted(pattern);
+        let (plain_range, plain_n) = view.sa_range_plain_counted(pattern);
+        assert_eq!(accel_range, plain_range);
+        assert!(!accel_range.is_empty());
+        let n = view.n_suffixes();
+        let lg = (usize::BITS - n.leading_zeros()) as u64;
+        // two bounds, each ≤ |P| + one compare byte per iteration
+        assert!(
+            accel_n <= 2 * (pattern.len() as u64 + lg + 2),
+            "accelerated bound not O(|P| + log n): {accel_n} compares"
+        );
+        assert!(
+            plain_n > 2 * accel_n,
+            "plain path should re-compare the shared prefix: plain={plain_n} accel={accel_n}"
+        );
     }
 }

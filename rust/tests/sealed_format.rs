@@ -8,7 +8,9 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 
 use samr::suffix::reads::{synth_paired_corpus, CorpusSpec};
-use samr::suffix::sealed::{self, SealedIndex, CHECKSUM_LEN, FOOTER_LEN, MIN_FILE_LEN};
+use samr::suffix::sealed::{
+    self, SealedIndex, CHECKSUM_LEN, EXT_LEN, FOOTER_LEN, MIN_FILE_LEN,
+};
 use samr::suffix::validate::reference_order;
 
 fn tmp(name: &str) -> PathBuf {
@@ -136,4 +138,115 @@ fn zero_length_sa_section_is_rejected() {
     bytes[sa_len_at..sa_len_at + 8].copy_from_slice(&0u64.to_le_bytes());
     restamp(&mut bytes);
     expect_err("zerosa-patch.samr", &bytes, "SA");
+}
+
+// ---------------------------------------------------------------------
+// v2 extension footer + auxiliary sections (LCP / midpoint tree / BWT)
+// ---------------------------------------------------------------------
+
+/// Byte offset of the v2 extension footer (three (off, len) pairs:
+/// LCP at +0, TREE at +16, BWT at +32).
+fn ext_start(bytes: &[u8]) -> usize {
+    bytes.len() - CHECKSUM_LEN - FOOTER_LEN - EXT_LEN
+}
+
+#[test]
+fn wrong_reserved_extension_length_is_rejected() {
+    let (_, mut bytes) = sealed_bytes("reserved.samr");
+    // the reserved footer word declares the extension-footer length; a
+    // v2 artifact claiming 0 (or any non-EXT_LEN value) is inconsistent
+    let reserved_at = bytes.len() - CHECKSUM_LEN - FOOTER_LEN + 88;
+    bytes[reserved_at..reserved_at + 8].copy_from_slice(&0u64.to_le_bytes());
+    restamp(&mut bytes);
+    expect_err("reserved-patch.samr", &bytes, "extension footer");
+}
+
+#[test]
+fn partial_lcp_section_is_rejected() {
+    let (_, mut bytes) = sealed_bytes("lcpcut.samr");
+    // shrink the declared LCP length by one entry: aux sections must be
+    // present in full (n_sa entries) or absent — nothing in between
+    let len_at = ext_start(&bytes) + 8;
+    let declared = u64::from_le_bytes(bytes[len_at..len_at + 8].try_into().unwrap());
+    assert!(declared > 4, "corpus too small to shrink the LCP section");
+    bytes[len_at..len_at + 8].copy_from_slice(&(declared - 4).to_le_bytes());
+    restamp(&mut bytes);
+    expect_err("lcpcut-patch.samr", &bytes, "LCP");
+}
+
+#[test]
+fn tree_section_outside_the_body_is_rejected() {
+    let (_, mut bytes) = sealed_bytes("treeoff.samr");
+    // point the midpoint-tree offset past the extension footer
+    let off_at = ext_start(&bytes) + 16;
+    bytes[off_at..off_at + 8].copy_from_slice(&(bytes.len() as u64).to_le_bytes());
+    restamp(&mut bytes);
+    expect_err("treeoff-patch.samr", &bytes, "midpoint-tree");
+}
+
+#[test]
+fn zeroed_aux_lengths_degrade_to_plain_search() {
+    // zero-length aux sections are the documented degrade, not an
+    // error: the artifact opens and serves through the plain path with
+    // identical answers
+    let (path, mut bytes) = sealed_bytes("degrade.samr");
+    let full = SealedIndex::open(&path).expect("open full");
+    assert!(full.stats().has_lcp && full.stats().has_tree && full.stats().has_bwt);
+    let et = ext_start(&bytes);
+    for pair in 0..3 {
+        let len_at = et + pair * 16 + 8;
+        bytes[len_at..len_at + 8].copy_from_slice(&0u64.to_le_bytes());
+    }
+    restamp(&mut bytes);
+    let degraded = open_patched("degrade-zeroed.samr", &bytes).expect("degrade must open");
+    let st = degraded.stats();
+    assert!(!st.has_lcp && !st.has_tree && !st.has_bwt);
+    for pat in [&b"ACGT"[..], b"TT", b"A", b""] {
+        let codes: Vec<u8> = pat.iter().map(|&c| samr::suffix::encode::code_of(c)).collect();
+        assert_eq!(
+            samr::suffix::search::IndexView::find(&degraded, &codes),
+            samr::suffix::search::IndexView::find(&full, &codes),
+            "degraded artifact must answer like the full one for {pat:?}"
+        );
+    }
+}
+
+#[test]
+fn v1_artifact_opens_and_serves_like_plain_v2() {
+    // back-compat: a version-1 file (no extension footer) must open and
+    // answer identically to a v2 artifact without aux sections
+    let (fwd, rev) = synth_paired_corpus(&CorpusSpec {
+        n_reads: 12,
+        read_len: 18,
+        len_jitter: 0,
+        genome_len: 1024,
+        seed: 0xFEED,
+        ..Default::default()
+    });
+    let mut all = fwd.clone();
+    all.extend(rev.iter().cloned());
+    let order = reference_order(&all);
+    let v1_path = tmp("compat-v1.samr");
+    let v2_path = tmp("compat-v2plain.samr");
+    sealed::seal_v1(&v1_path, &[&fwd, &rev], &order).expect("seal v1");
+    sealed::seal_plain(&v2_path, &[&fwd, &rev], &order).expect("seal plain v2");
+    let v1 = SealedIndex::open(&v1_path).expect("open v1");
+    let v2 = SealedIndex::open(&v2_path).expect("open v2");
+    assert_eq!(v1.version(), 1);
+    assert_eq!(v2.version(), 2);
+    assert!(!v1.stats().has_lcp && !v2.stats().has_lcp);
+    for (rank, &want) in order.iter().enumerate() {
+        assert_eq!(v1.sa_at(rank), want, "v1 SA rank {rank}");
+        assert_eq!(v2.sa_at(rank), want, "v2 SA rank {rank}");
+    }
+    use samr::suffix::search::IndexView;
+    for pat in [&b"ACGT"[..], b"GG", b"T", b"AAAA"] {
+        let codes: Vec<u8> = pat.iter().map(|&c| samr::suffix::encode::code_of(c)).collect();
+        assert_eq!(v1.find(&codes), v2.find(&codes), "v1 vs v2-plain SEARCH {pat:?}");
+        assert_eq!(
+            v1.find_pairs(&codes, &codes, 500),
+            v2.find_pairs(&codes, &codes, 500),
+            "v1 vs v2-plain PAIRS {pat:?}"
+        );
+    }
 }

@@ -132,6 +132,12 @@ fn sealed_answers_match_in_memory_across_the_matrix() {
             assert_eq!(st.n_reads, local.n_reads, "{tag}: STAT reads");
             assert_eq!(st.n_files, 2, "{tag}: STAT files");
             assert_eq!(st.corpus_bytes, local.corpus_bytes, "{tag}: STAT corpus");
+            assert_eq!(st.file_bytes, local.file_bytes, "{tag}: STAT artifact bytes");
+            assert!(st.file_bytes > local.corpus_bytes, "{tag}: artifact wraps the corpus");
+            assert!(
+                st.has_lcp && st.has_tree && st.has_bwt,
+                "{tag}: default construction serves the v2 acceleration sections"
+            );
             let (sent, recvd) = c.traffic();
             assert!(sent > 0 && recvd > 0, "{tag}: wire accounting");
             server.shutdown();
