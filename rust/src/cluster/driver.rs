@@ -1,0 +1,626 @@
+//! The cluster driver: true multi-process mode. KV shards and
+//! map/reduce workers run as separate `samr` OS processes; this driver
+//! spawns them, dispatches task attempts over RESP, reschedules an
+//! attempt when its worker process dies, and respawns a killed shard
+//! process from its append-only log.
+//!
+//! **Topology.** `n_shards` processes run `samr shard` (one KV instance
+//! each, AOF-backed), `n_workers` run `samr worker` (the task executor
+//! in [`crate::cluster::worker`]). Children print `ADDR <ip:port>` on
+//! stdout once bound; the driver publishes shard addresses through an
+//! atomically-rewritten shard-map file that worker-side store clients
+//! re-read on every reconnect — a respawned shard on a fresh port is
+//! found without any coordination beyond the rename.
+//!
+//! **Attempt lifecycle across processes.** Each task goes through the
+//! same [`run_with_retries`] harness as the in-process engine: an
+//! attempt gets a scratch subdirectory and a redirected ledger scope;
+//! the driver picks a live worker, charges `HdfsRead` (map) exactly
+//! where the engine would, sends the spec, and replays the worker's
+//! nine-channel delta into the attempt scope on success. A dead socket
+//! — worker SIGKILLed, aborted, or crashed — surfaces as a failed
+//! attempt carrying the child's exit status and stderr tail; its
+//! charges (recovered from the worker's journal when it finished before
+//! aborting) fold into `wasted`, and the retry lands on a surviving
+//! worker. Workers are not respawned; shards are, because their state
+//! (the reads) is needed for the rest of the job and their AOF plus the
+//! store clients' idempotent-window replay makes the restart exact.
+//!
+//! **Fault injection.** A [`FaultPlan`]'s `proc_faults` are consulted
+//! only here: `Start` means the driver SIGKILLs the chosen worker
+//! before dispatching (the attempt dies on the dead socket), `Finish`
+//! means the spec carries `abort=1` and the worker journals its result
+//! then aborts without replying. `shard_abort` rides to one shard child
+//! as `--kill-at-request N`; the monitor thread observes the death and
+//! respawns the shard from its AOF. The monitor is stopped *before*
+//! orderly shutdown kills the fleet, so only fault-induced deaths are
+//! tallied via [`FaultPlan::note_proc_kill`].
+
+use std::io::{self, BufRead, BufReader};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::worker::{
+    encode_cfg, encode_spill, parse_map_result, parse_reduce_result, read_shard_map,
+    write_shard_map, Spec,
+};
+use crate::faults::{FaultPlan, FaultPoint, Phase};
+use crate::footprint::{Channel, Ledger, CHANNELS};
+use crate::kvstore::client::{Client, FailoverConfig};
+use crate::kvstore::resp::Value;
+use crate::kvstore::shard::{ShardedClient, SuffixStore};
+use crate::mapreduce::engine::{reap_stale_scratch, run_with_retries, JobResult, ScratchDir};
+use crate::mapreduce::io::OutputFile;
+use crate::mapreduce::mapper::{MapTaskStats, SpillFile};
+use crate::mapreduce::pool::WorkerPool;
+use crate::mapreduce::reducer::ReduceTaskStats;
+use crate::scheme::{self, sampler, SchemeConfig};
+use crate::suffix::reads::Read;
+
+/// How a cluster run is shaped: process counts, the `samr` binary to
+/// spawn, and an optional process-level fault plan.
+pub struct ClusterOpts {
+    pub n_workers: usize,
+    pub n_shards: usize,
+    /// Path to the `samr` binary for child processes (tests use
+    /// `env!("CARGO_BIN_EXE_samr")`; the CLI uses its own image).
+    pub samr_bin: PathBuf,
+    /// Process-kill schedule. Task retries come from
+    /// `cfg.conf.max_task_attempts` as usual; a plan with kills needs
+    /// `max_task_attempts >= 2` to leave room for the reschedule.
+    pub plan: Option<Arc<FaultPlan>>,
+}
+
+/// What a cluster construction produces — the cluster-mode analogue of
+/// [`scheme::SchemeResult`].
+pub struct ClusterRun {
+    pub job: JobResult,
+    /// The suffix array (packed indexes in output order).
+    pub order: Vec<i64>,
+    /// Total memory used by the shard processes' stores.
+    pub kv_memory: u64,
+    /// Partition boundaries used.
+    pub boundaries: Vec<i64>,
+}
+
+/// One spawned child process and what the driver knows about it.
+struct Proc {
+    child: Child,
+    addr: SocketAddr,
+    /// Scheduling eligibility: cleared on observed death or on the
+    /// first dispatch failure against this child.
+    alive: bool,
+    /// OS exit status, once the monitor reaped it.
+    exit: Option<String>,
+    /// The monitor observed (and, under a plan, tallied) the death.
+    reaped: bool,
+    stderr: Arc<Mutex<Vec<u8>>>,
+}
+
+struct Fleet {
+    workers: Vec<Proc>,
+    shards: Vec<Proc>,
+}
+
+/// Spawn one child and wait for its `ADDR <ip:port>` line. stderr is
+/// captured for post-mortems; stdout past the address line is drained
+/// so the child can never block on a full pipe.
+fn spawn_proc(bin: &Path, args: &[String]) -> io::Result<Proc> {
+    let mut child = Command::new(bin)
+        .args(args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .map_err(|e| io::Error::new(e.kind(), format!("spawning {}: {e}", bin.display())))?;
+    let stderr = Arc::new(Mutex::new(Vec::new()));
+    if let Some(mut pipe) = child.stderr.take() {
+        let buf = stderr.clone();
+        std::thread::spawn(move || {
+            let mut v = Vec::new();
+            let _ = std::io::Read::read_to_end(&mut pipe, &mut v);
+            buf.lock().unwrap().extend_from_slice(&v);
+        });
+    }
+    let mut lines = BufReader::new(child.stdout.take().expect("piped stdout"));
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        if lines.read_line(&mut line)? == 0 {
+            let status =
+                child.wait().map(|s| s.to_string()).unwrap_or_else(|e| e.to_string());
+            let tail = String::from_utf8_lossy(&stderr.lock().unwrap()).into_owned();
+            return Err(io::Error::other(format!(
+                "child `{} {}` exited ({status}) before reporting its address: {}",
+                bin.display(),
+                args.join(" "),
+                tail.trim()
+            )));
+        }
+        if let Some(rest) = line.trim().strip_prefix("ADDR ") {
+            break rest.parse::<SocketAddr>().map_err(|_| {
+                io::Error::new(io::ErrorKind::InvalidData, format!("bad ADDR line {line:?}"))
+            })?;
+        }
+    };
+    std::thread::spawn(move || {
+        let _ = std::io::copy(&mut lines, &mut std::io::sink());
+    });
+    Ok(Proc { child, addr, alive: true, exit: None, reaped: false, stderr })
+}
+
+fn spawn_shard(bin: &Path, idx: usize, aof: &Path, kill_at: Option<u64>) -> io::Result<Proc> {
+    let mut args = vec![
+        "shard".to_string(),
+        "--shard".into(),
+        idx.to_string(),
+        "--port".into(),
+        "0".into(),
+        "--aof".into(),
+        aof.display().to_string(),
+    ];
+    if let Some(n) = kill_at {
+        args.push("--kill-at-request".into());
+        args.push(n.to_string());
+    }
+    spawn_proc(bin, &args)
+}
+
+fn spawn_worker(bin: &Path) -> io::Result<Proc> {
+    spawn_proc(bin, &["worker".into(), "--port".into(), "0".into()])
+}
+
+/// One monitor pass: reap dead children, tally plan-era kills, respawn
+/// dead shards from their AOF and republish the shard map.
+fn sweep(
+    fleet: &Mutex<Fleet>,
+    plan: Option<&Arc<FaultPlan>>,
+    bin: &Path,
+    shard_map: &Path,
+    aofs: &[PathBuf],
+) {
+    let mut f = fleet.lock().unwrap();
+    for w in &mut f.workers {
+        if w.reaped {
+            continue;
+        }
+        if let Ok(Some(status)) = w.child.try_wait() {
+            w.reaped = true;
+            w.alive = false;
+            w.exit = Some(status.to_string());
+            if let Some(p) = plan {
+                p.note_proc_kill();
+            }
+        }
+    }
+    for i in 0..f.shards.len() {
+        if f.shards[i].reaped {
+            continue;
+        }
+        if let Ok(Some(status)) = f.shards[i].child.try_wait() {
+            if let Some(p) = plan {
+                p.note_proc_kill();
+            }
+            // respawn from the AOF on a fresh port (no fault flag — the
+            // schedule fired), then republish the map so store clients'
+            // rediscover-on-reconnect finds the new address
+            match spawn_shard(bin, i, &aofs[i], None) {
+                Ok(p2) => {
+                    f.shards[i] = p2;
+                    let addrs: Vec<SocketAddr> = f.shards.iter().map(|s| s.addr).collect();
+                    let _ = write_shard_map(shard_map, &addrs);
+                }
+                Err(e) => {
+                    f.shards[i].reaped = true;
+                    f.shards[i].alive = false;
+                    f.shards[i].exit = Some(format!("{status}; respawn failed: {e}"));
+                }
+            }
+        }
+    }
+}
+
+/// Control-plane client config: one connect, one shot, generous read
+/// deadline (the reply lands only when the task finishes). No failover
+/// — a dead worker must surface as a failed attempt, not a silent
+/// replay somewhere else.
+fn control_cfg() -> FailoverConfig {
+    FailoverConfig {
+        connect_timeout: Duration::from_secs(2),
+        connect_attempts: 1,
+        backoff_base: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(200),
+        read_timeout: Some(Duration::from_secs(120)),
+        write_timeout: Some(Duration::from_secs(30)),
+        failover_attempts: 1,
+    }
+}
+
+/// Send one task command and return the worker's bulk reply text.
+fn dispatch(addr: SocketAddr, cmd: &[u8], spec: &str) -> io::Result<String> {
+    let mut c = Client::connect_with(addr, control_cfg()).map_err(io::Error::from)?;
+    match c.call(&[cmd, spec.as_bytes()]).map_err(io::Error::from)? {
+        Value::Bulk(b) => String::from_utf8(b)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 task reply")),
+        Value::Error(e) => Err(io::Error::other(e)),
+        other => Err(io::Error::other(format!("unexpected task reply {other:?}"))),
+    }
+}
+
+/// Pick the worker for `(task, attempt)` among the live ones —
+/// rotating by attempt, so a retry lands on a *different* worker when
+/// one exists. With `kill_first` the chosen child is SIGKILLed before
+/// the address is returned: the process-level `Start` fault.
+fn pick_worker(
+    fleet: &Mutex<Fleet>,
+    task: usize,
+    attempt: usize,
+    kill_first: bool,
+) -> io::Result<(usize, SocketAddr)> {
+    let mut f = fleet.lock().unwrap();
+    let live: Vec<usize> =
+        f.workers.iter().enumerate().filter(|(_, w)| w.alive).map(|(i, _)| i).collect();
+    if live.is_empty() {
+        return Err(io::Error::other("no live workers remain"));
+    }
+    let w = live[(task + attempt) % live.len()];
+    if kill_first {
+        let _ = f.workers[w].child.kill();
+        f.workers[w].alive = false;
+    }
+    Ok((w, f.workers[w].addr))
+}
+
+/// Mark a worker dead after a failed dispatch and describe what the
+/// driver knows: exit status (if reaped yet) and a stderr tail.
+fn fail_worker(fleet: &Mutex<Fleet>, w: usize) -> String {
+    let mut f = fleet.lock().unwrap();
+    f.workers[w].alive = false;
+    let exit = f.workers[w].exit.clone().unwrap_or_else(|| "not yet reaped".into());
+    let buf = f.workers[w].stderr.lock().unwrap();
+    let tail = String::from_utf8_lossy(&buf[buf.len().saturating_sub(300)..]).into_owned();
+    format!("exit: {exit}; stderr: {:?}", tail.trim())
+}
+
+/// Replay a worker-reported nine-channel delta into the job ledger on
+/// the calling thread. Inside an attempt scope this lands in the
+/// attempt's private ledger, so a later failure folds the whole delta
+/// into `wasted` exactly like an in-process attempt's own charges.
+fn replay_delta(ledger: &Ledger, delta: &[u64; 9]) {
+    for (ch, &b) in CHANNELS.iter().zip(delta) {
+        if b > 0 {
+            ledger.add(*ch, b);
+        }
+    }
+}
+
+/// Run the scheme construction across worker and shard *processes*.
+/// Output bytes and all nine footprint channels are byte-identical to
+/// [`scheme::run_files`] over the same corpus and config — with or
+/// without process kills — because task bodies, split plans, and charge
+/// sites are shared with the in-process engine, and failed attempts'
+/// charges fold into [`JobResult::wasted`], never the footprint.
+pub fn run_cluster_files(
+    files: &[&[Read]],
+    cfg: &SchemeConfig,
+    opts: &ClusterOpts,
+    ledger: &Arc<Ledger>,
+) -> io::Result<ClusterRun> {
+    assert!(opts.n_workers > 0, "cluster needs at least one worker process");
+    assert!(opts.n_shards > 0, "cluster needs at least one shard process");
+    let start = Instant::now();
+    scheme::check_unique_seqs(files)?;
+    let boundaries = sampler::make_boundaries_files(
+        files,
+        cfg.conf.n_reducers,
+        cfg.samples_per_reducer,
+        cfg.prefix_len,
+        cfg.seed,
+    );
+
+    reap_stale_scratch(cfg.conf.spill_dir.as_deref());
+    let base = cfg.conf.spill_dir.as_deref();
+    // meta holds the shard map and the shards' AOFs: it must outlive
+    // every shard (re)spawn, so it is its own dir, dropped last
+    let meta = ScratchDir::new(base, "cluster-meta")?;
+    let scratch = Arc::new(ScratchDir::new(base, "cluster")?);
+    let out_dir = Arc::new(ScratchDir::new(base, "cluster-out")?);
+    let lcp_dir =
+        if cfg.emit_lcp { Some(ScratchDir::new(base, "cluster-lcp")?) } else { None };
+    let shard_map = meta.path.join("shards");
+    let aofs: Vec<PathBuf> =
+        (0..opts.n_shards).map(|i| meta.path.join(format!("shard{i}.aof"))).collect();
+    let plan = opts.plan.clone();
+
+    let fleet = Arc::new(Mutex::new(Fleet { workers: Vec::new(), shards: Vec::new() }));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut mon: Option<std::thread::JoinHandle<()>> = None;
+
+    // everything past this point runs under the shutdown guard below:
+    // whatever the body returns, the monitor is stopped first and the
+    // fleet is killed and reaped
+    let body = (|| -> io::Result<ClusterRun> {
+        {
+            let mut f = fleet.lock().unwrap();
+            for i in 0..opts.n_shards {
+                let kill_at = plan
+                    .as_ref()
+                    .and_then(|p| p.shard_abort)
+                    .filter(|s| s.shard == i)
+                    .map(|s| s.at_request);
+                f.shards.push(spawn_shard(&opts.samr_bin, i, &aofs[i], kill_at)?);
+            }
+            let addrs: Vec<SocketAddr> = f.shards.iter().map(|s| s.addr).collect();
+            write_shard_map(&shard_map, &addrs)?;
+            for _ in 0..opts.n_workers {
+                f.workers.push(spawn_worker(&opts.samr_bin)?);
+            }
+        }
+        mon = Some({
+            let fleet = fleet.clone();
+            let stop = stop.clone();
+            let plan = plan.clone();
+            let bin = opts.samr_bin.clone();
+            let shard_map = shard_map.clone();
+            let aofs = aofs.clone();
+            std::thread::spawn(move || loop {
+                let done = stop.load(Ordering::SeqCst);
+                sweep(&fleet, plan.as_ref(), &bin, &shard_map, &aofs);
+                if done {
+                    return; // one final sweep after the stop signal
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            })
+        });
+
+        let (spool, splits) = scheme::spool_inputs(files, &cfg.conf)?;
+        let n_maps = splits.len();
+        let n_reds = cfg.conf.n_reducers;
+        let threads = cfg.conf.task_parallelism.max(1);
+        let pool = WorkerPool::global();
+        let wasted = Ledger::new();
+        // retries are the driver's; the retry harness itself must stay
+        // fault-blind (process kills are injected here, not by it)
+        let mut retry_conf = cfg.conf.clone();
+        retry_conf.faults = None;
+        let bounds_csv =
+            boundaries.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",");
+
+        // ---------------- map phase ----------------
+        type MapSlot = Option<io::Result<(SpillFile, MapTaskStats)>>;
+        let map_slots: Arc<Mutex<Vec<MapSlot>>> =
+            Arc::new(Mutex::new((0..n_maps).map(|_| None).collect()));
+        let splits = Arc::new(splits);
+        let tasks: Vec<(u64, Box<dyn FnOnce() + Send>)> = (0..n_maps)
+            .map(|i| {
+                let slots = map_slots.clone();
+                let splits = splits.clone();
+                let fleet = fleet.clone();
+                let plan = plan.clone();
+                let ledger = ledger.clone();
+                let wasted = wasted.clone();
+                let scratch = scratch.clone();
+                let retry_conf = retry_conf.clone();
+                let cfg = cfg.clone();
+                let shard_map = shard_map.clone();
+                let bounds_csv = bounds_csv.clone();
+                let weight = splits[i].bytes;
+                let run: Box<dyn FnOnce() + Send> = Box::new(move || {
+                    let split = &splits[i];
+                    let r = run_with_retries(
+                        Phase::Map,
+                        i,
+                        "cluster",
+                        &retry_conf,
+                        &ledger,
+                        &wasted,
+                        &scratch,
+                        |dir, a| {
+                            let kill =
+                                plan.as_ref().and_then(|p| p.proc_fault_at(Phase::Map, i, a));
+                            let (w, addr) = pick_worker(
+                                &fleet,
+                                i,
+                                a,
+                                kill == Some(FaultPoint::Start),
+                            )?;
+                            // the engine's charge, made by the driver —
+                            // the worker never touches HdfsRead
+                            ledger.add(Channel::HdfsRead, split.bytes);
+                            let mut spec = Spec::new();
+                            encode_cfg(&mut spec, &cfg);
+                            spec.push("task", i.to_string());
+                            spec.push("dir", dir.display().to_string());
+                            spec.push("split_path", split.path.display().to_string());
+                            spec.push("split_offset", split.offset.to_string());
+                            spec.push("split_bytes_n", split.bytes.to_string());
+                            spec.push("split_records", split.records.to_string());
+                            spec.push("boundaries", bounds_csv.clone());
+                            spec.push("shard_map", shard_map.display().to_string());
+                            if kill == Some(FaultPoint::Finish) {
+                                spec.push("abort", "1");
+                            }
+                            match dispatch(addr, b"MAP", &spec.encode()) {
+                                Ok(text) => {
+                                    let (spill, stats, delta) = parse_map_result(&text)?;
+                                    replay_delta(&ledger, &delta);
+                                    Ok((spill, stats))
+                                }
+                                Err(e) => {
+                                    let detail = fail_worker(&fleet, w);
+                                    // a journaled (finished-then-aborted)
+                                    // attempt still spent its bytes
+                                    if let Ok(j) =
+                                        std::fs::read_to_string(dir.join("journal"))
+                                    {
+                                        if let Ok((_, _, delta)) = parse_map_result(&j) {
+                                            replay_delta(&ledger, &delta);
+                                        }
+                                    }
+                                    Err(io::Error::other(format!(
+                                        "worker {addr} died mid-map ({detail}): {e}"
+                                    )))
+                                }
+                            }
+                        },
+                        |_a| {},
+                    );
+                    slots.lock().unwrap()[i] = Some(r);
+                });
+                (weight, run)
+            })
+            .collect();
+        pool.run_all_weighted(tasks, threads);
+        let mut map_out = Vec::with_capacity(n_maps);
+        let mut map_stats = Vec::with_capacity(n_maps);
+        for s in map_slots.lock().unwrap().drain(..) {
+            let (spill, st) = s.expect("map slot filled")?;
+            map_out.push(spill);
+            map_stats.push(st);
+        }
+
+        // ---------------- reduce phase ----------------
+        let map_out = Arc::new(map_out);
+        type RedSlot = Option<io::Result<(OutputFile, ReduceTaskStats)>>;
+        let red_slots: Arc<Mutex<Vec<RedSlot>>> =
+            Arc::new(Mutex::new((0..n_reds).map(|_| None).collect()));
+        let tasks: Vec<(u64, Box<dyn FnOnce() + Send>)> = (0..n_reds)
+            .map(|r| {
+                let slots = red_slots.clone();
+                let map_out = map_out.clone();
+                let fleet = fleet.clone();
+                let plan = plan.clone();
+                let ledger = ledger.clone();
+                let wasted = wasted.clone();
+                let scratch = scratch.clone();
+                let retry_conf = retry_conf.clone();
+                let cfg = cfg.clone();
+                let shard_map = shard_map.clone();
+                let sink_path = out_dir.path.join(format!("part-{r:05}"));
+                let lcp_path =
+                    lcp_dir.as_ref().map(|d| d.path.join(scheme::lcp_sidecar_name(r)));
+                let weight: u64 = map_out.iter().map(|o| o.segments[r].bytes).sum();
+                let run: Box<dyn FnOnce() + Send> = Box::new(move || {
+                    let sink_cleanup = sink_path.clone();
+                    let res = run_with_retries(
+                        Phase::Reduce,
+                        r,
+                        "cluster",
+                        &retry_conf,
+                        &ledger,
+                        &wasted,
+                        &scratch,
+                        |dir, a| {
+                            let kill = plan
+                                .as_ref()
+                                .and_then(|p| p.proc_fault_at(Phase::Reduce, r, a));
+                            let (w, addr) = pick_worker(
+                                &fleet,
+                                r,
+                                a,
+                                kill == Some(FaultPoint::Start),
+                            )?;
+                            let mut spec = Spec::new();
+                            encode_cfg(&mut spec, &cfg);
+                            spec.push("task", r.to_string());
+                            spec.push("dir", dir.display().to_string());
+                            spec.push("sink", sink_path.display().to_string());
+                            if let Some(p) = &lcp_path {
+                                spec.push("lcp", p.display().to_string());
+                            }
+                            spec.push("shard_map", shard_map.display().to_string());
+                            for o in map_out.iter() {
+                                spec.push("spill_in", encode_spill(o));
+                            }
+                            if kill == Some(FaultPoint::Finish) {
+                                spec.push("abort", "1");
+                            }
+                            match dispatch(addr, b"REDUCE", &spec.encode()) {
+                                Ok(text) => {
+                                    let (file, stats, delta) = parse_reduce_result(&text)?;
+                                    replay_delta(&ledger, &delta);
+                                    // the engine's post-sink charge,
+                                    // made by the driver
+                                    ledger.add(Channel::HdfsWrite, file.bytes);
+                                    Ok((file, stats))
+                                }
+                                Err(e) => {
+                                    let detail = fail_worker(&fleet, w);
+                                    if let Ok(j) =
+                                        std::fs::read_to_string(dir.join("journal"))
+                                    {
+                                        if let Ok((file, _, delta)) =
+                                            parse_reduce_result(&j)
+                                        {
+                                            replay_delta(&ledger, &delta);
+                                            // the sink was sealed before
+                                            // the abort: its write was
+                                            // real, and belongs to this
+                                            // doomed attempt's tally
+                                            ledger.add(Channel::HdfsWrite, file.bytes);
+                                        }
+                                    }
+                                    Err(io::Error::other(format!(
+                                        "worker {addr} died mid-reduce ({detail}): {e}"
+                                    )))
+                                }
+                            }
+                        },
+                        |_a| {
+                            let _ = std::fs::remove_file(&sink_cleanup);
+                        },
+                    );
+                    slots.lock().unwrap()[r] = Some(res);
+                });
+                (weight, run)
+            })
+            .collect();
+        pool.run_all_weighted(tasks, threads);
+        let mut output = Vec::with_capacity(n_reds);
+        let mut reduce_stats = Vec::with_capacity(n_reds);
+        for s in red_slots.lock().unwrap().drain(..) {
+            let (file, st) = s.expect("reduce slot filled")?;
+            output.push(file);
+            reduce_stats.push(st);
+        }
+        for o in map_out.iter() {
+            o.remove();
+        }
+        drop(spool);
+
+        let job = JobResult::from_parts(
+            output,
+            out_dir.clone(),
+            ledger.snapshot(),
+            wasted.snapshot(),
+            map_stats,
+            reduce_stats,
+            start.elapsed(),
+        );
+        let order = job.collect_i64_values()?;
+        // memory probe over a fresh, uncharged control connection
+        let addrs = read_shard_map(&shard_map)?;
+        let kv_memory =
+            ShardedClient::connect(&addrs).map_err(io::Error::from)?.used_memory();
+        Ok(ClusterRun { job, order, kv_memory, boundaries })
+    })();
+
+    // orderly teardown: stop the monitor FIRST (its final sweep tallies
+    // fault-era deaths), only then kill the fleet — shutdown kills are
+    // never counted as process faults
+    stop.store(true, Ordering::SeqCst);
+    if let Some(m) = mon {
+        let _ = m.join();
+    }
+    let mut f = fleet.lock().unwrap();
+    for p in f.workers.iter_mut().chain(f.shards.iter_mut()) {
+        let _ = p.child.kill();
+        let _ = p.child.wait();
+    }
+    drop(f);
+    body
+}

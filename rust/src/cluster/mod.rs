@@ -1,5 +1,11 @@
-//! The simulated cluster — Table II's 16 physical nodes, their disks and
-//! memory, the YARN slot arithmetic of §II, and Gigabit Ethernet.
+//! The cluster layer: the *simulated* cluster below — Table II's 16
+//! physical nodes, their disks and memory, the YARN slot arithmetic of
+//! §II, and Gigabit Ethernet — plus the *real* multi-process mode:
+//! [`driver`] spawns and supervises `samr worker` / `samr shard` OS
+//! processes, [`worker`] is the task-executor those processes run.
+
+pub mod driver;
+pub mod worker;
 
 use crate::util::bytes::GB;
 #[cfg(test)]

@@ -1,0 +1,676 @@
+//! The `samr worker` process: executes one map or reduce task attempt
+//! per request, in its own OS process, over the same task runners the
+//! in-process engine uses.
+//!
+//! The driver (`cluster::driver`) speaks to workers over the existing
+//! RESP plumbing — a worker is just another [`RespService`] — with two
+//! task commands, `MAP <spec>` and `REDUCE <spec>`, plus `PING`. Specs
+//! and results travel as line-oriented `key=value` text (floats as
+//! exact `f64::to_bits` integers, so a decoded `JobConf` computes
+//! byte-identical spill triggers).
+//!
+//! **Division of accounting.** A worker runs `run_map_task` /
+//! `run_reduce_task` against a *fresh local ledger* and reports the
+//! per-channel delta in its reply; the driver replays the delta into
+//! the job ledger inside the task's attempt scope. `HdfsRead` /
+//! `HdfsWrite` are charged by the driver (exactly where the in-process
+//! engine charges them), and the control-plane RESP traffic itself is
+//! charged to no channel — so a cluster run's nine-channel footprint is
+//! byte-identical to a single-process run's by construction.
+//!
+//! **Journal-then-abort.** A spec with `abort=1` makes the worker
+//! finish the task, persist its reply (the "journal") into the attempt
+//! directory via tmp+rename, then `std::process::abort()` WITHOUT
+//! replying — the process-level Finish fault. The driver sees the
+//! connection die, reads the journal, and charges the dead attempt's
+//! delta to the job's `wasted` tally, mirroring how an in-process
+//! aborted attempt's redirected ledger folds into `wasted`.
+
+use std::io;
+use std::net::SocketAddr;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::footprint::{Ledger, CHANNELS};
+use crate::kvstore::client::FailoverConfig;
+use crate::kvstore::resp::{self, Value};
+use crate::kvstore::service::{RespHandler, RespServer, RespService};
+use crate::kvstore::shard::{ShardedClient, SuffixStore};
+use crate::mapreduce::io::{FileSink, InputSplit, OutputFile};
+use crate::mapreduce::job::JobConf;
+use crate::mapreduce::mapper::{
+    run_map_task, run_map_task_fixed, MapTaskStats, Segment, SpillFile,
+};
+use crate::mapreduce::record::decode_i64_key;
+use crate::mapreduce::reducer::{run_reduce_task, run_reduce_task_fixed, ReduceTaskStats};
+use crate::runtime::native;
+use crate::scheme::{self, SchemeConfig, StoreSlot, TimeSplit};
+
+// ---------------- spec wire format ----------------
+
+/// Line-oriented `key=value` blob — the worker protocol's only payload
+/// shape (task specs, task results, journals). Keys may repeat
+/// (`spill=` lines); values run to end-of-line, so they must not
+/// contain newlines (true of every path and number we carry).
+#[derive(Debug, Default)]
+pub(crate) struct Spec {
+    fields: Vec<(String, String)>,
+}
+
+impl Spec {
+    pub(crate) fn new() -> Spec {
+        Spec::default()
+    }
+
+    pub(crate) fn push(&mut self, key: &str, value: impl Into<String>) {
+        self.fields.push((key.to_string(), value.into()));
+    }
+
+    pub(crate) fn parse(text: &str) -> io::Result<Spec> {
+        let mut fields = Vec::new();
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("spec line without '=': {line:?}"),
+                )
+            })?;
+            fields.push((k.to_string(), v.to_string()));
+        }
+        Ok(Spec { fields })
+    }
+
+    pub(crate) fn encode(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.fields {
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+
+    pub(crate) fn opt(&self, key: &str) -> Option<&str> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub(crate) fn get(&self, key: &str) -> io::Result<&str> {
+        self.opt(key).ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("spec is missing {key:?}"))
+        })
+    }
+
+    pub(crate) fn get_parse<T: std::str::FromStr>(&self, key: &str) -> io::Result<T> {
+        self.get(key)?.parse().map_err(|_| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("spec field {key:?} failed to parse: {:?}", self.opt(key)),
+            )
+        })
+    }
+
+    pub(crate) fn all<'a>(&'a self, key: &'a str) -> impl Iterator<Item = &'a str> {
+        self.fields.iter().filter(move |(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+fn csv<T: std::fmt::Display>(vals: impl IntoIterator<Item = T>) -> String {
+    vals.into_iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn parse_csv<T: std::str::FromStr>(s: &str) -> io::Result<Vec<T>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|p| {
+            p.parse().map_err(|_| {
+                io::Error::new(io::ErrorKind::InvalidData, format!("bad CSV element {p:?}"))
+            })
+        })
+        .collect()
+}
+
+// ---------------- config transport ----------------
+
+/// Serialize the scheme + job knobs a task attempt's behavior depends
+/// on. Floats go as `to_bits` so the worker's spill/merge triggers are
+/// bit-identical to the driver's.
+pub(crate) fn encode_cfg(spec: &mut Spec, cfg: &SchemeConfig) {
+    let c = &cfg.conf;
+    spec.push("prefix_len", cfg.prefix_len.to_string());
+    spec.push("group_threshold", cfg.group_threshold.to_string());
+    spec.push("write_suffixes", if cfg.write_suffixes { "1" } else { "0" });
+    spec.push("samples_per_reducer", cfg.samples_per_reducer.to_string());
+    spec.push("put_batch", cfg.put_batch.to_string());
+    spec.push("prefetch", if cfg.prefetch { "1" } else { "0" });
+    spec.push("fixed_shuffle", if cfg.fixed_shuffle { "1" } else { "0" });
+    spec.push("sort_threads", cfg.parallel_sort_threads.to_string());
+    spec.push("emit_lcp", if cfg.emit_lcp { "1" } else { "0" });
+    spec.push("seed", cfg.seed.to_string());
+    spec.push("io_sort_bytes", c.io_sort_bytes.to_string());
+    spec.push("spill_percent_bits", c.spill_percent.to_bits().to_string());
+    spec.push("io_sort_factor", c.io_sort_factor.to_string());
+    spec.push("split_bytes", c.split_bytes.to_string());
+    spec.push("n_reducers", c.n_reducers.to_string());
+    spec.push("reducer_heap_bytes", c.reducer_heap_bytes.to_string());
+    spec.push("shuffle_in_bits", c.shuffle_input_buffer_percent.to_bits().to_string());
+    spec.push("shuffle_merge_bits", c.shuffle_merge_percent.to_bits().to_string());
+    spec.push("shuffle_limit_bits", c.shuffle_memory_limit_percent.to_bits().to_string());
+}
+
+/// Rebuild the config in the worker. Driver-side knobs (task
+/// parallelism, retries, fault plan, spill dir) deliberately reset to
+/// inert values: the worker runs exactly one attempt in the directory
+/// it was handed.
+pub(crate) fn decode_cfg(spec: &Spec) -> io::Result<SchemeConfig> {
+    let f64_bits = |key: &str| -> io::Result<f64> { Ok(f64::from_bits(spec.get_parse(key)?)) };
+    let flag = |key: &str| -> io::Result<bool> { Ok(spec.get(key)? == "1") };
+    let fixed_shuffle = flag("fixed_shuffle")?;
+    Ok(SchemeConfig {
+        conf: JobConf {
+            io_sort_bytes: spec.get_parse("io_sort_bytes")?,
+            spill_percent: f64_bits("spill_percent_bits")?,
+            io_sort_factor: spec.get_parse("io_sort_factor")?,
+            split_bytes: spec.get_parse("split_bytes")?,
+            n_reducers: spec.get_parse("n_reducers")?,
+            reducer_heap_bytes: spec.get_parse("reducer_heap_bytes")?,
+            shuffle_input_buffer_percent: f64_bits("shuffle_in_bits")?,
+            shuffle_merge_percent: f64_bits("shuffle_merge_bits")?,
+            shuffle_memory_limit_percent: f64_bits("shuffle_limit_bits")?,
+            task_parallelism: 1,
+            parallel_sort_threads: spec.get_parse("sort_threads")?,
+            spill_dir: None,
+            fixed_width: fixed_shuffle,
+            max_task_attempts: 1,
+            faults: None,
+        },
+        prefix_len: spec.get_parse("prefix_len")?,
+        group_threshold: spec.get_parse("group_threshold")?,
+        write_suffixes: flag("write_suffixes")?,
+        samples_per_reducer: spec.get_parse("samples_per_reducer")?,
+        put_batch: spec.get_parse("put_batch")?,
+        prefetch: flag("prefetch")?,
+        fixed_shuffle,
+        parallel_sort_threads: spec.get_parse("sort_threads")?,
+        emit_lcp: flag("emit_lcp")?,
+        seed: spec.get_parse("seed")?,
+    })
+}
+
+// ---------------- spill / result transport ----------------
+
+/// One spill descriptor as a single spec value:
+/// `path<TAB>bytes<TAB>off:bytes:records,...` (one segment triple per
+/// reducer partition).
+pub(crate) fn encode_spill(s: &SpillFile) -> String {
+    let segs = csv(s.segments.iter().map(|g| format!("{}:{}:{}", g.offset, g.bytes, g.records)));
+    format!("{}\t{}\t{}", s.path.display(), s.bytes, segs)
+}
+
+fn decode_spill(v: &str) -> io::Result<SpillFile> {
+    let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, format!("spill: {msg}: {v:?}"));
+    let mut parts = v.split('\t');
+    let path = PathBuf::from(parts.next().ok_or_else(|| bad("missing path"))?);
+    let bytes = parts
+        .next()
+        .and_then(|p| p.parse().ok())
+        .ok_or_else(|| bad("missing/bad byte count"))?;
+    let segs = parts.next().ok_or_else(|| bad("missing segments"))?;
+    let mut segments = Vec::new();
+    for t in segs.split(',').filter(|t| !t.is_empty()) {
+        let nums: Vec<u64> = parse_csv(&t.replace(':', ","))?;
+        if nums.len() != 3 {
+            return Err(bad("segment is not an off:bytes:records triple"));
+        }
+        segments.push(Segment { offset: nums[0], bytes: nums[1], records: nums[2] });
+    }
+    Ok(SpillFile { path, segments, bytes })
+}
+
+fn encode_delta(spec: &mut Spec, ledger: &Ledger) {
+    spec.push("delta", csv(CHANNELS.iter().map(|&ch| ledger.get(ch))));
+}
+
+/// The nine-channel delta a worker reported, in `CHANNELS` order.
+pub(crate) fn decode_delta(spec: &Spec) -> io::Result<[u64; 9]> {
+    let vals: Vec<u64> = parse_csv(spec.get("delta")?)?;
+    vals.try_into().map_err(|v: Vec<u64>| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("delta has {} channels, expected 9", v.len()),
+        )
+    })
+}
+
+fn encode_map_result(spill: &SpillFile, stats: &MapTaskStats, ledger: &Ledger) -> String {
+    let mut out = Spec::new();
+    out.push("spill", encode_spill(spill));
+    out.push(
+        "stats",
+        csv([
+            stats.input_records,
+            stats.input_bytes,
+            stats.output_records,
+            stats.output_bytes,
+            stats.spills,
+        ]),
+    );
+    encode_delta(&mut out, ledger);
+    out.encode()
+}
+
+pub(crate) fn parse_map_result(text: &str) -> io::Result<(SpillFile, MapTaskStats, [u64; 9])> {
+    let spec = Spec::parse(text)?;
+    let spill = decode_spill(spec.get("spill")?)?;
+    let s: Vec<u64> = parse_csv(spec.get("stats")?)?;
+    if s.len() != 5 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "map stats need 5 fields"));
+    }
+    let stats = MapTaskStats {
+        input_records: s[0],
+        input_bytes: s[1],
+        output_records: s[2],
+        output_bytes: s[3],
+        spills: s[4],
+    };
+    Ok((spill, stats, decode_delta(&spec)?))
+}
+
+fn encode_reduce_result(file: &OutputFile, stats: &ReduceTaskStats, ledger: &Ledger) -> String {
+    let mut out = Spec::new();
+    out.push("out_path", file.path.display().to_string());
+    out.push("out_bytes", file.bytes.to_string());
+    out.push("out_records", file.records.to_string());
+    out.push(
+        "stats",
+        csv([
+            stats.shuffled_bytes,
+            stats.shuffled_records,
+            stats.disk_segments,
+            stats.mem_merges,
+            stats.merge_rounds_bytes,
+            stats.groups,
+            stats.max_group,
+            stats.output_records,
+            stats.output_bytes,
+        ]),
+    );
+    encode_delta(&mut out, ledger);
+    out.encode()
+}
+
+pub(crate) fn parse_reduce_result(
+    text: &str,
+) -> io::Result<(OutputFile, ReduceTaskStats, [u64; 9])> {
+    let spec = Spec::parse(text)?;
+    let file = OutputFile {
+        path: PathBuf::from(spec.get("out_path")?),
+        bytes: spec.get_parse("out_bytes")?,
+        records: spec.get_parse("out_records")?,
+    };
+    let s: Vec<u64> = parse_csv(spec.get("stats")?)?;
+    if s.len() != 9 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "reduce stats need 9 fields"));
+    }
+    let stats = ReduceTaskStats {
+        shuffled_bytes: s[0],
+        shuffled_records: s[1],
+        disk_segments: s[2],
+        mem_merges: s[3],
+        merge_rounds_bytes: s[4],
+        groups: s[5],
+        max_group: s[6],
+        output_records: s[7],
+        output_bytes: s[8],
+    };
+    Ok((file, stats, decode_delta(&spec)?))
+}
+
+// ---------------- shard map ----------------
+
+/// Write the shard address map (lines of `<index> <addr>`) atomically:
+/// readers racing a shard respawn see either the old complete map or
+/// the new complete map, never a truncated one.
+pub(crate) fn write_shard_map(path: &Path, addrs: &[SocketAddr]) -> io::Result<()> {
+    let mut text = String::new();
+    for (i, a) in addrs.iter().enumerate() {
+        text.push_str(&format!("{i} {a}\n"));
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Read the shard address map, in shard order.
+pub(crate) fn read_shard_map(path: &Path) -> io::Result<Vec<SocketAddr>> {
+    let text = std::fs::read_to_string(path)?;
+    let bad = |line: &str| {
+        io::Error::new(io::ErrorKind::InvalidData, format!("bad shard-map line {line:?}"))
+    };
+    let mut entries: Vec<(usize, SocketAddr)> = Vec::new();
+    for line in text.lines() {
+        let (i, a) = line.split_once(' ').ok_or_else(|| bad(line))?;
+        entries.push((
+            i.parse().map_err(|_| bad(line))?,
+            a.parse().map_err(|_| bad(line))?,
+        ));
+    }
+    entries.sort_by_key(|(i, _)| *i);
+    Ok(entries.into_iter().map(|(_, a)| a).collect())
+}
+
+/// Connect a sharded store client from the shard map, with a
+/// rediscover hook that re-reads the map on every reconnect — so when
+/// the driver respawns a killed shard process on a fresh port, this
+/// client's failover replay lands on the respawned process.
+fn open_store(shard_map: &Path) -> io::Result<Box<dyn SuffixStore>> {
+    let addrs = read_shard_map(shard_map)?;
+    let mut client =
+        ShardedClient::connect_with(&addrs, FailoverConfig::default()).map_err(io::Error::from)?;
+    let map_path = shard_map.to_path_buf();
+    client.set_rediscover(Arc::new(move |i| {
+        read_shard_map(&map_path).ok().and_then(|a| a.get(i).copied())
+    }));
+    Ok(Box::new(client))
+}
+
+/// A parked handle from a finished map task, or a fresh connection.
+fn store_for_task(park: &StoreSlot, shard_map: &Path) -> io::Result<Box<dyn SuffixStore>> {
+    if let Some(s) = park.lock().unwrap().take() {
+        return Ok(s);
+    }
+    open_store(shard_map)
+}
+
+// ---------------- task execution ----------------
+
+/// Persist `text` as `dir/journal` (tmp+rename so the driver never
+/// reads a half-written journal), then kill this whole process without
+/// replying — the counter-triggered Finish fault at process level.
+fn journal_then_abort(dir: &Path, text: &str) -> ! {
+    let tmp = dir.join("journal.tmp");
+    // best-effort: if the journal cannot be written the driver simply
+    // sees a dead attempt with no recoverable delta
+    if std::fs::write(&tmp, text).is_ok() {
+        let _ = std::fs::rename(&tmp, dir.join("journal"));
+    }
+    std::process::abort();
+}
+
+fn run_map(spec: &Spec, park: &StoreSlot) -> io::Result<String> {
+    let cfg = decode_cfg(spec)?;
+    let task_id: usize = spec.get_parse("task")?;
+    let dir = PathBuf::from(spec.get("dir")?);
+    let split = InputSplit {
+        path: Arc::new(PathBuf::from(spec.get("split_path")?)),
+        offset: spec.get_parse("split_offset")?,
+        bytes: spec.get_parse("split_bytes_n")?,
+        records: spec.get_parse("split_records")?,
+    };
+    let boundaries: Vec<i64> = parse_csv(spec.get("boundaries")?)?;
+    let store = store_for_task(park, Path::new(spec.get("shard_map")?))?;
+    // fresh per-task ledger: the reply's delta is exactly this task's
+    // charges, which the driver replays into the job ledger — NOT
+    // HdfsRead, which the driver charges itself (engine parity)
+    let ledger = Ledger::new();
+    let mut task =
+        scheme::make_mapper(&cfg, boundaries.clone(), store, park.clone(), ledger.clone());
+    let partitioner = move |key: &[u8]| native::bucket(decode_i64_key(key), &boundaries);
+    let mut reader = split.open()?;
+    let run = if cfg.conf.fixed_width { run_map_task_fixed } else { run_map_task };
+    let (spill, stats) =
+        run(task_id, &mut reader, task.as_mut(), &cfg.conf, &partitioner, &ledger, &dir)?;
+    let text = encode_map_result(&spill, &stats, &ledger);
+    if spec.opt("abort") == Some("1") {
+        journal_then_abort(&dir, &text);
+    }
+    Ok(text)
+}
+
+fn run_reduce(spec: &Spec, park: &StoreSlot) -> io::Result<String> {
+    let cfg = decode_cfg(spec)?;
+    let task_id: usize = spec.get_parse("task")?;
+    let dir = PathBuf::from(spec.get("dir")?);
+    let sink_path = PathBuf::from(spec.get("sink")?);
+    let lcp = spec.opt("lcp").map(PathBuf::from);
+    let spills: Vec<SpillFile> =
+        spec.all("spill_in").map(decode_spill).collect::<io::Result<_>>()?;
+    let store = store_for_task(park, Path::new(spec.get("shard_map")?))?;
+    let ledger = Ledger::new();
+    let times = Arc::new(TimeSplit::default());
+    let mut task = scheme::make_reducer(&cfg, store, ledger.clone(), times, lcp);
+    let mut sink = FileSink::create(sink_path)?;
+    let run = if cfg.conf.fixed_width { run_reduce_task_fixed } else { run_reduce_task };
+    let stats =
+        run(task_id, task_id, &spills, task.as_mut(), &mut sink, &cfg.conf, &ledger, &dir)?;
+    let file = sink.finish()?;
+    // HdfsWrite for `file.bytes` is the driver's charge, like HdfsRead
+    let text = encode_reduce_result(&file, &stats, &ledger);
+    if spec.opt("abort") == Some("1") {
+        journal_then_abort(&dir, &text);
+    }
+    Ok(text)
+}
+
+// ---------------- the RESP service ----------------
+
+struct WorkerService {
+    /// Worker-global park slot: the first finished map task parks its
+    /// store handle here; a later task (or none) reuses it. Mirrors the
+    /// in-process pipeline's one-handle-per-task discipline.
+    park: StoreSlot,
+}
+
+struct WorkerHandler {
+    park: StoreSlot,
+}
+
+impl RespService for WorkerService {
+    fn handler(&self) -> Box<dyn RespHandler> {
+        Box::new(WorkerHandler { park: self.park.clone() })
+    }
+}
+
+/// Run one task body, converting a panic (e.g. the mapper's "KV put
+/// failed" after shard failover is exhausted) into a clean RESP error
+/// the driver turns into a failed attempt.
+fn run_caught(
+    f: impl FnOnce() -> io::Result<String> + std::panic::UnwindSafe,
+    what: &str,
+) -> Value {
+    match catch_unwind(f) {
+        Ok(Ok(body)) => Value::Bulk(body.into_bytes()),
+        Ok(Err(e)) => Value::Error(format!("ERR {what} failed: {e}")),
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Value::Error(format!("ERR {what} panicked: {msg}"))
+        }
+    }
+}
+
+impl RespHandler for WorkerHandler {
+    fn handle(&mut self, args: &[Vec<u8>], reply: &mut Vec<u8>) -> io::Result<u64> {
+        let cmd = args.first().map(|a| a.to_ascii_uppercase()).unwrap_or_default();
+        let spec_of = |args: &[Vec<u8>]| -> io::Result<Spec> {
+            let raw = args.get(1).ok_or_else(|| {
+                io::Error::new(io::ErrorKind::InvalidData, "task command without a spec")
+            })?;
+            let text = std::str::from_utf8(raw).map_err(|_| {
+                io::Error::new(io::ErrorKind::InvalidData, "task spec is not UTF-8")
+            })?;
+            Spec::parse(text)
+        };
+        let v = match cmd.as_slice() {
+            b"PING" => Value::Simple("PONG".into()),
+            b"MAP" => match spec_of(args) {
+                Ok(spec) => {
+                    let park = self.park.clone();
+                    run_caught(AssertUnwindSafe(move || run_map(&spec, &park)), "map task")
+                }
+                Err(e) => Value::Error(format!("ERR bad spec: {e}")),
+            },
+            b"REDUCE" => match spec_of(args) {
+                Ok(spec) => {
+                    let park = self.park.clone();
+                    run_caught(AssertUnwindSafe(move || run_reduce(&spec, &park)), "reduce task")
+                }
+                Err(e) => Value::Error(format!("ERR bad spec: {e}")),
+            },
+            other => Value::Error(format!(
+                "ERR unknown worker command {:?}",
+                String::from_utf8_lossy(other)
+            )),
+        };
+        resp::write_value(reply, &v)?;
+        Ok(v.wire_len())
+    }
+}
+
+/// Bind a worker server on `127.0.0.1:port` (0 = ephemeral). The
+/// `samr worker` subcommand prints the bound address and parks on this.
+pub fn serve(port: u16) -> io::Result<RespServer> {
+    let service = Arc::new(WorkerService { park: Arc::new(Mutex::new(None)) });
+    RespServer::start(port, 0, None, service)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrips_including_repeated_keys() {
+        let mut s = Spec::new();
+        s.push("task", "7");
+        s.push("spill_in", "a\t1\t0:1:2");
+        s.push("spill_in", "b\t2\t3:4:5");
+        s.push("dir", "/tmp/x y/z"); // spaces in values survive
+        let back = Spec::parse(&s.encode()).unwrap();
+        assert_eq!(back.get_parse::<usize>("task").unwrap(), 7);
+        assert_eq!(back.all("spill_in").count(), 2);
+        assert_eq!(back.get("dir").unwrap(), "/tmp/x y/z");
+        assert!(back.opt("absent").is_none());
+        assert!(back.get("absent").is_err());
+    }
+
+    #[test]
+    fn cfg_roundtrip_is_exact_including_floats() {
+        let cfg = SchemeConfig {
+            conf: JobConf {
+                n_reducers: 5,
+                io_sort_bytes: 12345,
+                spill_percent: 0.811111117,
+                shuffle_merge_percent: 0.66000000001,
+                ..JobConf::scaled_down()
+            },
+            prefix_len: 21,
+            group_threshold: 4242,
+            write_suffixes: false,
+            prefetch: false,
+            seed: 99,
+            ..SchemeConfig::default()
+        };
+        let mut spec = Spec::new();
+        encode_cfg(&mut spec, &cfg);
+        let back = decode_cfg(&Spec::parse(&spec.encode()).unwrap()).unwrap();
+        assert_eq!(back.prefix_len, 21);
+        assert_eq!(back.group_threshold, 4242);
+        assert!(!back.write_suffixes && !back.prefetch);
+        assert_eq!(back.seed, 99);
+        assert_eq!(back.conf.n_reducers, 5);
+        assert_eq!(back.conf.io_sort_bytes, 12345);
+        // exact bit equality: the spill trigger must compute identically
+        assert_eq!(back.conf.spill_percent.to_bits(), cfg.conf.spill_percent.to_bits());
+        assert_eq!(
+            back.conf.shuffle_merge_percent.to_bits(),
+            cfg.conf.shuffle_merge_percent.to_bits()
+        );
+        assert_eq!(back.conf.spill_trigger(), cfg.conf.spill_trigger());
+        // worker-side conf is single-attempt and unplanned by design
+        assert_eq!(back.conf.max_task_attempts, 1);
+        assert!(back.conf.faults.is_none());
+        assert_eq!(back.conf.fixed_width, cfg.fixed_shuffle);
+    }
+
+    #[test]
+    fn map_and_reduce_results_roundtrip() {
+        let ledger = Ledger::new();
+        ledger.add(crate::footprint::Channel::MapLocalWrite, 111);
+        ledger.add(crate::footprint::Channel::KvPut, 222);
+        let spill = SpillFile {
+            path: PathBuf::from("/tmp/samr-x/map-3"),
+            segments: vec![
+                Segment { offset: 0, bytes: 10, records: 2 },
+                Segment { offset: 10, bytes: 0, records: 0 },
+            ],
+            bytes: 10,
+        };
+        let stats = MapTaskStats {
+            input_records: 1,
+            input_bytes: 2,
+            output_records: 3,
+            output_bytes: 4,
+            spills: 5,
+        };
+        let text = encode_map_result(&spill, &stats, &ledger);
+        let (s2, st2, delta) = parse_map_result(&text).unwrap();
+        assert_eq!(s2.path, spill.path);
+        assert_eq!(s2.bytes, 10);
+        assert_eq!(s2.segments.len(), 2);
+        assert_eq!(s2.segments[0].bytes, 10);
+        assert_eq!(s2.segments[1].records, 0);
+        assert_eq!(st2.spills, 5);
+        // delta is in CHANNELS order: MapLocalWrite is slot 3, KvPut 7
+        assert_eq!(delta[3], 111);
+        assert_eq!(delta[7], 222);
+        assert_eq!(delta.iter().sum::<u64>(), 333);
+
+        let file = OutputFile { path: PathBuf::from("/tmp/out/part-00001"), bytes: 77, records: 9 };
+        let rstats = ReduceTaskStats {
+            shuffled_bytes: 1,
+            shuffled_records: 2,
+            disk_segments: 3,
+            mem_merges: 4,
+            merge_rounds_bytes: 5,
+            groups: 6,
+            max_group: 7,
+            output_records: 8,
+            output_bytes: 9,
+        };
+        let text = encode_reduce_result(&file, &rstats, &ledger);
+        let (f2, rs2, delta2) = parse_reduce_result(&text).unwrap();
+        assert_eq!(f2.path, file.path);
+        assert_eq!(f2.bytes, 77);
+        assert_eq!(f2.records, 9);
+        assert_eq!(rs2.max_group, 7);
+        assert_eq!(rs2.output_bytes, 9);
+        assert_eq!(delta2, delta);
+    }
+
+    #[test]
+    fn shard_map_roundtrips_and_is_atomic_under_rewrite() {
+        let dir = std::env::temp_dir().join(format!("samr-shardmap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shards");
+        let a: Vec<SocketAddr> =
+            vec!["127.0.0.1:6001".parse().unwrap(), "127.0.0.1:6002".parse().unwrap()];
+        write_shard_map(&path, &a).unwrap();
+        assert_eq!(read_shard_map(&path).unwrap(), a);
+        // rewrite with one replaced address — a reader sees old or new,
+        // never a mix (rename is atomic); after the rewrite, new
+        let b: Vec<SocketAddr> =
+            vec!["127.0.0.1:6001".parse().unwrap(), "127.0.0.1:7777".parse().unwrap()];
+        write_shard_map(&path, &b).unwrap();
+        assert_eq!(read_shard_map(&path).unwrap(), b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -69,6 +69,41 @@ pub struct TaskFaultSpec {
     pub point: FaultPoint,
 }
 
+/// One injected worker-*process* kill, keyed like a task fault. Unlike
+/// [`TaskFaultSpec`] these are consulted only by the cluster driver
+/// (and, for [`FaultPoint::Finish`], relayed to the worker child): an
+/// in-process engine must never act on them, because "kill the worker"
+/// means SIGKILL/abort of a whole OS process.
+#[derive(Clone, Copy, Debug)]
+pub struct ProcFault {
+    /// Phase of the targeted task.
+    pub phase: Phase,
+    /// Task id within the phase.
+    pub task: usize,
+    /// Zero-based attempt number the kill fires on.
+    pub attempt: usize,
+    /// [`FaultPoint::Start`]: the driver SIGKILLs the assigned worker
+    /// child *before* dispatching the task (the dispatch then fails on a
+    /// dead socket). [`FaultPoint::Finish`]: the worker child runs the
+    /// task body to completion, journals its ledger delta, and aborts
+    /// itself without replying — the expensive case, a full attempt's
+    /// charges become waste.
+    pub point: FaultPoint,
+}
+
+/// Counter-triggered shard-*process* abort: the shard child counts
+/// commands exactly like [`ShardFault`] and `abort(2)`s the whole
+/// process on the Nth — the driver must respawn it (replaying its
+/// append-only log) and clients must rediscover the new address.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardProcFault {
+    /// Index of the shard process the schedule applies to.
+    pub shard: usize,
+    /// The Nth command processed by that shard aborts the process
+    /// before the command executes.
+    pub at_request: u64,
+}
+
 /// Counter-triggered shard kill/revive schedule, consulted by the KV
 /// server started with this plan.
 #[derive(Clone, Copy, Debug)]
@@ -99,6 +134,18 @@ pub struct FaultPlan {
     /// read timeout this exercises the timeout→replay path; output and
     /// ledger totals are identical whether or not the timeout fires.
     pub reply_delay: Option<Duration>,
+    /// Worker-process kills, consulted only by the cluster driver (see
+    /// [`ProcFault`]). Harmless in an in-process run: the engine never
+    /// reads them.
+    pub proc_faults: Vec<ProcFault>,
+    /// Optional shard-process abort schedule, consulted only by the
+    /// cluster driver when it spawns shard children.
+    pub shard_abort: Option<ShardProcFault>,
+    /// When set, a tripped [`ShardFault`] kill aborts the whole server
+    /// *process* instead of dropping the connection — how a `samr shard`
+    /// child turns the counter machinery into a real process death.
+    /// Never set this in an in-process run.
+    pub process_kill: bool,
     // ---- runtime state (shared via Arc) ----
     requests: AtomicU64,
     down: AtomicBool,
@@ -106,6 +153,7 @@ pub struct FaultPlan {
     // ---- observability ----
     task_faults_fired: AtomicUsize,
     shard_kills: AtomicUsize,
+    proc_kills: AtomicUsize,
 }
 
 impl FaultPlan {
@@ -121,6 +169,15 @@ impl FaultPlan {
     pub fn with_shard_fault(shard: ShardFault) -> FaultPlan {
         FaultPlan {
             shard: Some(shard),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Plan whose only effect is delaying every reply by `delay` — a
+    /// pure slow-server plan for timing-sensitive tests.
+    pub fn with_reply_delay(delay: std::time::Duration) -> FaultPlan {
+        FaultPlan {
+            reply_delay: Some(delay),
             ..FaultPlan::default()
         }
     }
@@ -160,6 +217,57 @@ impl FaultPlan {
         chain(Phase::Map, n_maps, &mut rng);
         chain(Phase::Reduce, n_reduces, &mut rng);
         FaultPlan::with_task_faults(faults)
+    }
+
+    /// Deterministically derive a *process-level* plan from a seed: one
+    /// seed-chosen map task gets a worker-kill chain whose first kill is
+    /// at [`FaultPoint::Start`] (driver-side SIGKILL before dispatch),
+    /// one seed-chosen reduce task gets a chain whose first kill is at
+    /// [`FaultPoint::Finish`] (worker self-abort after the task body) —
+    /// so every seed exercises both kill paths — and one seed-chosen
+    /// shard process aborts mid-put-phase. Chain depths stay under
+    /// `max_attempts - 1`, so the retry budget always absorbs them.
+    pub fn seeded_process(
+        seed: u64,
+        n_maps: usize,
+        n_reduces: usize,
+        max_attempts: usize,
+        n_shards: usize,
+    ) -> FaultPlan {
+        assert!(max_attempts >= 2, "a seeded plan needs at least one retry");
+        let mut rng = Rng::new(seed);
+        let mut kills = Vec::new();
+        let mut chain = |phase: Phase, n_tasks: usize, first: FaultPoint, rng: &mut Rng| {
+            let task = rng.below(n_tasks.max(1) as u64) as usize;
+            let depth = rng.below((max_attempts - 1) as u64) as usize;
+            for attempt in 0..=depth {
+                kills.push(ProcFault {
+                    phase,
+                    task,
+                    attempt,
+                    point: if attempt == 0 {
+                        first
+                    } else if rng.below(2) == 0 {
+                        FaultPoint::Start
+                    } else {
+                        FaultPoint::Finish
+                    },
+                });
+            }
+        };
+        chain(Phase::Map, n_maps, FaultPoint::Start, &mut rng);
+        chain(Phase::Reduce, n_reduces, FaultPoint::Finish, &mut rng);
+        let shard_abort = Some(ShardProcFault {
+            shard: rng.below(n_shards.max(1) as u64) as usize,
+            // Low enough to land inside the map phase's puts even for
+            // tiny corpora (each put batch is one pipelined command).
+            at_request: 2 + rng.below(6),
+        });
+        FaultPlan {
+            proc_faults: kills,
+            shard_abort,
+            ..FaultPlan::default()
+        }
     }
 
     /// Seed for seeded plans: `SAMR_FAULT_SEED` if set (CI pins it),
@@ -233,6 +341,22 @@ impl FaultPlan {
         true
     }
 
+    /// Driver hook: does a worker-process kill target this attempt?
+    /// Pure lookup — the driver performs the kill (or relays a
+    /// [`FaultPoint::Finish`] kill to the worker) and records it with
+    /// [`FaultPlan::note_proc_kill`].
+    pub fn proc_fault_at(&self, phase: Phase, task: usize, attempt: usize) -> Option<FaultPoint> {
+        self.proc_faults
+            .iter()
+            .find(|f| f.phase == phase && f.task == task && f.attempt == attempt)
+            .map(|f| f.point)
+    }
+
+    /// Record one worker-process kill actually performed/observed.
+    pub fn note_proc_kill(&self) {
+        self.proc_kills.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// How many task-attempt faults have fired so far.
     pub fn task_faults_fired(&self) -> usize {
         self.task_faults_fired.load(Ordering::Relaxed)
@@ -241,6 +365,11 @@ impl FaultPlan {
     /// How many shard kills have fired so far.
     pub fn shard_kills(&self) -> usize {
         self.shard_kills.load(Ordering::Relaxed)
+    }
+
+    /// How many worker-process kills have been recorded so far.
+    pub fn proc_kills(&self) -> usize {
+        self.proc_kills.load(Ordering::Relaxed)
     }
 }
 
@@ -340,5 +469,55 @@ mod tests {
         assert!(plan.on_connect(1)); // second refusal revives
         assert!(!plan.on_connect(1));
         assert!(!plan.on_request(1));
+    }
+
+    #[test]
+    fn seeded_process_plans_cover_both_kill_points_and_stay_retryable() {
+        for seed in 0..64 {
+            let p = FaultPlan::seeded_process(seed, 4, 2, 3, 2);
+            let map: Vec<_> = p.proc_faults.iter().filter(|f| f.phase == Phase::Map).collect();
+            let red: Vec<_> =
+                p.proc_faults.iter().filter(|f| f.phase == Phase::Reduce).collect();
+            assert!(!map.is_empty() && !red.is_empty(), "seed {seed}");
+            assert_eq!(map[0].point, FaultPoint::Start, "seed {seed}");
+            assert_eq!(red[0].point, FaultPoint::Finish, "seed {seed}");
+            for chain in [&map, &red] {
+                for (i, f) in chain.iter().enumerate() {
+                    // contiguous from attempt 0 so every kill is reachable
+                    // and the budget absorbs the chain
+                    assert_eq!(f.attempt, i, "seed {seed}");
+                    assert_eq!(f.task, chain[0].task, "seed {seed}");
+                    assert!(f.attempt < 2, "seed {seed}");
+                }
+            }
+            let sa = p.shard_abort.expect("seeded process plan aborts a shard");
+            assert!(sa.shard < 2, "seed {seed}");
+            assert!((2..8).contains(&sa.at_request), "seed {seed}");
+        }
+        // Determinism.
+        let a = FaultPlan::seeded_process(9, 4, 2, 3, 2);
+        let b = FaultPlan::seeded_process(9, 4, 2, 3, 2);
+        assert_eq!(a.proc_faults.len(), b.proc_faults.len());
+        assert_eq!(a.shard_abort.unwrap().at_request, b.shard_abort.unwrap().at_request);
+    }
+
+    #[test]
+    fn proc_fault_lookup_matches_exact_coordinates() {
+        let plan = FaultPlan {
+            proc_faults: vec![ProcFault {
+                phase: Phase::Map,
+                task: 1,
+                attempt: 0,
+                point: FaultPoint::Finish,
+            }],
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.proc_fault_at(Phase::Map, 1, 0), Some(FaultPoint::Finish));
+        assert_eq!(plan.proc_fault_at(Phase::Map, 1, 1), None);
+        assert_eq!(plan.proc_fault_at(Phase::Map, 0, 0), None);
+        assert_eq!(plan.proc_fault_at(Phase::Reduce, 1, 0), None);
+        assert_eq!(plan.proc_kills(), 0);
+        plan.note_proc_kill();
+        assert_eq!(plan.proc_kills(), 1);
     }
 }

@@ -9,6 +9,7 @@
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::kvstore::batch::SuffixBatch;
@@ -82,6 +83,11 @@ pub struct Client {
     addr: SocketAddr,
     /// Failover policy for this connection.
     cfg: FailoverConfig,
+    /// Optional address rediscovery, consulted before every reconnect:
+    /// a shard *process* that died and was respawned listens on a fresh
+    /// ephemeral port, so retrying the old address forever would never
+    /// find it. `None` (the default) reconnects to `addr` as before.
+    rediscover: Option<Rediscover>,
     /// True while re-sending already-charged commands after a reconnect;
     /// routes wire charges to `wasted_sent` instead of `bytes_sent`.
     replaying: bool,
@@ -164,6 +170,11 @@ fn ctx(addr: SocketAddr, cmd: &str, e: KvError) -> KvError {
     }
 }
 
+/// Address-rediscovery callback: returns the shard's current address
+/// (e.g. read from the driver-maintained shard map file), or `None` to
+/// keep the last known one.
+pub type Rediscover = Arc<dyn Fn() -> Option<SocketAddr> + Send + Sync>;
+
 /// Batched commands kept in flight per connection. Keep a few chunks
 /// moving so request serialization overlaps server work, but bounded —
 /// sending everything before reading anything fills both directions'
@@ -186,6 +197,7 @@ impl Client {
             writer: BufWriter::new(conn),
             addr,
             cfg,
+            rediscover: None,
             replaying: false,
             scratch: Vec::with_capacity(32),
             bytes_sent: 0,
@@ -225,10 +237,20 @@ impl Client {
         ))
     }
 
-    /// Tear down the broken halves and dial the shard again. The old
-    /// `BufWriter`'s unflushed bytes are deliberately discarded — the
-    /// caller replays its in-flight window on the fresh connection.
+    /// Install an address-rediscovery callback (see [`Rediscover`]).
+    pub fn set_rediscover(&mut self, lookup: Rediscover) {
+        self.rediscover = Some(lookup);
+    }
+
+    /// Tear down the broken halves and dial the shard again — at the
+    /// rediscovered address if a callback is installed and knows a newer
+    /// one. The old `BufWriter`'s unflushed bytes are deliberately
+    /// discarded — the caller replays its in-flight window on the fresh
+    /// connection.
     fn reconnect(&mut self) -> Result<()> {
+        if let Some(addr) = self.rediscover.as_ref().and_then(|f| f()) {
+            self.addr = addr;
+        }
         let conn = Self::open_socket(self.addr, &self.cfg)?;
         self.reader = BufReader::new(conn.try_clone().map_err(|e| ctx(self.addr, "connect", e.into()))?);
         self.writer = BufWriter::new(conn);

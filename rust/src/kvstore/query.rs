@@ -354,3 +354,95 @@ impl QueryClient {
         }
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suffix::reads::{synth_corpus, CorpusSpec};
+    use crate::suffix::sealed::seal;
+    use crate::suffix::validate::reference_order;
+    use std::time::Duration;
+
+    /// Seal a small repetitive corpus into a temp artifact and open it.
+    fn sealed_fixture(name: &str) -> Arc<SealedIndex> {
+        let reads = synth_corpus(&CorpusSpec {
+            n_reads: 24,
+            read_len: 18,
+            genome_len: 512, // repetitive: patterns hit many suffixes
+            seed: 0x51AB,
+            ..Default::default()
+        });
+        let order = reference_order(&reads);
+        let dir = std::env::temp_dir().join(format!("samr-query-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let path = dir.join(name);
+        seal(&path, &[&reads], &order).expect("seal fixture");
+        Arc::new(SealedIndex::open(&path).expect("open fixture"))
+    }
+
+    /// A query client outlives a server outage: queries are idempotent,
+    /// so the transport's reconnect/replay failover turns a
+    /// shutdown+restart into a retried command — same answers, and the
+    /// logical wire accounting stays byte-identical to an uninterrupted
+    /// session (the replayed sends land in `wasted_sent`).
+    #[test]
+    fn client_survives_server_restart() {
+        let mut server =
+            QueryServer::start(0, sealed_fixture("restart.samr")).expect("query server");
+        let cfg = FailoverConfig {
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(20),
+            ..FailoverConfig::default()
+        };
+        let mut c = QueryClient::connect_with(server.addr(), cfg).expect("connect");
+
+        let hits = c.search(b"ACG").expect("search before the outage");
+        let stat = c.stat().expect("stat before the outage");
+        let (sent_once, recv_once) = c.traffic();
+        assert!(sent_once > 0 && recv_once > 0);
+
+        server.shutdown();
+        server.restart().expect("restart");
+
+        // same client handle, no caller-side reconnect: the failover
+        // inside the transport discovers the dead socket, redials, and
+        // replays the command against the revived server
+        assert_eq!(c.search(b"ACG").expect("search after restart"), hits);
+        assert_eq!(c.stat().expect("stat after restart"), stat);
+
+        let (sent, recv) = c.traffic();
+        assert_eq!(
+            sent,
+            sent_once * 2,
+            "logical request bytes: each command charged exactly once"
+        );
+        assert_eq!(
+            recv,
+            recv_once * 2,
+            "logical reply bytes: each complete reply charged exactly once"
+        );
+        assert!(
+            c.c.wasted_sent > 0,
+            "the replay across the outage must be tallied as waste"
+        );
+    }
+
+    /// `shutdown()` is bounded even while clients hold open connections:
+    /// the accept loop actively closes live sockets before joining the
+    /// per-connection workers, so an idle client cannot pin it.
+    #[test]
+    fn shutdown_does_not_wait_for_idle_clients() {
+        let mut server =
+            QueryServer::start(0, sealed_fixture("bounded.samr")).expect("query server");
+        let mut c = QueryClient::connect(server.addr()).expect("connect");
+        c.ping().expect("ping");
+        // the client stays connected and silent across the shutdown
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "shutdown must not block on a connected-but-idle client"
+        );
+        assert_eq!(server.tracked_connections(), 0, "workers joined");
+    }
+}

@@ -82,7 +82,19 @@ impl Server {
         shard: usize,
         faults: Option<Arc<FaultPlan>>,
     ) -> std::io::Result<Server> {
-        let store = Arc::new(Mutex::new(Store::new()));
+        Self::start_with_store(port, shard, faults, Arc::new(Mutex::new(Store::new())))
+    }
+
+    /// [`Server::start_with_faults`] over a caller-built store — how a
+    /// respawned `samr shard` process serves a store already rebuilt
+    /// from its append-only log ([`Store::open_aof`]) instead of an
+    /// empty one.
+    pub fn start_with_store(
+        port: u16,
+        shard: usize,
+        faults: Option<Arc<FaultPlan>>,
+        store: Arc<Mutex<Store>>,
+    ) -> std::io::Result<Server> {
         let inner = RespServer::start(
             port,
             shard,
@@ -315,6 +327,74 @@ mod tests {
             c.wasted_sent > 0,
             "replayed request bytes must be charged as waste, not logical traffic"
         );
+    }
+
+    /// `shutdown()` racing a pipelined `MGETSUFFIX` window in flight:
+    /// the client must either complete the window — failing over to the
+    /// restarted shard and replaying its unanswered commands — or fail
+    /// cleanly. It must never hang, and a request's logical bytes must
+    /// never be charged twice (replays land in `wasted_sent`).
+    #[test]
+    fn shutdown_races_inflight_pipeline_without_hanging_or_double_charging() {
+        use crate::faults::FaultPlan;
+        use std::sync::mpsc;
+        use std::time::Duration;
+
+        // slow every reply slightly so the shutdown lands mid-window:
+        // 150 commands x 2ms of server-side delay dwarf the 30ms fuse
+        let plan = FaultPlan::with_reply_delay(Duration::from_millis(2));
+        let mut server = Server::start_with_faults(0, 0, Some(Arc::new(plan))).expect("bind");
+        let addr = server.addr();
+        {
+            let mut c = Client::connect(addr).expect("connect");
+            c.set(b"1", b"GATTACA").expect("set");
+        }
+        let reqs: Vec<(Vec<u8>, usize)> = (0..300).map(|i| (b"1".to_vec(), i % 8)).collect();
+        let expected: Vec<Option<Vec<u8>>> =
+            reqs.iter().map(|(_, o)| Some(b"GATTACA"[*o..].to_vec())).collect();
+
+        let w_reqs = reqs.clone();
+        let (tx, rx) = mpsc::channel();
+        let worker = std::thread::spawn(move || {
+            let mut c = Client::connect(addr).expect("worker connect");
+            let r = c.mgetsuffix_pipelined(&w_reqs, 2);
+            let _ = tx.send(());
+            (r, c.bytes_sent, c.wasted_sent)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        server.shutdown();
+        server.restart().expect("restart");
+        rx.recv_timeout(Duration::from_secs(60))
+            .expect("the pipelined client must never hang across a shutdown");
+        let (r, sent, wasted) = worker.join().expect("worker thread");
+
+        // an uninterrupted client running the identical window is the
+        // accounting reference
+        let mut control = Client::connect(addr).expect("control connect");
+        let out = control.mgetsuffix_pipelined(&reqs, 2).expect("control window");
+        assert_eq!(out, expected);
+
+        match r {
+            Ok(got) => {
+                assert_eq!(got, expected, "completed window must answer correctly");
+                assert_eq!(
+                    sent, control.bytes_sent,
+                    "bytes_sent must be byte-identical to a fault-free window"
+                );
+                assert!(
+                    wasted > 0,
+                    "the replayed in-flight commands must be charged as waste"
+                );
+            }
+            Err(e) => {
+                // bounded, clean failure is acceptable; double-charged
+                // logical traffic is not
+                assert!(
+                    sent <= control.bytes_sent,
+                    "a failed window must not over-charge bytes_sent ({e})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -117,7 +117,12 @@ impl RespServer {
         let t_service = self.service.clone();
         let shard = self.shard;
         std::thread::spawn(move || {
-            let mut workers: Vec<JoinHandle<()>> = Vec::new();
+            // each live connection: its worker thread plus a clone of its
+            // socket, kept so shutdown can actively close the socket — a
+            // worker blocked in a socket read would otherwise pin the
+            // join below for as long as an idle client keeps its
+            // connection open
+            let mut workers: Vec<(JoinHandle<()>, TcpStream)> = Vec::new();
             for conn in listener.incoming() {
                 // reap handles of connections that have since closed —
                 // a long-lived server would otherwise accumulate one
@@ -125,9 +130,9 @@ impl RespServer {
                 // completed connection, forever
                 let mut i = 0;
                 while i < workers.len() {
-                    if workers[i].is_finished() {
+                    if workers[i].0.is_finished() {
                         // finished: join() returns without blocking
-                        let _ = workers.swap_remove(i).join();
+                        let _ = workers.swap_remove(i).0.join();
                     } else {
                         i += 1;
                     }
@@ -146,17 +151,31 @@ impl RespServer {
                         continue;
                     }
                 }
+                let Ok(sock) = conn.try_clone() else {
+                    // can't keep a shutdown handle: refuse rather than
+                    // accept a connection shutdown couldn't interrupt
+                    drop(conn);
+                    continue;
+                };
                 let stop = t_stop.clone();
                 let bin = t_in.clone();
                 let bout = t_out.clone();
                 let faults = t_faults.clone();
                 let handler = t_service.handler();
-                workers.push(std::thread::spawn(move || {
-                    let _ = serve_conn(conn, handler, stop, bin, bout, faults, shard);
-                }));
+                workers.push((
+                    std::thread::spawn(move || {
+                        let _ = serve_conn(conn, handler, stop, bin, bout, faults, shard);
+                    }),
+                    sock,
+                ));
                 t_tracked.store(workers.len(), Ordering::SeqCst);
             }
-            for w in workers {
+            for (w, sock) in workers {
+                // unblock the worker's blocking read first: a client that
+                // keeps its connection open must never stall shutdown. The
+                // client side sees the close as an Io error and runs its
+                // idempotent reconnect/replay failover.
+                let _ = sock.shutdown(std::net::Shutdown::Both);
                 let _ = w.join();
             }
             t_tracked.store(0, Ordering::SeqCst);
@@ -190,7 +209,10 @@ impl RespServer {
         self.tracked.load(Ordering::SeqCst)
     }
 
-    /// Stop accepting connections and join the accept thread.
+    /// Stop accepting connections, actively close the live ones, and
+    /// join the accept thread. Bounded: never blocks waiting for a
+    /// client that keeps its connection open — in-flight clients see
+    /// the close as a transport error and fail over.
     pub fn shutdown(&mut self) {
         if self.accept_thread.is_none() {
             return;
@@ -236,6 +258,13 @@ fn serve_conn(
                 std::thread::sleep(d);
             }
             if plan.on_request(shard) {
+                if plan.process_kill {
+                    // a `samr shard` child under a process-kill plan
+                    // dies for real: the whole process aborts before
+                    // the command executes, and only a driver respawn
+                    // (with log replay) brings the shard back
+                    std::process::abort();
+                }
                 // shard dies mid-pipeline: drop the connection without
                 // answering — the client sees EOF on a request it
                 // already charged, and must replay it after failover

@@ -195,6 +195,22 @@ impl ShardedClient {
         self.clients.iter().map(|c| c.wasted_sent).sum()
     }
 
+    /// Install a shard-indexed address lookup consulted on every
+    /// reconnect. In cluster mode a killed shard *process* is respawned
+    /// on a fresh ephemeral port; the driver publishes the new address
+    /// through the shard map, and `lookup(i)` resolves shard `i`'s
+    /// current address so failover replay lands on the respawned
+    /// process instead of retrying the dead port.
+    pub fn set_rediscover(
+        &mut self,
+        lookup: std::sync::Arc<dyn Fn(usize) -> Option<SocketAddr> + Send + Sync>,
+    ) {
+        for (i, client) in self.clients.iter_mut().enumerate() {
+            let lookup = lookup.clone();
+            client.set_rediscover(std::sync::Arc::new(move || lookup(i)));
+        }
+    }
+
     fn shard_of(&self, seq: u64) -> usize {
         (seq % self.clients.len() as u64) as usize
     }

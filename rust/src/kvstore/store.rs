@@ -4,6 +4,11 @@
 //! fetch *suffixes*, not whole reads, halving network bytes).
 
 use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::kvstore::resp;
 
 /// Per-entry metadata overhead. Calibrated so a ~208-byte read record
 /// costs ~1.5× its payload, matching the paper's "about 1.5 times as much
@@ -32,12 +37,67 @@ pub enum Reply {
 pub struct Store {
     map: HashMap<Vec<u8>, Vec<u8>>,
     payload_bytes: u64,
+    /// Append-only command log: every successfully dispatched *mutating*
+    /// command (SET/MSET/DEL/FLUSHDB) is appended in RESP wire form, so
+    /// a killed shard process can be respawned with its data intact.
+    /// `None` (the default) = no durability, exactly the old behavior.
+    aof: Option<BufWriter<File>>,
 }
 
 impl Store {
     /// An empty store.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Open a store backed by the append-only log at `path`: replay any
+    /// commands already in the log (what a shard process killed
+    /// mid-job left behind), then keep appending new mutations to it.
+    ///
+    /// A *truncated* final command — possible when the previous process
+    /// died mid-append — ends the replay cleanly: the log is an intent
+    /// journal, and a command whose reply never reached the client is
+    /// replayed by the client's own idempotent-window failover anyway.
+    /// Structurally invalid commands (not mere truncation) are a real
+    /// `InvalidData` error.
+    pub fn open_aof(path: &Path) -> io::Result<Store> {
+        let mut store = Store::new();
+        if path.exists() {
+            let mut r = BufReader::new(File::open(path)?);
+            loop {
+                match resp::read_command(&mut r) {
+                    Ok(Some(args)) => {
+                        if let Reply::Err(e) = store.dispatch(&args) {
+                            return Err(io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                format!("AOF replay rejected a logged command: {e}"),
+                            ));
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => break,
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        store.aof = Some(BufWriter::new(f));
+        Ok(store)
+    }
+
+    /// Append one successfully executed mutating command to the log.
+    /// `write` + `flush` land the bytes in the kernel page cache, which
+    /// survives a killed *process* — the crash model here — so there is
+    /// no fsync on the hot path.
+    fn log_mutation(&mut self, args: &[Vec<u8>]) {
+        if let Some(w) = self.aof.as_mut() {
+            let refs: Vec<&[u8]> = args.iter().map(Vec::as_slice).collect();
+            if resp::write_command(w, &refs).and_then(|()| w.flush()).is_err() {
+                // a log that can no longer be appended to must not keep
+                // masquerading as durable — drop it; serving continues
+                self.aof = None;
+            }
+        }
     }
 
     /// Insert/overwrite, maintaining payload accounting.
@@ -121,6 +181,7 @@ impl Store {
             Reply::Bulk(b"PONG".to_vec())
         } else if is(b"SET") && args.len() == 3 {
             self.set_exact(args[1].clone(), args[2].clone());
+            self.log_mutation(args);
             Reply::Ok
         } else if is(b"GET") && args.len() == 2 {
             match self.get(&args[1]) {
@@ -129,11 +190,13 @@ impl Store {
             }
         } else if is(b"DEL") && args.len() >= 2 {
             let n = args[1..].iter().filter(|k| self.del(k)).count();
+            self.log_mutation(args);
             Reply::Int(n as i64)
         } else if is(b"MSET") && args.len() >= 3 && args.len() % 2 == 1 {
             for kv in args[1..].chunks(2) {
                 self.set_exact(kv[0].clone(), kv[1].clone());
             }
+            self.log_mutation(args);
             Reply::Ok
         } else if is(b"MGET") && args.len() >= 2 {
             Reply::Multi(args[1..].iter().map(|k| self.get(k).map(<[u8]>::to_vec)).collect())
@@ -154,6 +217,7 @@ impl Store {
             Reply::Int(self.used_memory() as i64)
         } else if is(b"FLUSHDB") {
             self.flush();
+            self.log_mutation(args);
             Reply::Ok
         } else {
             let cmd = String::from_utf8_lossy(cmd).to_ascii_uppercase();
@@ -231,6 +295,78 @@ mod tests {
                 None,
             ])
         );
+    }
+
+    fn aof_tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("samr-aoftest-{}-0", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(format!("{tag}.aof"))
+    }
+
+    fn dispatch_str(s: &mut Store, args: &[&str]) -> Reply {
+        let argv: Vec<Vec<u8>> = args.iter().map(|a| a.as_bytes().to_vec()).collect();
+        s.dispatch(&argv)
+    }
+
+    #[test]
+    fn aof_replays_mutations_across_reopen() {
+        let path = aof_tmp("roundtrip");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut s = Store::open_aof(&path).unwrap();
+            assert_eq!(dispatch_str(&mut s, &["SET", "a", "1"]), Reply::Ok);
+            assert_eq!(dispatch_str(&mut s, &["MSET", "b", "2", "c", "3"]), Reply::Ok);
+            assert_eq!(dispatch_str(&mut s, &["DEL", "b"]), Reply::Int(1));
+            assert_eq!(dispatch_str(&mut s, &["GET", "a"]), Reply::Bulk(b"1".to_vec()));
+            // reads are not logged
+        }
+        let mut s = Store::open_aof(&path).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(b"a"), Some(&b"1"[..]));
+        assert_eq!(s.get(b"b"), None);
+        assert_eq!(s.get(b"c"), Some(&b"3"[..]));
+        // appends keep working after a replayed open
+        assert_eq!(dispatch_str(&mut s, &["SET", "d", "4"]), Reply::Ok);
+        drop(s);
+        let s = Store::open_aof(&path).unwrap();
+        assert_eq!(s.len(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn aof_tolerates_a_truncated_tail() {
+        let path = aof_tmp("trunc");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut s = Store::open_aof(&path).unwrap();
+            dispatch_str(&mut s, &["SET", "a", "1"]);
+            dispatch_str(&mut s, &["SET", "b", "2"]);
+        }
+        // chop mid-command, as a process killed mid-append would
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+        let s = Store::open_aof(&path).unwrap();
+        assert_eq!(s.get(b"a"), Some(&b"1"[..]));
+        assert_eq!(s.get(b"b"), None, "the torn tail command must not half-apply");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flushdb_is_logged() {
+        let path = aof_tmp("flush");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut s = Store::open_aof(&path).unwrap();
+            dispatch_str(&mut s, &["SET", "a", "1"]);
+            dispatch_str(&mut s, &["FLUSHDB"]);
+            dispatch_str(&mut s, &["SET", "z", "9"]);
+        }
+        let s = Store::open_aof(&path).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(b"z"), Some(&b"9"[..]));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //!   serve    --index PATH [--port P]   serve a sealed index (SEARCH/PAIRS/STAT)
 //!   query    <op> [...] --addr|--index query a server or a local artifact
 //!   kv-server [--port P]               run one KV instance (RESP + MGETSUFFIX)
+//!   cluster  [--reads N --workers W]   multi-process run (driver + workers + shards)
+//!   worker   [--port P]                cluster task-executor process (internal)
+//!   shard    --shard I --aof PATH      cluster KV-shard process (internal)
 //!   stats                              §IV-D headline comparison block
 //!   all                                every table and figure
 //!
@@ -66,6 +69,9 @@ fn main() {
         "serve" => serve(&args),
         "query" => query(&args),
         "kv-server" => kv_server(&args),
+        "cluster" => cluster(&args),
+        "worker" => worker(&args),
+        "shard" => shard(&args),
         "stats" => {
             print!("{}", reporter.scheme_stats().expect("stats"));
             0
@@ -94,6 +100,9 @@ const HELP: &str = "samr — suffix array construction with MapReduce + in-memor
   samr query pairs <FWD> <REV> [--max-insert N] --addr H:P | --index index.samr
   samr query stat --addr H:P | --index index.samr
   samr kv-server [--port P]
+  samr cluster [--reads N --len L --reducers R --workers W --shards S]
+  samr worker [--port P]                    (internal: cluster task executor)
+  samr shard --shard I --aof PATH [--port P --kill-at-request N]
   global: --thrift F --trials N --artifacts DIR|none --seed S";
 
 fn reporter_from(args: &Args) -> Reporter {
@@ -639,6 +648,112 @@ fn kv_server(args: &Args) -> i32 {
     let port = args.get_parse("port", 6379u16);
     let mut server = Server::start(port).expect("bind");
     println!("samr-kv listening on {} (RESP subset + MGETSUFFIX)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+        let _ = &mut server;
+    }
+}
+
+/// Demo of the true multi-process mode: this binary re-execs itself as
+/// `samr worker` / `samr shard` children and runs the scheme across
+/// them. The footprint printed is byte-identical to an in-process
+/// `samr scheme` run over the same corpus and config.
+fn cluster(args: &Args) -> i32 {
+    let reads = corpus_from(args);
+    let cfg = SchemeConfig {
+        conf: conf_from(args),
+        group_threshold: args.get_parse("threshold", 100_000),
+        samples_per_reducer: 1000,
+        ..Default::default()
+    };
+    let bin = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cluster: cannot locate own binary: {e}");
+            return 1;
+        }
+    };
+    let opts = samr::cluster::driver::ClusterOpts {
+        n_workers: args.get_parse("workers", 2usize),
+        n_shards: args.get_parse("shards", 2usize),
+        samr_bin: bin,
+        plan: None,
+    };
+    let ledger = Ledger::new();
+    let t0 = std::time::Instant::now();
+    let res = match samr::cluster::driver::run_cluster_files(&[&reads], &cfg, &opts, &ledger) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cluster: {e}");
+            return 1;
+        }
+    };
+    validate_order(&reads, &res.order).expect("output order invalid");
+    println!(
+        "Cluster: {} workers + {} shards (separate processes) over {} reads -> {} suffixes in {:?}",
+        opts.n_workers,
+        opts.n_shards,
+        reads.len(),
+        res.order.len(),
+        t0.elapsed()
+    );
+    print!("{}", res.job.footprint);
+    println!("KV memory: {}", human(res.kv_memory));
+    0
+}
+
+/// A cluster task-executor child. Prints `ADDR <ip:port>` (flushed — the
+/// driver blocks on this line through the pipe) and parks forever; the
+/// driver owns the process lifetime.
+fn worker(args: &Args) -> i32 {
+    let port = args.get_parse("port", 0u16);
+    let mut server = samr::cluster::worker::serve(port).expect("bind");
+    println!("ADDR {}", server.addr());
+    let _ = std::io::Write::flush(&mut std::io::stdout());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+        let _ = &mut server;
+    }
+}
+
+/// A cluster KV-shard child: one AOF-backed store instance. On respawn
+/// after a kill the same `--aof` path replays the log, and the store
+/// clients' idempotent-window failover re-drives whatever the dead
+/// process never acknowledged. `--kill-at-request N` arms the
+/// process-level fault: the Nth command aborts the process.
+fn shard(args: &Args) -> i32 {
+    let idx = args.get_parse("shard", 0usize);
+    let port = args.get_parse("port", 0u16);
+    let aof = match args.require("aof") {
+        Ok(p) => PathBuf::from(p),
+        Err(e) => {
+            eprintln!("{e}\n{HELP}");
+            return 2;
+        }
+    };
+    let store = match samr::kvstore::store::Store::open_aof(&aof) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("shard {idx}: {e}");
+            return 1;
+        }
+    };
+    // the plan is local to this process, so it always names shard 0 —
+    // and the RESP server registers as shard 0 to match
+    let faults = args.get("kill-at-request").and_then(|v| v.parse().ok()).map(|n| {
+        let mut p = samr::faults::FaultPlan::with_shard_fault(samr::faults::ShardFault {
+            shard: 0,
+            kill_at_request: n,
+            refuse_connects: u64::MAX,
+        });
+        p.process_kill = true;
+        Arc::new(p)
+    });
+    let mut server =
+        Server::start_with_store(port, 0, faults, Arc::new(std::sync::Mutex::new(store)))
+            .expect("bind");
+    println!("ADDR {}", server.addr());
+    let _ = std::io::Write::flush(&mut std::io::stdout());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
         let _ = &mut server;

@@ -121,6 +121,22 @@ impl JobResult {
         })?;
         Ok(out)
     }
+
+    /// Assemble a result from parts — how the cluster driver, which runs
+    /// task bodies in worker *processes* rather than through [`run_job`],
+    /// returns the same artifact as the in-process engine.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        output: Vec<OutputFile>,
+        out_dir: Arc<ScratchDir>,
+        footprint: Footprint,
+        wasted: Footprint,
+        map_stats: Vec<MapTaskStats>,
+        reduce_stats: Vec<ReduceTaskStats>,
+        wall: Duration,
+    ) -> JobResult {
+        JobResult { output, _out_dir: out_dir, footprint, wasted, map_stats, reduce_stats, wall }
+    }
 }
 
 /// Scratch directory for spill files, removed on drop.
@@ -145,6 +161,55 @@ impl ScratchDir {
 impl Drop for ScratchDir {
     fn drop(&mut self) {
         let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Remove scratch directories (`samr-{tag}-{pid}-{seq}`) left behind by
+/// a previous *crashed* run — a SIGKILLed driver or worker never runs
+/// `ScratchDir::drop`, so its spill dirs, `{phase}-{id}-a{attempt}`
+/// attempt subdirectories, and `lcp-*` sidecars would otherwise
+/// accumulate. Only directories whose embedded pid is provably dead are
+/// removed — a live process's scratch (including our own) is never
+/// touched — so any number of processes may call this concurrently.
+/// Returns how many directories were removed.
+pub fn reap_stale_scratch(base: Option<&std::path::Path>) -> usize {
+    let root = base.map(|p| p.to_path_buf()).unwrap_or_else(std::env::temp_dir);
+    let Ok(entries) = std::fs::read_dir(&root) else { return 0 };
+    let mut reaped = 0;
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(pid) = scratch_dir_pid(name) else { continue };
+        if pid == std::process::id() || pid_alive(pid) {
+            continue;
+        }
+        if e.path().is_dir() && std::fs::remove_dir_all(e.path()).is_ok() {
+            reaped += 1;
+        }
+    }
+    reaped
+}
+
+/// Parse the `{pid}` out of a `samr-{tag}-{pid}-{seq}` scratch name.
+/// Tags may themselves contain `-` (e.g. `scheme-lcp`), so parse from
+/// the right.
+fn scratch_dir_pid(name: &str) -> Option<u32> {
+    let rest = name.strip_prefix("samr-")?;
+    let mut it = rest.rsplitn(3, '-');
+    let _seq: usize = it.next()?.parse().ok()?;
+    let pid: u32 = it.next()?.parse().ok()?;
+    // a non-empty tag must remain, or this isn't a scratch dir name
+    it.next().filter(|t| !t.is_empty())?;
+    Some(pid)
+}
+
+/// Best-effort liveness check. On Linux `/proc/<pid>` is authoritative;
+/// elsewhere report every pid alive so nothing is ever reaped wrongly.
+fn pid_alive(pid: u32) -> bool {
+    if cfg!(target_os = "linux") {
+        std::path::Path::new("/proc").join(pid.to_string()).exists()
+    } else {
+        true
     }
 }
 
@@ -182,7 +247,7 @@ fn task_panic_error(
 /// every attempt fails does the task surface an error naming the phase,
 /// task, job, and attempt count.
 #[allow(clippy::too_many_arguments)]
-fn run_with_retries<T>(
+pub(crate) fn run_with_retries<T>(
     phase: Phase,
     id: usize,
     name: &str,
@@ -259,6 +324,9 @@ pub fn run_job(
     ledger: &Arc<Ledger>,
 ) -> io::Result<JobResult> {
     let start = Instant::now();
+    // a previous crashed run (SIGKILLed driver or worker) never dropped
+    // its ScratchDirs; reap provably-dead runs' dirs before adding ours
+    reap_stale_scratch(job.conf.spill_dir.as_deref());
     let scratch = Arc::new(ScratchDir::new(job.conf.spill_dir.as_deref(), &job.name)?);
     // output files live in their own dir: spills die with `scratch` when
     // this function returns, output dies with the JobResult
@@ -733,6 +801,47 @@ mod tests {
         assert!(!a0, "abandoned attempt 0 dir must be cleaned before job end");
         assert!(a1_spill, "winning attempt 1 spill must survive until job end");
         assert!(res.wasted.get(Channel::MapLocalWrite) > 0 || res.wasted.get(Channel::HdfsRead) > 0);
+    }
+
+    #[test]
+    fn scratch_dir_pid_parses_from_the_right() {
+        assert_eq!(scratch_dir_pid("samr-scheme-lcp-1234-7"), Some(1234));
+        assert_eq!(scratch_dir_pid("samr-minisort-99-0"), Some(99));
+        assert_eq!(scratch_dir_pid("samr-a-b-c-d-42-3"), Some(42));
+        assert_eq!(scratch_dir_pid("samr--42-3"), None); // empty tag
+        assert_eq!(scratch_dir_pid("samr-notanumber-x"), None);
+        assert_eq!(scratch_dir_pid("other-scheme-12-3"), None);
+        assert_eq!(scratch_dir_pid("samr-12-3"), None); // no tag at all
+    }
+
+    #[test]
+    fn reap_removes_dead_runs_scratch_but_never_live_ones() {
+        let base = ScratchDir::new(None, "reap-base").unwrap();
+        // a provably dead pid: spawn-and-wait a trivial child
+        let dead_pid = {
+            let mut c = std::process::Command::new("true")
+                .spawn()
+                .expect("spawn `true`");
+            let pid = c.id();
+            c.wait().unwrap();
+            pid
+        };
+        let dead = base.path.join(format!("samr-scheme-lcp-{dead_pid}-0"));
+        std::fs::create_dir_all(dead.join("map-0-a1")).unwrap();
+        std::fs::write(dead.join("lcp-00000"), b"stale").unwrap();
+        let live = base
+            .path
+            .join(format!("samr-minisort-{}-1", std::process::id()));
+        std::fs::create_dir_all(&live).unwrap();
+        let not_ours = base.path.join("somethingelse");
+        std::fs::create_dir_all(&not_ours).unwrap();
+        let reaped = reap_stale_scratch(Some(&base.path));
+        assert_eq!(reaped, 1);
+        assert!(!dead.exists(), "dead run's scratch must be reaped");
+        assert!(live.exists(), "live run's scratch must survive");
+        assert!(not_ours.exists(), "non-scratch dirs must survive");
+        // idempotent
+        assert_eq!(reap_stale_scratch(Some(&base.path)), 0);
     }
 
     #[test]

@@ -174,7 +174,7 @@ pub struct SealedSchemeResult {
 /// Shared slot where one finished mapper parks its store handle so the
 /// pipeline can reuse it for the post-job `used_memory` probe instead
 /// of opening a fresh (in cluster mode: TCP) connection.
-type StoreSlot = Arc<Mutex<Option<Box<dyn SuffixStore>>>>;
+pub(crate) type StoreSlot = Arc<Mutex<Option<Box<dyn SuffixStore>>>>;
 
 struct SchemeMapper {
     cfg: SchemeConfig,
@@ -321,7 +321,7 @@ struct PendingBatch {
 const LCP_SIDECAR_TRAILER: usize = 24;
 
 /// Sidecar file name for reduce task `r` inside the LCP scratch dir.
-fn lcp_sidecar_name(r: usize) -> String {
+pub(crate) fn lcp_sidecar_name(r: usize) -> String {
     format!("lcp-{r:05}")
 }
 
@@ -954,18 +954,11 @@ fn probe_kv_memory(parked: &StoreSlot, store_factory: &StoreFactory) -> u64 {
     }
 }
 
-/// The shared body of every scheme run: validate the inputs, sample the
-/// boundaries, build and run the MapReduce job. The *ending* — what
-/// becomes of the reducer output stream — is the caller's: [`run_files`]
-/// collects it in memory, [`run_files_sealed`] streams it into the
-/// sealed artifact.
-fn run_files_core(
-    files: &[&[Read]],
-    cfg: &SchemeConfig,
-    store_factory: &StoreFactory,
-    ledger: &Arc<Ledger>,
-) -> std::io::Result<CoreRun> {
-    // collision-free numbering is a precondition of the shared store
+/// Collision-free sequence numbering is a precondition of the shared
+/// store: reads are keyed by seq, so a duplicate would silently
+/// overwrite another file's read. Rejected with a real error here (and
+/// by the cluster driver, which shares this check).
+pub(crate) fn check_unique_seqs(files: &[&[Read]]) -> std::io::Result<()> {
     let total: usize = files.iter().map(|f| f.len()).sum();
     let mut seqs: Vec<u64> = files.iter().flat_map(|f| f.iter().map(|r| r.seq)).collect();
     seqs.sort_unstable();
@@ -982,6 +975,98 @@ fn run_files_core(
             ),
         ));
     }
+    Ok(())
+}
+
+/// Spool each file's `<seq, read>` records to its own disk-backed record
+/// file (the paper's HDFS input) and cut per-file splits — a mapper
+/// never straddles an input-file boundary, exactly as HDFS would split
+/// two files. Returns the spool dir (keep it alive until the job
+/// consumed the splits) and the split plan. The in-proc pipeline and the
+/// multi-process cluster driver share this, so their split plans — and
+/// therefore their `HdfsRead` charges — are identical by construction.
+pub(crate) fn spool_inputs(
+    files: &[&[Read]],
+    conf: &JobConf,
+) -> std::io::Result<(ScratchDir, Vec<crate::mapreduce::io::InputSplit>)> {
+    let spool = ScratchDir::new(conf.spill_dir.as_deref(), "scheme-in")?;
+    let mut splits = Vec::new();
+    for (fi, file) in files.iter().enumerate() {
+        let mut w =
+            SplitWriter::create(spool.path.join(format!("reads{fi}")), conf.split_bytes)?;
+        spool_read_records(file, &mut w)?;
+        splits.extend(w.finish()?);
+    }
+    Ok((spool, splits))
+}
+
+/// Build one scheme map task over an already-opened store handle. The
+/// in-proc `map_factory` and the cluster worker both call this, so a
+/// map task executes identical code — and charges identical `KvPut`
+/// bytes — whichever process it runs in.
+pub(crate) fn make_mapper(
+    cfg: &SchemeConfig,
+    boundaries: Vec<i64>,
+    mut store: Box<dyn SuffixStore>,
+    park: StoreSlot,
+    ledger: Arc<Ledger>,
+) -> Box<dyn crate::mapreduce::mapper::MapTask> {
+    store.set_put_batch(cfg.put_batch);
+    Box::new(SchemeMapper {
+        cfg: cfg.clone(),
+        boundaries,
+        store: Some(store),
+        park,
+        ledger,
+        pending: Vec::new(),
+        all_reads: Vec::new(),
+    })
+}
+
+/// Build one scheme reduce task over an already-opened store handle.
+/// In prefetch mode the handle moves onto the background fetch worker;
+/// the blocking path keeps it inline. Shared by the in-proc
+/// `reduce_factory` and the cluster worker for the same byte-identity
+/// reason as [`make_mapper`].
+pub(crate) fn make_reducer(
+    cfg: &SchemeConfig,
+    handle: Box<dyn SuffixStore>,
+    ledger: Arc<Ledger>,
+    times: Arc<TimeSplit>,
+    lcp_sidecar: Option<PathBuf>,
+) -> Box<dyn crate::mapreduce::reducer::ReduceTask> {
+    let (store, prefetcher) = if cfg.prefetch {
+        (None, Some(SuffixPrefetcher::spawn(handle)))
+    } else {
+        (Some(handle), None)
+    };
+    Box::new(SchemeReducer {
+        cfg: cfg.clone(),
+        store,
+        prefetcher,
+        ledger,
+        times,
+        buf: SortingGroupBuffer::new(),
+        pending: None,
+        spares: Vec::new(),
+        lcp: lcp_sidecar.map(LcpSidecar::new),
+        prev_key: None,
+    })
+}
+
+/// The shared body of every scheme run: validate the inputs, sample the
+/// boundaries, build and run the MapReduce job. The *ending* — what
+/// becomes of the reducer output stream — is the caller's: [`run_files`]
+/// collects it in memory, [`run_files_sealed`] streams it into the
+/// sealed artifact.
+fn run_files_core(
+    files: &[&[Read]],
+    cfg: &SchemeConfig,
+    store_factory: &StoreFactory,
+    ledger: &Arc<Ledger>,
+) -> std::io::Result<CoreRun> {
+    // collision-free numbering is a precondition of the shared store
+    check_unique_seqs(files)?;
 
     // §IV-A sampling: boundaries over ALL files' suffix keys
     let boundaries = sampler::make_boundaries_files(
@@ -1023,63 +1108,32 @@ fn run_files_core(
         name: "scheme".into(),
         conf: jconf,
         map_factory: Arc::new(move |_| {
-            let mut store = map_store();
-            store.set_put_batch(map_cfg.put_batch);
-            Box::new(SchemeMapper {
-                cfg: map_cfg.clone(),
-                boundaries: map_bounds.clone(),
-                store: Some(store),
-                park: map_park.clone(),
-                ledger: map_ledger.clone(),
-                pending: Vec::new(),
-                all_reads: Vec::new(),
-            })
+            make_mapper(
+                &map_cfg,
+                map_bounds.clone(),
+                map_store(),
+                map_park.clone(),
+                map_ledger.clone(),
+            )
         }),
         reduce_factory: Arc::new(move |r| {
             let _ = &red_bounds;
-            // in prefetch mode the store handle moves onto the fetch
-            // worker; the blocking path keeps it inline
-            let handle = red_store();
-            let (store, prefetcher) = if red_cfg.prefetch {
-                (None, Some(SuffixPrefetcher::spawn(handle)))
-            } else {
-                (Some(handle), None)
-            };
-            Box::new(SchemeReducer {
-                cfg: red_cfg.clone(),
-                store,
-                prefetcher,
-                ledger: red_ledger.clone(),
-                times: red_times.clone(),
-                buf: SortingGroupBuffer::new(),
-                pending: None,
-                spares: Vec::new(),
-                lcp: lcp_path
-                    .as_ref()
-                    .map(|d| LcpSidecar::new(d.join(lcp_sidecar_name(r)))),
-                prev_key: None,
-            })
+            make_reducer(
+                &red_cfg,
+                red_store(),
+                red_ledger.clone(),
+                red_times.clone(),
+                lcp_path.as_ref().map(|d| d.join(lcp_sidecar_name(r))),
+            )
         }),
         partitioner: Arc::new(move |key: &[u8]| {
             native::bucket(decode_i64_key(key), &part_bounds)
         }),
     };
 
-    // spool each file's <seq, read> records to its own disk-backed
-    // record file (the paper's HDFS input) and cut per-file splits —
-    // a mapper never straddles an input-file boundary, exactly as HDFS
-    // would split two files. The corpus is never re-materialized as
-    // resident job records.
-    let spool = ScratchDir::new(cfg.conf.spill_dir.as_deref(), "scheme-in")?;
-    let mut splits = Vec::new();
-    for (fi, file) in files.iter().enumerate() {
-        let mut w = SplitWriter::create(
-            spool.path.join(format!("reads{fi}")),
-            cfg.conf.split_bytes,
-        )?;
-        spool_read_records(file, &mut w)?;
-        splits.extend(w.finish()?);
-    }
+    // disk-backed input (the paper's HDFS): the corpus is never
+    // re-materialized as resident job records
+    let (spool, splits) = spool_inputs(files, &cfg.conf)?;
     let result = run_job(&job, splits, ledger)?;
     drop(spool); // input consumed; release the spool files
 

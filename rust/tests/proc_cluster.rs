@@ -1,0 +1,213 @@
+//! True multi-process cluster mode, end to end: the driver spawns real
+//! `samr worker` and `samr shard` OS processes (the binary under test,
+//! via `CARGO_BIN_EXE_samr`), runs the scheme across them, and the
+//! result must be byte-identical to a fault-free single-process run —
+//! suffix order, output records, and every one of the nine footprint
+//! channels. The chaos test then SIGKILLs a worker mid-map, aborts
+//! another worker mid-reduce (after it journaled its result), and
+//! aborts a shard process mid-job — and asserts the *same* equivalence,
+//! with the dead attempts' bytes in `wasted`.
+//!
+//! Fault plans are seeded (`SAMR_FAULT_SEED`, CI pins it): sweep locally
+//! with `for s in $(seq 0 31); do SAMR_FAULT_SEED=$s cargo test --test
+//! proc_cluster; done`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use samr::cluster::driver::{run_cluster_files, ClusterOpts, ClusterRun};
+use samr::faults::FaultPlan;
+use samr::footprint::{Footprint, Ledger, CHANNELS};
+use samr::kvstore::shard::{ShardedClient, SuffixStore};
+use samr::kvstore::LocalKvCluster;
+use samr::mapreduce::JobConf;
+use samr::scheme::{self, SchemeConfig, StoreFactory};
+use samr::suffix::reads::{synth_corpus, CorpusSpec, Read};
+use samr::suffix::validate::validate_order;
+
+const N_SHARDS: usize = 2;
+
+fn samr_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_samr"))
+}
+
+fn corpus(seed: u64) -> Vec<Read> {
+    synth_corpus(&CorpusSpec {
+        n_reads: 60,
+        read_len: 30,
+        genome_len: 2048, // repetitive: forces incomplete-group ties
+        seed,
+        ..Default::default()
+    })
+}
+
+fn cluster_cfg(max_attempts: usize) -> SchemeConfig {
+    let mut cfg = SchemeConfig {
+        conf: JobConf {
+            n_reducers: 3,
+            split_bytes: 1 << 10, // several map tasks over this corpus
+            io_sort_bytes: 8 << 10,
+            reducer_heap_bytes: 64 << 10,
+            ..JobConf::default()
+        },
+        group_threshold: 500,
+        samples_per_reducer: 200,
+        ..Default::default()
+    };
+    cfg.conf.max_task_attempts = max_attempts;
+    cfg
+}
+
+/// Everything one run produces that equivalence is asserted over.
+struct RunOut {
+    order: Vec<i64>,
+    fp: Footprint,
+    out: Vec<(Vec<u8>, Vec<u8>)>,
+    wasted: Footprint,
+    kv_memory: u64,
+    n_maps: usize,
+    n_reduces: usize,
+}
+
+/// Fault-free single-process baseline: same scheme, same config, same
+/// shard count — the KV servers are threads of this process and the
+/// whole job runs in the in-process engine.
+fn single_process_baseline(reads: &[Read], cfg: &SchemeConfig) -> RunOut {
+    let kv = LocalKvCluster::start(N_SHARDS).expect("kv cluster");
+    let addrs = kv.addrs();
+    let factory: StoreFactory = Arc::new(move || {
+        Box::new(ShardedClient::connect(&addrs).expect("connect")) as Box<dyn SuffixStore>
+    });
+    let ledger = Ledger::new();
+    let res = scheme::run(reads, cfg, factory, &ledger).expect("baseline scheme run");
+    let mut out = Vec::new();
+    res.job
+        .for_each_output(|r| {
+            out.push((r.key, r.value));
+            Ok(())
+        })
+        .expect("stream output");
+    RunOut {
+        order: res.order,
+        fp: ledger.snapshot(),
+        out,
+        wasted: res.job.wasted,
+        kv_memory: res.kv_memory,
+        n_maps: res.job.map_stats.len(),
+        n_reduces: res.job.reduce_stats.len(),
+    }
+}
+
+fn cluster_out(res: &ClusterRun, ledger: &Ledger) -> RunOut {
+    let mut out = Vec::new();
+    res.job
+        .for_each_output(|r| {
+            out.push((r.key, r.value));
+            Ok(())
+        })
+        .expect("stream cluster output");
+    RunOut {
+        order: res.order.clone(),
+        fp: ledger.snapshot(),
+        out,
+        wasted: res.job.wasted,
+        kv_memory: res.kv_memory,
+        n_maps: res.job.map_stats.len(),
+        n_reduces: res.job.reduce_stats.len(),
+    }
+}
+
+fn assert_equivalent(cluster: &RunOut, base: &RunOut, reads: &[Read], label: &str) {
+    validate_order(reads, &cluster.order).expect("cluster order invalid");
+    assert_eq!(cluster.order, base.order, "suffix order ({label})");
+    assert_eq!(cluster.out, base.out, "output records ({label})");
+    for ch in CHANNELS {
+        assert_eq!(
+            cluster.fp.get(ch),
+            base.fp.get(ch),
+            "{} bytes ({label}): cross-process accounting must be \
+             byte-identical to the single-process engine",
+            ch.name()
+        );
+    }
+}
+
+#[test]
+fn cluster_mode_matches_single_process_run() {
+    let reads = corpus(41);
+    let cfg = cluster_cfg(1);
+    let base = single_process_baseline(&reads, &cfg);
+
+    let opts = ClusterOpts {
+        n_workers: 2,
+        n_shards: N_SHARDS,
+        samr_bin: samr_bin(),
+        plan: None,
+    };
+    let ledger = Ledger::new();
+    let res = run_cluster_files(&[&reads], &cfg, &opts, &ledger).expect("cluster run");
+    let cluster = cluster_out(&res, &ledger);
+
+    assert_equivalent(&cluster, &base, &reads, "fault-free cluster");
+    assert_eq!(cluster.n_maps, base.n_maps, "split plans must be identical");
+    assert_eq!(cluster.n_reduces, base.n_reduces);
+    assert_eq!(
+        cluster.wasted,
+        Footprint::default(),
+        "a clean cluster run abandons no attempts"
+    );
+    assert_eq!(
+        cluster.kv_memory, base.kv_memory,
+        "shard processes hold exactly what in-process servers hold"
+    );
+}
+
+#[test]
+fn chaos_process_kills_leave_output_and_footprint_byte_identical() {
+    let reads = corpus(53);
+    let seed = FaultPlan::env_seed(7);
+    // baseline runs clean with single attempts
+    let base = single_process_baseline(&reads, &cluster_cfg(1));
+
+    // one worker SIGKILLed before a map dispatch, one worker aborted
+    // after journaling its reduce result, one shard process aborted
+    // early in the job — all seed-chosen against the real task counts,
+    // so every kill point is reachable and fires
+    let max_attempts = 2;
+    let plan = Arc::new(FaultPlan::seeded_process(
+        seed,
+        base.n_maps,
+        base.n_reduces,
+        max_attempts,
+        N_SHARDS,
+    ));
+    // three workers: two die to the plan, the survivor finishes the job
+    let opts = ClusterOpts {
+        n_workers: 3,
+        n_shards: N_SHARDS,
+        samr_bin: samr_bin(),
+        plan: Some(plan.clone()),
+    };
+    let ledger = Ledger::new();
+    let res = run_cluster_files(&[&reads], &cluster_cfg(max_attempts), &opts, &ledger)
+        .expect("cluster run survives process kills");
+    let cluster = cluster_out(&res, &ledger);
+
+    let label = format!("chaos seed={seed}");
+    assert_equivalent(&cluster, &base, &reads, &label);
+    assert!(
+        plan.proc_kills() >= 3,
+        "a map-phase worker kill, a reduce-phase worker kill, and a shard \
+         kill must all fire ({label}; saw {})",
+        plan.proc_kills()
+    );
+    assert_ne!(
+        cluster.wasted,
+        Footprint::default(),
+        "dead attempts must tally their spent bytes as waste ({label})"
+    );
+    assert_eq!(
+        cluster.kv_memory, base.kv_memory,
+        "the respawned shard must replay to exactly the baseline store ({label})"
+    );
+}
